@@ -1,0 +1,85 @@
+//! End-to-end validation driver (DESIGN.md deliverable): exercises the
+//! full three-layer stack on a real small workload and reports the paper's
+//! headline comparison.
+//!
+//! 1. Verifies the AOT artifact contract (python compile path → manifest →
+//!    env dimensions).
+//! 2. Trains PQL *and* sequential DDPG(n) on `ant` with identical
+//!    hyper-parameters and wall-clock budget.
+//! 3. Reports time-to-threshold and final returns — the Fig. 3 headline
+//!    ("PQL learns faster in wall-clock time than sequential off-policy
+//!    learning"), plus realized β ratios and process-level accounting.
+//! 4. Saves + reloads a checkpoint and re-evaluates it (serving path).
+//!
+//! ```text
+//! make artifacts && cargo run --release --example e2e_benchmark
+//! ```
+
+use pql::config::{Algo, TrainConfig};
+use pql::coordinator::evaluate;
+use pql::runtime::Engine;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    pql::util::logging::init();
+    let art = Path::new("artifacts");
+    let budget = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(75.0);
+
+    // --- 1. contract check -------------------------------------------------
+    let manifest = pql::runtime::Manifest::load(art)?;
+    let n_art = manifest.verify_files()?;
+    println!("[1/4] artifact contract ok: {} tasks, {n_art} artifacts", manifest.tasks.len());
+
+    // --- 2. head-to-head ----------------------------------------------------
+    let mk = |algo: Algo, run_dir: Option<String>| TrainConfig {
+        task: "ant".into(),
+        algo,
+        num_envs: 128,
+        budget_secs: budget,
+        eval_interval_secs: (budget / 10.0).max(3.0),
+        seed: 7,
+        run_dir,
+        ..TrainConfig::default()
+    };
+    println!("[2/4] training PQL for {budget:.0}s ...");
+    let pql_log = pql::algos::train(&mk(Algo::Pql, Some("runs/e2e_pql".into())), art)?;
+    println!("[2/4] training sequential DDPG(n) for {budget:.0}s ...");
+    let ddpg_log = pql::algos::train(&mk(Algo::Ddpg, None), art)?;
+
+    // --- 3. headline report --------------------------------------------------
+    let threshold = 600.0; // well above the ~180 random-policy return
+    println!("\n[3/4] headline (ant, {budget:.0}s budget, N=128):");
+    println!("  {:<22} {:>12} {:>12} {:>18}", "algo", "final", "best", "t->600 (s)");
+    for (name, log) in [("PQL (parallel)", &pql_log), ("DDPG(n) (sequential)", &ddpg_log)] {
+        println!(
+            "  {:<22} {:>12.1} {:>12.1} {:>18.1}",
+            name,
+            log.final_return(),
+            log.best_return(),
+            log.time_to(threshold)
+        );
+    }
+    let speedup = ddpg_log.time_to(threshold) / pql_log.time_to(threshold);
+    if speedup.is_finite() {
+        println!("  => PQL time-to-threshold speedup: {speedup:.2}x");
+    }
+
+    // --- 4. checkpoint round-trip ---------------------------------------------
+    let ckpt = Path::new("runs/e2e_pql/checkpoint.pql");
+    let sections = pql::util::binfmt::load(ckpt)?;
+    let mut engine = Engine::new(art)?;
+    let m = std::sync::Arc::clone(&engine.manifest);
+    let infer = engine.load("ant", "actor_infer")?;
+    let (ret, _) = evaluate(
+        &infer, &m, "ant",
+        &sections["actor"], &sections["norm_mean"], &sections["norm_var"],
+        32, 123, None,
+    )?;
+    println!("\n[4/4] checkpoint reloaded: eval over 32 fresh episodes = {ret:.1}");
+    anyhow::ensure!(ret.is_finite(), "checkpoint evaluation produced NaN");
+    println!("\nE2E OK");
+    Ok(())
+}

@@ -1,0 +1,34 @@
+//! Quickstart: train PQL on the `ant` locomotion task for one minute and
+//! print the learning curve.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use pql::config::TrainConfig;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    pql::util::logging::init();
+    let cfg = TrainConfig {
+        task: "ant".to_string(),
+        algo: pql::config::Algo::Pql,
+        num_envs: 128,
+        budget_secs: 60.0,
+        eval_interval_secs: 6.0,
+        seed: 1,
+        ..TrainConfig::default()
+    };
+    println!("training {} on {} for {:.0}s ...", cfg.algo, cfg.task, cfg.budget_secs);
+    let log = pql::algos::train(&cfg, Path::new("artifacts"))?;
+
+    println!("\n  wall(s)   env steps   critic upd   eval return");
+    for r in &log.records {
+        println!(
+            "  {:7.1}   {:9}   {:10}   {:11.2}",
+            r.wall_secs, r.env_steps, r.critic_updates, r.eval_return
+        );
+    }
+    println!("\nbest return: {:.2}", log.best_return());
+    Ok(())
+}

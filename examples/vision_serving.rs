@@ -1,0 +1,53 @@
+//! Vision pathway demo (Appendix B.3 / Fig. B.1): asymmetric actor-critic
+//! on the image-based Ball Balancing task, with the DEFLATE-compressed
+//! observation channel, reporting the achieved compression ratio.
+//!
+//! ```text
+//! cargo run --release --example vision_serving [budget_secs]
+//! ```
+
+use pql::config::{Algo, TrainConfig};
+use pql::envs::render::IMG_PIXELS;
+use pql::replay::image::compress;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    pql::util::logging::init();
+    let budget = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(45.0);
+
+    // Measure the channel compression on real rendered frames first.
+    let mut env = pql::envs::make("ballbalance_vision", 32, 0)?;
+    let mut obs = vec![0.0f32; 32 * IMG_PIXELS];
+    env.reset_all(&mut obs);
+    let mut raw = 0usize;
+    let mut stored = 0usize;
+    for row in obs.chunks(IMG_PIXELS) {
+        raw += IMG_PIXELS * 4;
+        stored += compress(row)?.len();
+    }
+    println!(
+        "frame channel: {} B raw -> {} B compressed ({:.1}x, paper used lz4)",
+        raw, stored, raw as f64 / stored as f64
+    );
+
+    let cfg = TrainConfig {
+        task: "ballbalance_vision".into(),
+        algo: Algo::Pql,
+        num_envs: 64,
+        budget_secs: budget,
+        eval_interval_secs: (budget / 6.0).max(3.0),
+        compress_images: true,
+        seed: 2,
+        ..TrainConfig::default()
+    };
+    println!("training asymmetric PQL from 24x24 pixels for {budget:.0}s ...");
+    let log = pql::algos::train(&cfg, Path::new("artifacts"))?;
+    for r in &log.records {
+        println!("  t={:6.1}s  return {:8.2}", r.wall_secs, r.eval_return);
+    }
+    println!("best return: {:.2} (ball stays on the plate)", log.best_return());
+    Ok(())
+}

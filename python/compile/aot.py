@@ -1,0 +1,270 @@
+"""AOT pipeline: lower every (task, artifact) JAX graph to HLO text.
+
+Interchange is HLO *text*, not serialized HloModuleProto — the rust side's
+xla_extension 0.5.1 rejects jax>=0.5 protos with 64-bit instruction ids;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Outputs:
+  artifacts/<task>/<artifact>.hlo.txt     one module per logical step
+  artifacts/manifest.json                 shapes, layouts, constants
+
+Usage:
+  python -m compile.aot --out-dir ../artifacts [--tasks ant,humanoid]
+                        [--skip-fig8] [--quick]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, tasks
+from .layout import Layout
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+class Emitter:
+    """Lowers artifact functions and accumulates the manifest."""
+
+    def __init__(self, out_dir, quick=False):
+        self.out_dir = out_dir
+        self.quick = quick
+        self.manifest = {
+            "version": 1,
+            "hidden": list(tasks.HIDDEN),
+            "chunk": tasks.CHUNK,
+            "batch_default": tasks.BATCH,
+            "atoms": tasks.ATOMS,
+            "v_min": tasks.V_MIN,
+            "v_max": tasks.V_MAX,
+            "tau": tasks.TAU,
+            "nstep": tasks.NSTEP,
+            "gamma": tasks.GAMMA,
+            "tasks": {},
+        }
+
+    def emit(self, task, name, fn, arg_shapes, arg_names, out_names):
+        """Lower `fn` at `arg_shapes` and write `<task>/<name>.hlo.txt`."""
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*arg_shapes)
+        text = to_hlo_text(lowered)
+        rel = f"{task}/{name}.hlo.txt"
+        path = os.path.join(self.out_dir, rel)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            f.write(text)
+        outs = lowered.out_info
+        # out_info is a pytree of ShapeDtypeStructs matching fn's returns.
+        out_shapes = [list(o.shape) for o in jax.tree.leaves(outs)]
+        entry = {
+            "file": rel,
+            "inputs": [
+                {"name": n, "shape": list(s.shape)}
+                for n, s in zip(arg_names, arg_shapes)
+            ],
+            "outputs": [
+                {"name": n, "shape": s} for n, s in zip(out_names, out_shapes)
+            ],
+        }
+        self.manifest["tasks"][task]["artifacts"][name] = entry
+        print(f"  {rel:48s} {len(text)/1024:8.0f} KiB  {time.time()-t0:5.1f}s",
+              flush=True)
+
+
+def emit_task(em: Emitter, task_name: str, skip_fig8: bool):
+    cfg = tasks.TASKS[task_name]
+    do, da = cfg["obs"], cfg["act"]
+    cdo = cfg.get("critic_obs", do)
+    vision = "critic_obs" in cfg
+    spec = model.Spec(do, da, hidden=tasks.HIDDEN, atoms=tasks.ATOMS,
+                      v_min=tasks.V_MIN, v_max=tasks.V_MAX,
+                      critic_obs_dim=cdo)
+    em.manifest["tasks"][task_name] = {
+        "obs_dim": do,
+        "act_dim": da,
+        "critic_obs_dim": cdo,
+        "reward_scale": cfg["reward_scale"],
+        "sim_cost": cfg["sim_cost"],
+        "layouts": {
+            "actor": spec.actor.to_json(),
+            "critic": spec.critic.to_json(),
+            "critic_dist": spec.critic_dist.to_json(),
+            "sac_actor": spec.sac_actor.to_json(),
+            "ppo": spec.ppo.to_json(),
+        },
+        "artifacts": {},
+    }
+    C, B = tasks.CHUNK, tasks.BATCH
+    Pa, Pc = spec.actor.size, spec.critic.size
+    Pd, Ps, Pp = spec.critic_dist.size, spec.sac_actor.size, spec.ppo.size
+
+    # ---- shared argument bundles -----------------------------------------
+    def cu_args(batch, cdim=do):
+        """critic_update inputs (symmetric tasks)."""
+        return (
+            [_sds(Pc), _sds(Pc), _sds(Pc), _sds(1), _sds(Pc), _sds(Pa),
+             _sds(batch, cdim), _sds(batch, da), _sds(batch),
+             _sds(batch, cdim), _sds(batch), _sds(cdim), _sds(cdim), _sds(1)],
+            ["theta_c", "m", "v", "t", "theta_ct", "theta_a", "s", "a", "rn",
+             "s2", "gmask", "mu", "var", "lr"],
+            ["theta_c", "m", "v", "theta_ct", "loss", "qmean"],
+        )
+
+    def au_args(batch):
+        return (
+            [_sds(Pa), _sds(Pa), _sds(Pa), _sds(1), _sds(Pc),
+             _sds(batch, do), _sds(do), _sds(do), _sds(1)],
+            ["theta_a", "m", "v", "t", "theta_c", "s", "mu", "var", "lr"],
+            ["theta_a", "m", "v", "loss"],
+        )
+
+    # ---- DDPG / PQL core ---------------------------------------------------
+    em.emit(task_name, "actor_infer", model.ddpg_actor_infer(spec),
+            [_sds(Pa), _sds(C, do), _sds(do), _sds(do)],
+            ["theta_a", "obs", "mu", "var"], ["act"])
+    if task_name == "ant" and not em.quick:
+        # Perf-comparison variant: same actor without the Pallas fused
+        # linear path (plain jnp), for the §Perf interpret-vs-XLA study.
+        def infer_jnp(theta_a, obs, mu, var):
+            return (spec.actor_fwd(theta_a, model.normalize_obs(obs, mu, var),
+                                   use_pallas=False),)
+        em.emit(task_name, "actor_infer_jnp", infer_jnp,
+                [_sds(Pa), _sds(C, do), _sds(do), _sds(do)],
+                ["theta_a", "obs", "mu", "var"], ["act"])
+
+    if not vision:
+        a, n, o = cu_args(B)
+        em.emit(task_name, "critic_update", model.ddpg_critic_update(spec, tasks.TAU), a, n, o)
+        a, n, o = au_args(B)
+        em.emit(task_name, "actor_update", model.ddpg_actor_update(spec), a, n, o)
+    else:
+        # Asymmetric (vision) variants: pixel actor obs + state critic obs.
+        em.emit(task_name, "critic_update",
+                model.vision_critic_update(spec, tasks.TAU),
+                [_sds(Pc), _sds(Pc), _sds(Pc), _sds(1), _sds(Pc), _sds(Pa),
+                 _sds(B, cdo), _sds(B, da), _sds(B),
+                 _sds(B, do), _sds(B, cdo), _sds(B),
+                 _sds(do), _sds(do), _sds(cdo), _sds(cdo), _sds(1)],
+                ["theta_c", "m", "v", "t", "theta_ct", "theta_a", "cs",
+                 "a", "rn", "s2", "cs2", "gmask", "mu", "var", "cmu", "cvar",
+                 "lr"],
+                ["theta_c", "m", "v", "theta_ct", "loss", "qmean"])
+        em.emit(task_name, "actor_update", model.vision_actor_update(spec),
+                [_sds(Pa), _sds(Pa), _sds(Pa), _sds(1), _sds(Pc),
+                 _sds(B, do), _sds(B, cdo), _sds(do), _sds(do),
+                 _sds(cdo), _sds(cdo), _sds(1)],
+                ["theta_a", "m", "v", "t", "theta_c", "s", "cs", "mu", "var",
+                 "cmu", "cvar", "lr"],
+                ["theta_a", "m", "v", "loss"])
+
+    # ---- PQL-D (C51) -------------------------------------------------------
+    if not vision and not em.quick:
+        em.emit(task_name, "critic_update_dist",
+                model.dist_critic_update(spec, tasks.TAU),
+                [_sds(Pd), _sds(Pd), _sds(Pd), _sds(1), _sds(Pd), _sds(Pa),
+                 _sds(B, do), _sds(B, da), _sds(B), _sds(B, do), _sds(B),
+                 _sds(do), _sds(do), _sds(1)],
+                ["theta_c", "m", "v", "t", "theta_ct", "theta_a", "s", "a",
+                 "rn", "s2", "gmask", "mu", "var", "lr"],
+                ["theta_c", "m", "v", "theta_ct", "loss", "qmean"])
+        em.emit(task_name, "actor_update_dist", model.dist_actor_update(spec),
+                [_sds(Pa), _sds(Pa), _sds(Pa), _sds(1), _sds(Pd),
+                 _sds(B, do), _sds(do), _sds(do), _sds(1)],
+                ["theta_a", "m", "v", "t", "theta_c", "s", "mu", "var", "lr"],
+                ["theta_a", "m", "v", "loss"])
+
+    # ---- SAC ----------------------------------------------------------------
+    if not vision and not em.quick:
+        em.emit(task_name, "sac_actor_infer", model.sac_actor_infer(spec),
+                [_sds(Ps), _sds(C, do), _sds(do), _sds(do), _sds(C, da)],
+                ["theta_a", "obs", "mu", "var", "noise"], ["act"])
+        em.emit(task_name, "sac_critic_update",
+                model.sac_critic_update(spec, tasks.TAU),
+                [_sds(Pc), _sds(Pc), _sds(Pc), _sds(1), _sds(Pc), _sds(Ps),
+                 _sds(1), _sds(B, do), _sds(B, da), _sds(B), _sds(B, do),
+                 _sds(B), _sds(B, da), _sds(do), _sds(do), _sds(1)],
+                ["theta_c", "m", "v", "t", "theta_ct", "theta_a", "log_alpha",
+                 "s", "a", "rn", "s2", "gmask", "noise", "mu", "var", "lr"],
+                ["theta_c", "m", "v", "theta_ct", "loss", "qmean"])
+        em.emit(task_name, "sac_actor_update",
+                model.sac_actor_update(spec, target_entropy=-float(da)),
+                [_sds(Ps), _sds(Ps), _sds(Ps), _sds(1), _sds(Pc), _sds(1),
+                 _sds(1), _sds(1), _sds(B, do), _sds(B, da), _sds(do),
+                 _sds(do), _sds(1)],
+                ["theta_a", "m", "v", "t", "theta_c", "log_alpha", "am", "av",
+                 "s", "noise", "mu", "var", "lr"],
+                ["theta_a", "m", "v", "log_alpha", "am", "av", "pi_loss",
+                 "alpha_loss", "entropy"])
+
+    # ---- PPO -----------------------------------------------------------------
+    em.emit(task_name, "ppo_infer", model.ppo_infer(spec),
+            [_sds(Pp), _sds(C, do), _sds(C, cdo), _sds(do), _sds(do),
+             _sds(C, da)],
+            ["theta", "obs", "critic_obs", "mu", "var", "noise"],
+            ["act", "logp", "value"])
+    em.emit(task_name, "ppo_update", model.ppo_update(spec),
+            [_sds(Pp), _sds(Pp), _sds(Pp), _sds(1), _sds(B, do), _sds(B, cdo),
+             _sds(B, da), _sds(B), _sds(B), _sds(B), _sds(do), _sds(do),
+             _sds(1)],
+            ["theta", "m", "v", "t", "s", "critic_s", "a", "adv", "ret",
+             "logp_old", "mu", "var", "lr"],
+            ["theta", "m", "v", "pi_loss", "v_loss", "kl"])
+
+    # ---- Fig. 8 batch-size sweep (ant only) ----------------------------------
+    if task_name == "ant" and not skip_fig8 and not em.quick:
+        for b in tasks.FIG8_BATCHES:
+            if b == B:
+                continue
+            a, n, o = cu_args(b)
+            em.emit(task_name, f"critic_update_b{b}",
+                    model.ddpg_critic_update(spec, tasks.TAU), a, n, o)
+            a, n, o = au_args(b)
+            em.emit(task_name, f"actor_update_b{b}",
+                    model.ddpg_actor_update(spec), a, n, o)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--tasks", default=",".join(tasks.TASKS))
+    ap.add_argument("--skip-fig8", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="core DDPG/PPO artifacts only (CI smoke)")
+    args = ap.parse_args()
+
+    jax.config.update("jax_platform_name", "cpu")
+    em = Emitter(args.out_dir, quick=args.quick)
+    todo = [t.strip() for t in args.tasks.split(",") if t.strip()]
+    t0 = time.time()
+    for t in todo:
+        if t not in tasks.TASKS:
+            raise SystemExit(f"unknown task {t!r}")
+        print(f"[aot] {t}", flush=True)
+        emit_task(em, t, args.skip_fig8)
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    os.makedirs(args.out_dir, exist_ok=True)
+    with open(mpath, "w") as f:
+        json.dump(em.manifest, f, indent=1)
+    print(f"[aot] wrote {mpath} ({time.time()-t0:.0f}s total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,173 @@
+"""Layer-1 Pallas kernels for PQL's compute hot-spots.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode is how they lower into portable HLO
+(see /opt/xla-example/README.md). The *structure* — BlockSpec tiling, VMEM
+block sizes, MXU-shaped contractions — is written for real TPUs; estimated
+VMEM/MXU numbers are in EXPERIMENTS.md §Perf.
+
+Hardware adaptation (paper targets CUDA):
+  * The C51 projection is a scatter-add on GPU (atomicAdd per bucket).
+    Scatter is hostile to the MXU, so we restate it as a dense band
+    contraction m = p @ hat(Tz, z) computed blockwise — O(B*L^2) FLOPs but
+    MXU-shaped and free of data-dependent memory traffic.
+  * The TD target and polyak kernels are elementwise VPU work, blocked so
+    each grid step touches one VMEM-resident tile.
+  * The fused linear kernel tiles [B,Din]x[Din,Dout] with the batch as the
+    grid, keeping W and b resident and streaming activations.
+
+Every kernel has a pure-jnp oracle in ``ref.py`` and hypothesis coverage in
+``python/tests/test_kernels.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch tile for elementwise kernels: one VMEM-friendly strip.
+_BLOCK_B = 256
+
+
+def _cdiv(a, b):
+    return (a + b - 1) // b
+
+
+# ---------------------------------------------------------------------------
+# Fused n-step double-Q TD target (elementwise, VPU)
+# ---------------------------------------------------------------------------
+
+
+def _td_target_kernel(q1_ref, q2_ref, r_ref, g_ref, out_ref):
+    q1 = q1_ref[...]
+    q2 = q2_ref[...]
+    out_ref[...] = r_ref[...] + g_ref[...] * jnp.minimum(q1, q2)
+
+
+def td_target(q1t, q2t, reward_n, gamma_mask, *, block_b=_BLOCK_B):
+    """y = r_n + gamma^n (1-d) min(Q1', Q2'); all inputs [B]."""
+    (b,) = q1t.shape
+    bb = min(block_b, b)
+    grid = (_cdiv(b, bb),)
+    spec = pl.BlockSpec((bb,), lambda i: (i,))
+    return pl.pallas_call(
+        _td_target_kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), q1t.dtype),
+        grid=grid,
+        in_specs=[spec, spec, spec, spec],
+        out_specs=spec,
+        interpret=True,
+    )(q1t, q2t, reward_n, gamma_mask)
+
+
+# ---------------------------------------------------------------------------
+# C51 categorical projection (dense band contraction, MXU-shaped)
+# ---------------------------------------------------------------------------
+
+
+def _cat_proj_kernel(p_ref, z_ref, r_ref, g_ref, out_ref, *, v_min, v_max):
+    z = z_ref[...]  # [L]
+    length = z.shape[0]
+    dz = (v_max - v_min) / (length - 1)
+    tz = r_ref[...][:, None] + g_ref[...][:, None] * z[None, :]  # [Bb, L]
+    tz = jnp.clip(tz, v_min, v_max)
+    # Dense hat weights [Bb, L, L]; contraction over the target-atom axis.
+    w = jnp.maximum(0.0, 1.0 - jnp.abs(tz[:, :, None] - z[None, None, :]) / dz)
+    # einsum bj,bji->bi as a batched matmul: (p [Bb,1,L]) @ (w [Bb,L,L]).
+    out_ref[...] = jnp.squeeze(
+        jax.lax.batch_matmul(p_ref[...][:, None, :], w), axis=1
+    )
+
+
+def categorical_projection(probs, z, reward_n, gamma_mask, v_min, v_max,
+                           *, block_b=64):
+    """Project the shifted categorical distribution onto fixed support.
+
+    probs [B,L], z [L], reward_n [B], gamma_mask [B] -> [B,L].
+    Blocked over batch: each grid step holds a [block_b, L] probability
+    tile plus the [block_b, L, L] weight tensor in VMEM (L=51 -> ~2.6 MB
+    at block_b=64 before fusion; within the 16 MiB VMEM budget).
+    """
+    b, length = probs.shape
+    bb = min(block_b, b)
+    grid = (_cdiv(b, bb),)
+    return pl.pallas_call(
+        functools.partial(_cat_proj_kernel, v_min=float(v_min), v_max=float(v_max)),
+        out_shape=jax.ShapeDtypeStruct((b, length), probs.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, length), lambda i: (i, 0)),
+            pl.BlockSpec((length,), lambda i: (0,)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bb, length), lambda i: (i, 0)),
+        interpret=True,
+    )(probs, z, reward_n, gamma_mask)
+
+
+# ---------------------------------------------------------------------------
+# Polyak soft target update (streaming elementwise over flat params)
+# ---------------------------------------------------------------------------
+
+
+def _polyak_kernel(t_ref, o_ref, out_ref, *, tau):
+    out_ref[...] = (1.0 - tau) * t_ref[...] + tau * o_ref[...]
+
+
+def polyak(target, online, tau, *, block=4096):
+    """target <- (1-tau) target + tau online, over flat f32[P] vectors."""
+    (p,) = target.shape
+    bb = min(block, p)
+    grid = (_cdiv(p, bb),)
+    spec = pl.BlockSpec((bb,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_polyak_kernel, tau=float(tau)),
+        out_shape=jax.ShapeDtypeStruct((p,), target.dtype),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        interpret=True,
+    )(target, online)
+
+
+# ---------------------------------------------------------------------------
+# Fused linear layer: x @ W + b with activation (MXU matmul + VPU epilogue)
+# ---------------------------------------------------------------------------
+
+
+def _fused_linear_kernel(x_ref, w_ref, b_ref, out_ref, *, activation):
+    y = jnp.dot(x_ref[...], w_ref[...]) + b_ref[...][None, :]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "tanh":
+        y = jnp.tanh(y)
+    out_ref[...] = y
+
+
+def fused_linear(x, w, b, activation="relu", *, block_b=_BLOCK_B):
+    """Fused (matmul + bias + activation); x [B,Din], w [Din,Dout], b [Dout].
+
+    Grid over the batch: W/b stay VMEM-resident across grid steps while
+    activation tiles stream through — the policy-inference schedule for
+    N >> 1000 environments.
+    """
+    if activation not in ("relu", "tanh", "none"):
+        raise ValueError(f"unknown activation {activation!r}")
+    bsz, din = x.shape
+    dout = w.shape[1]
+    bb = min(block_b, bsz)
+    grid = (_cdiv(bsz, bb),)
+    return pl.pallas_call(
+        functools.partial(_fused_linear_kernel, activation=activation),
+        out_shape=jax.ShapeDtypeStruct((bsz, dout), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, din), lambda i: (i, 0)),
+            pl.BlockSpec((din, dout), lambda i: (0, 0)),
+            pl.BlockSpec((dout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb, dout), lambda i: (i, 0)),
+        interpret=True,
+    )(x, w, b)

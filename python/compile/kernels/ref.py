@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: `python/tests/test_kernels.py`
+sweeps shapes/values with hypothesis and asserts the Pallas kernels
+(interpret=True) match these references to float32 tolerance. The L2 model
+graphs may also call these directly when a kernel is not profitable for a
+given shape.
+"""
+
+import jax.numpy as jnp
+
+
+def td_target(q1t, q2t, reward_n, gamma_mask):
+    """Fused n-step double-Q TD target.
+
+    y = r_n + gamma^n * (1 - d) * min(Q1'(s', a'), Q2'(s', a'))
+
+    Args:
+      q1t, q2t:    [B] target-critic values at (s_{t+n}, pi(s_{t+n})).
+      reward_n:    [B] n-step discounted reward sum  sum_k gamma^k r_{t+k}.
+      gamma_mask:  [B] gamma^n * (1 - d_{t+n}) — zero where the n-step
+                   window hit a termination.
+    Returns: [B] TD target y.
+    """
+    return reward_n + gamma_mask * jnp.minimum(q1t, q2t)
+
+
+def categorical_projection(probs, z, reward_n, gamma_mask, v_min, v_max):
+    """C51 categorical projection (Bellemare et al., 2017), dense form.
+
+    Projects the shifted/scaled target distribution onto the fixed support.
+    The classic formulation is a scatter-add over floor/ceil buckets; this
+    dense band formulation is numerically identical:
+
+      m[b, i] = sum_j p[b, j] * max(0, 1 - |Tz[b, j] - z_i| / dz)
+
+    because for Tz strictly between two atoms exactly those two atoms get
+    hat-function weights (l_weight = u - b, u_weight = b - l), and for Tz
+    landing on an atom that atom gets weight 1.
+
+    Args:
+      probs:      [B, L] target-network next-state distribution.
+      z:          [L] support atoms (uniform spacing dz).
+      reward_n:   [B] n-step reward sum.
+      gamma_mask: [B] gamma^n * (1 - done).
+      v_min, v_max: scalars, support bounds.
+    Returns: [B, L] projected probabilities (rows sum to 1).
+    """
+    dz = (v_max - v_min) / (z.shape[0] - 1)
+    tz = reward_n[:, None] + gamma_mask[:, None] * z[None, :]  # [B, L]
+    tz = jnp.clip(tz, v_min, v_max)
+    # Hat-function weights onto every support atom: [B, L_target, L_support]
+    w = jnp.maximum(0.0, 1.0 - jnp.abs(tz[:, :, None] - z[None, None, :]) / dz)
+    return jnp.einsum("bj,bji->bi", probs, w)
+
+
+def polyak(target, online, tau):
+    """Soft target update: target <- (1 - tau) * target + tau * online."""
+    return (1.0 - tau) * target + tau * online
+
+
+def fused_linear(x, w, b, activation="relu"):
+    """Linear layer with fused bias + activation.
+
+    Args:
+      x: [B, Din], w: [Din, Dout], b: [Dout].
+      activation: "relu" | "tanh" | "none".
+    Returns: [B, Dout].
+    """
+    y = x @ w + b[None, :]
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "tanh":
+        return jnp.tanh(y)
+    if activation == "none":
+        return y
+    raise ValueError(f"unknown activation {activation!r}")

@@ -1,0 +1,107 @@
+"""Flat-parameter layouts shared between the JAX graphs and the rust side.
+
+Every network is one flat f32[P] vector. A `Layout` records where each
+tensor lives inside it (offset, shape, fan_in, init scale); `aot.py` dumps
+layouts into `artifacts/manifest.json` so the rust coordinator can
+initialize parameters natively and ship them across processes as plain
+host vectors — the paper's "network transfer" arrows.
+"""
+
+import math
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Entry:
+    """One tensor inside a flat parameter vector."""
+
+    name: str
+    offset: int
+    shape: tuple
+    fan_in: int
+    scale: float = 1.0  # multiplier on the fan-in uniform bound
+
+    @property
+    def size(self):
+        return math.prod(self.shape)
+
+    def to_json(self):
+        return {
+            "name": self.name,
+            "offset": self.offset,
+            "shape": list(self.shape),
+            "fan_in": self.fan_in,
+            "scale": self.scale,
+        }
+
+
+@dataclass
+class Layout:
+    """Ordered tensor entries inside one flat vector."""
+
+    entries: list = field(default_factory=list)
+    size: int = 0
+
+    def add(self, name, shape, fan_in, scale=1.0):
+        e = Entry(name, self.size, tuple(shape), fan_in, scale)
+        self.entries.append(e)
+        self.size += e.size
+        return e
+
+    def slices(self, theta):
+        """Split a flat jnp vector into reshaped tensors (lowered to static
+        slices, so XLA fuses them away)."""
+        out = {}
+        for e in self.entries:
+            out[e.name] = theta[e.offset : e.offset + e.size].reshape(e.shape)
+        return out
+
+    def to_json(self):
+        return {"size": self.size, "entries": [e.to_json() for e in self.entries]}
+
+
+def mlp_layout(dims, prefix="", final_scale=1.0):
+    """Layout for an MLP with layer sizes `dims` (e.g. [obs, 128, 128, act]).
+
+    `final_scale` shrinks the last layer's init (standard for policy heads).
+    """
+    lay = Layout()
+    n = len(dims) - 1
+    for i in range(n):
+        din, dout = dims[i], dims[i + 1]
+        scale = final_scale if i == n - 1 else 1.0
+        lay.add(f"{prefix}w{i}", (din, dout), din, scale)
+        lay.add(f"{prefix}b{i}", (dout,), din, scale)
+    return lay
+
+
+def double_mlp_layout(dims, final_scale=1.0):
+    """Two independent MLPs (double-Q critics) in one flat vector."""
+    lay = Layout()
+    for q in (1, 2):
+        n = len(dims) - 1
+        for i in range(n):
+            din, dout = dims[i], dims[i + 1]
+            scale = final_scale if i == n - 1 else 1.0
+            lay.add(f"q{q}_w{i}", (din, dout), din, scale)
+            lay.add(f"q{q}_b{i}", (dout,), din, scale)
+    return lay
+
+
+def conv_mlp_layout(conv, mlp_dims, final_scale=1.0):
+    """Conv stack followed by an MLP, one flat vector.
+
+    `conv` is a list of (kh, kw, cin, cout, stride) tuples.
+    """
+    lay = Layout()
+    for i, (kh, kw, cin, cout, _s) in enumerate(conv):
+        fan_in = kh * kw * cin
+        lay.add(f"cw{i}", (kh, kw, cin, cout), fan_in)
+        lay.add(f"cb{i}", (cout,), fan_in)
+    n = len(mlp_dims) - 1
+    for i in range(n):
+        din, dout = mlp_dims[i], mlp_dims[i + 1]
+        scale = final_scale if i == n - 1 else 1.0
+        lay.add(f"w{i}", (din, dout), din, scale)
+        lay.add(f"b{i}", (dout,), din, scale)
+    return lay

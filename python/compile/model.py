@@ -1,0 +1,457 @@
+"""Layer-2 JAX graphs: networks, losses, and optimizer steps for PQL.
+
+Everything here operates on *flat* parameter vectors (see `layout.py`) so
+the rust coordinator can hold, initialize, and transfer network state as
+plain host buffers. Each public `*_infer` / `*_update` function is a pure
+function lowered once by `aot.py` into an HLO-text artifact; python never
+runs at training time.
+
+The compute hot-spots call the Layer-1 Pallas kernels
+(`kernels.pallas_kernels`): fused TD targets, the C51 categorical
+projection, polyak averaging, and fused linear layers on the inference
+path. Gradient paths use plain jnp (XLA fuses those well, and keeps the
+kernels free of custom VJPs).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import layout as L
+from .kernels import pallas_kernels as K
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+OBS_CLIP = 5.0
+LOG_STD_MIN, LOG_STD_MAX = -5.0, 2.0
+
+
+def normalize_obs(obs, mu, var):
+    """(obs - mu) / sqrt(var + eps), clipped — the paper normalizes obs."""
+    return jnp.clip((obs - mu[None, :]) * jax.lax.rsqrt(var[None, :] + 1e-5),
+                    -OBS_CLIP, OBS_CLIP)
+
+
+def mlp(params, prefix, x, n_layers, hidden_act="relu", out_act="none",
+        use_pallas=False):
+    """Forward an MLP whose tensors live in `params` dict under `prefix`."""
+    for i in range(n_layers):
+        w = params[f"{prefix}w{i}"]
+        b = params[f"{prefix}b{i}"]
+        act = hidden_act if i < n_layers - 1 else out_act
+        if use_pallas:
+            x = K.fused_linear(x, w, b, act)
+        else:
+            y = x @ w + b[None, :]
+            if act == "relu":
+                y = jnp.maximum(y, 0.0)
+            elif act == "tanh":
+                y = jnp.tanh(y)
+            x = y
+    return x
+
+
+def adam_step(theta, grad, m, v, t, lr, *, beta1=0.9, beta2=0.999, eps=1e-8,
+              clip=0.5):
+    """One Adam step over a flat vector, with global-norm gradient clipping
+    (Table B.1: gradient clipping 0.5)."""
+    gnorm = jnp.sqrt(jnp.sum(grad * grad) + 1e-12)
+    grad = grad * jnp.minimum(1.0, clip / gnorm)
+    m2 = beta1 * m + (1.0 - beta1) * grad
+    v2 = beta2 * v + (1.0 - beta2) * grad * grad
+    mhat = m2 / (1.0 - beta1**t)
+    vhat = v2 / (1.0 - beta2**t)
+    theta2 = theta - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return theta2, m2, v2
+
+
+# ---------------------------------------------------------------------------
+# Model bundle: per-task dimensions and layouts
+# ---------------------------------------------------------------------------
+
+
+class Spec:
+    """Dimensions + layouts for one (task, algo-family) artifact bundle."""
+
+    def __init__(self, obs_dim, act_dim, hidden=(128, 128), atoms=51,
+                 v_min=-10.0, v_max=10.0, critic_obs_dim=None):
+        self.obs_dim = obs_dim
+        self.act_dim = act_dim
+        self.hidden = tuple(hidden)
+        self.atoms = atoms
+        self.v_min, self.v_max = v_min, v_max
+        # Asymmetric actor-critic (vision task): critic sees the state.
+        self.critic_obs_dim = critic_obs_dim or obs_dim
+
+        h = list(self.hidden)
+        co = self.critic_obs_dim
+        self.actor = L.mlp_layout([obs_dim] + h + [act_dim], final_scale=0.1)
+        self.critic = L.double_mlp_layout([co + act_dim] + h + [1])
+        self.critic_dist = L.double_mlp_layout([co + act_dim] + h + [atoms],
+                                               final_scale=0.1)
+        # SAC policy head outputs mean and log_std.
+        self.sac_actor = L.mlp_layout([obs_dim] + h + [2 * act_dim],
+                                      final_scale=0.1)
+        # PPO: policy mean + state-independent log_std + value net, one vector.
+        ppo = L.mlp_layout([obs_dim] + h + [act_dim], prefix="pi_",
+                           final_scale=0.1)
+        ppo.add("log_std", (act_dim,), 1, scale=0.0)  # init exactly 0
+        n = len(h) + 1
+        dims = [co] + h + [1]
+        for i in range(n):
+            ppo.add(f"v_w{i}", (dims[i], dims[i + 1]), dims[i])
+            ppo.add(f"v_b{i}", (dims[i + 1],), dims[i])
+        self.ppo = ppo
+
+        self.n_layers = len(h) + 1
+        self.z = jnp.linspace(v_min, v_max, atoms)
+
+    # -- network forwards ---------------------------------------------------
+
+    def actor_fwd(self, theta, obs_n, use_pallas=True):
+        p = self.actor.slices(theta)
+        return mlp(p, "", obs_n, self.n_layers, out_act="tanh",
+                   use_pallas=use_pallas)
+
+    def critic_fwd(self, theta, obs_n, act):
+        p = self.critic.slices(theta)
+        x = jnp.concatenate([obs_n, act], axis=1)
+        q1 = mlp(p, "q1_", x, self.n_layers)[:, 0]
+        q2 = mlp(p, "q2_", x, self.n_layers)[:, 0]
+        return q1, q2
+
+    def critic_dist_fwd(self, theta, obs_n, act):
+        p = self.critic_dist.slices(theta)
+        x = jnp.concatenate([obs_n, act], axis=1)
+        l1 = mlp(p, "q1_", x, self.n_layers)
+        l2 = mlp(p, "q2_", x, self.n_layers)
+        return l1, l2  # logits [B, atoms]
+
+    def sac_actor_fwd(self, theta, obs_n):
+        p = self.sac_actor.slices(theta)
+        out = mlp(p, "", obs_n, self.n_layers)
+        mean, log_std = jnp.split(out, 2, axis=1)
+        log_std = jnp.clip(log_std, LOG_STD_MIN, LOG_STD_MAX)
+        return mean, log_std
+
+    def ppo_fwd(self, theta, obs_n, critic_obs_n):
+        p = self.ppo.slices(theta)
+        mean = mlp(p, "pi_", obs_n, self.n_layers, out_act="tanh")
+        value = mlp(p, "v_", critic_obs_n, self.n_layers)[:, 0]
+        return mean, p["log_std"], value
+
+
+def sac_sample(mean, log_std, noise):
+    """Tanh-Gaussian sample + log-prob (SAC reparameterization)."""
+    std = jnp.exp(log_std)
+    u = mean + std * noise
+    a = jnp.tanh(u)
+    logp = -0.5 * (noise**2 + 2.0 * log_std + jnp.log(2.0 * jnp.pi))
+    # tanh change of variables
+    logp = logp - jnp.log(jnp.maximum(1.0 - a**2, 1e-6))
+    return a, jnp.sum(logp, axis=1)
+
+
+def gaussian_logp(act, mean, log_std):
+    """Diagonal Gaussian log-density (PPO)."""
+    z = (act - mean) * jnp.exp(-log_std)[None, :]
+    per = -0.5 * z**2 - log_std[None, :] - 0.5 * jnp.log(2.0 * jnp.pi)
+    return jnp.sum(per, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# DDPG / PQL core steps
+# ---------------------------------------------------------------------------
+
+
+def ddpg_actor_infer(spec):
+    """(theta_a, obs[C,Do], mu, var) -> deterministic action [C,Da].
+
+    The Actor process's hot path: runs through the Pallas fused-linear
+    kernels. Exploration noise is added rust-side (mixed exploration)."""
+
+    def f(theta_a, obs, mu, var):
+        return (spec.actor_fwd(theta_a, normalize_obs(obs, mu, var)),)
+
+    return f
+
+
+def ddpg_critic_update(spec, tau):
+    """One V-learner step: double-Q n-step Bellman regression + Adam +
+    polyak target update. See DESIGN.md for the exact signature."""
+
+    def loss_fn(theta_c, s_n, a, y):
+        q1, q2 = spec.critic_fwd(theta_c, s_n, a)
+        return jnp.mean((q1 - y) ** 2) + jnp.mean((q2 - y) ** 2), (q1, q2)
+
+    def f(theta_c, m, v, t, theta_ct, theta_a, s, a, rn, s2, gmask, mu, var, lr):
+        s_n = normalize_obs(s, mu, var)
+        s2_n = normalize_obs(s2, mu, var)
+        # Target: lagged local policy pi^v picks a', target critics evaluate.
+        a2 = spec.actor_fwd(theta_a, s2_n, use_pallas=False)
+        q1t, q2t = spec.critic_fwd(theta_ct, s2_n, a2)
+        y = K.td_target(q1t, q2t, rn, gmask)          # L1 kernel
+        y = jax.lax.stop_gradient(y)
+        (loss, (q1, _)), grad = jax.value_and_grad(loss_fn, has_aux=True)(
+            theta_c, s_n, a, y)
+        theta_c2, m2, v2 = adam_step(theta_c, grad, m, v, t[0], lr[0])
+        theta_ct2 = K.polyak(theta_ct, theta_c2, tau)  # L1 kernel
+        return theta_c2, m2, v2, theta_ct2, loss[None], jnp.mean(q1)[None]
+
+    return f
+
+
+def ddpg_actor_update(spec):
+    """One P-learner step: ascend min_i Q_i(s, pi(s)) with the local
+    critic copy Q^p (Algorithm 2)."""
+
+    def loss_fn(theta_a, theta_c, s_n):
+        act = spec.actor_fwd(theta_a, s_n, use_pallas=False)
+        q1, q2 = spec.critic_fwd(theta_c, s_n, act)
+        return -jnp.mean(jnp.minimum(q1, q2))
+
+    def f(theta_a, m, v, t, theta_c, s, mu, var, lr):
+        s_n = normalize_obs(s, mu, var)
+        loss, grad = jax.value_and_grad(loss_fn)(theta_a, theta_c, s_n)
+        theta_a2, m2, v2 = adam_step(theta_a, grad, m, v, t[0], lr[0])
+        return theta_a2, m2, v2, loss[None]
+
+    return f
+
+
+def vision_critic_update(spec, tau):
+    """Asymmetric actor-critic V-learner step (vision Ball Balancing):
+    the actor acts from pixels, the critic regresses on the low-dim state
+    (Pinto et al., 2017). `s`/`s2` are pixel observations; `cs`/`cs2` the
+    matching states."""
+
+    def loss_fn(theta_c, cs_n, a, y):
+        q1, q2 = spec.critic_fwd(theta_c, cs_n, a)
+        return jnp.mean((q1 - y) ** 2) + jnp.mean((q2 - y) ** 2), q1
+
+    def f(theta_c, m, v, t, theta_ct, theta_a, cs, a, rn, s2, cs2, gmask,
+          mu, var, cmu, cvar, lr):
+        # Note: the *current* image observation is not an input — the
+        # asymmetric critic regresses on states; only the next image s2
+        # is needed (for the target policy's action). XLA would prune an
+        # unused parameter anyway, so the signature omits it.
+        cs_n = normalize_obs(cs, cmu, cvar)
+        cs2_n = normalize_obs(cs2, cmu, cvar)
+        s2_n = normalize_obs(s2, mu, var)
+        a2 = spec.actor_fwd(theta_a, s2_n, use_pallas=False)
+        q1t, q2t = spec.critic_fwd(theta_ct, cs2_n, a2)
+        y = jax.lax.stop_gradient(K.td_target(q1t, q2t, rn, gmask))
+        (loss, q1), grad = jax.value_and_grad(loss_fn, has_aux=True)(
+            theta_c, cs_n, a, y)
+        theta_c2, m2, v2 = adam_step(theta_c, grad, m, v, t[0], lr[0])
+        theta_ct2 = K.polyak(theta_ct, theta_c2, tau)
+        return theta_c2, m2, v2, theta_ct2, loss[None], jnp.mean(q1)[None]
+
+    return f
+
+
+def vision_actor_update(spec):
+    """Asymmetric P-learner step: pixels in, state-critic scores."""
+
+    def loss_fn(theta_a, theta_c, s_n, cs_n):
+        act = spec.actor_fwd(theta_a, s_n, use_pallas=False)
+        q1, q2 = spec.critic_fwd(theta_c, cs_n, act)
+        return -jnp.mean(jnp.minimum(q1, q2))
+
+    def f(theta_a, m, v, t, theta_c, s, cs, mu, var, cmu, cvar, lr):
+        s_n = normalize_obs(s, mu, var)
+        cs_n = normalize_obs(cs, cmu, cvar)
+        loss, grad = jax.value_and_grad(loss_fn)(theta_a, theta_c, s_n, cs_n)
+        theta_a2, m2, v2 = adam_step(theta_a, grad, m, v, t[0], lr[0])
+        return theta_a2, m2, v2, loss[None]
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# PQL-D: distributional (C51) critic
+# ---------------------------------------------------------------------------
+
+
+def dist_critic_update(spec, tau):
+    """C51 V-learner step: project the target distribution (L1 kernel) and
+    minimize cross-entropy on both critics (double-Q via smaller mean)."""
+
+    z = spec.z
+
+    def loss_fn(theta_c, s_n, a, proj):
+        l1, l2 = spec.critic_dist_fwd(theta_c, s_n, a)
+        ce1 = -jnp.mean(jnp.sum(proj * jax.nn.log_softmax(l1), axis=1))
+        ce2 = -jnp.mean(jnp.sum(proj * jax.nn.log_softmax(l2), axis=1))
+        q1 = jnp.sum(jax.nn.softmax(l1) * z[None, :], axis=1)
+        return ce1 + ce2, q1
+
+    def f(theta_c, m, v, t, theta_ct, theta_a, s, a, rn, s2, gmask, mu, var, lr):
+        s_n = normalize_obs(s, mu, var)
+        s2_n = normalize_obs(s2, mu, var)
+        a2 = spec.actor_fwd(theta_a, s2_n, use_pallas=False)
+        l1t, l2t = spec.critic_dist_fwd(theta_ct, s2_n, a2)
+        p1, p2 = jax.nn.softmax(l1t), jax.nn.softmax(l2t)
+        e1 = jnp.sum(p1 * z[None, :], axis=1)
+        e2 = jnp.sum(p2 * z[None, :], axis=1)
+        probs = jnp.where((e1 <= e2)[:, None], p1, p2)  # double-Q: lesser mean
+        proj = K.categorical_projection(probs, z, rn, gmask,
+                                        spec.v_min, spec.v_max)  # L1 kernel
+        proj = jax.lax.stop_gradient(proj)
+        (loss, q1), grad = jax.value_and_grad(loss_fn, has_aux=True)(
+            theta_c, s_n, a, proj)
+        theta_c2, m2, v2 = adam_step(theta_c, grad, m, v, t[0], lr[0])
+        theta_ct2 = K.polyak(theta_ct, theta_c2, tau)
+        return theta_c2, m2, v2, theta_ct2, loss[None], jnp.mean(q1)[None]
+
+    return f
+
+
+def dist_actor_update(spec):
+    """P-learner step against the distributional critic: ascend the lesser
+    expected atom value."""
+
+    z = spec.z
+
+    def loss_fn(theta_a, theta_c, s_n):
+        act = spec.actor_fwd(theta_a, s_n, use_pallas=False)
+        l1, l2 = spec.critic_dist_fwd(theta_c, s_n, act)
+        q1 = jnp.sum(jax.nn.softmax(l1) * z[None, :], axis=1)
+        q2 = jnp.sum(jax.nn.softmax(l2) * z[None, :], axis=1)
+        return -jnp.mean(jnp.minimum(q1, q2))
+
+    def f(theta_a, m, v, t, theta_c, s, mu, var, lr):
+        s_n = normalize_obs(s, mu, var)
+        loss, grad = jax.value_and_grad(loss_fn)(theta_a, theta_c, s_n)
+        theta_a2, m2, v2 = adam_step(theta_a, grad, m, v, t[0], lr[0])
+        return theta_a2, m2, v2, loss[None]
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# SAC (n-step) — both sequential baseline and PQL-SAC use these graphs
+# ---------------------------------------------------------------------------
+
+
+def sac_actor_infer(spec):
+    """(theta, obs, mu, var, noise) -> stochastic tanh-Gaussian action.
+    Pass noise = 0 for deterministic evaluation."""
+
+    def f(theta, obs, mu, var, noise):
+        mean, log_std = spec.sac_actor_fwd(theta, normalize_obs(obs, mu, var))
+        a, _ = sac_sample(mean, log_std, noise)
+        return (a,)
+
+    return f
+
+
+def sac_critic_update(spec, tau):
+    """SAC V-learner step: soft Bellman target with entropy term."""
+
+    def loss_fn(theta_c, s_n, a, y):
+        q1, q2 = spec.critic_fwd(theta_c, s_n, a)
+        return jnp.mean((q1 - y) ** 2) + jnp.mean((q2 - y) ** 2), q1
+
+    def f(theta_c, m, v, t, theta_ct, theta_a, log_alpha, s, a, rn, s2,
+          gmask, noise, mu, var, lr):
+        s_n = normalize_obs(s, mu, var)
+        s2_n = normalize_obs(s2, mu, var)
+        mean2, log_std2 = spec.sac_actor_fwd(theta_a, s2_n)
+        a2, logp2 = sac_sample(mean2, log_std2, noise)
+        q1t, q2t = spec.critic_fwd(theta_ct, s2_n, a2)
+        alpha = jnp.exp(log_alpha[0])
+        soft_q = jnp.minimum(q1t, q2t) - alpha * logp2
+        y = jax.lax.stop_gradient(rn + gmask * soft_q)
+        (loss, q1), grad = jax.value_and_grad(loss_fn, has_aux=True)(
+            theta_c, s_n, a, y)
+        theta_c2, m2, v2 = adam_step(theta_c, grad, m, v, t[0], lr[0])
+        theta_ct2 = K.polyak(theta_ct, theta_c2, tau)
+        return theta_c2, m2, v2, theta_ct2, loss[None], jnp.mean(q1)[None]
+
+    return f
+
+
+def sac_actor_update(spec, target_entropy):
+    """SAC P-learner step: policy + temperature update."""
+
+    def pi_loss(theta_a, theta_c, log_alpha, s_n, noise):
+        mean, log_std = spec.sac_actor_fwd(theta_a, s_n)
+        a, logp = sac_sample(mean, log_std, noise)
+        q1, q2 = spec.critic_fwd(theta_c, s_n, a)
+        alpha = jax.lax.stop_gradient(jnp.exp(log_alpha[0]))
+        return jnp.mean(alpha * logp - jnp.minimum(q1, q2)), logp
+
+    def alpha_loss(log_alpha, logp):
+        return -jnp.mean(jnp.exp(log_alpha[0]) *
+                         jax.lax.stop_gradient(logp + target_entropy))
+
+    def f(theta_a, m, v, t, theta_c, log_alpha, am, av, s, noise, mu, var, lr):
+        s_n = normalize_obs(s, mu, var)
+        (loss, logp), grad = jax.value_and_grad(pi_loss, has_aux=True)(
+            theta_a, theta_c, log_alpha, s_n, noise)
+        theta_a2, m2, v2 = adam_step(theta_a, grad, m, v, t[0], lr[0])
+        aloss, agrad = jax.value_and_grad(alpha_loss)(log_alpha, logp)
+        log_alpha2, am2, av2 = adam_step(log_alpha, agrad, am, av, t[0], lr[0])
+        ent = -jnp.mean(logp)
+        return (theta_a2, m2, v2, log_alpha2, am2, av2, loss[None],
+                aloss[None], ent[None])
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# PPO baseline
+# ---------------------------------------------------------------------------
+
+
+def ppo_infer(spec):
+    """(theta, obs, critic_obs, mu, var, noise) -> (action, logp, value)."""
+
+    def f(theta, obs, critic_obs, mu, var, noise):
+        obs_n = normalize_obs(obs, mu, var)
+        # For symmetric tasks critic_obs == obs; vision passes state here.
+        cmu, cvar = mu, var
+        if spec.critic_obs_dim != spec.obs_dim:
+            cmu = jnp.zeros((spec.critic_obs_dim,))
+            cvar = jnp.ones((spec.critic_obs_dim,))
+        cobs_n = normalize_obs(critic_obs, cmu, cvar)
+        mean, log_std, value = spec.ppo_fwd(theta, obs_n, cobs_n)
+        act = mean + jnp.exp(log_std)[None, :] * noise
+        logp = gaussian_logp(act, mean, log_std)
+        return act, logp, value
+
+    return f
+
+
+def ppo_update(spec, clip=0.2, vf_coef=1.0, ent_coef=0.0):
+    """One clipped-surrogate minibatch step (Schulman et al., 2017)."""
+
+    def loss_fn(theta, s_n, cs_n, a, adv, ret, logp_old):
+        mean, log_std, value = spec.ppo_fwd(theta, s_n, cs_n)
+        logp = gaussian_logp(a, mean, log_std)
+        ratio = jnp.exp(logp - logp_old)
+        surr = jnp.minimum(ratio * adv,
+                           jnp.clip(ratio, 1.0 - clip, 1.0 + clip) * adv)
+        pi_loss = -jnp.mean(surr)
+        v_loss = jnp.mean((value - ret) ** 2)
+        entropy = jnp.mean(jnp.sum(log_std) +
+                           0.5 * spec.act_dim * jnp.log(2 * jnp.pi * jnp.e))
+        kl = jnp.mean(logp_old - logp)
+        total = pi_loss + vf_coef * v_loss - ent_coef * entropy
+        return total, (pi_loss, v_loss, kl)
+
+    def f(theta, m, v, t, s, critic_s, a, adv, ret, logp_old, mu, var, lr):
+        s_n = normalize_obs(s, mu, var)
+        cmu, cvar = mu, var
+        if spec.critic_obs_dim != spec.obs_dim:
+            cmu = jnp.zeros((spec.critic_obs_dim,))
+            cvar = jnp.ones((spec.critic_obs_dim,))
+        cs_n = normalize_obs(critic_s, cmu, cvar)
+        (loss, (pl_, vl, kl)), grad = jax.value_and_grad(
+            loss_fn, has_aux=True)(theta, s_n, cs_n, a, adv, ret, logp_old)
+        theta2, m2, v2 = adam_step(theta, grad, m, v, t[0], lr[0], clip=1.0)
+        return theta2, m2, v2, pl_[None], vl[None], kl[None]
+
+    return f

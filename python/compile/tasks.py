@@ -1,0 +1,37 @@
+"""The task table — single source of truth for per-task dimensions.
+
+The rust environment suite (`rust/src/envs/`) implements analogs of the
+paper's Isaac Gym benchmarks with exactly these observation/action sizes;
+`pql artifacts` cross-checks the manifest against the rust side at startup.
+
+`sim_cost` is the relative per-step simulation compute knob (contact-rich
+tasks simulate slower — Table B.3 shows ShadowHand ~4x Ant), and
+`reward_scale` mirrors Table B.2.
+"""
+
+TASKS = {
+    # name: obs, act, critic_obs (asymmetric only), reward_scale, sim_cost
+    "ant":          dict(obs=12, act=4,  reward_scale=0.01, sim_cost=1.0),
+    "humanoid":     dict(obs=28, act=8,  reward_scale=0.01, sim_cost=2.0),
+    "anymal":       dict(obs=24, act=8,  reward_scale=1.0,  sim_cost=1.5),
+    "shadow_hand":  dict(obs=30, act=12, reward_scale=0.01, sim_cost=4.0),
+    "allegro_hand": dict(obs=26, act=10, reward_scale=0.01, sim_cost=3.5),
+    "franka_cube":  dict(obs=16, act=4,  reward_scale=0.1,  sim_cost=2.5),
+    "dclaw":        dict(obs=26, act=9,  reward_scale=0.01, sim_cost=5.0),
+    "ballbalance_vision": dict(obs=576, act=2, critic_obs=8,
+                                reward_scale=0.1, sim_cost=3.0),
+}
+
+# Default compile-time sizes (scaled from the paper's Table B.1 — see
+# DESIGN.md §3): inference chunk and update batch.
+CHUNK = 256
+BATCH = 512
+HIDDEN = (128, 128)
+ATOMS = 51
+V_MIN, V_MAX = -10.0, 10.0
+TAU = 0.05
+NSTEP = 3
+GAMMA = 0.99
+
+# Extra critic/actor-update batch sizes for the Fig. 8 sweep (ant only).
+FIG8_BATCHES = (64, 256, 1024, 4096)

@@ -1,0 +1,75 @@
+"""AOT pipeline smoke: lowering produces parseable HLO text and a manifest
+whose recorded shapes match the lowered modules."""
+
+import json
+import os
+import tempfile
+
+import pytest
+
+from compile import aot, tasks
+
+
+@pytest.fixture(scope="module")
+def quick_artifacts():
+    with tempfile.TemporaryDirectory() as d:
+        em = aot.Emitter(d, quick=True)
+        aot.emit_task(em, "ant", skip_fig8=True)
+        mpath = os.path.join(d, "manifest.json")
+        with open(mpath, "w") as f:
+            json.dump(em.manifest, f)
+        yield d, em.manifest
+
+
+def test_hlo_files_exist_and_look_like_hlo(quick_artifacts):
+    d, manifest = quick_artifacts
+    arts = manifest["tasks"]["ant"]["artifacts"]
+    assert {"actor_infer", "critic_update", "actor_update", "ppo_infer",
+            "ppo_update"} <= set(arts)
+    for name, a in arts.items():
+        path = os.path.join(d, a["file"])
+        text = open(path).read()
+        assert "HloModule" in text, f"{name}: not HLO text"
+        assert "ENTRY" in text, f"{name}: missing entry computation"
+        # Parameter count of the ENTRY computation must match the manifest
+        # input list (nested fusion computations also declare parameters,
+        # so restrict to the ENTRY block).
+        entry = text[text.index("ENTRY"):]
+        nparams = entry.count("parameter(")
+        assert nparams == len(a["inputs"]), (
+            f"{name}: {nparams} ENTRY parameters != {len(a['inputs'])} "
+            "manifest inputs (XLA pruned an unused arg?)"
+        )
+
+
+def test_layout_sizes_consistent(quick_artifacts):
+    _, manifest = quick_artifacts
+    t = manifest["tasks"]["ant"]
+    for lname, lay in t["layouts"].items():
+        total = sum(
+            int(__import__("math").prod(e["shape"])) for e in lay["entries"]
+        )
+        assert total == lay["size"], lname
+        # Offsets are contiguous and start at zero.
+        off = 0
+        for e in lay["entries"]:
+            assert e["offset"] == off
+            off += int(__import__("math").prod(e["shape"]))
+
+
+def test_actor_infer_io_shapes(quick_artifacts):
+    _, manifest = quick_artifacts
+    t = manifest["tasks"]["ant"]
+    a = t["artifacts"]["actor_infer"]
+    chunk = manifest["chunk"]
+    names = [i["name"] for i in a["inputs"]]
+    assert names == ["theta_a", "obs", "mu", "var"]
+    assert a["inputs"][1]["shape"] == [chunk, t["obs_dim"]]
+    assert a["outputs"][0]["shape"] == [chunk, t["act_dim"]]
+
+
+def test_all_tasks_table_covered():
+    # Every env the rust side exposes must be in the python task table.
+    expected = {"ant", "humanoid", "anymal", "shadow_hand", "allegro_hand",
+                "franka_cube", "ballbalance_vision", "dclaw"}
+    assert set(tasks.TASKS) == expected

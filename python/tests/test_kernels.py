@@ -1,0 +1,245 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and values; fixed edge-case tests cover the
+boundaries the sweeps are unlikely to hit exactly (atoms on support edges,
+all-done batches, zero-size remainders of the block grid).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pallas_kernels as k
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+F32 = np.float32
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# td_target
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=777),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    gamma=st.floats(min_value=0.5, max_value=0.999),
+    n=st.integers(min_value=1, max_value=8),
+)
+def test_td_target_matches_ref(b, seed, gamma, n):
+    r = _rng(seed)
+    q1 = r.normal(size=b).astype(F32) * 10
+    q2 = r.normal(size=b).astype(F32) * 10
+    rew = r.normal(size=b).astype(F32)
+    done = (r.uniform(size=b) < 0.2).astype(F32)
+    gmask = (gamma**n * (1 - done)).astype(F32)
+    got = k.td_target(jnp.array(q1), jnp.array(q2), jnp.array(rew), jnp.array(gmask))
+    want = ref.td_target(jnp.array(q1), jnp.array(q2), jnp.array(rew), jnp.array(gmask))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_td_target_all_done_reduces_to_reward():
+    b = 33
+    q1 = jnp.ones((b,)) * 100.0
+    q2 = jnp.ones((b,)) * -100.0
+    rew = jnp.arange(b, dtype=jnp.float32)
+    gmask = jnp.zeros((b,))
+    got = k.td_target(q1, q2, rew, gmask)
+    np.testing.assert_allclose(got, rew, rtol=0, atol=0)
+
+
+def test_td_target_takes_min_of_critics():
+    q1 = jnp.array([1.0, -5.0])
+    q2 = jnp.array([2.0, -1.0])
+    got = k.td_target(q1, q2, jnp.zeros(2), jnp.ones(2))
+    np.testing.assert_allclose(got, [1.0, -5.0])
+
+
+def test_td_target_block_remainder():
+    # B deliberately not a multiple of the block size.
+    b = k._BLOCK_B + 7
+    r = _rng(0)
+    q1 = jnp.array(r.normal(size=b).astype(F32))
+    q2 = jnp.array(r.normal(size=b).astype(F32))
+    rew = jnp.array(r.normal(size=b).astype(F32))
+    g = jnp.full((b,), 0.9, dtype=jnp.float32)
+    np.testing.assert_allclose(
+        k.td_target(q1, q2, rew, g), ref.td_target(q1, q2, rew, g),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+# ---------------------------------------------------------------------------
+# categorical_projection
+# ---------------------------------------------------------------------------
+
+
+def _scatter_projection(probs, z, reward_n, gamma_mask, v_min, v_max):
+    """Independent scatter-style implementation (numpy, the paper's form)."""
+    b, length = probs.shape
+    dz = (v_max - v_min) / (length - 1)
+    out = np.zeros((b, length), dtype=np.float64)
+    for bi in range(b):
+        for j in range(length):
+            tz = np.clip(reward_n[bi] + gamma_mask[bi] * z[j], v_min, v_max)
+            pos = (tz - v_min) / dz
+            lo = int(np.floor(pos))
+            hi = int(np.ceil(pos))
+            if lo == hi:
+                out[bi, lo] += probs[bi, j]
+            else:
+                out[bi, lo] += probs[bi, j] * (hi - pos)
+                out[bi, hi] += probs[bi, j] * (pos - lo)
+    return out.astype(F32)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=130),
+    length=st.sampled_from([11, 51]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_cat_proj_matches_ref(b, length, seed):
+    r = _rng(seed)
+    v_min, v_max = -10.0, 10.0
+    logits = r.normal(size=(b, length)).astype(F32)
+    probs = np.exp(logits) / np.exp(logits).sum(-1, keepdims=True)
+    z = np.linspace(v_min, v_max, length).astype(F32)
+    rew = (r.normal(size=b) * 3).astype(F32)
+    gmask = (0.97 * (r.uniform(size=b) > 0.15)).astype(F32)
+    got = k.categorical_projection(
+        jnp.array(probs), jnp.array(z), jnp.array(rew), jnp.array(gmask), v_min, v_max
+    )
+    want = ref.categorical_projection(
+        jnp.array(probs), jnp.array(z), jnp.array(rew), jnp.array(gmask), v_min, v_max
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    # Projection conserves probability mass.
+    np.testing.assert_allclose(np.asarray(got).sum(-1), np.ones(b), rtol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_cat_proj_matches_scatter_form(seed):
+    """Dense band form == classic scatter form (paper's Appendix C math)."""
+    r = _rng(seed)
+    b, length = 17, 21
+    v_min, v_max = -5.0, 5.0
+    logits = r.normal(size=(b, length)).astype(F32)
+    probs = (np.exp(logits) / np.exp(logits).sum(-1, keepdims=True)).astype(F32)
+    z = np.linspace(v_min, v_max, length).astype(F32)
+    rew = (r.normal(size=b)).astype(F32)
+    gmask = np.full(b, 0.9, dtype=F32)
+    got = np.asarray(
+        k.categorical_projection(
+            jnp.array(probs), jnp.array(z), jnp.array(rew), jnp.array(gmask),
+            v_min, v_max,
+        )
+    )
+    want = _scatter_projection(probs, z, rew, gmask, v_min, v_max)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-5)
+
+
+def test_cat_proj_terminal_collapses_to_reward_atom():
+    """gamma_mask=0: all mass lands on the atom(s) bracketing the reward."""
+    length = 11
+    v_min, v_max = -5.0, 5.0
+    z = jnp.linspace(v_min, v_max, length)
+    probs = jnp.full((1, length), 1.0 / length)
+    rew = jnp.array([2.0])  # exactly atom index 7
+    gmask = jnp.array([0.0])
+    got = np.asarray(
+        k.categorical_projection(probs, z, rew, gmask, v_min, v_max)
+    )[0]
+    want = np.zeros(length, dtype=F32)
+    want[7] = 1.0
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_cat_proj_clips_out_of_range_returns():
+    """Rewards beyond the support pile mass on the edge atoms."""
+    length = 5
+    v_min, v_max = -1.0, 1.0
+    z = jnp.linspace(v_min, v_max, length)
+    probs = jnp.full((2, length), 1.0 / length)
+    rew = jnp.array([100.0, -100.0])
+    gmask = jnp.array([0.0, 0.0])
+    got = np.asarray(k.categorical_projection(probs, z, rew, gmask, v_min, v_max))
+    np.testing.assert_allclose(got[0], [0, 0, 0, 0, 1.0], atol=1e-6)
+    np.testing.assert_allclose(got[1], [1.0, 0, 0, 0, 0], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# polyak
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    p=st.integers(min_value=1, max_value=20000),
+    tau=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_polyak_matches_ref(p, tau, seed):
+    r = _rng(seed)
+    t = jnp.array(r.normal(size=p).astype(F32))
+    o = jnp.array(r.normal(size=p).astype(F32))
+    np.testing.assert_allclose(
+        k.polyak(t, o, tau), ref.polyak(t, o, tau), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_polyak_endpoints():
+    t = jnp.array([1.0, 2.0])
+    o = jnp.array([3.0, 4.0])
+    np.testing.assert_allclose(k.polyak(t, o, 0.0), t)
+    np.testing.assert_allclose(k.polyak(t, o, 1.0), o)
+
+
+# ---------------------------------------------------------------------------
+# fused_linear
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=300),
+    din=st.integers(min_value=1, max_value=96),
+    dout=st.integers(min_value=1, max_value=96),
+    act=st.sampled_from(["relu", "tanh", "none"]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_fused_linear_matches_ref(b, din, dout, act, seed):
+    r = _rng(seed)
+    x = jnp.array(r.normal(size=(b, din)).astype(F32))
+    w = jnp.array((r.normal(size=(din, dout)) / np.sqrt(din)).astype(F32))
+    bias = jnp.array(r.normal(size=dout).astype(F32))
+    got = k.fused_linear(x, w, bias, act)
+    want = ref.fused_linear(x, w, bias, act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_fused_linear_rejects_bad_activation():
+    x = jnp.ones((2, 2))
+    w = jnp.ones((2, 2))
+    b = jnp.ones((2,))
+    with pytest.raises(ValueError):
+        k.fused_linear(x, w, b, "gelu")
+
+
+def test_fused_linear_tanh_bounded():
+    r = _rng(1)
+    x = jnp.array(r.normal(size=(64, 8)).astype(F32) * 100)
+    w = jnp.array(r.normal(size=(8, 4)).astype(F32))
+    b = jnp.zeros((4,))
+    y = np.asarray(k.fused_linear(x, w, b, "tanh"))
+    assert np.all(np.abs(y) <= 1.0)

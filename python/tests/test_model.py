@@ -1,0 +1,329 @@
+"""L2 correctness: model graphs vs hand-computed references."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.layout import mlp_layout, double_mlp_layout
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _spec(do=6, da=3, hidden=(16, 16)):
+    return model.Spec(do, da, hidden=hidden, atoms=11, v_min=-5, v_max=5)
+
+
+def _theta(rng, layout):
+    """Fan-in uniform init, mirroring the rust initializer."""
+    out = np.zeros(layout.size, dtype=np.float32)
+    for e in layout.entries:
+        bound = e.scale / np.sqrt(max(e.fan_in, 1))
+        out[e.offset : e.offset + e.size] = rng.uniform(
+            -bound, bound, e.size
+        ).astype(np.float32)
+    return jnp.array(out)
+
+
+# ---------------------------------------------------------------------------
+# layouts
+# ---------------------------------------------------------------------------
+
+
+def test_layout_offsets_are_contiguous():
+    lay = mlp_layout([4, 8, 2])
+    sizes = [e.size for e in lay.entries]
+    offsets = [e.offset for e in lay.entries]
+    assert offsets[0] == 0
+    for i in range(1, len(offsets)):
+        assert offsets[i] == offsets[i - 1] + sizes[i - 1]
+    assert lay.size == sum(sizes) == 4 * 8 + 8 + 8 * 2 + 2
+
+
+def test_double_mlp_layout_has_two_nets():
+    lay = double_mlp_layout([5, 7, 1])
+    names = [e.name for e in lay.entries]
+    assert "q1_w0" in names and "q2_w0" in names
+    assert lay.size == 2 * (5 * 7 + 7 + 7 * 1 + 1)
+
+
+def test_layout_slices_roundtrip():
+    lay = mlp_layout([3, 4, 2])
+    theta = jnp.arange(lay.size, dtype=jnp.float32)
+    p = lay.slices(theta)
+    assert p["w0"].shape == (3, 4)
+    assert p["b1"].shape == (2,)
+    np.testing.assert_allclose(p["w0"].reshape(-1), theta[: 3 * 4])
+
+
+# ---------------------------------------------------------------------------
+# adam
+# ---------------------------------------------------------------------------
+
+
+def test_adam_first_step_matches_analytic():
+    # With m=v=0, t=1: update = lr * g_c / (|g_c| + eps) elementwise
+    # (bias correction cancels), where g_c is the clipped gradient.
+    theta = jnp.zeros(3)
+    grad = jnp.array([0.1, -0.2, 0.05])  # norm < 0.5 -> no clipping
+    m = jnp.zeros(3)
+    v = jnp.zeros(3)
+    t2, m2, v2 = model.adam_step(theta, grad, m, v, 1.0, 1e-3)
+    np.testing.assert_allclose(t2, -1e-3 * np.sign(grad), rtol=1e-4)
+    np.testing.assert_allclose(m2, 0.1 * grad, rtol=1e-6)
+    np.testing.assert_allclose(v2, 0.001 * grad**2, rtol=1e-5, atol=1e-12)
+
+
+def test_adam_clips_global_norm():
+    theta = jnp.zeros(2)
+    grad = jnp.array([30.0, 40.0])  # norm 50 -> scaled to 0.5
+    t2, m2, _ = model.adam_step(theta, grad, jnp.zeros(2), jnp.zeros(2), 1.0, 1.0)
+    np.testing.assert_allclose(m2, 0.1 * grad * (0.5 / 50.0), rtol=1e-5)
+
+
+def test_adam_descends_quadratic():
+    f = lambda x: jnp.sum((x - 3.0) ** 2)
+    theta = jnp.zeros(4)
+    m = jnp.zeros(4)
+    v = jnp.zeros(4)
+    for t in range(1, 400):
+        g = jax.grad(f)(theta)
+        theta, m, v = model.adam_step(theta, g, m, v, float(t), 0.05)
+    np.testing.assert_allclose(theta, 3.0 * np.ones(4), atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# normalization + networks
+# ---------------------------------------------------------------------------
+
+
+def test_normalize_obs_standardizes_and_clips():
+    obs = jnp.array([[10.0, -10.0], [20.0, -20.0]])
+    mu = jnp.array([15.0, -15.0])
+    var = jnp.array([25.0, 25.0])
+    out = model.normalize_obs(obs, mu, var)
+    np.testing.assert_allclose(out, [[-1, 1], [1, -1]], atol=1e-3)
+    big = model.normalize_obs(jnp.array([[1e6, -1e6]]), mu, var)
+    assert np.all(np.abs(big) <= model.OBS_CLIP)
+
+
+def test_actor_fwd_bounded_and_pallas_matches_jnp():
+    spec = _spec()
+    rng = np.random.default_rng(0)
+    theta = _theta(rng, spec.actor)
+    obs = jnp.array(rng.normal(size=(32, spec.obs_dim)).astype(np.float32))
+    a_pallas = spec.actor_fwd(theta, obs, use_pallas=True)
+    a_jnp = spec.actor_fwd(theta, obs, use_pallas=False)
+    assert np.all(np.abs(np.asarray(a_pallas)) <= 1.0)
+    np.testing.assert_allclose(a_pallas, a_jnp, rtol=1e-4, atol=1e-5)
+
+
+def test_critic_fwd_two_independent_heads():
+    spec = _spec()
+    rng = np.random.default_rng(1)
+    theta = _theta(rng, spec.critic)
+    obs = jnp.array(rng.normal(size=(8, spec.obs_dim)).astype(np.float32))
+    act = jnp.array(rng.normal(size=(8, spec.act_dim)).astype(np.float32))
+    q1, q2 = spec.critic_fwd(theta, obs, act)
+    assert q1.shape == (8,) and q2.shape == (8,)
+    # Independent inits -> heads differ.
+    assert not np.allclose(np.asarray(q1), np.asarray(q2))
+
+
+# ---------------------------------------------------------------------------
+# SAC sampling
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_sac_sample_logp_matches_numpy(seed):
+    rng = np.random.default_rng(seed)
+    b, da = 16, 4
+    mean = rng.normal(size=(b, da)).astype(np.float32)
+    log_std = rng.uniform(-2, 0.5, size=(b, da)).astype(np.float32)
+    noise = rng.normal(size=(b, da)).astype(np.float32)
+    a, logp = model.sac_sample(jnp.array(mean), jnp.array(log_std), jnp.array(noise))
+    # numpy reference
+    std = np.exp(log_std)
+    u = mean + std * noise
+    want_a = np.tanh(u)
+    gauss = -0.5 * noise**2 - log_std - 0.5 * np.log(2 * np.pi)
+    corr = np.log(np.maximum(1 - want_a**2, 1e-6))
+    want_logp = (gauss - corr).sum(-1)
+    np.testing.assert_allclose(a, want_a, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(logp, want_logp, rtol=1e-3, atol=1e-3)
+
+
+def test_sac_actions_bounded():
+    spec = _spec()
+    rng = np.random.default_rng(2)
+    theta = _theta(rng, spec.sac_actor)
+    obs = jnp.array(rng.normal(size=(64, spec.obs_dim)).astype(np.float32) * 10)
+    noise = jnp.array(rng.normal(size=(64, spec.act_dim)).astype(np.float32) * 3)
+    f = model.sac_actor_infer(spec)
+    (a,) = f(theta, obs, jnp.zeros(spec.obs_dim), jnp.ones(spec.obs_dim), noise)
+    assert np.all(np.abs(np.asarray(a)) < 1.0 + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# PPO log-prob
+# ---------------------------------------------------------------------------
+
+
+def test_gaussian_logp_matches_scipy_form():
+    rng = np.random.default_rng(3)
+    b, da = 12, 3
+    act = rng.normal(size=(b, da)).astype(np.float32)
+    mean = rng.normal(size=(b, da)).astype(np.float32)
+    log_std = rng.uniform(-1, 1, size=da).astype(np.float32)
+    got = model.gaussian_logp(jnp.array(act), jnp.array(mean), jnp.array(log_std))
+    std = np.exp(log_std)
+    want = (
+        -0.5 * ((act - mean) / std) ** 2 - np.log(std) - 0.5 * np.log(2 * np.pi)
+    ).sum(-1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Update steps actually learn
+# ---------------------------------------------------------------------------
+
+
+def _cu_inputs(spec, rng, b=32):
+    do, da = spec.obs_dim, spec.act_dim
+    s = rng.normal(size=(b, do)).astype(np.float32)
+    a = rng.uniform(-1, 1, size=(b, da)).astype(np.float32)
+    rn = rng.normal(size=b).astype(np.float32)
+    s2 = rng.normal(size=(b, do)).astype(np.float32)
+    gmask = np.full(b, 0.97, dtype=np.float32)
+    return map(jnp.array, (s, a, rn, s2, gmask))
+
+
+def test_ddpg_critic_update_reduces_bellman_error():
+    spec = _spec()
+    rng = np.random.default_rng(4)
+    theta_c = _theta(rng, spec.critic)
+    theta_ct = theta_c
+    theta_a = _theta(rng, spec.actor)
+    m = jnp.zeros(spec.critic.size)
+    v = jnp.zeros(spec.critic.size)
+    mu = jnp.zeros(spec.obs_dim)
+    var = jnp.ones(spec.obs_dim)
+    s, a, rn, s2, gmask = _cu_inputs(spec, rng)
+    f = jax.jit(model.ddpg_critic_update(spec, tau=0.05))
+    losses = []
+    t = 1.0
+    for _ in range(250):
+        theta_c, m, v, theta_ct, loss, _q = f(
+            theta_c, m, v, jnp.array([t]), theta_ct, theta_a, s, a, rn, s2,
+            gmask, mu, var, jnp.array([3e-3]))
+        losses.append(float(loss[0]))
+        t += 1.0
+    assert losses[-1] < 0.3 * losses[0], (losses[0], losses[-1])
+
+
+def test_ddpg_actor_update_increases_q():
+    spec = _spec()
+    rng = np.random.default_rng(5)
+    theta_a = _theta(rng, spec.actor)
+    theta_c = _theta(rng, spec.critic)
+    m = jnp.zeros(spec.actor.size)
+    v = jnp.zeros(spec.actor.size)
+    mu = jnp.zeros(spec.obs_dim)
+    var = jnp.ones(spec.obs_dim)
+    s = jnp.array(rng.normal(size=(32, spec.obs_dim)).astype(np.float32))
+    f = jax.jit(model.ddpg_actor_update(spec))
+    losses = []
+    t = 1.0
+    for _ in range(80):
+        theta_a, m, v, loss = f(theta_a, m, v, jnp.array([t]), theta_c, s,
+                                mu, var, jnp.array([1e-3]))
+        losses.append(float(loss[0]))
+        t += 1.0
+    # loss = -mean(min Q) must decrease (Q under the policy rises).
+    assert losses[-1] < losses[0]
+
+
+def test_dist_critic_update_reduces_ce_loss():
+    spec = _spec()
+    rng = np.random.default_rng(6)
+    theta_c = _theta(rng, spec.critic_dist)
+    theta_ct = theta_c
+    theta_a = _theta(rng, spec.actor)
+    m = jnp.zeros(spec.critic_dist.size)
+    v = jnp.zeros(spec.critic_dist.size)
+    mu = jnp.zeros(spec.obs_dim)
+    var = jnp.ones(spec.obs_dim)
+    s, a, rn, s2, gmask = _cu_inputs(spec, rng)
+    f = jax.jit(model.dist_critic_update(spec, tau=0.05))
+    losses = []
+    t = 1.0
+    for _ in range(50):
+        theta_c, m, v, theta_ct, loss, _q = f(
+            theta_c, m, v, jnp.array([t]), theta_ct, theta_a, s, a, rn, s2,
+            gmask, mu, var, jnp.array([1e-3]))
+        losses.append(float(loss[0]))
+        t += 1.0
+    assert losses[-1] < losses[0]
+
+
+def test_ppo_update_moves_toward_advantage():
+    spec = _spec()
+    rng = np.random.default_rng(7)
+    theta = _theta(rng, spec.ppo)
+    m = jnp.zeros(spec.ppo.size)
+    v = jnp.zeros(spec.ppo.size)
+    mu = jnp.zeros(spec.obs_dim)
+    var = jnp.ones(spec.obs_dim)
+    b = 64
+    s = jnp.array(rng.normal(size=(b, spec.obs_dim)).astype(np.float32))
+    noise = jnp.array(rng.normal(size=(b, spec.act_dim)).astype(np.float32))
+    infer = jax.jit(model.ppo_infer(spec))
+    act, logp, _val = infer(theta, s, s, mu, var, noise)
+    adv = jnp.ones(b)  # uniformly positive advantage
+    ret = jnp.zeros(b)
+    f = jax.jit(model.ppo_update(spec))
+    t = 1.0
+    for _ in range(30):
+        theta, m, v, pi_loss, v_loss, kl = f(
+            theta, m, v, jnp.array([t]), s, s, act, adv, ret, logp,
+            mu, var, jnp.array([1e-3]))
+        t += 1.0
+    # With positive advantages everywhere the new policy should assign
+    # higher log-prob to the sampled actions.
+    _, logp_new, _ = infer(theta, s, s, mu, var, noise)
+    # re-evaluate the *same* actions under the new policy:
+    p = spec.ppo.slices(theta)
+    mean = model.mlp(p, "pi_", model.normalize_obs(s, mu, var),
+                     spec.n_layers, out_act="tanh")
+    logp_same = model.gaussian_logp(act, mean, p["log_std"])
+    assert float(jnp.mean(logp_same)) > float(jnp.mean(logp))
+
+
+def test_sac_updates_run_and_alpha_adapts():
+    spec = _spec()
+    rng = np.random.default_rng(8)
+    theta_a = _theta(rng, spec.sac_actor)
+    theta_c = _theta(rng, spec.critic)
+    la = jnp.zeros(1)
+    am = jnp.zeros(1)
+    av = jnp.zeros(1)
+    m = jnp.zeros(spec.sac_actor.size)
+    v = jnp.zeros(spec.sac_actor.size)
+    mu = jnp.zeros(spec.obs_dim)
+    var = jnp.ones(spec.obs_dim)
+    b = 32
+    s = jnp.array(rng.normal(size=(b, spec.obs_dim)).astype(np.float32))
+    noise = jnp.array(rng.normal(size=(b, spec.act_dim)).astype(np.float32))
+    f = jax.jit(model.sac_actor_update(spec, target_entropy=-float(spec.act_dim)))
+    la0 = float(la[0])
+    t = 1.0
+    for _ in range(25):
+        theta_a, m, v, la, am, av, pi_loss, a_loss, ent = f(
+            theta_a, m, v, jnp.array([t]), theta_c, la, am, av, s, noise,
+            mu, var, jnp.array([3e-3]))
+        t += 1.0
+    assert np.isfinite(float(pi_loss[0]))
+    assert float(la[0]) != la0  # temperature is actually being adapted

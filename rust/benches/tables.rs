@@ -1,0 +1,49 @@
+//! End-to-end table benches: short-budget versions of the paper harnesses
+//! that `pql bench` runs with full budgets. `cargo bench --bench tables`
+//! regenerates Table B.3 (sim throughput × GPU model) and a mini Fig. 3
+//! head-to-head (PQL vs sequential DDPG time-to-threshold on ant).
+
+use pql::cli::Args;
+
+fn main() {
+    pql::util::logging::init();
+    let art = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !art.join("manifest.json").exists() {
+        println!("artifacts/ missing — run `make artifacts` first");
+        return;
+    }
+
+    // Table B.3 via the bench harness.
+    let args = Args::parse(&[
+        "--table".into(), "b3".into(),
+        "--out".into(), "results".into(),
+    ])
+    .unwrap();
+    pql::cmd::bench::run(&args).unwrap();
+
+    // Mini Fig. 3 headline: PQL vs DDPG(n), 30 s each.
+    println!("\n== mini Fig. 3 headline (ant, 30 s each) ==");
+    let mk = |algo: pql::config::Algo| pql::config::TrainConfig {
+        task: "ant".into(),
+        algo,
+        num_envs: 128,
+        budget_secs: 30.0,
+        eval_interval_secs: 5.0,
+        seed: 9,
+        ..Default::default()
+    };
+    let p = pql::algos::train(&mk(pql::config::Algo::Pql), &art).unwrap();
+    let d = pql::algos::train(&mk(pql::config::Algo::Ddpg), &art).unwrap();
+    println!(
+        "PQL     final {:8.1}  best {:8.1}  t->600 {:6.1}s",
+        p.final_return(),
+        p.best_return(),
+        p.time_to(600.0)
+    );
+    println!(
+        "DDPG(n) final {:8.1}  best {:8.1}  t->600 {:6.1}s",
+        d.final_return(),
+        d.best_return(),
+        d.time_to(600.0)
+    );
+}

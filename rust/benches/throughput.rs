@@ -1,0 +1,245 @@
+//! Microbenchmarks of the hot paths (own harness; no criterion in the
+//! vendored set). Run with `cargo bench --bench throughput`.
+//!
+//! Covers, per layer:
+//! - L3: vectorized env stepping (per task), replay push/sample, n-step
+//!   assembly, exploration noise, RNG, pace-controller gate overhead.
+//! - L2/L1 (through PJRT): actor inference per row, critic/actor update
+//!   latency per batch — the numbers behind EXPERIMENTS.md §Perf.
+
+use pql::config::{Exploration, Ratio};
+use pql::coordinator::PaceController;
+use pql::envs::{self, StepOut};
+use pql::exploration::Noise;
+use pql::replay::{NStepAssembler, SampleBatch, TransitionBuffer};
+use pql::runtime::{infer_chunked, Engine, HostTensor, OptState};
+use pql::util::Rng;
+use std::path::Path;
+use std::time::Instant;
+
+/// Time `f` over `iters` iterations after `warmup` iterations.
+fn bench<F: FnMut()>(name: &str, unit_per_iter: f64, unit: &str, iters: usize, mut f: F) {
+    for _ in 0..iters.div_ceil(10) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let per = dt / iters as f64;
+    let rate = unit_per_iter / per;
+    println!("{name:<44} {:>10.3} ms/iter {:>14.0} {unit}/s", per * 1e3, rate);
+}
+
+fn main() {
+    println!("== L3 substrate ==");
+    let mut rng = Rng::new(0);
+    bench("rng normal", 1024.0, "samples", 2000, || {
+        let mut buf = [0.0f32; 1024];
+        rng.fill_normal(&mut buf);
+        std::hint::black_box(&buf);
+    });
+
+    for task in ["ant", "humanoid", "shadow_hand", "dclaw"] {
+        let n = 256;
+        let mut env = envs::make(task, n, 0).unwrap();
+        let (od, ad) = (env.obs_dim(), env.act_dim());
+        let mut obs = vec![0.0f32; n * od];
+        env.reset_all(&mut obs);
+        let mut out = StepOut::new(n, od);
+        let mut acts = vec![0.0f32; n * ad];
+        let mut r = Rng::new(1);
+        bench(&format!("env step {task} (N={n})"), n as f64, "env-steps", 300, || {
+            r.fill_uniform(&mut acts, -1.0, 1.0);
+            env.step(&acts, &mut out);
+        });
+    }
+
+    {
+        let (od, ad, b) = (30, 12, 512);
+        let mut buf = TransitionBuffer::new(300_000, od, ad);
+        let s = vec![0.5f32; od];
+        let a = vec![0.1f32; ad];
+        for _ in 0..10_000 {
+            buf.push(&s, &a, 1.0, &s, 0.97, &[], &[]);
+        }
+        let mut r = Rng::new(2);
+        bench("replay push (obs30/act12)", 1.0, "transitions", 200_000, || {
+            buf.push(&s, &a, 1.0, &s, 0.97, &[], &[]);
+        });
+        let mut batch = SampleBatch::new(b, od, ad);
+        bench(&format!("replay sample B={b}"), b as f64, "rows", 2000, || {
+            buf.sample(&mut r, b, &mut batch);
+        });
+    }
+
+    {
+        let n = 256;
+        let (od, ad) = (30, 12);
+        let mut asm = NStepAssembler::new(n, 3, 0.99, od, ad);
+        let s = vec![0.1f32; n * od];
+        let a = vec![0.1f32; n * ad];
+        let r = vec![1.0f32; n];
+        let d = vec![0.0f32; n];
+        let mut sink = 0usize;
+        bench("n-step assembly (N=256, n=3)", n as f64, "transitions", 2000, || {
+            asm.push_step(&s, &a, &r, &s, &d, &[], &[], |_t| sink += 1);
+        });
+        std::hint::black_box(sink);
+    }
+
+    {
+        let mut noise = Noise::new(
+            Exploration::Mixed { min: 0.05, max: 0.8 },
+            256,
+            12,
+            Rng::new(3),
+        );
+        let mut acts = vec![0.0f32; 256 * 12];
+        bench("mixed exploration apply (N=256)", 256.0, "rows", 5000, || {
+            noise.apply(&mut acts);
+        });
+    }
+
+    {
+        let ctl = PaceController::new(Ratio::new(1, 8), Ratio::new(1, 2), true);
+        bench("pace gate_v uncontended", 1.0, "gates", 100_000, || {
+            ctl.gate_actor(); // keep counters feasible: 1 actor step...
+            for _ in 0..8 {
+                ctl.gate_v();
+            }
+        });
+    }
+
+    println!("\n== L2/L1 through PJRT (artifacts required) ==");
+    let art = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let Ok(mut engine) = Engine::new(&art) else {
+        println!("artifacts/ missing — run `make artifacts` for the PJRT benches");
+        return;
+    };
+    let m = std::sync::Arc::clone(&engine.manifest);
+    let t = m.task("ant").unwrap().clone();
+    let mut r = Rng::new(4);
+
+    {
+        let infer = engine.load("ant", "actor_infer").unwrap();
+        let theta = t.layouts["actor"].init(&mut r);
+        let n = 256;
+        let mut obs = vec![0.0f32; n * t.obs_dim];
+        r.fill_normal(&mut obs);
+        let mu = vec![0.0f32; t.obs_dim];
+        let var = vec![1.0f32; t.obs_dim];
+        let mut acts = vec![0.0f32; n * t.act_dim];
+        bench("actor_infer ant (N=256, pallas path)", n as f64, "rows", 200, || {
+            infer_chunked(&infer, &theta, &obs, n, t.obs_dim, t.act_dim, &mu,
+                          &var, m.chunk, None, &mut acts)
+                .unwrap();
+        });
+        // §Perf A/B: same actor through plain-jnp (no interpret-mode
+        // Pallas) — quantifies the interpret-overhead on CPU PJRT.
+        if let Ok(jnp) = engine.load("ant", "actor_infer_jnp") {
+            bench("actor_infer ant (N=256, jnp path)", n as f64, "rows", 200, || {
+                infer_chunked(&jnp, &theta, &obs, n, t.obs_dim, t.act_dim, &mu,
+                              &var, m.chunk, None, &mut acts)
+                    .unwrap();
+            });
+        }
+    }
+
+    {
+        let b = m.batch_default;
+        let cu = engine.load("ant", "critic_update").unwrap();
+        let mut critic = OptState::new(t.layouts["critic"].init(&mut r));
+        let target = critic.theta.clone();
+        let theta_a = t.layouts["actor"].init(&mut r);
+        let mu = vec![0.0f32; t.obs_dim];
+        let var = vec![1.0f32; t.obs_dim];
+        let mut s = vec![0.0f32; b * t.obs_dim];
+        let mut a = vec![0.0f32; b * t.act_dim];
+        r.fill_normal(&mut s);
+        r.fill_uniform(&mut a, -1.0, 1.0);
+        let rn = vec![0.5f32; b];
+        let gmask = vec![0.97f32; b];
+        bench(&format!("critic_update ant (B={b})"), b as f64, "rows", 100, || {
+            let [th, mm, vv, tt] = critic.tensors();
+            let outs = cu
+                .run(&[
+                    th, mm, vv, tt,
+                    HostTensor::vec(target.clone()),
+                    HostTensor::vec(theta_a.clone()),
+                    HostTensor::new(&[b, t.obs_dim], s.clone()),
+                    HostTensor::new(&[b, t.act_dim], a.clone()),
+                    HostTensor::vec(rn.clone()),
+                    HostTensor::new(&[b, t.obs_dim], s.clone()),
+                    HostTensor::vec(gmask.clone()),
+                    HostTensor::vec(mu.clone()),
+                    HostTensor::vec(var.clone()),
+                    HostTensor::scalar1(5e-4),
+                ])
+                .unwrap();
+            std::hint::black_box(&outs);
+        });
+    }
+
+    {
+        let b = m.batch_default;
+        let au = engine.load("ant", "actor_update").unwrap();
+        let mut actor = OptState::new(t.layouts["actor"].init(&mut r));
+        let theta_c = t.layouts["critic"].init(&mut r);
+        let mu = vec![0.0f32; t.obs_dim];
+        let var = vec![1.0f32; t.obs_dim];
+        let mut s = vec![0.0f32; b * t.obs_dim];
+        r.fill_normal(&mut s);
+        bench(&format!("actor_update ant (B={b})"), b as f64, "rows", 100, || {
+            let [th, mm, vv, tt] = actor.tensors();
+            let outs = au
+                .run(&[
+                    th, mm, vv, tt,
+                    HostTensor::vec(theta_c.clone()),
+                    HostTensor::new(&[b, t.obs_dim], s.clone()),
+                    HostTensor::vec(mu.clone()),
+                    HostTensor::vec(var.clone()),
+                    HostTensor::scalar1(5e-4),
+                ])
+                .unwrap();
+            std::hint::black_box(&outs);
+        });
+    }
+
+    {
+        // C51 distributional critic — the L1 categorical projection path.
+        let b = m.batch_default;
+        let cu = engine.load("ant", "critic_update_dist").unwrap();
+        let mut critic = OptState::new(t.layouts["critic_dist"].init(&mut r));
+        let target = critic.theta.clone();
+        let theta_a = t.layouts["actor"].init(&mut r);
+        let mu = vec![0.0f32; t.obs_dim];
+        let var = vec![1.0f32; t.obs_dim];
+        let mut s = vec![0.0f32; b * t.obs_dim];
+        let mut a = vec![0.0f32; b * t.act_dim];
+        r.fill_normal(&mut s);
+        r.fill_uniform(&mut a, -1.0, 1.0);
+        let rn = vec![0.5f32; b];
+        let gmask = vec![0.97f32; b];
+        bench(&format!("critic_update_dist ant (B={b}, L=51)"), b as f64, "rows", 50, || {
+            let [th, mm, vv, tt] = critic.tensors();
+            let outs = cu
+                .run(&[
+                    th, mm, vv, tt,
+                    HostTensor::vec(target.clone()),
+                    HostTensor::vec(theta_a.clone()),
+                    HostTensor::new(&[b, t.obs_dim], s.clone()),
+                    HostTensor::new(&[b, t.act_dim], a.clone()),
+                    HostTensor::vec(rn.clone()),
+                    HostTensor::new(&[b, t.obs_dim], s.clone()),
+                    HostTensor::vec(gmask.clone()),
+                    HostTensor::vec(mu.clone()),
+                    HostTensor::vec(var.clone()),
+                    HostTensor::scalar1(5e-4),
+                ])
+                .unwrap();
+            std::hint::black_box(&outs);
+        });
+    }
+}

@@ -1,0 +1,28 @@
+//! Training algorithms built on the coordinator substrate.
+//!
+//! - [`pql`]: the paper's parallel scheme (Actor ∥ V-learner ∥ P-learner),
+//!   wrapping DDPG (PQL), C51 (PQL-D), or SAC (PQL-SAC).
+//! - [`sequential`]: single-loop DDPG(n) / SAC(n) baselines — identical
+//!   networks and artifacts, no process parallelism or ratio control.
+//! - [`ppo`]: the on-policy baseline Isaac Gym defaults to.
+
+pub mod ppo;
+pub mod pql;
+pub mod sequential;
+
+use crate::config::{Algo, TrainConfig};
+use crate::metrics::RunLog;
+use anyhow::Result;
+use std::path::Path;
+
+/// Train with the configured algorithm; returns the metric log.
+pub fn train(cfg: &TrainConfig, artifact_dir: &Path) -> Result<RunLog> {
+    match cfg.algo {
+        Algo::Pql => pql::train(cfg, artifact_dir, pql::Variant::Ddpg),
+        Algo::PqlD => pql::train(cfg, artifact_dir, pql::Variant::Dist),
+        Algo::PqlSac => pql::train(cfg, artifact_dir, pql::Variant::Sac),
+        Algo::Ddpg => sequential::train(cfg, artifact_dir, false),
+        Algo::Sac => sequential::train(cfg, artifact_dir, true),
+        Algo::Ppo => ppo::train(cfg, artifact_dir),
+    }
+}

@@ -1,0 +1,318 @@
+//! PPO baseline (Schulman et al., 2017) — the algorithm Isaac Gym users
+//! default to, and the main comparison point of Fig. 3/5.
+//!
+//! On-policy: collect a horizon of rollouts from the latest policy,
+//! compute GAE advantages in rust, then run several epochs of clipped
+//! surrogate minibatch updates through the `ppo_update` artifact. Data
+//! collection and updates necessarily alternate — the sequential coupling
+//! PQL's off-policy design escapes.
+
+use crate::config::TrainConfig;
+use crate::coordinator::ReturnTracker;
+use crate::envs::{self, StepOut};
+use crate::metrics::{Record, RunLog};
+use crate::runtime::{Engine, HostTensor, Manifest, OptState};
+use crate::util::{Rng, RunningNorm};
+use anyhow::Result;
+use log::info;
+use std::sync::Arc;
+
+pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path) -> Result<RunLog> {
+    let manifest = Arc::new(Manifest::load(artifact_dir)?);
+    let tinfo = manifest.task(&cfg.task)?.clone();
+    let (od, ad, cd) = (tinfo.obs_dim, tinfo.act_dim, tinfo.critic_obs_dim);
+    let vision = cd != od;
+    let n = cfg.num_envs;
+    let h = cfg.ppo_horizon;
+    let b = cfg.batch_size;
+    let chunk = manifest.chunk;
+
+    let mut rng = Rng::new(cfg.seed);
+    let mut engine = Engine::with_manifest(Arc::clone(&manifest))?;
+    let infer = engine.load(&cfg.task, "ppo_infer")?;
+    let update = engine.load(&cfg.task, "ppo_update")?;
+    let mut state = OptState::new(tinfo.layouts["ppo"].init(&mut rng));
+
+    let mut env = envs::make(&cfg.task, n, cfg.seed)?;
+    let mut obs = vec![0.0f32; n * od];
+    env.reset_all(&mut obs);
+    let mut cobs = vec![0.0f32; n * cd];
+    if vision {
+        env.fill_critic_obs(&mut cobs);
+    } else {
+        cobs.copy_from_slice(&obs);
+    }
+    let mut out = StepOut::new(n, od);
+    let mut norm = RunningNorm::new(od);
+    norm.update(&obs, od);
+    let mut tracker = ReturnTracker::new(n, 4 * n);
+    let mut log = RunLog::new(cfg.run_dir.as_deref())?;
+    let device = crate::device::DeviceSim::new_passthrough_or(&cfg.device_speeds);
+
+    // Rollout storage: [h, n, ...]
+    let mut rs = vec![0.0f32; h * n * od];
+    let mut rcs = vec![0.0f32; h * n * cd];
+    let mut ra = vec![0.0f32; h * n * ad];
+    let mut rlogp = vec![0.0f32; h * n];
+    let mut rval = vec![0.0f32; h * n];
+    let mut rrew = vec![0.0f32; h * n];
+    let mut rdone = vec![0.0f32; h * n];
+    let mut adv = vec![0.0f32; h * n];
+    let mut ret = vec![0.0f32; h * n];
+    let mut noise = vec![0.0f32; n * ad];
+    let scale = tinfo.reward_scale;
+
+    let mut steps: u64 = 0;
+    let mut updates: u64 = 0;
+    let mut next_eval = cfg.eval_interval_secs;
+
+    while log.elapsed() < cfg.budget_secs && steps * (n as u64) < cfg.max_env_steps {
+        // ---- rollout phase -------------------------------------------------
+        for t in 0..h {
+            rng.fill_normal(&mut noise);
+            let (acts, logp, val) = {
+                let _g = device.enter(cfg.placement[0]);
+                ppo_infer_batched(&infer, &state.theta, &obs, &cobs, n, od, cd, ad,
+                                  &norm.mean, &norm.var, chunk, &noise)?
+            };
+            {
+                let _g = device.enter(cfg.placement[0]);
+                env.step(&acts, &mut out);
+            }
+            tracker.push_step(&out.reward, &out.done);
+            rs[t * n * od..(t + 1) * n * od].copy_from_slice(&obs);
+            rcs[t * n * cd..(t + 1) * n * cd].copy_from_slice(&cobs);
+            ra[t * n * ad..(t + 1) * n * ad].copy_from_slice(&acts);
+            rlogp[t * n..(t + 1) * n].copy_from_slice(&logp);
+            rval[t * n..(t + 1) * n].copy_from_slice(&val);
+            for e in 0..n {
+                rrew[t * n + e] = out.reward[e] * scale;
+                rdone[t * n + e] = out.done[e];
+            }
+            norm.update(&out.obs, od);
+            obs.copy_from_slice(&out.obs);
+            if vision {
+                env.fill_critic_obs(&mut cobs);
+            } else {
+                cobs.copy_from_slice(&obs);
+            }
+            steps += 1;
+        }
+        // Bootstrap value of the final state.
+        rng.fill_normal(&mut noise);
+        let (_, _, last_val) = ppo_infer_batched(
+            &infer, &state.theta, &obs, &cobs, n, od, cd, ad, &norm.mean,
+            &norm.var, chunk, &noise,
+        )?;
+
+        // ---- GAE (rust-side, sequential scan) ------------------------------
+        let (gamma, lam) = (cfg.gamma, cfg.gae_lambda);
+        for e in 0..n {
+            let mut gae = 0.0f32;
+            for t in (0..h).rev() {
+                let nonterminal = 1.0 - rdone[t * n + e];
+                let next_v = if t == h - 1 { last_val[e] } else { rval[(t + 1) * n + e] };
+                let delta = rrew[t * n + e] + gamma * nonterminal * next_v - rval[t * n + e];
+                gae = delta + gamma * lam * nonterminal * gae;
+                adv[t * n + e] = gae;
+                ret[t * n + e] = gae + rval[t * n + e];
+            }
+        }
+        // Advantage normalization over the whole rollout.
+        let mean = adv.iter().sum::<f32>() / adv.len() as f32;
+        let var = adv.iter().map(|a| (a - mean).powi(2)).sum::<f32>() / adv.len() as f32;
+        let std = var.sqrt().max(1e-6);
+        for a in adv.iter_mut() {
+            *a = (*a - mean) / std;
+        }
+
+        // ---- update phase ---------------------------------------------------
+        let total = h * n;
+        let mut index: Vec<usize> = (0..total).collect();
+        for _epoch in 0..cfg.ppo_epochs {
+            // Fisher-Yates shuffle.
+            for i in (1..total).rev() {
+                let j = rng.below(i + 1);
+                index.swap(i, j);
+            }
+            for mb in index.chunks(b) {
+                if mb.len() < b {
+                    break; // fixed-shape artifact: drop the remainder
+                }
+                let mut s_mb = vec![0.0f32; b * od];
+                let mut cs_mb = vec![0.0f32; b * cd];
+                let mut a_mb = vec![0.0f32; b * ad];
+                let mut adv_mb = vec![0.0f32; b];
+                let mut ret_mb = vec![0.0f32; b];
+                let mut lp_mb = vec![0.0f32; b];
+                for (k, &i) in mb.iter().enumerate() {
+                    s_mb[k * od..(k + 1) * od].copy_from_slice(&rs[i * od..(i + 1) * od]);
+                    cs_mb[k * cd..(k + 1) * cd].copy_from_slice(&rcs[i * cd..(i + 1) * cd]);
+                    a_mb[k * ad..(k + 1) * ad].copy_from_slice(&ra[i * ad..(i + 1) * ad]);
+                    adv_mb[k] = adv[i];
+                    ret_mb[k] = ret[i];
+                    lp_mb[k] = rlogp[i];
+                }
+                let outs = {
+                    let _g = device.enter(cfg.placement[1]);
+                    let [th, m, v, t] = state.tensors();
+                    update.run(&[
+                        th, m, v, t,
+                        HostTensor::new(&[b, od], s_mb),
+                        HostTensor::new(&[b, cd], cs_mb),
+                        HostTensor::new(&[b, ad], a_mb),
+                        HostTensor::vec(adv_mb),
+                        HostTensor::vec(ret_mb),
+                        HostTensor::vec(lp_mb),
+                        HostTensor::vec(norm.mean.clone()),
+                        HostTensor::vec(norm.var.clone()),
+                        HostTensor::scalar1(cfg.actor_lr),
+                    ])?
+                };
+                let mut it = outs.into_iter();
+                let th = it.next().unwrap();
+                let m = it.next().unwrap();
+                let v = it.next().unwrap();
+                state.absorb(th, m, v);
+                updates += 1;
+            }
+        }
+
+        // ---- periodic evaluation -------------------------------------------
+        if log.elapsed() >= next_eval {
+            next_eval = log.elapsed() + cfg.eval_interval_secs;
+            let (r, succ) = evaluate_ppo(&infer, &manifest, &cfg.task, &state.theta,
+                                         &norm.mean, &norm.var, cfg.eval_episodes,
+                                         cfg.seed ^ steps)?;
+            info!("[ppo] eval {r:8.2}  steps {}", steps * n as u64);
+            log.push(Record {
+                wall_secs: 0.0,
+                env_steps: steps * n as u64,
+                critic_updates: updates,
+                actor_updates: updates,
+                eval_return: r,
+                success_rate: succ.map(|s| s as f64).unwrap_or(f64::NAN),
+            })?;
+        }
+    }
+    Ok(log)
+}
+
+/// Batched PPO inference over all N envs (chunk-padded), returning
+/// (actions, logp, value).
+#[allow(clippy::too_many_arguments)]
+fn ppo_infer_batched(
+    infer: &crate::runtime::Executable,
+    theta: &[f32],
+    obs: &[f32],
+    cobs: &[f32],
+    n: usize,
+    od: usize,
+    cd: usize,
+    ad: usize,
+    mu: &[f32],
+    var: &[f32],
+    chunk: usize,
+    noise: &[f32],
+) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+    let mut acts = vec![0.0f32; n * ad];
+    let mut logp = vec![0.0f32; n];
+    let mut val = vec![0.0f32; n];
+    let mut row = 0;
+    while row < n {
+        let take = (n - row).min(chunk);
+        let mut o = vec![0.0f32; chunk * od];
+        let mut co = vec![0.0f32; chunk * cd];
+        let mut nz = vec![0.0f32; chunk * ad];
+        o[..take * od].copy_from_slice(&obs[row * od..(row + take) * od]);
+        co[..take * cd].copy_from_slice(&cobs[row * cd..(row + take) * cd]);
+        nz[..take * ad].copy_from_slice(&noise[row * ad..(row + take) * ad]);
+        let out = infer.run(&[
+            HostTensor::vec(theta.to_vec()),
+            HostTensor::new(&[chunk, od], o),
+            HostTensor::new(&[chunk, cd], co),
+            HostTensor::vec(mu.to_vec()),
+            HostTensor::vec(var.to_vec()),
+            HostTensor::new(&[chunk, ad], nz),
+        ])?;
+        acts[row * ad..(row + take) * ad].copy_from_slice(&out[0][..take * ad]);
+        logp[row..row + take].copy_from_slice(&out[1][..take]);
+        val[row..row + take].copy_from_slice(&out[2][..take]);
+        row += take;
+    }
+    // PPO acts are unbounded Gaussian samples; envs clamp internally but we
+    // also clamp here to match the artifact's training distribution.
+    for a in acts.iter_mut() {
+        *a = a.clamp(-1.0, 1.0);
+    }
+    Ok((acts, logp, val))
+}
+
+/// Deterministic PPO evaluation (zero sampling noise).
+#[allow(clippy::too_many_arguments)]
+fn evaluate_ppo(
+    infer: &crate::runtime::Executable,
+    manifest: &Manifest,
+    task: &str,
+    theta: &[f32],
+    mu: &[f32],
+    var: &[f32],
+    episodes: usize,
+    seed: u64,
+) -> Result<(f64, Option<f32>)> {
+    let t = manifest.task(task)?;
+    let (od, cd, ad) = (t.obs_dim, t.critic_obs_dim, t.act_dim);
+    let vision = cd != od;
+    let mut env = envs::make(task, episodes, seed)?;
+    let mut obs = vec![0.0f32; episodes * od];
+    env.reset_all(&mut obs);
+    let mut cobs = vec![0.0f32; episodes * cd];
+    let mut out = StepOut::new(episodes, od);
+    let zero = vec![0.0f32; episodes * ad];
+    let mut ret = vec![0.0f64; episodes];
+    let mut fin = vec![false; episodes];
+    for _ in 0..env.max_episode_len() {
+        if vision {
+            env.fill_critic_obs(&mut cobs);
+        } else {
+            cobs.copy_from_slice(&obs);
+        }
+        let (acts, _, _) = ppo_infer_batched(infer, theta, &obs, &cobs, episodes,
+                                             od, cd, ad, mu, var, manifest.chunk,
+                                             &zero)?;
+        env.step(&acts, &mut out);
+        for e in 0..episodes {
+            if !fin[e] {
+                ret[e] += out.reward[e] as f64;
+                if out.done[e] != 0.0 {
+                    fin[e] = true;
+                }
+            }
+        }
+        obs.copy_from_slice(&out.obs);
+        if fin.iter().all(|f| *f) {
+            break;
+        }
+    }
+    Ok((ret.iter().sum::<f64>() / episodes as f64, env.success_rate()))
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn gae_reduces_to_discounted_return_when_lambda_1_value_0() {
+        // Hand-rolled mirror of the scan above with V=0, λ=1:
+        // adv[t] == discounted reward-to-go.
+        let (h, gamma) = (4usize, 0.9f32);
+        let rew = [1.0f32, 2.0, 3.0, 4.0];
+        let mut adv = [0.0f32; 4];
+        let mut gae = 0.0;
+        for t in (0..h).rev() {
+            let delta = rew[t]; // V=0, nonterminal
+            gae = delta + gamma * 1.0 * gae;
+            adv[t] = gae;
+        }
+        let expect0 = 1.0 + 0.9 * (2.0 + 0.9 * (3.0 + 0.9 * 4.0));
+        assert!((adv[0] - expect0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,664 @@
+//! Parallel Q-Learning — the paper's scheme (Fig. 1, Algorithms 1–3).
+//!
+//! Three OS threads:
+//! - **Actor**: rolls out N envs with mixed exploration, streams transition
+//!   batches to the V-learner and state batches to the P-learner, and
+//!   maintains/publishes the observation normalizer.
+//! - **V-learner**: owns the replay buffer and the n-step assembler, runs
+//!   `critic_update` artifacts (double-Q + n-step + polyak target inside
+//!   the AOT graph), publishes Q^v.
+//! - **P-learner**: owns the state buffer, runs `actor_update` against its
+//!   local Q^p copy, publishes π^p (hard policy-target semantics, §3.2).
+//!
+//! The main thread evaluates periodically and enforces the wall-clock
+//! budget. All cross-thread parameter traffic is flat `Vec<f32>` via the
+//! [`ParamBus`] — the paper's network-transfer arrows.
+
+use crate::config::TrainConfig;
+use crate::coordinator::{evaluate, ReturnTracker, Shared, StepMsg};
+use crate::envs::{self, StepOut};
+use crate::exploration::Noise;
+use crate::metrics::{Record, RunLog};
+use crate::replay::{NStepAssembler, SampleBatch, StateBuffer, TransitionBuffer};
+use crate::runtime::{infer_chunked, Engine, HostTensor, Manifest, OptState};
+use crate::util::{Rng, RunningNorm};
+use anyhow::{Context, Result};
+use log::{debug, info};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Which learner family the PQL scheme wraps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// DDPG with double-Q + n-step (the paper's PQL).
+    Ddpg,
+    /// C51 distributional critic (PQL-D).
+    Dist,
+    /// SAC with learnable temperature (Appendix C PQL+SAC).
+    Sac,
+}
+
+impl Variant {
+    fn infer_artifact(self) -> &'static str {
+        match self {
+            Variant::Sac => "sac_actor_infer",
+            _ => "actor_infer",
+        }
+    }
+    fn critic_update_artifact(self) -> &'static str {
+        match self {
+            Variant::Ddpg => "critic_update",
+            Variant::Dist => "critic_update_dist",
+            Variant::Sac => "sac_critic_update",
+        }
+    }
+    fn actor_update_artifact(self) -> &'static str {
+        match self {
+            Variant::Ddpg => "actor_update",
+            Variant::Dist => "actor_update_dist",
+            Variant::Sac => "sac_actor_update",
+        }
+    }
+    fn actor_layout(self) -> &'static str {
+        if self == Variant::Sac {
+            "sac_actor"
+        } else {
+            "actor"
+        }
+    }
+    fn critic_layout(self) -> &'static str {
+        if self == Variant::Dist {
+            "critic_dist"
+        } else {
+            "critic"
+        }
+    }
+}
+
+/// How often (in updates) the V-learner re-publishes Q^v to the P-learner.
+const CRITIC_SYNC_EVERY: u64 = 4;
+/// How often (in steps) the Actor re-publishes the normalizer.
+const NORM_SYNC_EVERY: u64 = 16;
+
+pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, variant: Variant) -> Result<RunLog> {
+    let manifest = Arc::new(Manifest::load(artifact_dir)?);
+    let tinfo = manifest.task(&cfg.task)?.clone();
+    let (od, ad) = (tinfo.obs_dim, tinfo.act_dim);
+    let vision = tinfo.critic_obs_dim != tinfo.obs_dim;
+    if vision && variant != Variant::Ddpg {
+        anyhow::bail!("vision task supports the DDPG-based PQL variant only");
+    }
+
+    let mut rng = Rng::new(cfg.seed);
+    let actor_init = tinfo.layouts[variant.actor_layout()].init(&mut rng);
+    let critic_init = tinfo.layouts[variant.critic_layout()].init(&mut rng);
+    let shared = Shared::new(cfg, actor_init.clone(), critic_init.clone(), od);
+
+    let (tx_v, rx_v) = mpsc::sync_channel::<StepMsg>(4);
+    let (tx_p, rx_p) = mpsc::sync_channel::<Vec<f32>>(4);
+
+    let mut log = RunLog::new(cfg.run_dir.as_deref())?;
+
+    std::thread::scope(|scope| -> Result<()> {
+        // ----- Actor ------------------------------------------------------
+        {
+            let shared = Arc::clone(&shared);
+            let manifest = Arc::clone(&manifest);
+            let cfg = cfg.clone();
+            let mut rng = rng.split();
+            scope.spawn(move || {
+                if let Err(e) = actor_loop(&cfg, manifest, shared.clone(), variant,
+                                           tx_v, tx_p, &mut rng) {
+                    log::error!("actor thread failed: {e:#}");
+                    shared.pace.stop();
+                }
+            });
+        }
+        // ----- V-learner ---------------------------------------------------
+        {
+            let shared = Arc::clone(&shared);
+            let manifest = Arc::clone(&manifest);
+            let cfg = cfg.clone();
+            let mut rng = rng.split();
+            let critic_init = critic_init.clone();
+            scope.spawn(move || {
+                if let Err(e) = v_loop(&cfg, manifest, shared.clone(), variant,
+                                       rx_v, critic_init, &mut rng) {
+                    log::error!("v-learner thread failed: {e:#}");
+                    shared.pace.stop();
+                }
+            });
+        }
+        // ----- P-learner ---------------------------------------------------
+        {
+            let shared = Arc::clone(&shared);
+            let manifest = Arc::clone(&manifest);
+            let cfg = cfg.clone();
+            let mut rng = rng.split();
+            let actor_init = actor_init.clone();
+            scope.spawn(move || {
+                if let Err(e) = p_loop(&cfg, manifest, shared.clone(), variant,
+                                       rx_p, actor_init, &mut rng) {
+                    log::error!("p-learner thread failed: {e:#}");
+                    shared.pace.stop();
+                }
+            });
+        }
+
+        // ----- Main thread: evaluation + budget -----------------------------
+        let mut eval_engine = Engine::with_manifest(Arc::clone(&manifest))?;
+        let infer = eval_engine.load(&cfg.task, variant.infer_artifact())?;
+        let mut eval_seed = cfg.seed ^ 0xEEAA;
+        loop {
+            let remaining = cfg.budget_secs - log.elapsed();
+            if remaining <= 0.0
+                || shared.env_steps.load(Ordering::Relaxed) >= cfg.max_env_steps
+                || shared.pace.stopped()
+            {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                cfg.eval_interval_secs.min(remaining.max(0.05)),
+            ));
+            let (_, theta) = shared.actor_bus.snapshot();
+            let (mu, var) = shared.norm_bus.get();
+            eval_seed = eval_seed.wrapping_add(1);
+            let noise_dim = if variant == Variant::Sac { Some(ad) } else { None };
+            let (ret, succ) = evaluate(
+                &infer, &manifest, &cfg.task, &theta, &mu, &var,
+                cfg.eval_episodes, eval_seed, noise_dim,
+            )?;
+            let (a, v, p) = shared.pace.counts();
+            info!(
+                "eval return {ret:8.2}  steps {}  v {v}  p {p}  train_ret {:.2}",
+                shared.env_steps.load(Ordering::Relaxed),
+                shared.train_return()
+            );
+            log.push(Record {
+                wall_secs: 0.0,
+                env_steps: shared.env_steps.load(Ordering::Relaxed),
+                critic_updates: v,
+                actor_updates: p,
+                eval_return: ret,
+                success_rate: succ
+                    .map(|s| s as f64)
+                    .unwrap_or(shared.success() as f64),
+            })?;
+            let _ = a;
+        }
+        shared.pace.stop();
+        Ok(())
+    })?;
+
+    // Save a checkpoint when a run dir is configured.
+    if let Some(dir) = &cfg.run_dir {
+        let (_, theta) = shared.actor_bus.snapshot();
+        let (mu, var) = shared.norm_bus.get();
+        crate::util::binfmt::save(
+            &std::path::Path::new(dir).join("checkpoint.pql"),
+            &[("actor", &theta[..]), ("norm_mean", &mu[..]), ("norm_var", &var[..])],
+        )?;
+    }
+    let (aw, vw, pw) = (
+        shared.pace.wait_a_ns.load(Ordering::Relaxed) / 1_000_000,
+        shared.pace.wait_v_ns.load(Ordering::Relaxed) / 1_000_000,
+        shared.pace.wait_p_ns.load(Ordering::Relaxed) / 1_000_000,
+    );
+    let (ra, rp) = shared.pace.realized();
+    debug!("pace waits ms: actor {aw} v {vw} p {pw}; realized a:v={ra:.3} p:v={rp:.3}");
+    Ok(log)
+}
+
+// ---------------------------------------------------------------------------
+// Actor process (Algorithm 1)
+// ---------------------------------------------------------------------------
+
+fn actor_loop(
+    cfg: &TrainConfig,
+    manifest: Arc<Manifest>,
+    shared: Arc<Shared>,
+    variant: Variant,
+    tx_v: mpsc::SyncSender<StepMsg>,
+    tx_p: mpsc::SyncSender<Vec<f32>>,
+    rng: &mut Rng,
+) -> Result<()> {
+    let tinfo = manifest.task(&cfg.task)?.clone();
+    let (od, ad, cd) = (tinfo.obs_dim, tinfo.act_dim, tinfo.critic_obs_dim);
+    let vision = cd != od;
+    let n = cfg.num_envs;
+    let mut engine = Engine::with_manifest(Arc::clone(&manifest))?;
+    let infer = engine.load(&cfg.task, variant.infer_artifact())?;
+
+    let mut env = envs::make(&cfg.task, n, cfg.seed)?;
+    let mut obs = vec![0.0f32; n * od];
+    env.reset_all(&mut obs);
+    let mut cobs = vec![0.0f32; if vision { n * cd } else { 0 }];
+    if vision {
+        env.fill_critic_obs(&mut cobs);
+    }
+    let mut out = StepOut::new(n, od);
+    let mut acts = vec![0.0f32; n * ad];
+    let mut sac_noise = vec![0.0f32; n * ad];
+    let mut noise = Noise::new(cfg.exploration, n, ad, rng.split());
+    let mut norm = RunningNorm::new(od);
+    let mut tracker = ReturnTracker::new(n, 4 * n);
+    let mut theta_version = 0u64;
+    let mut theta: Arc<Vec<f32>> = shared.actor_bus.snapshot().1;
+    let mut steps: u64 = 0;
+
+    norm.update(&obs, od);
+    shared.norm_bus.publish(&norm.mean, &norm.var);
+
+    while !shared.pace.stopped() {
+        // Warm-up steps use uniform random actions (Table B.1).
+        let warm = steps < cfg.warmup_steps as u64;
+        if !warm {
+            shared.pace.gate_actor();
+            if shared.pace.stopped() {
+                break;
+            }
+        }
+        // Sync π^a <- π^p if newer (Fig. 1 network transfer).
+        if let Some((v, t)) = shared.actor_bus.latest(theta_version) {
+            theta_version = v;
+            theta = t;
+        }
+
+        {
+            let _g = shared.devices.enter(cfg.placement[0]);
+            if warm {
+                crate::coordinator::random_actions(rng, &mut acts);
+            } else {
+                let noise_in = if variant == Variant::Sac {
+                    noise.fill_standard(&mut sac_noise);
+                    Some((&sac_noise[..], ad))
+                } else {
+                    None
+                };
+                infer_chunked(
+                    &infer, &theta, &obs, n, od, ad, &norm.mean, &norm.var,
+                    manifest.chunk, noise_in, &mut acts,
+                )?;
+                if variant != Variant::Sac {
+                    noise.apply(&mut acts); // mixed exploration ladder
+                }
+            }
+            env.step(&acts, &mut out);
+        }
+
+        tracker.push_step(&out.reward, &out.done);
+        shared.set_train_return(tracker.mean());
+        if let Some(s) = env.success_rate() {
+            shared.set_success(s);
+        }
+
+        let mut cobs2 = Vec::new();
+        if vision {
+            cobs2 = vec![0.0f32; n * cd];
+            env.fill_critic_obs(&mut cobs2);
+        }
+
+        // Ship the batch: full transitions to V, states to P (Fig. 1).
+        // Vision frames go DEFLATE-compressed when configured (B.3's lz4
+        // bandwidth optimization, substituted per DESIGN.md §3).
+        let compress = vision && cfg.compress_images;
+        let (s_pay, s2_pay) = if compress {
+            (
+                crate::coordinator::ObsPayload::compress(&obs, od)?,
+                crate::coordinator::ObsPayload::compress(&out.obs, od)?,
+            )
+        } else {
+            (
+                crate::coordinator::ObsPayload::Raw(obs.clone()),
+                crate::coordinator::ObsPayload::Raw(out.obs.clone()),
+            )
+        };
+        let msg = StepMsg {
+            s: s_pay,
+            a: acts.clone(),
+            r: out.reward.clone(),
+            s2: s2_pay,
+            done: out.done.clone(),
+            cs: cobs.clone(),
+            cs2: cobs2.clone(),
+        };
+        if tx_v.send(msg).is_err() {
+            break; // V-learner exited
+        }
+        // P-learner only needs states; drop if its queue is full rather
+        // than stall the rollout (it samples from its own buffer anyway).
+        // Vision ships joint (image ++ state) rows so the asymmetric
+        // policy update sees matching pairs.
+        let p_states = if vision {
+            concat_rows(&obs, od, &cobs, cd)
+        } else {
+            obs.clone()
+        };
+        let _ = tx_p.try_send(p_states);
+
+        norm.update(&out.obs, od);
+        steps += 1;
+        if steps % NORM_SYNC_EVERY == 0 {
+            shared.norm_bus.publish(&norm.mean, &norm.var);
+        }
+        shared
+            .env_steps
+            .store(steps * n as u64, Ordering::Relaxed);
+        obs.copy_from_slice(&out.obs);
+        if vision {
+            cobs.copy_from_slice(&cobs2);
+        }
+        if steps * (n as u64) >= cfg.max_env_steps {
+            break;
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// V-learner process (Algorithm 3)
+// ---------------------------------------------------------------------------
+
+fn v_loop(
+    cfg: &TrainConfig,
+    manifest: Arc<Manifest>,
+    shared: Arc<Shared>,
+    variant: Variant,
+    rx: mpsc::Receiver<StepMsg>,
+    critic_init: Vec<f32>,
+    rng: &mut Rng,
+) -> Result<()> {
+    let tinfo = manifest.task(&cfg.task)?.clone();
+    let (od, ad, cd) = (tinfo.obs_dim, tinfo.act_dim, tinfo.critic_obs_dim);
+    let vision = cd != od;
+    let b = cfg.batch_size;
+    let mut engine = Engine::with_manifest(Arc::clone(&manifest))?;
+    let artifact = manifest.batch_artifact(variant.critic_update_artifact(), b);
+    let update = engine
+        .load(&cfg.task, &artifact)
+        .with_context(|| format!("batch size {b} needs artifact {artifact}"))?;
+
+    let mut critic = OptState::new(critic_init.clone());
+    let mut target = critic_init; // hard-initialized target critic
+    let mut replay = TransitionBuffer::with_critic_obs(
+        cfg.replay_capacity,
+        od,
+        ad,
+        if vision { cd } else { 0 },
+    );
+    let mut asm = NStepAssembler::with_critic_obs(
+        cfg.num_envs,
+        cfg.nstep,
+        cfg.gamma,
+        od,
+        ad,
+        if vision { cd } else { 0 },
+    );
+    let mut batch = SampleBatch::new(b, od, ad);
+    let mut theta_a = shared.actor_bus.snapshot().1;
+    let mut theta_a_version = 0u64;
+    let mut updates: u64 = 0;
+    let scale = tinfo.reward_scale;
+    let mut noise = vec![0.0f32; b * ad]; // SAC next-action noise
+
+    while !shared.pace.stopped() {
+        // Drain the data channel into replay (local buffer, Fig. 1).
+        let mut s_flat = Vec::new();
+        let mut s2_flat = Vec::new();
+        loop {
+            match rx.try_recv() {
+                Ok(msg) => {
+                    let scaled: Vec<f32> = msg.r.iter().map(|r| r * scale).collect();
+                    msg.s.to_flat(&mut s_flat)?;
+                    msg.s2.to_flat(&mut s2_flat)?;
+                    asm.push_step(
+                        &s_flat, &msg.a, &scaled, &s2_flat, &msg.done, &msg.cs,
+                        &msg.cs2,
+                        |t| {
+                            replay.push(t.s, t.a, t.rn, t.s2, t.gmask, t.cs, t.cs2);
+                        },
+                    );
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => return Ok(()),
+            }
+        }
+        // Start once a full batch is available (the actor has already done
+        // its warm-up steps by then; the n-step window holds some back).
+        // While starved, tell the pace controller to exempt the Actor so
+        // the buffer can fill regardless of β_a:v.
+        if replay.len() < b {
+            shared.pace.set_starved(true);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            continue;
+        }
+        shared.pace.set_starved(false);
+
+        shared.pace.gate_v();
+        if shared.pace.stopped() {
+            break;
+        }
+        // Local lagged policy π^v (synced on P-learner publishes).
+        if let Some((v, t)) = shared.actor_bus.latest(theta_a_version) {
+            theta_a_version = v;
+            theta_a = t;
+        }
+        let (mu, var) = shared.norm_bus.get();
+
+        replay.sample(rng, b, &mut batch);
+        let outs = {
+            let _g = shared.devices.enter(cfg.placement[1]);
+            let [th, m, v, t] = critic.tensors();
+            let mut inputs = vec![
+                th,
+                m,
+                v,
+                t,
+                HostTensor::vec(target.clone()),
+                HostTensor::vec(theta_a.as_ref().clone()),
+            ];
+            if variant == Variant::Sac {
+                let (_, alpha) = shared.alpha_bus.snapshot();
+                inputs.push(HostTensor::vec(alpha.as_ref().clone()));
+            }
+            if vision {
+                // Asymmetric critic: no current-image input (see model.py).
+                inputs.push(HostTensor::new(&[b, cd], batch.cs.clone()));
+                inputs.push(HostTensor::new(&[b, ad], batch.a.clone()));
+                inputs.push(HostTensor::vec(batch.rn.clone()));
+                inputs.push(HostTensor::new(&[b, od], batch.s2.clone()));
+                inputs.push(HostTensor::new(&[b, cd], batch.cs2.clone()));
+                inputs.push(HostTensor::vec(batch.gmask.clone()));
+            } else {
+                inputs.push(HostTensor::new(&[b, od], batch.s.clone()));
+                inputs.push(HostTensor::new(&[b, ad], batch.a.clone()));
+                inputs.push(HostTensor::vec(batch.rn.clone()));
+                inputs.push(HostTensor::new(&[b, od], batch.s2.clone()));
+                inputs.push(HostTensor::vec(batch.gmask.clone()));
+            }
+            if variant == Variant::Sac {
+                rng.fill_normal(&mut noise);
+                inputs.push(HostTensor::new(&[b, ad], noise.clone()));
+            }
+            inputs.push(HostTensor::vec(mu.clone()));
+            inputs.push(HostTensor::vec(var.clone()));
+            if vision {
+                // Asymmetric artifacts also take the critic-obs normalizer;
+                // states are already well-scaled, identity suffices.
+                inputs.push(HostTensor::vec(vec![0.0; cd]));
+                inputs.push(HostTensor::vec(vec![1.0; cd]));
+            }
+            inputs.push(HostTensor::scalar1(cfg.critic_lr));
+            update.run(&inputs)?
+        };
+        // outputs: theta_c, m, v, theta_ct, loss, qmean
+        let mut it = outs.into_iter();
+        let th = it.next().unwrap();
+        let m = it.next().unwrap();
+        let v = it.next().unwrap();
+        target = it.next().unwrap();
+        critic.absorb(th, m, v);
+        updates += 1;
+        if updates % CRITIC_SYNC_EVERY == 0 {
+            shared.critic_bus.publish(critic.theta.clone());
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// P-learner process (Algorithm 2)
+// ---------------------------------------------------------------------------
+
+fn p_loop(
+    cfg: &TrainConfig,
+    manifest: Arc<Manifest>,
+    shared: Arc<Shared>,
+    variant: Variant,
+    rx: mpsc::Receiver<Vec<f32>>,
+    actor_init: Vec<f32>,
+    rng: &mut Rng,
+) -> Result<()> {
+    let tinfo = manifest.task(&cfg.task)?.clone();
+    let (od, ad, cd) = (tinfo.obs_dim, tinfo.act_dim, tinfo.critic_obs_dim);
+    let vision = cd != od;
+    let b = cfg.batch_size;
+    let mut engine = Engine::with_manifest(Arc::clone(&manifest))?;
+    let artifact = manifest.batch_artifact(variant.actor_update_artifact(), b);
+    let update = engine.load(&cfg.task, &artifact)?;
+
+    let mut actor = OptState::new(actor_init);
+    // SAC temperature state.
+    let mut log_alpha = OptState::new(vec![0.0]);
+    // Vision: the P-learner needs matching (image, state) rows; it keeps a
+    // joint buffer of concatenated rows instead of two parallel ones.
+    let row_dim = if vision { od + cd } else { od };
+    let mut states = StateBuffer::new(cfg.replay_capacity.min(65_536), row_dim);
+    let mut sbuf = vec![0.0f32; b * row_dim];
+    let mut noise = vec![0.0f32; b * ad];
+    let mut critic_version = 0u64;
+    let mut theta_c = shared.critic_bus.snapshot().1;
+
+    while !shared.pace.stopped() {
+        loop {
+            match rx.try_recv() {
+                // Vision rows arrive pre-joined as (image ++ state).
+                Ok(s) => states.push_batch(&s),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => return Ok(()),
+            }
+        }
+        if states.len() < b {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            continue;
+        }
+
+        shared.pace.gate_p();
+        if shared.pace.stopped() {
+            break;
+        }
+        // Q^p <- Q^v when newer.
+        if let Some((v, t)) = shared.critic_bus.latest(critic_version) {
+            critic_version = v;
+            theta_c = t;
+        }
+        let (mu, var) = shared.norm_bus.get();
+        states.sample(rng, b, &mut sbuf);
+
+        let outs = {
+            let _g = shared.devices.enter(cfg.placement[2]);
+            let [th, m, v, t] = actor.tensors();
+            let mut inputs = vec![th, m, v, t, HostTensor::vec(theta_c.as_ref().clone())];
+            if variant == Variant::Sac {
+                inputs.push(HostTensor::vec(log_alpha.theta.clone()));
+                inputs.push(HostTensor::vec(log_alpha.m.clone()));
+                inputs.push(HostTensor::vec(log_alpha.v.clone()));
+            }
+            if vision {
+                let (img, st) = split_rows(&sbuf, b, od, cd);
+                inputs.push(HostTensor::new(&[b, od], img));
+                inputs.push(HostTensor::new(&[b, cd], st));
+            } else {
+                inputs.push(HostTensor::new(&[b, od], sbuf.clone()));
+            }
+            if variant == Variant::Sac {
+                rng.fill_normal(&mut noise);
+                inputs.push(HostTensor::new(&[b, ad], noise.clone()));
+            }
+            inputs.push(HostTensor::vec(mu.clone()));
+            inputs.push(HostTensor::vec(var.clone()));
+            if vision {
+                inputs.push(HostTensor::vec(vec![0.0; cd]));
+                inputs.push(HostTensor::vec(vec![1.0; cd]));
+            }
+            inputs.push(HostTensor::scalar1(cfg.actor_lr));
+            update.run(&inputs)?
+        };
+        let mut it = outs.into_iter();
+        let th = it.next().unwrap();
+        let m = it.next().unwrap();
+        let v = it.next().unwrap();
+        actor.absorb(th, m, v);
+        if variant == Variant::Sac {
+            let la = it.next().unwrap();
+            let lam = it.next().unwrap();
+            let lav = it.next().unwrap();
+            log_alpha.absorb(la, lam, lav);
+            shared.alpha_bus.publish(log_alpha.theta.clone());
+        }
+        // Every policy update publishes π^p — the hard policy-target sync.
+        shared.actor_bus.publish(actor.theta.clone());
+    }
+    Ok(())
+}
+
+/// Vision helper: join image rows `[n, od]` and state rows `[n, cd]` into
+/// `[n, od+cd]` rows for the P-learner's joint buffer.
+fn concat_rows(img: &[f32], od: usize, st: &[f32], cd: usize) -> Vec<f32> {
+    let n = img.len() / od;
+    let rd = od + cd;
+    let mut out = vec![0.0f32; n * rd];
+    for i in 0..n {
+        out[i * rd..i * rd + od].copy_from_slice(&img[i * od..(i + 1) * od]);
+        out[i * rd + od..(i + 1) * rd].copy_from_slice(&st[i * cd..(i + 1) * cd]);
+    }
+    out
+}
+
+/// Split joint rows back into (image, state) matrices.
+fn split_rows(rows: &[f32], n: usize, od: usize, cd: usize) -> (Vec<f32>, Vec<f32>) {
+    let rd = od + cd;
+    let mut img = vec![0.0f32; n * od];
+    let mut st = vec![0.0f32; n * cd];
+    for i in 0..n {
+        img[i * od..(i + 1) * od].copy_from_slice(&rows[i * rd..i * rd + od]);
+        st[i * cd..(i + 1) * cd].copy_from_slice(&rows[i * rd + od..(i + 1) * rd]);
+    }
+    (img, st)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concat_and_split_roundtrip() {
+        let img = vec![9.0, 8.0, 7.0, 6.0, 5.0, 4.0]; // 2 rows of od=3
+        let st = vec![1.0, 2.0, 3.0, 4.0]; // 2 rows of cd=2
+        let rows = concat_rows(&img, 3, &st, 2);
+        assert_eq!(rows.len(), 10);
+        let (img2, st2) = split_rows(&rows, 2, 3, 2);
+        assert_eq!(img2, img);
+        assert_eq!(st2, st);
+    }
+
+    #[test]
+    fn variant_artifact_names() {
+        assert_eq!(Variant::Ddpg.critic_update_artifact(), "critic_update");
+        assert_eq!(Variant::Dist.actor_update_artifact(), "actor_update_dist");
+        assert_eq!(Variant::Sac.infer_artifact(), "sac_actor_infer");
+        assert_eq!(Variant::Sac.actor_layout(), "sac_actor");
+        assert_eq!(Variant::Dist.critic_layout(), "critic_dist");
+    }
+}

@@ -1,0 +1,204 @@
+//! Sequential off-policy baselines: DDPG(n) and SAC(n).
+//!
+//! Identical networks, artifacts, replay, n-step assembly, and mixed
+//! exploration as PQL — but everything runs in ONE loop: collect a step,
+//! then run the critic updates, then the policy update, each waiting for
+//! the previous (the "three components run sequentially" scheme PQL's
+//! parallelization removes). The update counts per step follow the same
+//! β ratios so the comparison isolates *parallelization*, exactly the
+//! PQL-vs-DDPG(n) comparison of Fig. 3.
+
+use crate::config::TrainConfig;
+use crate::coordinator::{evaluate, ReturnTracker};
+use crate::envs::{self, StepOut};
+use crate::exploration::Noise;
+use crate::metrics::{Record, RunLog};
+use crate::replay::{NStepAssembler, SampleBatch, TransitionBuffer};
+use crate::runtime::{infer_chunked, Engine, HostTensor, Manifest, OptState};
+use crate::util::{Rng, RunningNorm};
+use anyhow::{Context, Result};
+use log::info;
+use std::sync::Arc;
+
+pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, sac: bool) -> Result<RunLog> {
+    let manifest = Arc::new(Manifest::load(artifact_dir)?);
+    let tinfo = manifest.task(&cfg.task)?.clone();
+    let (od, ad) = (tinfo.obs_dim, tinfo.act_dim);
+    anyhow::ensure!(
+        tinfo.critic_obs_dim == od,
+        "sequential baselines support symmetric tasks only"
+    );
+    let n = cfg.num_envs;
+    let b = cfg.batch_size;
+
+    let mut rng = Rng::new(cfg.seed);
+    let mut engine = Engine::with_manifest(Arc::clone(&manifest))?;
+    let (infer_name, cu_name, au_name, actor_layout) = if sac {
+        ("sac_actor_infer", "sac_critic_update", "sac_actor_update", "sac_actor")
+    } else {
+        ("actor_infer", "critic_update", "actor_update", "actor")
+    };
+    let infer = engine.load(&cfg.task, infer_name)?;
+    let cu = engine
+        .load(&cfg.task, &manifest.batch_artifact(cu_name, b))
+        .with_context(|| format!("batch {b} artifact"))?;
+    let au = engine.load(&cfg.task, &manifest.batch_artifact(au_name, b))?;
+
+    let mut actor = OptState::new(tinfo.layouts[actor_layout].init(&mut rng));
+    let critic_init = tinfo.layouts["critic"].init(&mut rng);
+    let mut critic = OptState::new(critic_init.clone());
+    let mut target = critic_init;
+    let mut log_alpha = OptState::new(vec![0.0]);
+
+    let mut env = envs::make(&cfg.task, n, cfg.seed)?;
+    let mut obs = vec![0.0f32; n * od];
+    env.reset_all(&mut obs);
+    let mut out = StepOut::new(n, od);
+    let mut acts = vec![0.0f32; n * ad];
+    let mut sac_noise_env = vec![0.0f32; n * ad];
+    let mut noise = Noise::new(cfg.exploration, n, ad, rng.split());
+    let mut norm = RunningNorm::new(od);
+    norm.update(&obs, od);
+    let mut replay = TransitionBuffer::new(cfg.replay_capacity, od, ad);
+    let mut asm = NStepAssembler::new(n, cfg.nstep, cfg.gamma, od, ad);
+    let mut batch = SampleBatch::new(b, od, ad);
+    let mut unoise = vec![0.0f32; b * ad];
+    let mut tracker = ReturnTracker::new(n, 4 * n);
+    let mut log = RunLog::new(cfg.run_dir.as_deref())?;
+
+    // β_a:v = num:den -> `den / num` critic updates per rollout step;
+    // β_p:v -> one policy update every `pd / pn` critic updates.
+    let upd_per_step =
+        (cfg.beta_av.den as f64 / cfg.beta_av.num as f64).round().max(1.0) as u64;
+    let p_every = (cfg.beta_pv.den as f64 / cfg.beta_pv.num as f64).round().max(1.0) as u64;
+
+    let mut steps: u64 = 0;
+    let mut v_updates: u64 = 0;
+    let mut p_updates: u64 = 0;
+    let mut next_eval = cfg.eval_interval_secs;
+    let scale = tinfo.reward_scale;
+    let device = crate::device::DeviceSim::new_passthrough_or(&cfg.device_speeds);
+
+    while log.elapsed() < cfg.budget_secs && steps * (n as u64) < cfg.max_env_steps {
+        // ---- collect one vectorized step (Actor phase) --------------------
+        {
+            let _g = device.enter(cfg.placement[0]);
+            if steps < cfg.warmup_steps as u64 {
+                crate::coordinator::random_actions(&mut rng, &mut acts);
+            } else if sac {
+                noise.fill_standard(&mut sac_noise_env);
+                infer_chunked(&infer, &actor.theta, &obs, n, od, ad, &norm.mean,
+                              &norm.var, manifest.chunk,
+                              Some((&sac_noise_env, ad)), &mut acts)?;
+            } else {
+                infer_chunked(&infer, &actor.theta, &obs, n, od, ad, &norm.mean,
+                              &norm.var, manifest.chunk, None, &mut acts)?;
+                noise.apply(&mut acts);
+            }
+            env.step(&acts, &mut out);
+        }
+        tracker.push_step(&out.reward, &out.done);
+        let scaled: Vec<f32> = out.reward.iter().map(|r| r * scale).collect();
+        asm.push_step(&obs, &acts, &scaled, &out.obs, &out.done, &[], &[], |t| {
+            replay.push(t.s, t.a, t.rn, t.s2, t.gmask, &[], &[]);
+        });
+        norm.update(&out.obs, od);
+        obs.copy_from_slice(&out.obs);
+        steps += 1;
+
+        // ---- sequential learner phase --------------------------------------
+        if replay.len() >= b && steps >= cfg.warmup_steps as u64 {
+            for _ in 0..upd_per_step {
+                replay.sample(&mut rng, b, &mut batch);
+                let outs = {
+                    let _g = device.enter(cfg.placement[1]);
+                    let [th, m, v, t] = critic.tensors();
+                    let mut inputs = vec![
+                        th, m, v, t,
+                        HostTensor::vec(target.clone()),
+                        HostTensor::vec(actor.theta.clone()),
+                    ];
+                    if sac {
+                        inputs.push(HostTensor::vec(log_alpha.theta.clone()));
+                    }
+                    inputs.push(HostTensor::new(&[b, od], batch.s.clone()));
+                    inputs.push(HostTensor::new(&[b, ad], batch.a.clone()));
+                    inputs.push(HostTensor::vec(batch.rn.clone()));
+                    inputs.push(HostTensor::new(&[b, od], batch.s2.clone()));
+                    inputs.push(HostTensor::vec(batch.gmask.clone()));
+                    if sac {
+                        rng.fill_normal(&mut unoise);
+                        inputs.push(HostTensor::new(&[b, ad], unoise.clone()));
+                    }
+                    inputs.push(HostTensor::vec(norm.mean.clone()));
+                    inputs.push(HostTensor::vec(norm.var.clone()));
+                    inputs.push(HostTensor::scalar1(cfg.critic_lr));
+                    cu.run(&inputs)?
+                };
+                let mut it = outs.into_iter();
+                let th = it.next().unwrap();
+                let m = it.next().unwrap();
+                let v = it.next().unwrap();
+                target = it.next().unwrap();
+                critic.absorb(th, m, v);
+                v_updates += 1;
+
+                if v_updates % p_every == 0 {
+                    replay.sample(&mut rng, b, &mut batch);
+                    let outs = {
+                        let _g = device.enter(cfg.placement[2]);
+                        let [th, m, v, t] = actor.tensors();
+                        let mut inputs =
+                            vec![th, m, v, t, HostTensor::vec(critic.theta.clone())];
+                        if sac {
+                            inputs.push(HostTensor::vec(log_alpha.theta.clone()));
+                            inputs.push(HostTensor::vec(log_alpha.m.clone()));
+                            inputs.push(HostTensor::vec(log_alpha.v.clone()));
+                        }
+                        inputs.push(HostTensor::new(&[b, od], batch.s.clone()));
+                        if sac {
+                            rng.fill_normal(&mut unoise);
+                            inputs.push(HostTensor::new(&[b, ad], unoise.clone()));
+                        }
+                        inputs.push(HostTensor::vec(norm.mean.clone()));
+                        inputs.push(HostTensor::vec(norm.var.clone()));
+                        inputs.push(HostTensor::scalar1(cfg.actor_lr));
+                        au.run(&inputs)?
+                    };
+                    let mut it = outs.into_iter();
+                    let th = it.next().unwrap();
+                    let m = it.next().unwrap();
+                    let v = it.next().unwrap();
+                    actor.absorb(th, m, v);
+                    if sac {
+                        let la = it.next().unwrap();
+                        let lam = it.next().unwrap();
+                        let lav = it.next().unwrap();
+                        log_alpha.absorb(la, lam, lav);
+                    }
+                    p_updates += 1;
+                }
+            }
+        }
+
+        // ---- periodic evaluation -------------------------------------------
+        if log.elapsed() >= next_eval {
+            next_eval = log.elapsed() + cfg.eval_interval_secs;
+            let nd = if sac { Some(ad) } else { None };
+            let (ret, succ) = evaluate(&infer, &manifest, &cfg.task, &actor.theta,
+                                       &norm.mean, &norm.var, cfg.eval_episodes,
+                                       cfg.seed ^ steps, nd)?;
+            info!("[seq] eval {ret:8.2}  steps {}  v {v_updates}", steps * n as u64);
+            log.push(Record {
+                wall_secs: 0.0,
+                env_steps: steps * n as u64,
+                critic_updates: v_updates,
+                actor_updates: p_updates,
+                eval_return: ret,
+                success_rate: succ.map(|s| s as f64).unwrap_or(f64::NAN),
+            })?;
+        }
+    }
+    let _ = tracker;
+    Ok(log)
+}

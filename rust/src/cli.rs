@@ -1,0 +1,176 @@
+//! Dependency-free command-line parsing and the `pql` subcommand table.
+//!
+//! The vendored crate set has no `clap`, so PQL ships a small argv parser:
+//! `Args` splits `--key value` / `--key=value` / bare flags, with typed
+//! accessors that report helpful errors.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals + `--key value` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Positional arguments, in order.
+    pub positional: Vec<String>,
+    /// `--key value` or `--key=value` options (later occurrences win).
+    opts: BTreeMap<String, Vec<String>>,
+    /// Bare `--flag` switches.
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw argv tail (everything after the subcommand).
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    bail!("unexpected bare `--`");
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.entry(k.to_string()).or_default().push(v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.opts
+                        .entry(rest.to_string())
+                        .or_default()
+                        .push(argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    /// Last value given for `--key`, if any.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All values given for `--key` (repeatable options).
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.opts
+            .get(key)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Whether a bare `--flag` was passed.
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Typed option with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|e| anyhow!("--{key} {s:?}: {e}")),
+        }
+    }
+
+    /// Required typed option.
+    pub fn require<T: std::str::FromStr>(&self, key: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let s = self
+            .get(key)
+            .ok_or_else(|| anyhow!("missing required option --{key}"))?;
+        s.parse::<T>().map_err(|e| anyhow!("--{key} {s:?}: {e}"))
+    }
+}
+
+const USAGE: &str = "\
+pql — Parallel Q-Learning (ICML 2023) reproduction
+
+USAGE:
+  pql <COMMAND> [OPTIONS]
+
+COMMANDS:
+  train       Train an agent (PQL / PQL-D / DDPG / SAC / PPO) on a task
+  eval        Evaluate a saved policy checkpoint
+  bench       Run a paper figure/table harness (see --fig / --table)
+  envinfo     Print the environment suite and per-task dimensions
+  artifacts   Verify the AOT artifact set against the manifest
+  help        Show this message
+
+Run `pql <COMMAND> --help` for per-command options.
+";
+
+/// Top-level CLI dispatch. `argv` excludes the program name.
+pub fn run_cli(argv: Vec<String>) -> Result<()> {
+    crate::util::logging::init();
+    let Some(cmd) = argv.first().map(|s| s.as_str()) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let tail = Args::parse(&argv[1..]).context("parsing arguments")?;
+    match cmd {
+        "train" => crate::cmd::train::run(&tail),
+        "eval" => crate::cmd::eval::run(&tail),
+        "bench" => crate::cmd::bench::run(&tail),
+        "envinfo" => crate::cmd::envinfo::run(&tail),
+        "artifacts" => crate::cmd::artifacts::run(&tail),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; run `pql help`"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_pairs() {
+        let a = Args::parse(&sv(&["--task", "ant", "--seed=3", "pos"])).unwrap();
+        assert_eq!(a.get("task"), Some("ant"));
+        assert_eq!(a.get("seed"), Some("3"));
+        assert_eq!(a.positional, vec!["pos".to_string()]);
+    }
+
+    #[test]
+    fn bare_flags_and_typed() {
+        let a = Args::parse(&sv(&["--fast", "--n", "128"])).unwrap();
+        assert!(a.flag("fast"));
+        assert!(!a.flag("slow"));
+        assert_eq!(a.get_parse::<usize>("n", 0).unwrap(), 128);
+        assert_eq!(a.get_parse::<usize>("m", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn repeated_options_last_wins_and_all() {
+        let a = Args::parse(&sv(&["--s", "1", "--s", "2"])).unwrap();
+        assert_eq!(a.get("s"), Some("2"));
+        assert_eq!(a.get_all("s"), vec!["1", "2"]);
+    }
+
+    #[test]
+    fn require_reports_missing() {
+        let a = Args::parse(&sv(&[])).unwrap();
+        assert!(a.require::<usize>("n").is_err());
+    }
+
+    #[test]
+    fn negative_numbers_are_values() {
+        let a = Args::parse(&sv(&["--lo", "-1.5"])).unwrap();
+        assert_eq!(a.get_parse::<f32>("lo", 0.0).unwrap(), -1.5);
+    }
+}

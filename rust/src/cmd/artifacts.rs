@@ -1,0 +1,37 @@
+//! `pql artifacts` — verify the AOT artifact set: every manifest entry
+//! exists on disk, and env dimensions match the manifest (the python/rust
+//! contract check).
+
+use crate::cli::Args;
+use crate::envs;
+use crate::runtime::Manifest;
+use anyhow::{bail, Result};
+
+pub fn run(args: &Args) -> Result<()> {
+    let dir = super::train::artifact_dir(args);
+    let m = Manifest::load(&dir)?;
+    let n = m.verify_files()?;
+    println!("manifest ok: {} tasks, {n} artifacts", m.tasks.len());
+    for (name, t) in &m.tasks {
+        let env = envs::make(name, 1, 0)?;
+        if env.obs_dim() != t.obs_dim
+            || env.act_dim() != t.act_dim
+            || env.critic_obs_dim() != t.critic_obs_dim
+        {
+            bail!(
+                "{name}: env dims ({}, {}, {}) != manifest ({}, {}, {}) — \
+                 re-run `make artifacts`",
+                env.obs_dim(), env.act_dim(), env.critic_obs_dim(),
+                t.obs_dim, t.act_dim, t.critic_obs_dim
+            );
+        }
+        println!(
+            "  {name:<20} obs {:>4} act {:>3} artifacts {:>2}",
+            t.obs_dim,
+            t.act_dim,
+            t.artifacts.len()
+        );
+    }
+    println!("env/manifest dimension contract verified");
+    Ok(())
+}

@@ -1,0 +1,375 @@
+//! `pql bench` — regenerate every figure and table of the paper's
+//! evaluation on this testbed (DESIGN.md §6 maps each ID to the paper).
+//!
+//! ```text
+//! pql bench --fig 3 --budget-secs 60 --seeds 2 --tasks ant,anymal
+//! pql bench --table b3
+//! pql bench --all
+//! ```
+//! Each harness trains the relevant (task × algo × knob) grid with a short
+//! wall-clock budget, writes per-series CSVs under `results/<fig>/`, and
+//! prints a summary table (final/best return — the paper's curves reduced
+//! to their endpoints at this budget).
+
+use crate::cli::Args;
+use crate::config::{Algo, Exploration, Ratio, TrainConfig};
+use crate::envs::{self, StepOut};
+use crate::metrics::write_csv;
+use crate::util::Rng;
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+/// One grid cell of a figure harness.
+struct Series {
+    label: String,
+    cfg: TrainConfig,
+}
+
+struct Bench<'a> {
+    art: PathBuf,
+    out: PathBuf,
+    budget: f64,
+    seeds: u64,
+    tasks: Vec<String>,
+    args: &'a Args,
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let bench = Bench {
+        art: super::train::artifact_dir(args),
+        out: PathBuf::from(args.get("out").unwrap_or("results")),
+        budget: args.get_parse("budget-secs", 45.0)?,
+        seeds: args.get_parse("seeds", 1u64)?,
+        tasks: args
+            .get("tasks")
+            .unwrap_or("ant,shadow_hand")
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .collect(),
+        args,
+    };
+    if args.flag("all") {
+        for fig in ["3", "4", "5", "6", "7", "8", "9buf", "9gpu", "10", "b1",
+                    "c2", "c3", "c3gpu", "c4"] {
+            bench.run_fig(fig)?;
+        }
+        bench.table_b3()?;
+        return Ok(());
+    }
+    if let Some(t) = args.get("table") {
+        return match t {
+            "b3" => bench.table_b3(),
+            other => bail!("unknown table {other:?} (tables: b3)"),
+        };
+    }
+    match args.get("fig") {
+        Some(f) => bench.run_fig(f),
+        None => bail!("pass --fig <id>, --table <id>, or --all (see DESIGN.md §6)"),
+    }
+}
+
+impl Bench<'_> {
+    fn base_cfg(&self, task: &str, algo: Algo) -> Result<TrainConfig> {
+        let mut cfg = TrainConfig::from_args(self.args)?;
+        cfg.task = task.to_string();
+        cfg.algo = algo;
+        cfg.budget_secs = self.budget;
+        cfg.eval_interval_secs = (self.budget / 8.0).clamp(2.0, 15.0);
+        cfg.run_dir = None;
+        Ok(cfg)
+    }
+
+    fn run_fig(&self, fig: &str) -> Result<()> {
+        let series = self.series_for(fig)?;
+        println!("== Fig {fig}: {} series × {} seeds, {}s budget ==",
+                 series.len(), self.seeds, self.budget);
+        let dir = self.out.join(format!("fig{fig}"));
+        let mut summary: Vec<(String, f64, f64)> = Vec::new();
+        for s in &series {
+            let mut finals = Vec::new();
+            let mut bests = Vec::new();
+            for seed in 1..=self.seeds {
+                let mut cfg = s.cfg.clone();
+                cfg.seed = seed;
+                let log = crate::algos::train(&cfg, &self.art)?;
+                let rows: Vec<Vec<f64>> = log
+                    .records
+                    .iter()
+                    .map(|r| {
+                        vec![r.wall_secs, r.env_steps as f64,
+                             r.critic_updates as f64, r.eval_return,
+                             r.success_rate]
+                    })
+                    .collect();
+                write_csv(
+                    &dir.join(format!("{}_seed{seed}.csv", s.label)),
+                    "wall_secs,env_steps,critic_updates,eval_return,success_rate",
+                    &rows,
+                )?;
+                finals.push(log.final_return());
+                bests.push(log.best_return());
+                println!(
+                    "  {:<40} seed {seed}: final {:9.2}  best {:9.2}",
+                    s.label,
+                    log.final_return(),
+                    log.best_return()
+                );
+            }
+            let mf = finals.iter().sum::<f64>() / finals.len() as f64;
+            let mb = bests.iter().sum::<f64>() / bests.len() as f64;
+            summary.push((s.label.clone(), mf, mb));
+        }
+        println!("-- Fig {fig} summary (mean over {} seed(s)) --", self.seeds);
+        for (label, f, b) in &summary {
+            println!("  {label:<40} final {f:9.2}  best {b:9.2}");
+        }
+        let rows: Vec<Vec<f64>> = summary.iter().map(|(_, f, b)| vec![*f, *b]).collect();
+        write_csv(&dir.join("summary.csv"), "final_return,best_return", &rows)?;
+        Ok(())
+    }
+
+    fn series_for(&self, fig: &str) -> Result<Vec<Series>> {
+        let mut out = Vec::new();
+        match fig {
+            // Fig 3 + C.5: PQL/PQL-D vs baselines, wall-clock + sample eff.
+            "3" | "c5" => {
+                for task in &self.tasks {
+                    for algo in [Algo::Pql, Algo::PqlD, Algo::Ddpg, Algo::Sac, Algo::Ppo] {
+                        out.push(Series {
+                            label: format!("{task}_{algo}"),
+                            cfg: self.base_cfg(task, algo)?,
+                        });
+                    }
+                }
+            }
+            // Fig 4: mixed exploration vs fixed σ.
+            "4" => {
+                for task in &self.tasks {
+                    let mut mixed = self.base_cfg(task, Algo::Pql)?;
+                    mixed.exploration = Exploration::Mixed { min: 0.05, max: 0.8 };
+                    out.push(Series { label: format!("{task}_mixed"), cfg: mixed });
+                    for sigma in [0.2f32, 0.4, 0.6, 0.8] {
+                        let mut cfg = self.base_cfg(task, Algo::Pql)?;
+                        cfg.exploration = Exploration::Fixed(sigma);
+                        out.push(Series {
+                            label: format!("{task}_sigma{sigma}"),
+                            cfg,
+                        });
+                    }
+                }
+            }
+            // Fig 5: number of environments, PQL vs PPO.
+            "5" => {
+                for task in &self.tasks {
+                    for n in [16usize, 64, 256, 1024] {
+                        for algo in [Algo::Pql, Algo::Ppo] {
+                            let mut cfg = self.base_cfg(task, algo)?;
+                            cfg.num_envs = n;
+                            out.push(Series {
+                                label: format!("{task}_{algo}_n{n}"),
+                                cfg,
+                            });
+                        }
+                    }
+                }
+            }
+            // Fig 6 + C.6: β_p:v sweep.
+            "6" | "c6" => {
+                for task in &self.tasks {
+                    for (pn, pd) in [(1u64, 1u64), (1, 2), (1, 4), (1, 6)] {
+                        for n in [128usize, 256] {
+                            let mut cfg = self.base_cfg(task, Algo::Pql)?;
+                            cfg.beta_pv = Ratio::new(pn, pd);
+                            cfg.num_envs = n;
+                            out.push(Series {
+                                label: format!("{task}_bpv{pn}-{pd}_n{n}"),
+                                cfg,
+                            });
+                        }
+                    }
+                }
+            }
+            // Fig 7 + C.7: β_a:v sweep.
+            "7" | "c7" => {
+                for task in &self.tasks {
+                    for (an, ad) in [(2u64, 1u64), (1, 1), (1, 4), (1, 8), (1, 12)] {
+                        for n in [128usize, 256] {
+                            let mut cfg = self.base_cfg(task, Algo::Pql)?;
+                            cfg.beta_av = Ratio::new(an, ad);
+                            cfg.num_envs = n;
+                            out.push(Series {
+                                label: format!("{task}_bav{an}-{ad}_n{n}"),
+                                cfg,
+                            });
+                        }
+                    }
+                }
+            }
+            // Fig 8: batch size (artifacts exist for ant).
+            "8" => {
+                for b in [64usize, 256, 512, 1024, 4096] {
+                    let mut cfg = self.base_cfg("ant", Algo::Pql)?;
+                    cfg.batch_size = b;
+                    out.push(Series { label: format!("ant_batch{b}"), cfg });
+                }
+            }
+            // Fig 9(a,b): replay capacity.
+            "9buf" => {
+                for task in &self.tasks {
+                    for cap in [50_000usize, 100_000, 300_000, 1_000_000] {
+                        let mut cfg = self.base_cfg(task, Algo::Pql)?;
+                        cfg.replay_capacity = cap;
+                        out.push(Series {
+                            label: format!("{task}_buf{}k", cap / 1000),
+                            cfg,
+                        });
+                    }
+                }
+            }
+            // Fig 9(c,d): device placement (1/2/3 simulated GPUs).
+            "9gpu" => {
+                for task in &self.tasks {
+                    for (label, speeds, placement) in [
+                        ("1gpu", vec![1.0f32], [0usize, 0, 0]),
+                        ("2gpu", vec![1.0, 1.0], [0, 1, 1]),
+                        ("3gpu", vec![1.0, 1.0, 1.0], [0, 1, 2]),
+                    ] {
+                        let mut cfg = self.base_cfg(task, Algo::Pql)?;
+                        cfg.device_speeds = speeds;
+                        cfg.placement = placement;
+                        out.push(Series {
+                            label: format!("{task}_{label}"),
+                            cfg,
+                        });
+                    }
+                }
+            }
+            // Fig 10: DClaw success rate, PQL-D vs PPO.
+            "10" => {
+                for algo in [Algo::PqlD, Algo::Ppo] {
+                    out.push(Series {
+                        label: format!("dclaw_{algo}"),
+                        cfg: self.base_cfg("dclaw", algo)?,
+                    });
+                }
+            }
+            // Fig B.1: vision task, PQL (compressed / raw channel) vs PPO.
+            "b1" => {
+                let mut c = self.base_cfg("ballbalance_vision", Algo::Pql)?;
+                c.num_envs = 64;
+                c.compress_images = true;
+                out.push(Series { label: "vision_pql_compressed".into(), cfg: c });
+                let mut r = self.base_cfg("ballbalance_vision", Algo::Pql)?;
+                r.num_envs = 64;
+                r.compress_images = false;
+                out.push(Series { label: "vision_pql_raw".into(), cfg: r });
+                let mut p = self.base_cfg("ballbalance_vision", Algo::Ppo)?;
+                p.num_envs = 64;
+                out.push(Series { label: "vision_ppo".into(), cfg: p });
+            }
+            // Fig C.2: ratio control on/off × 1-GPU/2-GPU.
+            "c2" => {
+                for task in &self.tasks {
+                    for (dev_label, speeds, placement) in [
+                        ("1gpu", vec![1.0f32], [0usize, 0, 0]),
+                        ("2gpu", vec![1.0, 1.0], [0, 1, 1]),
+                    ] {
+                        for pace in [true, false] {
+                            let mut cfg = self.base_cfg(task, Algo::Pql)?;
+                            cfg.device_speeds = speeds.clone();
+                            cfg.placement = placement;
+                            cfg.pace_control = pace;
+                            out.push(Series {
+                                label: format!(
+                                    "{task}_{dev_label}_{}",
+                                    if pace { "paced" } else { "free" }
+                                ),
+                                cfg,
+                            });
+                        }
+                    }
+                }
+            }
+            // Fig C.3(a,b): n-step sweep.
+            "c3" => {
+                for task in &self.tasks {
+                    for n in [1usize, 3, 5, 8] {
+                        let mut cfg = self.base_cfg(task, Algo::Pql)?;
+                        cfg.nstep = n;
+                        out.push(Series { label: format!("{task}_n{n}"), cfg });
+                    }
+                }
+            }
+            // Fig C.3(c,d): GPU models.
+            "c3gpu" => {
+                for task in &self.tasks {
+                    for (name, speed) in crate::device::GPU_MODELS {
+                        let mut cfg = self.base_cfg(task, Algo::Pql)?;
+                        cfg.device_speeds = vec![speed];
+                        out.push(Series { label: format!("{task}_{name}"), cfg });
+                    }
+                }
+            }
+            // Fig C.4: SAC vs PQL-SAC.
+            "c4" => {
+                for task in &self.tasks {
+                    for algo in [Algo::Sac, Algo::PqlSac] {
+                        out.push(Series {
+                            label: format!("{task}_{algo}"),
+                            cfg: self.base_cfg(task, algo)?,
+                        });
+                    }
+                }
+            }
+            other => bail!("unknown figure {other:?} (see DESIGN.md §6)"),
+        }
+        Ok(out)
+    }
+
+    /// Table B.3: wall-clock to generate 1M transitions with N envs, per
+    /// simulated GPU model (we scale to 100k transitions and report both).
+    fn table_b3(&self) -> Result<()> {
+        let n = self.args.get_parse("num-envs", 256usize)?;
+        let target: u64 = 100_000;
+        println!("== Table B.3: time to generate {target} transitions (N={n}) ==");
+        println!("{:<14} {:>12} {:>16} {:>22}", "gpu", "task", "secs/100k", "extrap secs/1M");
+        let mut rows = Vec::new();
+        for (gpu, speed) in crate::device::GPU_MODELS {
+            for task in ["ant", "shadow_hand"] {
+                let sim = crate::device::DeviceSim::new(&[speed]);
+                let mut env = envs::make(task, n, 7)?;
+                let (od, ad) = (env.obs_dim(), env.act_dim());
+                let mut obs = vec![0.0f32; n * od];
+                env.reset_all(&mut obs);
+                let mut out = StepOut::new(n, od);
+                let mut acts = vec![0.0f32; n * ad];
+                let mut rng = Rng::new(0);
+                // The paper's sim-cost asymmetry: contact-rich tasks carry
+                // a per-step compute factor (DESIGN.md §3).
+                let cost = env.sim_cost();
+                let t0 = std::time::Instant::now();
+                let mut produced = 0u64;
+                while produced < target {
+                    rng.fill_uniform(&mut acts, -1.0, 1.0);
+                    let _g = sim.enter(0);
+                    for _ in 0..cost.round() as usize {
+                        env.step(&acts, &mut out);
+                    }
+                    produced += n as u64;
+                }
+                let secs = t0.elapsed().as_secs_f64();
+                println!(
+                    "{:<14} {:>12} {:>16.3} {:>22.1}",
+                    gpu, task, secs, secs * 10.0
+                );
+                rows.push(vec![speed as f64, secs, secs * 10.0]);
+            }
+        }
+        write_csv(
+            &self.out.join("table_b3.csv"),
+            "gpu_speed,secs_per_100k,extrap_secs_per_1m",
+            &rows,
+        )?;
+        Ok(())
+    }
+}

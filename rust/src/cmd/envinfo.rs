@@ -1,0 +1,25 @@
+//! `pql envinfo` — print the environment suite and per-task dimensions.
+
+use crate::cli::Args;
+use crate::envs;
+use anyhow::Result;
+
+pub fn run(_args: &Args) -> Result<()> {
+    println!(
+        "{:<20} {:>8} {:>8} {:>11} {:>8} {:>9}",
+        "task", "obs_dim", "act_dim", "critic_obs", "ep_len", "sim_cost"
+    );
+    for name in envs::TASK_NAMES {
+        let e = envs::make(name, 1, 0)?;
+        println!(
+            "{:<20} {:>8} {:>8} {:>11} {:>8} {:>9.1}",
+            name,
+            e.obs_dim(),
+            e.act_dim(),
+            e.critic_obs_dim(),
+            e.max_episode_len(),
+            e.sim_cost()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! `pql eval` — evaluate a saved policy checkpoint.
+//!
+//! ```text
+//! pql eval --task ant --checkpoint runs/ant/checkpoint.pql --episodes 32
+//! ```
+
+use crate::cli::Args;
+use crate::coordinator::evaluate;
+use crate::runtime::Engine;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+pub fn run(args: &Args) -> Result<()> {
+    let task: String = args.require("task")?;
+    let ckpt: String = args.require("checkpoint")?;
+    let episodes: usize = args.get_parse("episodes", 32)?;
+    let seed: u64 = args.get_parse("seed", 0)?;
+    let sections = crate::util::binfmt::load(Path::new(&ckpt))?;
+    let theta = sections.get("actor").context("checkpoint missing 'actor'")?;
+    let mu = sections.get("norm_mean").context("missing norm_mean")?;
+    let var = sections.get("norm_var").context("missing norm_var")?;
+
+    let mut engine = Engine::new(&super::train::artifact_dir(args))?;
+    let manifest = std::sync::Arc::clone(&engine.manifest);
+    let infer = engine.load(&task, "actor_infer")?;
+    let (ret, succ) = evaluate(&infer, &manifest, &task, theta, mu, var,
+                               episodes, seed, None)?;
+    println!("eval_return {ret:.3} over {episodes} episodes");
+    if let Some(s) = succ {
+        println!("success_rate {s:.3}");
+    }
+    Ok(())
+}

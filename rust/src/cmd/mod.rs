@@ -1,0 +1,7 @@
+//! CLI subcommand implementations.
+
+pub mod artifacts;
+pub mod bench;
+pub mod envinfo;
+pub mod eval;
+pub mod train;

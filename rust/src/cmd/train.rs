@@ -1,0 +1,34 @@
+//! `pql train` — train an agent on a task.
+//!
+//! ```text
+//! pql train --task ant --algo pql --budget-secs 120 --run-dir runs/ant
+//! ```
+//! See `TrainConfig::from_args` for the full flag set (β ratios, σ
+//! schedule, placement, device speeds, batch, replay, ...).
+
+use crate::cli::Args;
+use crate::config::TrainConfig;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Resolve the artifact directory (`--artifacts` or `./artifacts`).
+pub fn artifact_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get("artifacts").unwrap_or("artifacts"))
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let cfg = TrainConfig::from_args(args)?;
+    log::info!(
+        "training {} on {} (N={}, B={}, β_a:v={}, β_p:v={}, seed={})",
+        cfg.algo, cfg.task, cfg.num_envs, cfg.batch_size, cfg.beta_av,
+        cfg.beta_pv, cfg.seed
+    );
+    let log = crate::algos::train(&cfg, &artifact_dir(args))?;
+    println!(
+        "final_return {:.3}  best_return {:.3}  evals {}",
+        log.final_return(),
+        log.best_return(),
+        log.records.len()
+    );
+    Ok(())
+}

@@ -1,0 +1,417 @@
+//! Typed run configuration: Tables B.1 / B.2 / B.4 of the paper, scaled
+//! for this testbed (see DESIGN.md §3), plus the PQL-specific knobs
+//! (β ratios, exploration scheme, device placement, pace control).
+//!
+//! Precedence: built-in defaults < `--config file.toml` < CLI flags.
+
+pub mod toml;
+
+use crate::cli::Args;
+use anyhow::{bail, Context, Result};
+
+/// Which algorithm drives training.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    /// Parallel Q-Learning (the paper's scheme, DDPG-based).
+    Pql,
+    /// PQL with a C51 distributional critic.
+    PqlD,
+    /// Sequential DDPG with double-Q + n-step (baseline).
+    Ddpg,
+    /// Sequential SAC with n-step (baseline).
+    Sac,
+    /// PQL scheme wrapped around SAC (Appendix C).
+    PqlSac,
+    /// PPO (the default Isaac Gym baseline).
+    Ppo,
+}
+
+impl std::str::FromStr for Algo {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "pql" => Algo::Pql,
+            "pql-d" | "pqld" | "pql_d" => Algo::PqlD,
+            "ddpg" | "ddpg-n" | "ddpg(n)" => Algo::Ddpg,
+            "sac" | "sac-n" | "sac(n)" => Algo::Sac,
+            "pql-sac" | "pqlsac" | "pql_sac" => Algo::PqlSac,
+            "ppo" => Algo::Ppo,
+            other => bail!("unknown algo {other:?}"),
+        })
+    }
+}
+
+impl std::fmt::Display for Algo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Algo::Pql => "pql",
+            Algo::PqlD => "pql-d",
+            Algo::Ddpg => "ddpg",
+            Algo::Sac => "sac",
+            Algo::PqlSac => "pql-sac",
+            Algo::Ppo => "ppo",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Exploration scheme for the Actor process (§3.3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Exploration {
+    /// Mixed exploration: env i gets σ_i laddered uniformly in [min, max].
+    Mixed { min: f32, max: f32 },
+    /// Single σ for all environments (the tuning-sensitive baseline).
+    Fixed(f32),
+}
+
+/// Speed-ratio pair `num:den` (β_a:v, β_p:v of §3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ratio {
+    pub num: u64,
+    pub den: u64,
+}
+
+impl Ratio {
+    pub fn new(num: u64, den: u64) -> Self {
+        Ratio { num, den }
+    }
+}
+
+impl std::str::FromStr for Ratio {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        let (a, b) = s
+            .split_once(':')
+            .with_context(|| format!("ratio must be n:m, got {s:?}"))?;
+        Ok(Ratio { num: a.trim().parse()?, den: b.trim().parse()? })
+    }
+}
+
+impl std::fmt::Display for Ratio {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}", self.num, self.den)
+    }
+}
+
+/// Full training configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub task: String,
+    pub algo: Algo,
+    pub seed: u64,
+    pub num_envs: usize,
+    pub batch_size: usize,
+    pub replay_capacity: usize,
+    pub nstep: usize,
+    pub gamma: f32,
+    pub actor_lr: f32,
+    pub critic_lr: f32,
+    /// β_a:v — Actor rollout steps : V-learner updates (default 1:8).
+    pub beta_av: Ratio,
+    /// β_p:v — P-learner updates : V-learner updates (default 1:2).
+    pub beta_pv: Ratio,
+    /// Disable to reproduce the Fig. C.2 "free-running" ablation.
+    pub pace_control: bool,
+    pub exploration: Exploration,
+    pub warmup_steps: usize,
+    /// Wall-clock budget; training stops at whichever of budget/steps hits.
+    pub budget_secs: f64,
+    pub max_env_steps: u64,
+    /// Evaluate every this many seconds of wall-clock.
+    pub eval_interval_secs: f64,
+    pub eval_episodes: usize,
+    /// Simulated device ids for (actor, v-learner, p-learner) — Fig. 9(c,d).
+    pub placement: [usize; 3],
+    /// Relative speed factor per simulated device (Fig. C.3 GPU models).
+    pub device_speeds: Vec<f32>,
+    /// PPO-only knobs.
+    pub ppo_horizon: usize,
+    pub ppo_epochs: usize,
+    pub gae_lambda: f32,
+    /// Store image observations compressed in the replay buffer (vision).
+    pub compress_images: bool,
+    /// Output directory for metrics CSV; None = no file output.
+    pub run_dir: Option<String>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            task: "ant".to_string(),
+            algo: Algo::Pql,
+            seed: 1,
+            num_envs: 256,
+            batch_size: 512,
+            replay_capacity: 300_000,
+            nstep: 3,
+            gamma: 0.99,
+            actor_lr: 5e-4,
+            critic_lr: 5e-4,
+            beta_av: Ratio::new(1, 8),
+            beta_pv: Ratio::new(1, 2),
+            pace_control: true,
+            exploration: Exploration::Mixed { min: 0.05, max: 0.8 },
+            warmup_steps: 32,
+            budget_secs: 120.0,
+            max_env_steps: u64::MAX,
+            eval_interval_secs: 5.0,
+            eval_episodes: 16,
+            placement: [0, 0, 0],
+            device_speeds: vec![1.0],
+            ppo_horizon: 16,
+            ppo_epochs: 5,
+            gae_lambda: 0.95,
+            compress_images: true,
+            run_dir: None,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Build from defaults + optional `--config` file + CLI flags.
+    pub fn from_args(args: &Args) -> Result<TrainConfig> {
+        let mut cfg = TrainConfig::default();
+        if let Some(path) = args.get("config") {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading config {path:?}"))?;
+            cfg.apply_table(&toml::parse(&text)?)?;
+        }
+        cfg.apply_cli(args)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn apply_table(&mut self, t: &toml::Table) -> Result<()> {
+        use toml::Value;
+        for (k, v) in t {
+            match (k.as_str(), v) {
+                ("task" | "train.task", v) => self.task = v.as_str()?.to_string(),
+                ("algo" | "train.algo", v) => self.algo = v.as_str()?.parse()?,
+                ("seed" | "train.seed", v) => self.seed = v.as_usize()? as u64,
+                ("num_envs" | "train.num_envs", v) => self.num_envs = v.as_usize()?,
+                ("batch_size" | "train.batch_size", v) => self.batch_size = v.as_usize()?,
+                ("replay_capacity" | "train.replay_capacity", v) => {
+                    self.replay_capacity = v.as_usize()?
+                }
+                ("nstep" | "train.nstep", v) => self.nstep = v.as_usize()?,
+                ("gamma" | "train.gamma", v) => self.gamma = v.as_f64()? as f32,
+                ("actor_lr" | "train.actor_lr", v) => self.actor_lr = v.as_f64()? as f32,
+                ("critic_lr" | "train.critic_lr", v) => self.critic_lr = v.as_f64()? as f32,
+                ("beta_av" | "train.beta_av", v) => self.beta_av = v.as_str()?.parse()?,
+                ("beta_pv" | "train.beta_pv", v) => self.beta_pv = v.as_str()?.parse()?,
+                ("pace_control" | "train.pace_control", v) => {
+                    self.pace_control = v.as_bool()?
+                }
+                ("sigma" | "explore.sigma", v) => {
+                    self.exploration = Exploration::Fixed(v.as_f64()? as f32)
+                }
+                ("sigma_range" | "explore.sigma_range", Value::Arr(a)) if a.len() == 2 => {
+                    self.exploration = Exploration::Mixed {
+                        min: a[0].as_f64()? as f32,
+                        max: a[1].as_f64()? as f32,
+                    }
+                }
+                ("budget_secs" | "train.budget_secs", v) => self.budget_secs = v.as_f64()?,
+                ("warmup_steps" | "train.warmup_steps", v) => {
+                    self.warmup_steps = v.as_usize()?
+                }
+                (other, _) => bail!("unknown config key {other:?}"),
+            }
+        }
+        Ok(())
+    }
+
+    fn apply_cli(&mut self, a: &Args) -> Result<()> {
+        if let Some(v) = a.get("task") {
+            self.task = v.to_string();
+        }
+        if let Some(v) = a.get("algo") {
+            self.algo = v.parse()?;
+        }
+        self.seed = a.get_parse("seed", self.seed)?;
+        self.num_envs = a.get_parse("num-envs", self.num_envs)?;
+        self.batch_size = a.get_parse("batch-size", self.batch_size)?;
+        self.replay_capacity = a.get_parse("replay-capacity", self.replay_capacity)?;
+        self.nstep = a.get_parse("nstep", self.nstep)?;
+        self.gamma = a.get_parse("gamma", self.gamma)?;
+        self.actor_lr = a.get_parse("actor-lr", self.actor_lr)?;
+        self.critic_lr = a.get_parse("critic-lr", self.critic_lr)?;
+        if let Some(v) = a.get("beta-av") {
+            self.beta_av = v.parse()?;
+        }
+        if let Some(v) = a.get("beta-pv") {
+            self.beta_pv = v.parse()?;
+        }
+        if a.flag("no-pace-control") {
+            self.pace_control = false;
+        }
+        if let Some(v) = a.get("sigma") {
+            self.exploration = Exploration::Fixed(v.parse()?);
+        }
+        if let Some(v) = a.get("sigma-range") {
+            let (lo, hi) = v
+                .split_once(',')
+                .context("--sigma-range must be min,max")?;
+            self.exploration = Exploration::Mixed {
+                min: lo.trim().parse()?,
+                max: hi.trim().parse()?,
+            };
+        }
+        self.warmup_steps = a.get_parse("warmup-steps", self.warmup_steps)?;
+        self.budget_secs = a.get_parse("budget-secs", self.budget_secs)?;
+        self.max_env_steps = a.get_parse("max-env-steps", self.max_env_steps)?;
+        self.eval_interval_secs =
+            a.get_parse("eval-interval-secs", self.eval_interval_secs)?;
+        self.eval_episodes = a.get_parse("eval-episodes", self.eval_episodes)?;
+        if let Some(v) = a.get("placement") {
+            let parts: Vec<usize> = v
+                .split(',')
+                .map(|p| p.trim().parse())
+                .collect::<std::result::Result<_, _>>()
+                .context("--placement must be a,v,p device ids")?;
+            if parts.len() != 3 {
+                bail!("--placement needs exactly 3 ids (actor,v,p)");
+            }
+            self.placement = [parts[0], parts[1], parts[2]];
+        }
+        if let Some(v) = a.get("device-speeds") {
+            self.device_speeds = v
+                .split(',')
+                .map(|p| p.trim().parse())
+                .collect::<std::result::Result<_, _>>()
+                .context("--device-speeds must be comma-separated floats")?;
+        }
+        self.ppo_horizon = a.get_parse("ppo-horizon", self.ppo_horizon)?;
+        self.ppo_epochs = a.get_parse("ppo-epochs", self.ppo_epochs)?;
+        if a.flag("no-compress-images") {
+            self.compress_images = false;
+        }
+        if let Some(v) = a.get("run-dir") {
+            self.run_dir = Some(v.to_string());
+        }
+        Ok(())
+    }
+
+    /// Cross-field sanity checks.
+    pub fn validate(&self) -> Result<()> {
+        if self.num_envs == 0 {
+            bail!("num_envs must be > 0");
+        }
+        if self.batch_size == 0 {
+            bail!("batch_size must be > 0");
+        }
+        if self.nstep == 0 {
+            bail!("nstep must be >= 1");
+        }
+        if !(0.0..1.0).contains(&(1.0 - self.gamma)) {
+            bail!("gamma must be in (0, 1]");
+        }
+        if self.beta_av.num == 0 || self.beta_av.den == 0 {
+            bail!("beta_av must have nonzero terms");
+        }
+        if self.beta_pv.num == 0 || self.beta_pv.den == 0 {
+            bail!("beta_pv must have nonzero terms");
+        }
+        if let Exploration::Mixed { min, max } = self.exploration {
+            if min < 0.0 || max < min {
+                bail!("sigma range must satisfy 0 <= min <= max");
+            }
+        }
+        let ndev = self.device_speeds.len();
+        for (i, d) in self.placement.iter().enumerate() {
+            if *d >= ndev {
+                bail!("placement[{i}]={d} but only {ndev} devices configured");
+            }
+        }
+        if self.replay_capacity < self.batch_size {
+            bail!("replay_capacity must be >= batch_size");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(&v.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn defaults_are_paper_table_b1_scaled() {
+        let c = TrainConfig::default();
+        assert_eq!(c.beta_av, Ratio::new(1, 8));
+        assert_eq!(c.beta_pv, Ratio::new(1, 2));
+        assert_eq!(c.nstep, 3);
+        assert_eq!(c.gamma, 0.99);
+        assert_eq!(c.actor_lr, 5e-4);
+        assert_eq!(c.warmup_steps, 32);
+        assert_eq!(c.exploration, Exploration::Mixed { min: 0.05, max: 0.8 });
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let c = TrainConfig::from_args(&args(&[
+            "--task", "shadow_hand", "--algo", "pql-d", "--num-envs", "64",
+            "--beta-av", "1:4", "--sigma", "0.3", "--no-pace-control",
+        ]))
+        .unwrap();
+        assert_eq!(c.task, "shadow_hand");
+        assert_eq!(c.algo, Algo::PqlD);
+        assert_eq!(c.num_envs, 64);
+        assert_eq!(c.beta_av, Ratio::new(1, 4));
+        assert_eq!(c.exploration, Exploration::Fixed(0.3));
+        assert!(!c.pace_control);
+    }
+
+    #[test]
+    fn ratio_parse() {
+        let r: Ratio = "1:12".parse().unwrap();
+        assert_eq!(r, Ratio::new(1, 12));
+        assert!("1-2".parse::<Ratio>().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_placement() {
+        let c = TrainConfig::from_args(&args(&["--placement", "0,1,2"]));
+        assert!(c.is_err() || c.unwrap().device_speeds.len() >= 3);
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let dir = std::env::temp_dir().join("pql_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.toml");
+        std::fs::write(
+            &p,
+            "[train]\ntask = \"anymal\"\nalgo = \"sac\"\nbeta_av = \"1:12\"\n",
+        )
+        .unwrap();
+        let c = TrainConfig::from_args(&args(&["--config", p.to_str().unwrap()])).unwrap();
+        assert_eq!(c.task, "anymal");
+        assert_eq!(c.algo, Algo::Sac);
+        assert_eq!(c.beta_av, Ratio::new(1, 12));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unknown_config_key_rejected() {
+        let dir = std::env::temp_dir().join("pql_cfg_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.toml");
+        std::fs::write(&p, "definitely_not_a_key = 1\n").unwrap();
+        assert!(TrainConfig::from_args(&args(&["--config", p.to_str().unwrap()])).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn placement_with_speeds() {
+        let c = TrainConfig::from_args(&args(&[
+            "--device-speeds", "1.0,0.55", "--placement", "1,0,0",
+        ]))
+        .unwrap();
+        assert_eq!(c.placement, [1, 0, 0]);
+        assert_eq!(c.device_speeds.len(), 2);
+    }
+}

@@ -1,0 +1,153 @@
+//! TOML-subset parser for run configuration files.
+//!
+//! Supported: `[section]` headers, `key = value` with strings, numbers,
+//! booleans, and flat arrays; `#` comments. This covers every config this
+//! repo ships; nested tables and datetimes are intentionally out of scope.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+    pub fn as_usize(&self) -> Result<usize> {
+        Ok(self.as_f64()? as usize)
+    }
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+/// `section.key` -> value map (keys in the top section have no prefix).
+pub type Table = BTreeMap<String, Value>;
+
+fn parse_value(s: &str) -> Result<Value> {
+    let s = s.trim();
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let Some(end) = inner.rfind('"') else {
+            bail!("unterminated string: {s}");
+        };
+        return Ok(Value::Str(inner[..end].to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let Some(end) = inner.rfind(']') else {
+            bail!("unterminated array: {s}");
+        };
+        let body = &inner[..end];
+        let mut out = Vec::new();
+        if !body.trim().is_empty() {
+            for part in body.split(',') {
+                out.push(parse_value(part)?);
+            }
+        }
+        return Ok(Value::Arr(out));
+    }
+    match s.parse::<f64>() {
+        Ok(n) => Ok(Value::Num(n)),
+        Err(_) => bail!("cannot parse value {s:?}"),
+    }
+}
+
+/// Parse TOML-subset text into a flat `section.key` table.
+pub fn parse(text: &str) -> Result<Table> {
+    let mut out = Table::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = match raw.find('#') {
+            // Respect '#' inside quoted strings just enough for our configs.
+            Some(idx) if !raw[..idx].contains('"') => &raw[..idx],
+            _ => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let Some(name) = name.strip_suffix(']') else {
+                bail!("line {}: malformed section {line:?}", lineno + 1);
+            };
+            section = name.trim().to_string();
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            bail!("line {}: expected key = value, got {line:?}", lineno + 1);
+        };
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        out.insert(key, parse_value(v)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = parse(
+            r#"
+            # comment
+            seed = 3
+            [train]
+            task = "ant"
+            lr = 5e-4
+            mixed = true
+            betas = [1, 8]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(t["seed"].as_usize().unwrap(), 3);
+        assert_eq!(t["train.task"].as_str().unwrap(), "ant");
+        assert!((t["train.lr"].as_f64().unwrap() - 5e-4).abs() < 1e-12);
+        assert!(t["train.mixed"].as_bool().unwrap());
+        match &t["train.betas"] {
+            Value::Arr(v) => assert_eq!(v.len(), 2),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("x = @@").is_err());
+    }
+
+    #[test]
+    fn empty_array_and_comments() {
+        let t = parse("a = [] # trailing\n").unwrap();
+        assert_eq!(t["a"], Value::Arr(vec![]));
+    }
+}

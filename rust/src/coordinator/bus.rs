@@ -1,0 +1,145 @@
+//! Versioned parameter bus — the paper's network-transfer arrows.
+//!
+//! P-learner publishes π^p to the Actor and V-learner; V-learner publishes
+//! Q^v to the P-learner. Readers poll `latest(since)` and only pay the
+//! copy when a newer version exists — both transfers are concurrent with
+//! compute, as in Fig. 1.
+
+use std::sync::{Arc, Mutex};
+
+/// A published flat vector with a monotone version.
+struct Slot {
+    version: u64,
+    data: Arc<Vec<f32>>,
+}
+
+/// Multi-producer (usually single), multi-consumer parameter channel.
+#[derive(Clone)]
+pub struct ParamBus {
+    slot: Arc<Mutex<Slot>>,
+}
+
+impl ParamBus {
+    /// Create with an initial value (version 1).
+    pub fn new(initial: Vec<f32>) -> ParamBus {
+        ParamBus {
+            slot: Arc::new(Mutex::new(Slot { version: 1, data: Arc::new(initial) })),
+        }
+    }
+
+    /// Publish a new value; returns the new version.
+    pub fn publish(&self, data: Vec<f32>) -> u64 {
+        let mut s = self.slot.lock().unwrap();
+        s.version += 1;
+        s.data = Arc::new(data);
+        s.version
+    }
+
+    /// Fetch the newest value if its version exceeds `since`.
+    pub fn latest(&self, since: u64) -> Option<(u64, Arc<Vec<f32>>)> {
+        let s = self.slot.lock().unwrap();
+        if s.version > since {
+            Some((s.version, Arc::clone(&s.data)))
+        } else {
+            None
+        }
+    }
+
+    /// Unconditional snapshot.
+    pub fn snapshot(&self) -> (u64, Arc<Vec<f32>>) {
+        let s = self.slot.lock().unwrap();
+        (s.version, Arc::clone(&s.data))
+    }
+
+    pub fn version(&self) -> u64 {
+        self.slot.lock().unwrap().version
+    }
+}
+
+/// Snapshot of the observation normalizer published by the Actor.
+#[derive(Clone)]
+pub struct NormBus {
+    inner: ParamBus,
+    dim: usize,
+}
+
+impl NormBus {
+    pub fn new(dim: usize) -> NormBus {
+        // mean zeros ++ var ones, concatenated.
+        let mut init = vec![0.0; dim];
+        init.extend(vec![1.0; dim]);
+        NormBus { inner: ParamBus::new(init), dim }
+    }
+
+    pub fn publish(&self, mean: &[f32], var: &[f32]) {
+        debug_assert_eq!(mean.len(), self.dim);
+        let mut data = Vec::with_capacity(2 * self.dim);
+        data.extend_from_slice(mean);
+        data.extend_from_slice(var);
+        self.inner.publish(data);
+    }
+
+    /// (mean, var) copy of the newest snapshot.
+    pub fn get(&self) -> (Vec<f32>, Vec<f32>) {
+        let (_, data) = self.inner.snapshot();
+        (data[..self.dim].to_vec(), data[self.dim..].to_vec())
+    }
+
+    pub fn latest(&self, since: u64) -> Option<(u64, Vec<f32>, Vec<f32>)> {
+        self.inner
+            .latest(since)
+            .map(|(v, d)| (v, d[..self.dim].to_vec(), d[self.dim..].to_vec()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn versions_are_monotone_and_latest_filters() {
+        let bus = ParamBus::new(vec![1.0]);
+        assert_eq!(bus.version(), 1);
+        assert!(bus.latest(1).is_none());
+        let v2 = bus.publish(vec![2.0]);
+        assert_eq!(v2, 2);
+        let (v, d) = bus.latest(1).unwrap();
+        assert_eq!(v, 2);
+        assert_eq!(*d, vec![2.0]);
+        assert!(bus.latest(2).is_none());
+    }
+
+    #[test]
+    fn no_torn_reads_under_concurrency() {
+        // Writers publish vectors where all elements equal the version tag;
+        // readers must never observe a mixed vector.
+        let bus = ParamBus::new(vec![0.0; 64]);
+        let b2 = bus.clone();
+        let w = std::thread::spawn(move || {
+            for k in 1..200 {
+                b2.publish(vec![k as f32; 64]);
+            }
+        });
+        let mut last = 0u64;
+        for _ in 0..2000 {
+            if let Some((v, d)) = bus.latest(last) {
+                assert!(d.iter().all(|x| *x == d[0]), "torn read at v{v}");
+                assert!(v > last);
+                last = v;
+            }
+        }
+        w.join().unwrap();
+    }
+
+    #[test]
+    fn norm_bus_roundtrip() {
+        let nb = NormBus::new(3);
+        let (m, v) = nb.get();
+        assert_eq!(m, vec![0.0; 3]);
+        assert_eq!(v, vec![1.0; 3]);
+        nb.publish(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]);
+        let (m, v) = nb.get();
+        assert_eq!(m, vec![1.0, 2.0, 3.0]);
+        assert_eq!(v, vec![4.0, 5.0, 6.0]);
+    }
+}

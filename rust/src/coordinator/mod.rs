@@ -1,0 +1,261 @@
+//! The PQL coordinator: Actor / P-learner / V-learner process topology,
+//! bounded data channels, versioned parameter buses, and the speed-ratio
+//! controller. This is the paper's Figure 1 in code.
+
+pub mod bus;
+pub mod pace;
+
+pub use bus::{NormBus, ParamBus};
+pub use pace::PaceController;
+
+use crate::config::TrainConfig;
+use crate::device::DeviceSim;
+use crate::envs::{self, StepOut};
+use crate::runtime::{infer_chunked, Executable, Manifest};
+use crate::util::Rng;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Observation payload on the Actor→V-learner channel. Vision tasks can
+/// ship frames DEFLATE-compressed (the paper compresses camera images with
+/// lz4 to cut cross-process bandwidth — Appendix B.3).
+pub enum ObsPayload {
+    Raw(Vec<f32>),
+    /// Per-row compressed frames (see `replay::image`).
+    Deflate { rows: Vec<Vec<u8>>, dim: usize },
+}
+
+impl ObsPayload {
+    /// Compress a `[n, dim]` batch row-wise.
+    pub fn compress(batch: &[f32], dim: usize) -> Result<ObsPayload> {
+        let rows = batch
+            .chunks_exact(dim)
+            .map(crate::replay::image::compress)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ObsPayload::Deflate { rows, dim })
+    }
+
+    /// Materialize into a flat `[n, dim]` buffer.
+    pub fn to_flat(&self, out: &mut Vec<f32>) -> Result<()> {
+        match self {
+            ObsPayload::Raw(v) => {
+                out.clear();
+                out.extend_from_slice(v);
+            }
+            ObsPayload::Deflate { rows, dim } => {
+                out.clear();
+                out.resize(rows.len() * dim, 0.0);
+                for (i, r) in rows.iter().enumerate() {
+                    crate::replay::image::decompress(r, &mut out[i * dim..(i + 1) * dim])?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Bytes on the wire.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            ObsPayload::Raw(v) => v.len() * 4,
+            ObsPayload::Deflate { rows, .. } => rows.iter().map(|r| r.len()).sum(),
+        }
+    }
+}
+
+/// One vectorized Actor step shipped to the V-learner (Fig. 1 "data"
+/// arrow): the full transition batch for all N environments.
+pub struct StepMsg {
+    pub s: ObsPayload,
+    pub a: Vec<f32>,
+    pub r: Vec<f32>,
+    pub s2: ObsPayload,
+    pub done: Vec<f32>,
+    /// Critic observations (asymmetric tasks only; empty otherwise).
+    pub cs: Vec<f32>,
+    pub cs2: Vec<f32>,
+}
+
+/// State shared by all three processes of one training run.
+pub struct Shared {
+    pub pace: Arc<PaceController>,
+    pub devices: Arc<DeviceSim>,
+    /// π^p: published by P-learner, read by Actor + V-learner.
+    pub actor_bus: ParamBus,
+    /// Q^v: published by V-learner, read by P-learner.
+    pub critic_bus: ParamBus,
+    /// SAC temperature (log α): published by P-learner.
+    pub alpha_bus: ParamBus,
+    /// Observation normalizer: published by Actor.
+    pub norm_bus: NormBus,
+    pub env_steps: AtomicU64,
+    /// Rolling mean training return (f32 bits), updated by the Actor.
+    pub train_return: AtomicU64,
+    /// Task success metric (f32 bits, NaN if undefined).
+    pub success: AtomicU64,
+}
+
+impl Shared {
+    pub fn new(
+        cfg: &TrainConfig,
+        actor_init: Vec<f32>,
+        critic_init: Vec<f32>,
+        obs_dim: usize,
+    ) -> Arc<Shared> {
+        Arc::new(Shared {
+            pace: Arc::new(PaceController::new(
+                cfg.beta_av,
+                cfg.beta_pv,
+                cfg.pace_control,
+            )),
+            devices: DeviceSim::new_passthrough_or(&cfg.device_speeds),
+            actor_bus: ParamBus::new(actor_init),
+            critic_bus: ParamBus::new(critic_init),
+            alpha_bus: ParamBus::new(vec![0.0]),
+            norm_bus: NormBus::new(obs_dim),
+            env_steps: AtomicU64::new(0),
+            train_return: AtomicU64::new((f32::NAN).to_bits() as u64),
+            success: AtomicU64::new((f32::NAN).to_bits() as u64),
+        })
+    }
+
+    pub fn set_train_return(&self, v: f32) {
+        self.train_return.store(v.to_bits() as u64, Ordering::Relaxed);
+    }
+
+    pub fn train_return(&self) -> f32 {
+        f32::from_bits(self.train_return.load(Ordering::Relaxed) as u32)
+    }
+
+    pub fn set_success(&self, v: f32) {
+        self.success.store(v.to_bits() as u64, Ordering::Relaxed);
+    }
+
+    pub fn success(&self) -> f32 {
+        f32::from_bits(self.success.load(Ordering::Relaxed) as u32)
+    }
+}
+
+/// Tracks per-env episode returns and exposes a rolling mean over the
+/// last completed episodes — the Actor-side training-return metric.
+pub struct ReturnTracker {
+    acc: Vec<f32>,
+    completed: std::collections::VecDeque<f32>,
+    window: usize,
+}
+
+impl ReturnTracker {
+    pub fn new(n_envs: usize, window: usize) -> Self {
+        ReturnTracker {
+            acc: vec![0.0; n_envs],
+            completed: std::collections::VecDeque::with_capacity(window),
+            window,
+        }
+    }
+
+    pub fn push_step(&mut self, rewards: &[f32], dones: &[f32]) {
+        for i in 0..rewards.len() {
+            self.acc[i] += rewards[i];
+            if dones[i] != 0.0 {
+                if self.completed.len() == self.window {
+                    self.completed.pop_front();
+                }
+                self.completed.push_back(self.acc[i]);
+                self.acc[i] = 0.0;
+            }
+        }
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.completed.is_empty() {
+            f32::NAN
+        } else {
+            self.completed.iter().sum::<f32>() / self.completed.len() as f32
+        }
+    }
+}
+
+/// Deterministic evaluation: run `episodes` fresh environments one episode
+/// each under the current policy (zero noise) and average the returns.
+/// Exercises the same chunked-inference path as the Actor.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate(
+    exe: &Executable,
+    manifest: &Manifest,
+    task: &str,
+    theta: &[f32],
+    mu: &[f32],
+    var: &[f32],
+    episodes: usize,
+    seed: u64,
+    sac_noise_dim: Option<usize>,
+) -> Result<(f64, Option<f32>)> {
+    let t = manifest.task(task)?;
+    let mut env = envs::make(task, episodes, seed)?;
+    let (od, ad) = (t.obs_dim, t.act_dim);
+    let mut obs = vec![0.0f32; episodes * od];
+    env.reset_all(&mut obs);
+    let mut out = StepOut::new(episodes, od);
+    let mut acts = vec![0.0f32; episodes * ad];
+    let mut ret = vec![0.0f64; episodes];
+    let mut finished = vec![false; episodes];
+    let zero_noise = vec![0.0f32; episodes * ad];
+    for _ in 0..env.max_episode_len() {
+        let noise = sac_noise_dim.map(|nd| (&zero_noise[..episodes * nd], nd));
+        infer_chunked(
+            exe, theta, &obs, episodes, od, ad, mu, var, manifest.chunk, noise,
+            &mut acts,
+        )?;
+        env.step(&acts, &mut out);
+        for e in 0..episodes {
+            if !finished[e] {
+                ret[e] += out.reward[e] as f64;
+                if out.done[e] != 0.0 {
+                    finished[e] = true;
+                }
+            }
+        }
+        obs.copy_from_slice(&out.obs);
+        if finished.iter().all(|f| *f) {
+            break;
+        }
+    }
+    let mean = ret.iter().sum::<f64>() / episodes as f64;
+    Ok((mean, env.success_rate()))
+}
+
+/// Sample a uniformly random action batch in [-1, 1] (warm-up).
+pub fn random_actions(rng: &mut Rng, out: &mut [f32]) {
+    rng.fill_uniform(out, -1.0, 1.0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn return_tracker_windows_completed_episodes() {
+        let mut rt = ReturnTracker::new(2, 3);
+        assert!(rt.mean().is_nan());
+        rt.push_step(&[1.0, 2.0], &[0.0, 0.0]);
+        rt.push_step(&[1.0, 2.0], &[1.0, 0.0]); // env0 done with 2.0
+        assert_eq!(rt.mean(), 2.0);
+        rt.push_step(&[0.0, 2.0], &[0.0, 1.0]); // env1 done with 6.0
+        assert_eq!(rt.mean(), 4.0);
+        // Window of 3 evicts oldest after 4 completions.
+        rt.push_step(&[5.0, 0.0], &[1.0, 0.0]);
+        rt.push_step(&[7.0, 0.0], &[1.0, 0.0]);
+        assert_eq!(rt.completed.len(), 3);
+    }
+
+    #[test]
+    fn shared_atomic_metrics_roundtrip() {
+        let cfg = TrainConfig::default();
+        let sh = Shared::new(&cfg, vec![0.0], vec![0.0], 4);
+        assert!(sh.train_return().is_nan());
+        sh.set_train_return(3.5);
+        assert_eq!(sh.train_return(), 3.5);
+        sh.set_success(0.25);
+        assert_eq!(sh.success(), 0.25);
+    }
+}

@@ -1,0 +1,313 @@
+//! The speed-ratio controller (§3.2) — the mechanism that makes PQL
+//! stable on one workstation.
+//!
+//! Three monotone counters (actor rollout steps `a`, V-learner updates
+//! `v`, P-learner updates `p`) and two target ratios:
+//!
+//!   β_a:v = f_a / f_v   and   β_p:v = f_p / f_v.
+//!
+//! Each process calls `gate_*` before a unit of work; the call blocks
+//! while that process is *ahead* of its ratio (with one unit of slack so
+//! pipelines overlap). Both sides of each ratio gate, so the realized
+//! ratios converge to the targets regardless of which process is
+//! naturally faster — the "let the faster process wait" rule.
+//!
+//! `stop()` releases all waiters (shutdown), and gating can be disabled
+//! wholesale to reproduce the Fig. C.2 free-running ablation.
+
+use crate::config::Ratio;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+pub struct PaceController {
+    beta_av: Ratio,
+    beta_pv: Ratio,
+    enabled: bool,
+    a: AtomicU64,
+    v: AtomicU64,
+    p: AtomicU64,
+    stop: AtomicBool,
+    /// Set by the V-learner while its replay buffer cannot fill a batch;
+    /// exempts the Actor from throttling so the buffer can fill (small-N
+    /// configurations would otherwise deadlock: V waits for data, Actor
+    /// waits for V).
+    starved: AtomicBool,
+    lock: Mutex<()>,
+    cv: Condvar,
+    /// Cumulative time each process spent blocked (ns) — §Perf metrics.
+    pub wait_a_ns: AtomicU64,
+    pub wait_v_ns: AtomicU64,
+    pub wait_p_ns: AtomicU64,
+}
+
+impl PaceController {
+    pub fn new(beta_av: Ratio, beta_pv: Ratio, enabled: bool) -> Self {
+        PaceController {
+            beta_av,
+            beta_pv,
+            enabled,
+            a: AtomicU64::new(0),
+            v: AtomicU64::new(0),
+            p: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            starved: AtomicBool::new(true),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+            wait_a_ns: AtomicU64::new(0),
+            wait_v_ns: AtomicU64::new(0),
+            wait_p_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn counts(&self) -> (u64, u64, u64) {
+        (
+            self.a.load(Ordering::SeqCst),
+            self.v.load(Ordering::SeqCst),
+            self.p.load(Ordering::SeqCst),
+        )
+    }
+
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.cv.notify_all();
+    }
+
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// V-learner data-availability signal (see `starved` field).
+    pub fn set_starved(&self, starved: bool) {
+        if self.starved.swap(starved, Ordering::SeqCst) != starved {
+            self.cv.notify_all();
+        }
+    }
+
+    // `who_ahead` returns true while the caller must keep waiting.
+    fn wait_while<F: Fn() -> bool>(&self, ahead: F, waited: &AtomicU64) {
+        if !self.enabled {
+            return;
+        }
+        let start = std::time::Instant::now();
+        let mut guard = self.lock.lock().unwrap();
+        while ahead() && !self.stopped() {
+            // Timed wait: robust against missed notifies during shutdown.
+            let (g, _timeout) = self
+                .cv
+                .wait_timeout(guard, Duration::from_millis(20))
+                .unwrap();
+            guard = g;
+        }
+        drop(guard);
+        waited.fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Actor: block while rollout steps outpace β_a:v (one step of slack),
+    /// then count one step.
+    ///
+    /// While the V-learner reports data starvation the gate is inert: the
+    /// ratio governs *relative rates of running processes*, and before
+    /// learning starts the Actor must be free to fill the replay buffer.
+    pub fn gate_actor(&self) {
+        let Ratio { num, den } = self.beta_av;
+        self.wait_while(
+            || {
+                if self.starved.load(Ordering::SeqCst) {
+                    return false; // V is waiting for data: never throttle
+                }
+                let a = self.a.load(Ordering::SeqCst);
+                let v = self.v.load(Ordering::SeqCst);
+                // a/v > num/den  (with one unit of slack on a)
+                a.saturating_mul(den) > (v.saturating_mul(num)).saturating_add(num)
+            },
+            &self.wait_a_ns,
+        );
+        self.a.fetch_add(1, Ordering::SeqCst);
+        self.cv.notify_all();
+    }
+
+    /// V-learner: block while updates outpace the data ratio *and* the
+    /// policy ratio consumer (V must not starve P's ratio), then count.
+    pub fn gate_v(&self) {
+        let Ratio { num: an, den: ad } = self.beta_av;
+        self.wait_while(
+            || {
+                let a = self.a.load(Ordering::SeqCst);
+                let v = self.v.load(Ordering::SeqCst);
+                // v/a > den/num (slack one update)
+                v.saturating_mul(an) > (a.saturating_mul(ad)).saturating_add(ad)
+            },
+            &self.wait_v_ns,
+        );
+        self.v.fetch_add(1, Ordering::SeqCst);
+        self.cv.notify_all();
+    }
+
+    /// P-learner: block while policy updates outpace β_p:v, then count.
+    pub fn gate_p(&self) {
+        let Ratio { num, den } = self.beta_pv;
+        self.wait_while(
+            || {
+                let p = self.p.load(Ordering::SeqCst);
+                let v = self.v.load(Ordering::SeqCst);
+                p.saturating_mul(den) > (v.saturating_mul(num)).saturating_add(num)
+            },
+            &self.wait_p_ns,
+        );
+        self.p.fetch_add(1, Ordering::SeqCst);
+        self.cv.notify_all();
+    }
+
+    /// Realized ratios (a/v, p/v) so far.
+    pub fn realized(&self) -> (f64, f64) {
+        let (a, v, p) = self.counts();
+        let v = v.max(1) as f64;
+        (a as f64 / v, p as f64 / v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn run_threads(beta_av: Ratio, beta_pv: Ratio, iters: u64) -> (u64, u64, u64) {
+        let ctl = Arc::new(PaceController::new(beta_av, beta_pv, true));
+        ctl.set_starved(false); // data available from the start in this test
+        let mut handles = Vec::new();
+        // V-learner drives `iters` updates; actor and P run "as fast as
+        // they can" and must be throttled to the ratios.
+        {
+            let c = Arc::clone(&ctl);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..iters {
+                    c.gate_v();
+                }
+                c.stop();
+            }));
+        }
+        {
+            let c = Arc::clone(&ctl);
+            handles.push(std::thread::spawn(move || {
+                while !c.stopped() {
+                    c.gate_actor();
+                }
+            }));
+        }
+        {
+            let c = Arc::clone(&ctl);
+            handles.push(std::thread::spawn(move || {
+                while !c.stopped() {
+                    c.gate_p();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        ctl.counts()
+    }
+
+    #[test]
+    fn ratios_hold_under_free_running_competitors() {
+        let (a, v, p) = run_threads(Ratio::new(1, 8), Ratio::new(1, 2), 400);
+        assert!(v >= 400);
+        // a/v target 1/8 — allow slack of a few units from both ends.
+        let av = a as f64 / v as f64;
+        assert!((av - 0.125).abs() < 0.05, "a={a} v={v} av={av}");
+        let pv = p as f64 / v as f64;
+        assert!((pv - 0.5).abs() < 0.1, "p={p} v={v} pv={pv}");
+    }
+
+    #[test]
+    fn inverted_ratio_throttles_v() {
+        // β_a:v = 2:1 → two rollout steps per update.
+        let (a, v, _p) = run_threads(Ratio::new(2, 1), Ratio::new(1, 2), 200);
+        let av = a as f64 / v as f64;
+        assert!((av - 2.0).abs() < 0.3, "a={a} v={v}");
+    }
+
+    #[test]
+    fn disabled_controller_never_blocks() {
+        let ctl = PaceController::new(Ratio::new(1, 1000), Ratio::new(1, 1000), false);
+        let t = std::time::Instant::now();
+        for _ in 0..10_000 {
+            ctl.gate_actor();
+            ctl.gate_p();
+        }
+        assert!(t.elapsed() < Duration::from_millis(500));
+        let (a, _v, p) = ctl.counts();
+        assert_eq!(a, 10_000);
+        assert_eq!(p, 10_000);
+    }
+
+    #[test]
+    fn starved_flag_exempts_actor() {
+        let ctl = PaceController::new(Ratio::new(1, 8), Ratio::new(1, 2), true);
+        // starved starts true: actor free-runs far ahead of v without block.
+        let t = std::time::Instant::now();
+        for _ in 0..1000 {
+            ctl.gate_actor();
+        }
+        assert!(t.elapsed() < Duration::from_millis(200));
+        assert_eq!(ctl.counts().0, 1000);
+    }
+
+    #[test]
+    fn stop_releases_all_waiters() {
+        let ctl = Arc::new(PaceController::new(Ratio::new(1, 8), Ratio::new(1, 2), true));
+        ctl.set_starved(false);
+        let c = Arc::clone(&ctl);
+        let h = std::thread::spawn(move || {
+            // With v=0 the actor would block forever without stop().
+            for _ in 0..100 {
+                c.gate_actor();
+            }
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        ctl.stop();
+        h.join().unwrap(); // must not hang
+    }
+
+    /// Property: counters are monotone and realized ratios stay within
+    /// slack bounds throughout random scheduling interleavings.
+    #[test]
+    fn prop_no_deadlock_random_interleavings() {
+        for seed in 0..5u64 {
+            let ctl = Arc::new(PaceController::new(Ratio::new(1, 4), Ratio::new(1, 2), true));
+            ctl.set_starved(false);
+            let mut handles = Vec::new();
+            for role in 0..3 {
+                let c = Arc::clone(&ctl);
+                handles.push(std::thread::spawn(move || {
+                    let mut rng = crate::util::Rng::new(seed * 31 + role);
+                    for _ in 0..200 {
+                        match role {
+                            0 => c.gate_v(),
+                            1 => {
+                                if !c.stopped() {
+                                    c.gate_actor()
+                                }
+                            }
+                            _ => {
+                                if !c.stopped() {
+                                    c.gate_p()
+                                }
+                            }
+                        }
+                        if rng.below(10) == 0 {
+                            std::thread::yield_now();
+                        }
+                    }
+                    if role == 0 {
+                        c.stop();
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! `allegro_hand` — the second in-hand reorientation benchmark (Isaac Gym
+//! *Allegro Hand*): same family as `shadow_hand` but 10 joints, a different
+//! contact geometry, heavier object damping, and a tighter success cone.
+
+use super::{StepOut, VecEnv};
+use crate::envs::dynamics::{clamp, Quat, Servo};
+use crate::util::Rng;
+
+pub const OBS_DIM: usize = 26;
+pub const ACT_DIM: usize = 10;
+const NJ: usize = ACT_DIM;
+const DT: f32 = 0.0166;
+const EP_LEN: u32 = 300;
+const SUCCESS_ANGLE: f32 = 0.3;
+
+const SERVO: Servo = Servo {
+    kp: 35.0,
+    kd: 2.5,
+    torque_limit: 8.0,
+    stiction: 0.5,
+    inv_inertia: 2.5,
+};
+
+pub struct AllegroHand {
+    n: usize,
+    quat: Vec<Quat>,
+    target: Vec<Quat>,
+    angvel: Vec<[f32; 3]>,
+    jpos: Vec<f32>,
+    jvel: Vec<f32>,
+    contact: [[f32; NJ]; 3],
+    steps: Vec<u32>,
+    consecutive: Vec<u32>,
+    rng: Rng,
+}
+
+impl AllegroHand {
+    pub fn new(n: usize, mut rng: Rng) -> Self {
+        let mut geo = Rng::new(0xA11E_6B0);
+        let mut contact = [[0.0f32; NJ]; 3];
+        for row in contact.iter_mut() {
+            for v in row.iter_mut() {
+                *v = geo.uniform_in(-1.2, 1.2);
+            }
+        }
+        let mut env = AllegroHand {
+            n,
+            quat: vec![Quat::IDENTITY; n],
+            target: vec![Quat::IDENTITY; n],
+            angvel: vec![[0.0; 3]; n],
+            jpos: vec![0.0; n * NJ],
+            jvel: vec![0.0; n * NJ],
+            contact,
+            steps: vec![0; n],
+            consecutive: vec![0; n],
+            rng: rng.split(),
+        };
+        for i in 0..n {
+            env.reset_env(i, true);
+        }
+        env
+    }
+
+    fn reset_env(&mut self, i: usize, full: bool) {
+        if full {
+            self.quat[i] = Quat::IDENTITY;
+            self.angvel[i] = [0.0; 3];
+            for j in 0..NJ {
+                self.jpos[i * NJ + j] = 0.0;
+                self.jvel[i * NJ + j] = 0.0;
+            }
+            self.steps[i] = 0;
+        }
+        let axis = [self.rng.normal(), self.rng.normal(), self.rng.normal()];
+        let angle = self.rng.uniform_in(0.4, 2.8);
+        self.target[i] = Quat::from_axis_angle(axis, angle);
+        self.consecutive[i] = 0;
+    }
+
+    fn rot_dist(&self, i: usize) -> f32 {
+        self.quat[i].angle_to(self.target[i])
+    }
+
+    fn write_obs(&self, i: usize, obs: &mut [f32]) {
+        let o = &mut obs[i * OBS_DIM..(i + 1) * OBS_DIM];
+        let q = self.quat[i];
+        let t = self.target[i];
+        o[0] = q.w;
+        o[1] = q.x;
+        o[2] = q.y;
+        o[3] = q.z;
+        o[4] = t.w;
+        o[5] = t.x;
+        o[6] = t.y;
+        o[7] = t.z;
+        o[8] = self.angvel[i][0] * 0.2;
+        o[9] = self.angvel[i][1] * 0.2;
+        o[10] = self.angvel[i][2] * 0.2;
+        for j in 0..NJ {
+            o[11 + j] = self.jpos[i * NJ + j];
+        }
+        o[21] = self.rot_dist(i) / std::f32::consts::PI;
+        o[22] = (self.steps[i] as f32 / EP_LEN as f32) * 2.0 - 1.0;
+        o[23] = self.jvel[i * NJ] * 0.1;
+        o[24] = self.jvel[i * NJ + 1] * 0.1;
+        o[25] = 1.0;
+    }
+}
+
+impl VecEnv for AllegroHand {
+    fn num_envs(&self) -> usize {
+        self.n
+    }
+    fn obs_dim(&self) -> usize {
+        OBS_DIM
+    }
+    fn act_dim(&self) -> usize {
+        ACT_DIM
+    }
+    fn max_episode_len(&self) -> u32 {
+        EP_LEN
+    }
+    fn sim_cost(&self) -> f32 {
+        3.5
+    }
+
+    fn reset_all(&mut self, obs: &mut [f32]) {
+        for i in 0..self.n {
+            self.reset_env(i, true);
+            self.write_obs(i, obs);
+        }
+    }
+
+    fn step(&mut self, actions: &[f32], out: &mut StepOut) {
+        for i in 0..self.n {
+            let a = &actions[i * ACT_DIM..(i + 1) * ACT_DIM];
+            let prev_dist = self.rot_dist(i);
+            for j in 0..NJ {
+                let idx = i * NJ + j;
+                let (mut p, mut v) = (self.jpos[idx], self.jvel[idx]);
+                SERVO.step(&mut p, &mut v, clamp(a[j], -1.0, 1.0), DT);
+                self.jpos[idx] = clamp(p, -1.0, 1.0);
+                self.jvel[idx] = v;
+            }
+            let mut torque = [0.0f32; 3];
+            for (ax, row) in torque.iter_mut().zip(&self.contact) {
+                for j in 0..NJ {
+                    *ax += row[j] * self.jvel[i * NJ + j] * 0.25;
+                }
+            }
+            for ax in 0..3 {
+                self.angvel[i][ax] +=
+                    (torque[ax] - 2.5 * self.angvel[i][ax]) * DT * 4.0;
+            }
+            self.quat[i] = self.quat[i].integrate(self.angvel[i], DT);
+            self.steps[i] += 1;
+
+            let dist = self.rot_dist(i);
+            let energy: f32 = a.iter().map(|x| x * x).sum::<f32>() * 0.005;
+            let mut reward = 10.0 * (prev_dist - dist) - 0.3 * dist - energy;
+            if dist < SUCCESS_ANGLE {
+                self.consecutive[i] += 1;
+                if self.consecutive[i] >= 5 {
+                    reward += 25.0;
+                    self.reset_env(i, false);
+                }
+            } else {
+                self.consecutive[i] = 0;
+            }
+
+            let timeout = self.steps[i] >= EP_LEN;
+            out.reward[i] = reward;
+            out.done[i] = timeout as u32 as f32;
+            if timeout {
+                self.reset_env(i, true);
+            }
+            self.write_obs(i, &mut out.obs);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn joint_motion_spins_object() {
+        let mut env = AllegroHand::new(1, Rng::new(8));
+        let mut obs = vec![0.0; OBS_DIM];
+        env.reset_all(&mut obs);
+        let q0 = env.quat[0];
+        let mut out = StepOut::new(1, OBS_DIM);
+        for _ in 0..30 {
+            env.step(&[0.9; ACT_DIM], &mut out);
+        }
+        assert!(env.quat[0].angle_to(q0) > 1e-3);
+    }
+
+    #[test]
+    fn dims_differ_from_shadow() {
+        // Guards against the two hand tasks collapsing into one config.
+        assert_ne!(OBS_DIM, super::super::shadow_hand::OBS_DIM);
+        assert_ne!(ACT_DIM, super::super::shadow_hand::ACT_DIM);
+    }
+}

@@ -1,0 +1,197 @@
+//! `ant` — planar locomotion analog of Isaac Gym *Ant*.
+//!
+//! A point-mass body with four diagonal thrusters on a plane. The agent
+//! maximizes forward (+x) velocity while staying on the track and paying a
+//! control cost — the same reward structure as Ant (forward progress +
+//! alive bonus − energy), with a heading that thrusters torque around.
+
+use super::{StepOut, VecEnv};
+use crate::envs::dynamics::{clamp, wrap_angle};
+use crate::util::Rng;
+
+pub const OBS_DIM: usize = 12;
+pub const ACT_DIM: usize = 4;
+const DT: f32 = 0.05;
+const EP_LEN: u32 = 300;
+const TRACK_HALF_WIDTH: f32 = 3.0;
+
+// Thruster mounting angles relative to the body frame.
+const MOUNT: [f32; 4] = [0.785, 2.356, -2.356, -0.785];
+
+pub struct Ant {
+    n: usize,
+    // state-of-arrays
+    px: Vec<f32>,
+    py: Vec<f32>,
+    vx: Vec<f32>,
+    vy: Vec<f32>,
+    th: Vec<f32>,
+    om: Vec<f32>,
+    prev_act: Vec<f32>, // [n*4]
+    steps: Vec<u32>,
+    rng: Rng,
+}
+
+impl Ant {
+    pub fn new(n: usize, rng: Rng) -> Self {
+        Ant {
+            n,
+            px: vec![0.0; n],
+            py: vec![0.0; n],
+            vx: vec![0.0; n],
+            vy: vec![0.0; n],
+            th: vec![0.0; n],
+            om: vec![0.0; n],
+            prev_act: vec![0.0; n * ACT_DIM],
+            steps: vec![0; n],
+            rng,
+        }
+    }
+
+    fn reset_env(&mut self, i: usize) {
+        self.px[i] = 0.0;
+        self.py[i] = self.rng.uniform_in(-0.5, 0.5);
+        self.vx[i] = 0.0;
+        self.vy[i] = 0.0;
+        self.th[i] = self.rng.uniform_in(-0.3, 0.3);
+        self.om[i] = 0.0;
+        for a in 0..ACT_DIM {
+            self.prev_act[i * ACT_DIM + a] = 0.0;
+        }
+        self.steps[i] = 0;
+    }
+
+    #[inline]
+    fn write_obs(&self, i: usize, obs: &mut [f32]) {
+        let o = &mut obs[i * OBS_DIM..(i + 1) * OBS_DIM];
+        o[0] = self.vx[i];
+        o[1] = self.vy[i];
+        o[2] = self.th[i].sin();
+        o[3] = self.th[i].cos();
+        o[4] = self.om[i];
+        o[5] = self.py[i] / TRACK_HALF_WIDTH;
+        o[6..10].copy_from_slice(&self.prev_act[i * ACT_DIM..(i + 1) * ACT_DIM]);
+        o[10] = (self.steps[i] as f32 / EP_LEN as f32) * 2.0 - 1.0;
+        o[11] = 1.0;
+    }
+}
+
+impl VecEnv for Ant {
+    fn num_envs(&self) -> usize {
+        self.n
+    }
+    fn obs_dim(&self) -> usize {
+        OBS_DIM
+    }
+    fn act_dim(&self) -> usize {
+        ACT_DIM
+    }
+    fn max_episode_len(&self) -> u32 {
+        EP_LEN
+    }
+    fn sim_cost(&self) -> f32 {
+        1.0
+    }
+
+    fn reset_all(&mut self, obs: &mut [f32]) {
+        for i in 0..self.n {
+            self.reset_env(i);
+            self.write_obs(i, obs);
+        }
+    }
+
+    fn step(&mut self, actions: &[f32], out: &mut StepOut) {
+        debug_assert_eq!(actions.len(), self.n * ACT_DIM);
+        for i in 0..self.n {
+            let a = &actions[i * ACT_DIM..(i + 1) * ACT_DIM];
+            let mut fx = 0.0;
+            let mut fy = 0.0;
+            let mut tq = 0.0;
+            for (k, &mount) in MOUNT.iter().enumerate() {
+                let thrust = clamp(a[k], -1.0, 1.0);
+                let dir = self.th[i] + mount;
+                fx += thrust * dir.cos();
+                fy += thrust * dir.sin();
+                // Opposite diagonal pairs create torque.
+                tq += thrust * if k % 2 == 0 { 0.4 } else { -0.4 };
+            }
+            // Semi-implicit Euler with drag.
+            self.vx[i] += (2.0 * fx - 0.8 * self.vx[i]) * DT;
+            self.vy[i] += (2.0 * fy - 0.8 * self.vy[i]) * DT;
+            self.om[i] += (4.0 * tq - 1.5 * self.om[i]) * DT;
+            self.px[i] += self.vx[i] * DT;
+            self.py[i] += self.vy[i] * DT;
+            self.th[i] = wrap_angle(self.th[i] + self.om[i] * DT);
+            self.steps[i] += 1;
+
+            let ctrl_cost: f32 = a.iter().map(|x| x * x).sum::<f32>() * 0.05;
+            let reward = self.vx[i] + 0.5 - ctrl_cost - 0.1 * self.om[i].abs();
+            let off_track = self.py[i].abs() > TRACK_HALF_WIDTH;
+            let timeout = self.steps[i] >= EP_LEN;
+            let done = off_track || timeout;
+
+            out.reward[i] = if off_track { reward - 5.0 } else { reward };
+            out.done[i] = done as u32 as f32;
+            let pa = &mut self.prev_act[i * ACT_DIM..(i + 1) * ACT_DIM];
+            for (d, s) in pa.iter_mut().zip(a) {
+                *d = *s;
+            }
+            if done {
+                self.reset_env(i);
+            }
+            self.write_obs(i, &mut out.obs);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_thrust_moves_forward() {
+        let mut env = Ant::new(1, Rng::new(0));
+        let mut obs = vec![0.0; OBS_DIM];
+        env.reset_all(&mut obs);
+        env.th[0] = 0.0; // face +x exactly
+        let mut out = StepOut::new(1, OBS_DIM);
+        // Front-facing diagonal pair only (mounts ±45°): net +x force,
+        // zero net torque. Full symmetric thrust cancels by design.
+        let acts = vec![1.0, 0.0, 0.0, 1.0];
+        let mut total_r = 0.0;
+        for _ in 0..50 {
+            env.step(&acts, &mut out);
+            total_r += out.reward[0];
+        }
+        assert!(env.px[0] > 0.5, "px={}", env.px[0]);
+        assert!(total_r > 0.0);
+    }
+
+    #[test]
+    fn leaving_track_terminates_with_penalty() {
+        let mut env = Ant::new(1, Rng::new(0));
+        let mut obs = vec![0.0; OBS_DIM];
+        env.reset_all(&mut obs);
+        env.py[0] = TRACK_HALF_WIDTH + 1.0;
+        let mut out = StepOut::new(1, OBS_DIM);
+        env.step(&[0.0; 4], &mut out);
+        assert_eq!(out.done[0], 1.0);
+        assert!(out.reward[0] < 0.0);
+        // Auto-reset happened.
+        assert!(env.py[0].abs() < 1.0);
+    }
+
+    #[test]
+    fn timeout_terminates() {
+        let mut env = Ant::new(1, Rng::new(0));
+        let mut obs = vec![0.0; OBS_DIM];
+        env.reset_all(&mut obs);
+        let mut out = StepOut::new(1, OBS_DIM);
+        let mut dones = 0;
+        for _ in 0..EP_LEN + 1 {
+            env.step(&[0.0; 4], &mut out);
+            dones += out.done[0] as u32;
+        }
+        assert_eq!(dones, 1);
+    }
+}

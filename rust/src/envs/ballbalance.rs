@@ -1,0 +1,186 @@
+//! `ballbalance_vision` — the vision-based *Ball Balancing* task
+//! (Appendix B.3): the actor observes a rendered 24×24 image of a ball on
+//! a tiltable plate; the critic observes the 8-dim physical state
+//! (asymmetric actor-critic, Pinto et al. 2017). Actions tilt the plate;
+//! the episode ends when the ball rolls off.
+
+use super::render::{render_ball, IMG_PIXELS};
+use super::{StepOut, VecEnv};
+use crate::envs::dynamics::clamp;
+use crate::util::Rng;
+
+pub const OBS_DIM: usize = IMG_PIXELS; // 576 pixels
+pub const CRITIC_OBS_DIM: usize = 8;
+pub const ACT_DIM: usize = 2;
+const DT: f32 = 0.05;
+const EP_LEN: u32 = 250;
+const G: f32 = 6.0;
+
+pub struct BallBalance {
+    n: usize,
+    bx: Vec<f32>,
+    by: Vec<f32>,
+    vx: Vec<f32>,
+    vy: Vec<f32>,
+    tx: Vec<f32>, // plate tilt
+    ty: Vec<f32>,
+    steps: Vec<u32>,
+    rng: Rng,
+}
+
+impl BallBalance {
+    pub fn new(n: usize, rng: Rng) -> Self {
+        let mut env = BallBalance {
+            n,
+            bx: vec![0.0; n],
+            by: vec![0.0; n],
+            vx: vec![0.0; n],
+            vy: vec![0.0; n],
+            tx: vec![0.0; n],
+            ty: vec![0.0; n],
+            steps: vec![0; n],
+            rng,
+        };
+        for i in 0..n {
+            env.reset_env(i);
+        }
+        env
+    }
+
+    fn reset_env(&mut self, i: usize) {
+        self.bx[i] = self.rng.uniform_in(-0.5, 0.5);
+        self.by[i] = self.rng.uniform_in(-0.5, 0.5);
+        self.vx[i] = self.rng.uniform_in(-0.2, 0.2);
+        self.vy[i] = self.rng.uniform_in(-0.2, 0.2);
+        self.tx[i] = 0.0;
+        self.ty[i] = 0.0;
+        self.steps[i] = 0;
+    }
+
+    fn write_obs(&self, i: usize, obs: &mut [f32]) {
+        let o = &mut obs[i * OBS_DIM..(i + 1) * OBS_DIM];
+        render_ball(o, self.bx[i], self.by[i], self.tx[i], self.ty[i], 0.12);
+    }
+}
+
+impl VecEnv for BallBalance {
+    fn num_envs(&self) -> usize {
+        self.n
+    }
+    fn obs_dim(&self) -> usize {
+        OBS_DIM
+    }
+    fn act_dim(&self) -> usize {
+        ACT_DIM
+    }
+    fn critic_obs_dim(&self) -> usize {
+        CRITIC_OBS_DIM
+    }
+    fn max_episode_len(&self) -> u32 {
+        EP_LEN
+    }
+    fn sim_cost(&self) -> f32 {
+        3.0 // physics + rendering per step
+    }
+
+    fn reset_all(&mut self, obs: &mut [f32]) {
+        for i in 0..self.n {
+            self.reset_env(i);
+            self.write_obs(i, obs);
+        }
+    }
+
+    fn fill_critic_obs(&self, out: &mut [f32]) {
+        for i in 0..self.n {
+            let o = &mut out[i * CRITIC_OBS_DIM..(i + 1) * CRITIC_OBS_DIM];
+            o[0] = self.bx[i];
+            o[1] = self.by[i];
+            o[2] = self.vx[i];
+            o[3] = self.vy[i];
+            o[4] = self.tx[i];
+            o[5] = self.ty[i];
+            o[6] = (self.bx[i] * self.bx[i] + self.by[i] * self.by[i]).sqrt();
+            o[7] = 1.0;
+        }
+    }
+
+    fn step(&mut self, actions: &[f32], out: &mut StepOut) {
+        for i in 0..self.n {
+            let a = &actions[i * ACT_DIM..(i + 1) * ACT_DIM];
+            // Tilt-rate control.
+            self.tx[i] = clamp(self.tx[i] + clamp(a[0], -1.0, 1.0) * 0.6 * DT, -0.4, 0.4);
+            self.ty[i] = clamp(self.ty[i] + clamp(a[1], -1.0, 1.0) * 0.6 * DT, -0.4, 0.4);
+            // Ball rolls downhill.
+            self.vx[i] += (-G * self.tx[i] - 0.2 * self.vx[i]) * DT;
+            self.vy[i] += (-G * self.ty[i] - 0.2 * self.vy[i]) * DT;
+            self.bx[i] += self.vx[i] * DT;
+            self.by[i] += self.vy[i] * DT;
+            self.steps[i] += 1;
+
+            let r2 = self.bx[i] * self.bx[i] + self.by[i] * self.by[i];
+            let off = r2.sqrt() > 0.95;
+            let timeout = self.steps[i] >= EP_LEN;
+            // Keep the ball near the center, move slowly.
+            let reward = 1.0 - 1.5 * r2.sqrt()
+                - 0.05 * (self.vx[i].abs() + self.vy[i].abs());
+            out.reward[i] = if off { reward - 10.0 } else { reward };
+            out.done[i] = (off || timeout) as u32 as f32;
+            if off || timeout {
+                self.reset_env(i);
+            }
+            self.write_obs(i, &mut out.obs);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ball_rolls_downhill_and_falls_off() {
+        let mut env = BallBalance::new(1, Rng::new(11));
+        let mut obs = vec![0.0; OBS_DIM];
+        env.reset_all(&mut obs);
+        env.bx[0] = 0.0;
+        env.by[0] = 0.0;
+        let mut out = StepOut::new(1, OBS_DIM);
+        let mut fell = false;
+        for _ in 0..EP_LEN {
+            env.step(&[1.0, 0.0], &mut out); // keep tilting +x
+            fell |= out.done[0] == 1.0;
+        }
+        assert!(fell);
+    }
+
+    #[test]
+    fn critic_obs_matches_state() {
+        let mut env = BallBalance::new(2, Rng::new(12));
+        let mut obs = vec![0.0; 2 * OBS_DIM];
+        env.reset_all(&mut obs);
+        let mut cobs = vec![0.0; 2 * CRITIC_OBS_DIM];
+        env.fill_critic_obs(&mut cobs);
+        assert_eq!(cobs[0], env.bx[0]);
+        assert_eq!(cobs[CRITIC_OBS_DIM], env.bx[1]);
+    }
+
+    #[test]
+    fn image_tracks_ball_position() {
+        let mut env = BallBalance::new(1, Rng::new(13));
+        let mut obs = vec![0.0; OBS_DIM];
+        env.reset_all(&mut obs);
+        env.bx[0] = -0.6;
+        env.by[0] = 0.0;
+        env.write_obs(0, &mut obs);
+        // Brightest pixel should be in the left half.
+        let (mut best, mut best_i) = (0.0, 0);
+        for (i, v) in obs.iter().enumerate() {
+            if *v > best {
+                best = *v;
+                best_i = i;
+            }
+        }
+        let px = best_i % super::super::render::IMG;
+        assert!(px < super::super::render::IMG / 2, "px={px}");
+    }
+}

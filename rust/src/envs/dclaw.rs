@@ -1,0 +1,281 @@
+//! `dclaw` — the multi-object reorientation task of §4.5 (Chen et al.
+//! 2022a): a 9-joint DClaw hand must reorient *hundreds of different
+//! objects* with a single policy. Each environment draws its object from a
+//! 256-entry catalog of physical parameters (inertia, friction, contact
+//! gain); control runs at 12 Hz (5 sim substeps per policy step → high
+//! `sim_cost`), and the headline metric is the success *rate*.
+
+use super::{StepOut, VecEnv};
+use crate::envs::dynamics::{clamp, Quat, Servo};
+use crate::util::Rng;
+
+pub const OBS_DIM: usize = 26;
+pub const ACT_DIM: usize = 9;
+const NJ: usize = ACT_DIM;
+const DT: f32 = 0.0166;
+const SUBSTEPS: usize = 5; // 12 Hz control over ~60 Hz sim
+const EP_LEN: u32 = 80; // 12 Hz * ~6.6 s
+const SUCCESS_ANGLE: f32 = 0.25;
+const CATALOG: usize = 256;
+
+#[derive(Clone, Copy)]
+struct ObjectParams {
+    inv_inertia: f32,
+    damping: f32,
+    contact_gain: f32,
+}
+
+pub struct DClaw {
+    n: usize,
+    quat: Vec<Quat>,
+    target: Vec<Quat>,
+    angvel: Vec<[f32; 3]>,
+    jpos: Vec<f32>,
+    jvel: Vec<f32>,
+    contact: [[f32; NJ]; 3],
+    object: Vec<usize>, // catalog index per env
+    catalog: Vec<ObjectParams>,
+    steps: Vec<u32>,
+    // Success-rate bookkeeping (rolling over finished episodes).
+    episodes: u64,
+    successes: u64,
+    succeeded_this_ep: Vec<bool>,
+    rng: Rng,
+}
+
+impl DClaw {
+    pub fn new(n: usize, mut rng: Rng) -> Self {
+        let mut geo = Rng::new(0xD0C1A3);
+        let mut contact = [[0.0f32; NJ]; 3];
+        for row in contact.iter_mut() {
+            for v in row.iter_mut() {
+                *v = geo.uniform_in(-1.0, 1.0);
+            }
+        }
+        let mut cat = Rng::new(0x0B1EC7);
+        let catalog = (0..CATALOG)
+            .map(|_| ObjectParams {
+                inv_inertia: cat.uniform_in(1.5, 6.0),
+                damping: cat.uniform_in(1.0, 4.0),
+                contact_gain: cat.uniform_in(0.15, 0.45),
+            })
+            .collect();
+        let mut env = DClaw {
+            n,
+            quat: vec![Quat::IDENTITY; n],
+            target: vec![Quat::IDENTITY; n],
+            angvel: vec![[0.0; 3]; n],
+            jpos: vec![0.0; n * NJ],
+            jvel: vec![0.0; n * NJ],
+            contact,
+            object: vec![0; n],
+            catalog,
+            steps: vec![0; n],
+            episodes: 0,
+            successes: 0,
+            succeeded_this_ep: vec![false; n],
+            rng: rng.split(),
+        };
+        for i in 0..n {
+            env.reset_env(i);
+        }
+        env
+    }
+
+    fn reset_env(&mut self, i: usize) {
+        self.quat[i] = Quat::IDENTITY;
+        self.angvel[i] = [0.0; 3];
+        for j in 0..NJ {
+            self.jpos[i * NJ + j] = 0.0;
+            self.jvel[i * NJ + j] = 0.0;
+        }
+        self.object[i] = self.rng.below(CATALOG);
+        // DClaw targets are rotations about near-vertical axes.
+        let axis = [
+            self.rng.uniform_in(-0.3, 0.3),
+            self.rng.uniform_in(-0.3, 0.3),
+            1.0,
+        ];
+        let angle = self.rng.uniform_in(0.6, 2.6);
+        self.target[i] = Quat::from_axis_angle(axis, angle);
+        self.steps[i] = 0;
+        self.succeeded_this_ep[i] = false;
+    }
+
+    fn rot_dist(&self, i: usize) -> f32 {
+        self.quat[i].angle_to(self.target[i])
+    }
+
+    fn write_obs(&self, i: usize, obs: &mut [f32]) {
+        let o = &mut obs[i * OBS_DIM..(i + 1) * OBS_DIM];
+        let q = self.quat[i];
+        let t = self.target[i];
+        let p = self.catalog[self.object[i]];
+        o[0] = q.w;
+        o[1] = q.x;
+        o[2] = q.y;
+        o[3] = q.z;
+        o[4] = t.w;
+        o[5] = t.x;
+        o[6] = t.y;
+        o[7] = t.z;
+        o[8] = self.angvel[i][0] * 0.2;
+        o[9] = self.angvel[i][1] * 0.2;
+        o[10] = self.angvel[i][2] * 0.2;
+        for j in 0..NJ {
+            o[11 + j] = self.jpos[i * NJ + j];
+        }
+        o[20] = self.rot_dist(i) / std::f32::consts::PI;
+        o[21] = (self.steps[i] as f32 / EP_LEN as f32) * 2.0 - 1.0;
+        // Object identity is *partially* observable through its physics.
+        o[22] = p.inv_inertia / 6.0;
+        o[23] = p.damping / 4.0;
+        o[24] = p.contact_gain / 0.45;
+        o[25] = 1.0;
+    }
+}
+
+impl VecEnv for DClaw {
+    fn num_envs(&self) -> usize {
+        self.n
+    }
+    fn obs_dim(&self) -> usize {
+        OBS_DIM
+    }
+    fn act_dim(&self) -> usize {
+        ACT_DIM
+    }
+    fn max_episode_len(&self) -> u32 {
+        EP_LEN
+    }
+    fn sim_cost(&self) -> f32 {
+        5.0 // 12 Hz control: many substeps per policy step
+    }
+
+    fn success_rate(&self) -> Option<f32> {
+        if self.episodes == 0 {
+            Some(0.0)
+        } else {
+            Some(self.successes as f32 / self.episodes as f32)
+        }
+    }
+
+    fn reset_all(&mut self, obs: &mut [f32]) {
+        for i in 0..self.n {
+            self.reset_env(i);
+            self.write_obs(i, obs);
+        }
+    }
+
+    fn step(&mut self, actions: &[f32], out: &mut StepOut) {
+        for i in 0..self.n {
+            let a = &actions[i * ACT_DIM..(i + 1) * ACT_DIM];
+            let p = self.catalog[self.object[i]];
+            let prev_dist = self.rot_dist(i);
+            let servo = Servo {
+                kp: 30.0,
+                kd: 2.0,
+                torque_limit: 8.0,
+                stiction: 0.4,
+                inv_inertia: 2.5,
+            };
+            for _ in 0..SUBSTEPS {
+                for j in 0..NJ {
+                    let idx = i * NJ + j;
+                    let (mut pj, mut vj) = (self.jpos[idx], self.jvel[idx]);
+                    servo.step(&mut pj, &mut vj, clamp(a[j], -1.0, 1.0), DT);
+                    self.jpos[idx] = clamp(pj, -1.0, 1.0);
+                    self.jvel[idx] = vj;
+                }
+                let mut torque = [0.0f32; 3];
+                for (ax, row) in torque.iter_mut().zip(&self.contact) {
+                    for j in 0..NJ {
+                        *ax += row[j] * self.jvel[i * NJ + j] * p.contact_gain;
+                    }
+                }
+                for ax in 0..3 {
+                    self.angvel[i][ax] += (torque[ax] * p.inv_inertia
+                        - p.damping * self.angvel[i][ax])
+                        * DT;
+                }
+                self.quat[i] = self.quat[i].integrate(self.angvel[i], DT);
+            }
+            self.steps[i] += 1;
+
+            let dist = self.rot_dist(i);
+            let energy: f32 = a.iter().map(|x| x * x).sum::<f32>() * 0.005;
+            let mut reward = 8.0 * (prev_dist - dist) - 0.2 * dist - energy;
+            if dist < SUCCESS_ANGLE && !self.succeeded_this_ep[i] {
+                reward += 20.0;
+                self.succeeded_this_ep[i] = true;
+            }
+
+            let timeout = self.steps[i] >= EP_LEN;
+            out.reward[i] = reward;
+            out.done[i] = timeout as u32 as f32;
+            if timeout {
+                self.episodes += 1;
+                if self.succeeded_this_ep[i] {
+                    self.successes += 1;
+                }
+                self.reset_env(i);
+            }
+            self.write_obs(i, &mut out.obs);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn objects_differ_across_envs() {
+        let env = DClaw::new(64, Rng::new(14));
+        let distinct: std::collections::HashSet<_> = env.object.iter().collect();
+        assert!(distinct.len() > 10, "only {} distinct objects", distinct.len());
+    }
+
+    #[test]
+    fn success_rate_counts_episodes() {
+        let mut env = DClaw::new(2, Rng::new(15));
+        let mut obs = vec![0.0; 2 * OBS_DIM];
+        env.reset_all(&mut obs);
+        assert_eq!(env.success_rate(), Some(0.0));
+        let mut out = StepOut::new(2, OBS_DIM);
+        for _ in 0..EP_LEN {
+            env.step(&[0.0; 2 * ACT_DIM], &mut out);
+        }
+        // Two episodes finished, zero successes under null policy.
+        assert_eq!(env.episodes, 2);
+        assert_eq!(env.success_rate(), Some(0.0));
+    }
+
+    #[test]
+    fn reaching_target_counts_as_success() {
+        let mut env = DClaw::new(1, Rng::new(16));
+        let mut obs = vec![0.0; OBS_DIM];
+        env.reset_all(&mut obs);
+        env.target[0] = env.quat[0];
+        let mut out = StepOut::new(1, OBS_DIM);
+        for _ in 0..EP_LEN {
+            env.step(&[0.0; ACT_DIM], &mut out);
+        }
+        assert_eq!(env.successes, 1);
+        assert_eq!(env.success_rate(), Some(1.0));
+    }
+
+    #[test]
+    fn object_params_affect_dynamics() {
+        // Same actions, two different objects -> different trajectories.
+        let mut e = DClaw::new(2, Rng::new(17));
+        e.object[0] = 0;
+        e.object[1] = 99;
+        let mut out = StepOut::new(2, OBS_DIM);
+        let acts = vec![0.8f32; 2 * ACT_DIM];
+        for _ in 0..20 {
+            e.step(&acts, &mut out);
+        }
+        assert_ne!(e.quat[0], e.quat[1]);
+    }
+}

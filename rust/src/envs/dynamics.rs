@@ -1,0 +1,187 @@
+//! Shared rigid-body-lite dynamics helpers: angles, quaternions,
+//! second-order actuators. Everything is f32 and allocation-free.
+
+/// Wrap an angle to (-pi, pi].
+#[inline]
+pub fn wrap_angle(a: f32) -> f32 {
+    let two_pi = 2.0 * std::f32::consts::PI;
+    let mut x = (a + std::f32::consts::PI) % two_pi;
+    if x < 0.0 {
+        x += two_pi;
+    }
+    x - std::f32::consts::PI
+}
+
+#[inline]
+pub fn clamp(x: f32, lo: f32, hi: f32) -> f32 {
+    x.max(lo).min(hi)
+}
+
+/// Unit quaternion (w, x, y, z).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quat {
+    pub w: f32,
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+}
+
+impl Quat {
+    pub const IDENTITY: Quat = Quat { w: 1.0, x: 0.0, y: 0.0, z: 0.0 };
+
+    /// Rotation of `angle` radians about (unnormalized) `axis`.
+    pub fn from_axis_angle(axis: [f32; 3], angle: f32) -> Quat {
+        let n = (axis[0] * axis[0] + axis[1] * axis[1] + axis[2] * axis[2])
+            .sqrt()
+            .max(1e-9);
+        let (s, c) = (0.5 * angle).sin_cos();
+        Quat {
+            w: c,
+            x: s * axis[0] / n,
+            y: s * axis[1] / n,
+            z: s * axis[2] / n,
+        }
+    }
+
+    /// Hamilton product `self * rhs` (apply rhs first).
+    pub fn mul(self, r: Quat) -> Quat {
+        Quat {
+            w: self.w * r.w - self.x * r.x - self.y * r.y - self.z * r.z,
+            x: self.w * r.x + self.x * r.w + self.y * r.z - self.z * r.y,
+            y: self.w * r.y - self.x * r.z + self.y * r.w + self.z * r.x,
+            z: self.w * r.z + self.x * r.y - self.y * r.x + self.z * r.w,
+        }
+    }
+
+    pub fn conj(self) -> Quat {
+        Quat { w: self.w, x: -self.x, y: -self.y, z: -self.z }
+    }
+
+    pub fn normalize(self) -> Quat {
+        let n = (self.w * self.w + self.x * self.x + self.y * self.y + self.z * self.z)
+            .sqrt()
+            .max(1e-9);
+        Quat { w: self.w / n, x: self.x / n, y: self.y / n, z: self.z / n }
+    }
+
+    /// Integrate body angular velocity `omega` over `dt` (first order).
+    pub fn integrate(self, omega: [f32; 3], dt: f32) -> Quat {
+        let dq = Quat { w: 0.0, x: omega[0], y: omega[1], z: omega[2] };
+        let d = dq.mul(self);
+        Quat {
+            w: self.w + 0.5 * dt * d.w,
+            x: self.x + 0.5 * dt * d.x,
+            y: self.y + 0.5 * dt * d.y,
+            z: self.z + 0.5 * dt * d.z,
+        }
+        .normalize()
+    }
+
+    /// Geodesic angle to another quaternion, in [0, pi].
+    pub fn angle_to(self, other: Quat) -> f32 {
+        let dot = (self.w * other.w + self.x * other.x + self.y * other.y
+            + self.z * other.z)
+            .abs()
+            .min(1.0);
+        2.0 * dot.acos()
+    }
+}
+
+/// Second-order actuated joint: position-target servo with torque limit.
+/// Models the PD actuators Isaac Gym tasks use, including a configurable
+/// stiction band (contact-rich hands).
+#[derive(Debug, Clone, Copy)]
+pub struct Servo {
+    pub kp: f32,
+    pub kd: f32,
+    pub torque_limit: f32,
+    /// Torques below this magnitude produce no motion (stiction).
+    pub stiction: f32,
+    /// Inverse inertia.
+    pub inv_inertia: f32,
+}
+
+impl Servo {
+    /// Advance one joint (pos, vel) toward `target` over `dt`.
+    #[inline]
+    pub fn step(&self, pos: &mut f32, vel: &mut f32, target: f32, dt: f32) {
+        let mut torque = self.kp * (target - *pos) - self.kd * *vel;
+        torque = clamp(torque, -self.torque_limit, self.torque_limit);
+        if torque.abs() < self.stiction {
+            torque = 0.0;
+            // Stiction also bleeds velocity.
+            *vel *= 0.8;
+        }
+        *vel += torque * self.inv_inertia * dt;
+        *pos += *vel * dt;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wrap_angle_range() {
+        for k in -20..20 {
+            let a = 0.37 * k as f32;
+            let w = wrap_angle(a);
+            assert!((-std::f32::consts::PI..=std::f32::consts::PI).contains(&w));
+            // Same direction: sin/cos must match.
+            assert!((w.sin() - a.sin()).abs() < 1e-4);
+            assert!((w.cos() - a.cos()).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn quat_identity_and_inverse() {
+        let q = Quat::from_axis_angle([0.0, 0.0, 1.0], 0.7);
+        let r = q.mul(q.conj()).normalize();
+        assert!((r.w - 1.0).abs() < 1e-5);
+        assert!(r.x.abs() < 1e-5 && r.y.abs() < 1e-5 && r.z.abs() < 1e-5);
+    }
+
+    #[test]
+    fn quat_angle_to_self_is_zero() {
+        let q = Quat::from_axis_angle([1.0, 2.0, 3.0], 1.1);
+        assert!(q.angle_to(q) < 1e-3);
+    }
+
+    #[test]
+    fn quat_angle_composition() {
+        let a = Quat::from_axis_angle([0.0, 0.0, 1.0], 0.5);
+        let b = Quat::from_axis_angle([0.0, 0.0, 1.0], 1.3);
+        assert!((a.angle_to(b) - 0.8).abs() < 1e-3);
+    }
+
+    #[test]
+    fn quat_integration_approaches_target() {
+        let mut q = Quat::IDENTITY;
+        let target = Quat::from_axis_angle([0.0, 0.0, 1.0], 1.0);
+        // Rotate about +z at 1 rad/s for 1 s.
+        for _ in 0..100 {
+            q = q.integrate([0.0, 0.0, 1.0], 0.01);
+        }
+        assert!(q.angle_to(target) < 0.02, "angle {}", q.angle_to(target));
+    }
+
+    #[test]
+    fn servo_tracks_target() {
+        let s = Servo { kp: 40.0, kd: 8.0, torque_limit: 10.0, stiction: 0.0, inv_inertia: 1.0 };
+        let (mut p, mut v) = (0.0, 0.0);
+        for _ in 0..400 {
+            s.step(&mut p, &mut v, 0.8, 0.01);
+        }
+        assert!((p - 0.8).abs() < 0.05, "p={p}");
+    }
+
+    #[test]
+    fn servo_stiction_blocks_small_errors() {
+        let s = Servo { kp: 1.0, kd: 0.1, torque_limit: 10.0, stiction: 2.0, inv_inertia: 1.0 };
+        let (mut p, mut v) = (0.0, 0.0);
+        for _ in 0..100 {
+            s.step(&mut p, &mut v, 0.5, 0.01); // kp*err = 0.5 < stiction
+        }
+        assert_eq!(p, 0.0);
+    }
+}

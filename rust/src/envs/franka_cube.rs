@@ -1,0 +1,255 @@
+//! `franka_cube` — staged manipulation analog of Isaac Gym *Franka Cube
+//! Stacking*: a position-controlled gripper must reach cube A, grasp it,
+//! lift, carry it over cube B, and stack. Reward is the staged shaping
+//! used by the Isaac benchmark (reach → grasp → lift → align → stack).
+
+use super::{StepOut, VecEnv};
+use crate::envs::dynamics::clamp;
+use crate::util::Rng;
+
+pub const OBS_DIM: usize = 16;
+pub const ACT_DIM: usize = 4;
+const DT: f32 = 0.05;
+const EP_LEN: u32 = 150;
+const CUBE_B: [f32; 3] = [0.4, 0.0, 0.05]; // fixed base cube
+const STACK_Z: f32 = 0.15; // cube A resting height on top of B
+const GRASP_DIST: f32 = 0.08;
+
+pub struct FrankaCube {
+    n: usize,
+    grip_pos: Vec<[f32; 3]>,
+    grip_closed: Vec<f32>, // 0 open .. 1 closed
+    cube_pos: Vec<[f32; 3]>,
+    cube_vel: Vec<[f32; 3]>,
+    held: Vec<bool>,
+    steps: Vec<u32>,
+    rng: Rng,
+}
+
+impl FrankaCube {
+    pub fn new(n: usize, rng: Rng) -> Self {
+        let mut env = FrankaCube {
+            n,
+            grip_pos: vec![[0.0; 3]; n],
+            grip_closed: vec![0.0; n],
+            cube_pos: vec![[0.0; 3]; n],
+            cube_vel: vec![[0.0; 3]; n],
+            held: vec![false; n],
+            steps: vec![0; n],
+            rng,
+        };
+        for i in 0..n {
+            env.reset_env(i);
+        }
+        env
+    }
+
+    fn reset_env(&mut self, i: usize) {
+        self.grip_pos[i] = [0.0, 0.0, 0.4];
+        self.grip_closed[i] = 0.0;
+        self.cube_pos[i] = [
+            self.rng.uniform_in(-0.3, 0.2),
+            self.rng.uniform_in(-0.25, 0.25),
+            0.05,
+        ];
+        self.cube_vel[i] = [0.0; 3];
+        self.held[i] = false;
+        self.steps[i] = 0;
+    }
+
+    fn dist_grip_cube(&self, i: usize) -> f32 {
+        let g = self.grip_pos[i];
+        let c = self.cube_pos[i];
+        ((g[0] - c[0]).powi(2) + (g[1] - c[1]).powi(2) + (g[2] - c[2]).powi(2)).sqrt()
+    }
+
+    fn dist_cube_goal(&self, i: usize) -> f32 {
+        let c = self.cube_pos[i];
+        let goal = [CUBE_B[0], CUBE_B[1], STACK_Z];
+        ((c[0] - goal[0]).powi(2) + (c[1] - goal[1]).powi(2) + (c[2] - goal[2]).powi(2))
+            .sqrt()
+    }
+
+    fn write_obs(&self, i: usize, obs: &mut [f32]) {
+        let o = &mut obs[i * OBS_DIM..(i + 1) * OBS_DIM];
+        let g = self.grip_pos[i];
+        let c = self.cube_pos[i];
+        o[0] = g[0];
+        o[1] = g[1];
+        o[2] = g[2];
+        o[3] = self.grip_closed[i];
+        o[4] = c[0];
+        o[5] = c[1];
+        o[6] = c[2];
+        o[7] = self.cube_vel[i][0];
+        o[8] = self.cube_vel[i][1];
+        o[9] = self.cube_vel[i][2];
+        o[10] = c[0] - CUBE_B[0];
+        o[11] = c[1] - CUBE_B[1];
+        o[12] = c[2] - STACK_Z;
+        o[13] = self.held[i] as u32 as f32;
+        o[14] = self.dist_grip_cube(i);
+        o[15] = self.dist_cube_goal(i);
+    }
+}
+
+impl VecEnv for FrankaCube {
+    fn num_envs(&self) -> usize {
+        self.n
+    }
+    fn obs_dim(&self) -> usize {
+        OBS_DIM
+    }
+    fn act_dim(&self) -> usize {
+        ACT_DIM
+    }
+    fn max_episode_len(&self) -> u32 {
+        EP_LEN
+    }
+    fn sim_cost(&self) -> f32 {
+        2.5
+    }
+
+    fn reset_all(&mut self, obs: &mut [f32]) {
+        for i in 0..self.n {
+            self.reset_env(i);
+            self.write_obs(i, obs);
+        }
+    }
+
+    fn step(&mut self, actions: &[f32], out: &mut StepOut) {
+        for i in 0..self.n {
+            let a = &actions[i * ACT_DIM..(i + 1) * ACT_DIM];
+            // Gripper position control (workspace-clamped).
+            for (ax, lim) in [(0usize, 0.6f32), (1, 0.4), (2, 0.6)] {
+                self.grip_pos[i][ax] = clamp(
+                    self.grip_pos[i][ax] + clamp(a[ax], -1.0, 1.0) * 0.04,
+                    if ax == 2 { 0.02 } else { -lim },
+                    lim,
+                );
+            }
+            self.grip_closed[i] =
+                clamp(self.grip_closed[i] + clamp(a[3], -1.0, 1.0) * 0.25, 0.0, 1.0);
+
+            let d = self.dist_grip_cube(i);
+            // Grasp/release logic.
+            if !self.held[i] && d < GRASP_DIST && self.grip_closed[i] > 0.7 {
+                self.held[i] = true;
+            }
+            if self.held[i] && self.grip_closed[i] < 0.3 {
+                self.held[i] = false;
+            }
+
+            if self.held[i] {
+                // Cube tracks the gripper.
+                for ax in 0..3 {
+                    let target = self.grip_pos[i][ax] - if ax == 2 { 0.03 } else { 0.0 };
+                    self.cube_vel[i][ax] = (target - self.cube_pos[i][ax]) / DT;
+                    self.cube_pos[i][ax] = target;
+                }
+            } else {
+                // Gravity + table.
+                self.cube_vel[i][2] -= 9.8 * DT;
+                for ax in 0..3 {
+                    self.cube_pos[i][ax] += self.cube_vel[i][ax] * DT;
+                    self.cube_vel[i][ax] *= 0.9;
+                }
+                if self.cube_pos[i][2] < 0.05 {
+                    // Landing on cube B keeps it stacked; floor otherwise.
+                    let over_b = (self.cube_pos[i][0] - CUBE_B[0]).abs() < 0.06
+                        && (self.cube_pos[i][1] - CUBE_B[1]).abs() < 0.06;
+                    let rest = if over_b && self.cube_pos[i][2] > 0.02 {
+                        STACK_Z.min(self.cube_pos[i][2].max(0.05))
+                    } else {
+                        0.05
+                    };
+                    if self.cube_pos[i][2] < rest {
+                        self.cube_pos[i][2] = rest;
+                        self.cube_vel[i][2] = 0.0;
+                    }
+                }
+            }
+            self.steps[i] += 1;
+
+            // Staged shaping (Isaac-style).
+            let d_goal = self.dist_cube_goal(i);
+            let reach = (1.0 - (d / 0.5).min(1.0)) * 0.5;
+            let grasp = if self.held[i] { 1.0 } else { 0.0 };
+            let lift = if self.cube_pos[i][2] > 0.08 { 0.5 } else { 0.0 };
+            let align = (1.0 - (d_goal / 0.6).min(1.0)) * 1.5 * grasp;
+            let stacked = !self.held[i]
+                && d_goal < 0.04
+                && self.cube_pos[i][2] > 0.1;
+            let reward = reach + grasp + lift + align + if stacked { 20.0 } else { 0.0 };
+
+            let timeout = self.steps[i] >= EP_LEN;
+            let done = stacked || timeout;
+            out.reward[i] = reward;
+            out.done[i] = done as u32 as f32;
+            if done {
+                self.reset_env(i);
+            }
+            self.write_obs(i, &mut out.obs);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scripted_stack(env: &mut FrankaCube) -> (bool, f32) {
+        let mut obs = vec![0.0; OBS_DIM];
+        env.reset_all(&mut obs);
+        let mut out = StepOut::new(1, OBS_DIM);
+        let mut total = 0.0;
+        for step in 0..EP_LEN {
+            let g = env.grip_pos[0];
+            let c = env.cube_pos[0];
+            let mut a = [0.0f32; 4];
+            if !env.held[0] {
+                // Go to the cube, then close.
+                let tgt = [c[0], c[1], c[2] + 0.02];
+                for ax in 0..3 {
+                    a[ax] = clamp((tgt[ax] - g[ax]) / 0.04, -1.0, 1.0);
+                }
+                a[3] = if env.dist_grip_cube(0) < GRASP_DIST { 1.0 } else { -1.0 };
+            } else {
+                // Carry above cube B, then release when aligned.
+                let tgt = [CUBE_B[0], CUBE_B[1], STACK_Z + 0.05];
+                for ax in 0..3 {
+                    a[ax] = clamp((tgt[ax] - g[ax]) / 0.04, -1.0, 1.0);
+                }
+                let d_xy = ((g[0] - CUBE_B[0]).powi(2) + (g[1] - CUBE_B[1]).powi(2)).sqrt();
+                a[3] = if d_xy < 0.03 && g[2] < STACK_Z + 0.1 { -1.0 } else { 1.0 };
+            }
+            env.step(&a, &mut out);
+            total += out.reward[0];
+            if out.done[0] == 1.0 && step < EP_LEN - 1 {
+                return (true, total);
+            }
+        }
+        (false, total)
+    }
+
+    #[test]
+    fn scripted_policy_stacks_the_cube() {
+        let mut env = FrankaCube::new(1, Rng::new(9));
+        let (stacked, total) = scripted_stack(&mut env);
+        assert!(stacked, "scripted policy failed to stack (reward {total})");
+        assert!(total > 20.0);
+    }
+
+    #[test]
+    fn cube_falls_under_gravity() {
+        let mut env = FrankaCube::new(1, Rng::new(10));
+        let mut obs = vec![0.0; OBS_DIM];
+        env.reset_all(&mut obs);
+        env.cube_pos[0] = [0.0, 0.0, 0.5];
+        let mut out = StepOut::new(1, OBS_DIM);
+        for _ in 0..40 {
+            env.step(&[0.0; 4], &mut out);
+        }
+        assert!(env.cube_pos[0][2] <= 0.05 + 1e-4);
+    }
+}

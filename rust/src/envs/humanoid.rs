@@ -1,0 +1,184 @@
+//! `humanoid` — planar articulated-chain balancing/locomotion analog of
+//! Isaac Gym *Humanoid*: a torso with 8 spring-damper-coupled joints whose
+//! coordinated motion propels the body; falling (torso pitch too large)
+//! terminates the episode.
+
+use super::{StepOut, VecEnv};
+use crate::envs::dynamics::{clamp, wrap_angle};
+use crate::util::Rng;
+
+pub const OBS_DIM: usize = 28;
+pub const ACT_DIM: usize = 8;
+const NJ: usize = ACT_DIM;
+const DT: f32 = 0.02;
+const SUBSTEPS: usize = 2;
+const EP_LEN: u32 = 300;
+const FALL_PITCH: f32 = 1.0;
+
+pub struct Humanoid {
+    n: usize,
+    x: Vec<f32>,
+    vx: Vec<f32>,
+    pitch: Vec<f32>,
+    om: Vec<f32>,
+    jpos: Vec<f32>, // [n*NJ]
+    jvel: Vec<f32>, // [n*NJ]
+    steps: Vec<u32>,
+    rng: Rng,
+}
+
+impl Humanoid {
+    pub fn new(n: usize, rng: Rng) -> Self {
+        Humanoid {
+            n,
+            x: vec![0.0; n],
+            vx: vec![0.0; n],
+            pitch: vec![0.0; n],
+            om: vec![0.0; n],
+            jpos: vec![0.0; n * NJ],
+            jvel: vec![0.0; n * NJ],
+            steps: vec![0; n],
+            rng,
+        }
+    }
+
+    fn reset_env(&mut self, i: usize) {
+        self.x[i] = 0.0;
+        self.vx[i] = 0.0;
+        self.pitch[i] = self.rng.uniform_in(-0.1, 0.1);
+        self.om[i] = 0.0;
+        for j in 0..NJ {
+            self.jpos[i * NJ + j] = self.rng.uniform_in(-0.1, 0.1);
+            self.jvel[i * NJ + j] = 0.0;
+        }
+        self.steps[i] = 0;
+    }
+
+    fn write_obs(&self, i: usize, obs: &mut [f32]) {
+        let o = &mut obs[i * OBS_DIM..(i + 1) * OBS_DIM];
+        o[0] = self.vx[i];
+        o[1] = self.pitch[i].sin();
+        o[2] = self.pitch[i].cos();
+        o[3] = self.om[i];
+        for j in 0..NJ {
+            o[4 + j] = self.jpos[i * NJ + j];
+            o[4 + NJ + j] = self.jvel[i * NJ + j] * 0.25;
+        }
+        o[4 + 2 * NJ..OBS_DIM].fill(0.0);
+        o[OBS_DIM - 1] = 1.0;
+    }
+}
+
+impl VecEnv for Humanoid {
+    fn num_envs(&self) -> usize {
+        self.n
+    }
+    fn obs_dim(&self) -> usize {
+        OBS_DIM
+    }
+    fn act_dim(&self) -> usize {
+        ACT_DIM
+    }
+    fn max_episode_len(&self) -> u32 {
+        EP_LEN
+    }
+    fn sim_cost(&self) -> f32 {
+        2.0
+    }
+
+    fn reset_all(&mut self, obs: &mut [f32]) {
+        for i in 0..self.n {
+            self.reset_env(i);
+            self.write_obs(i, obs);
+        }
+    }
+
+    fn step(&mut self, actions: &[f32], out: &mut StepOut) {
+        for i in 0..self.n {
+            let a = &actions[i * ACT_DIM..(i + 1) * ACT_DIM];
+            for _ in 0..SUBSTEPS {
+                let mut stride = 0.0;
+                for j in 0..NJ {
+                    let idx = i * NJ + j;
+                    let torque = clamp(a[j], -1.0, 1.0) * 3.0;
+                    // Spring-damper joint with neighbor coupling.
+                    let left = if j > 0 { self.jpos[idx - 1] } else { self.pitch[i] };
+                    let right = if j + 1 < NJ { self.jpos[idx + 1] } else { 0.0 };
+                    let coupling = 0.8 * (left + right - 2.0 * self.jpos[idx]);
+                    let acc = torque + coupling - 4.0 * self.jpos[idx]
+                        - 0.6 * self.jvel[idx];
+                    self.jvel[idx] += acc * DT;
+                    self.jpos[idx] =
+                        clamp(self.jpos[idx] + self.jvel[idx] * DT, -1.5, 1.5);
+                    // Alternating joints act as legs: their velocity against
+                    // the ground propels the body when "planted" (phase > 0).
+                    let phase = if j % 2 == 0 { 1.0 } else { -1.0 };
+                    if phase * self.jpos[idx] > 0.0 {
+                        stride += phase * self.jvel[idx];
+                    }
+                }
+                // Torso dynamics: joint reactions pitch the torso; stride
+                // drives forward velocity.
+                let mean_j: f32 =
+                    self.jpos[i * NJ..(i + 1) * NJ].iter().sum::<f32>() / NJ as f32;
+                self.om[i] += (-6.0 * self.pitch[i] - 1.2 * self.om[i]
+                    + 1.5 * mean_j)
+                    * DT;
+                self.pitch[i] = wrap_angle(self.pitch[i] + self.om[i] * DT);
+                self.vx[i] += (0.8 * stride - 1.0 * self.vx[i]) * DT;
+                self.x[i] += self.vx[i] * DT;
+            }
+            self.steps[i] += 1;
+
+            let upright = 1.0 - (self.pitch[i] / FALL_PITCH).abs();
+            let energy: f32 = a.iter().map(|x| x * x).sum::<f32>() * 0.02;
+            let reward = 2.0 * self.vx[i] + upright + 0.5 - energy;
+
+            let fell = self.pitch[i].abs() > FALL_PITCH;
+            let timeout = self.steps[i] >= EP_LEN;
+            out.reward[i] = if fell { reward - 10.0 } else { reward };
+            out.done[i] = (fell || timeout) as u32 as f32;
+            if fell || timeout {
+                self.reset_env(i);
+            }
+            self.write_obs(i, &mut out.obs);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extreme_torques_topple_the_torso() {
+        let mut env = Humanoid::new(1, Rng::new(1));
+        let mut obs = vec![0.0; OBS_DIM];
+        env.reset_all(&mut obs);
+        let mut out = StepOut::new(1, OBS_DIM);
+        // Constant max torque on all joints destabilizes within an episode.
+        let mut fell = false;
+        for _ in 0..EP_LEN {
+            env.step(&[1.0; ACT_DIM], &mut out);
+            fell |= out.done[0] == 1.0;
+        }
+        assert!(fell);
+    }
+
+    #[test]
+    fn zero_action_is_stable_longer_than_random() {
+        let mut quiet = Humanoid::new(1, Rng::new(2));
+        let mut obs = vec![0.0; OBS_DIM];
+        quiet.reset_all(&mut obs);
+        let mut out = StepOut::new(1, OBS_DIM);
+        let mut quiet_steps = 0u32;
+        for _ in 0..200 {
+            quiet.step(&[0.0; ACT_DIM], &mut out);
+            if out.done[0] == 1.0 {
+                break;
+            }
+            quiet_steps += 1;
+        }
+        assert!(quiet_steps >= 150, "zero-action fell after {quiet_steps}");
+    }
+}

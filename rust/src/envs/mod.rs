@@ -1,0 +1,216 @@
+//! Massively parallel environment substrate.
+//!
+//! This package stands in for Isaac Gym (see DESIGN.md §3): a batched,
+//! struct-of-arrays environment engine whose stepping cost scales with the
+//! number of environments N, with eight task analogs matched in *role* to
+//! the paper's benchmarks. All state lives in flat `f32` vectors and
+//! `step` performs no allocation — the Actor process's hot loop.
+//!
+//! Environments auto-reset: when an episode terminates (failure or
+//! timeout), `done = 1.0` is reported together with the *first observation
+//! of the new episode*, matching Isaac Gym's semantics (the transition
+//! `(s_T, a, r, s_0')` is marked done so bootstrap masks it out).
+
+pub mod dynamics;
+pub mod render;
+
+mod allegro_hand;
+mod ant;
+mod anymal;
+mod ballbalance;
+mod dclaw;
+mod franka_cube;
+mod humanoid;
+mod shadow_hand;
+
+use crate::util::Rng;
+use anyhow::{bail, Result};
+
+/// Output buffers of one vectorized step (reused across steps).
+#[derive(Debug, Clone, Default)]
+pub struct StepOut {
+    /// Next observations, `[N * obs_dim]` row-major.
+    pub obs: Vec<f32>,
+    /// Per-env rewards, `[N]` (unscaled; reward scaling is a trainer knob).
+    pub reward: Vec<f32>,
+    /// Per-env termination flags, `[N]` (1.0 = episode ended this step).
+    pub done: Vec<f32>,
+}
+
+impl StepOut {
+    pub fn new(n: usize, obs_dim: usize) -> Self {
+        StepOut {
+            obs: vec![0.0; n * obs_dim],
+            reward: vec![0.0; n],
+            done: vec![0.0; n],
+        }
+    }
+}
+
+/// A batch of N identical environments stepped in lockstep.
+pub trait VecEnv: Send {
+    fn num_envs(&self) -> usize;
+    fn obs_dim(&self) -> usize;
+    fn act_dim(&self) -> usize;
+    /// Low-dimensional critic observation (asymmetric actor-critic tasks);
+    /// equals `obs_dim` for symmetric tasks.
+    fn critic_obs_dim(&self) -> usize {
+        self.obs_dim()
+    }
+    fn max_episode_len(&self) -> u32;
+    /// Relative per-step simulation cost (contact-rich tasks are slower —
+    /// drives the device-contention simulator, Table B.3).
+    fn sim_cost(&self) -> f32 {
+        1.0
+    }
+    /// Reset every environment; fills `obs[N * obs_dim]`.
+    fn reset_all(&mut self, obs: &mut [f32]);
+    /// Step all envs with `actions[N * act_dim]` in [-1, 1].
+    fn step(&mut self, actions: &[f32], out: &mut StepOut);
+    /// Fill the critic observation `[N * critic_obs_dim]` (asymmetric only).
+    fn fill_critic_obs(&self, out: &mut [f32]) {
+        let _ = out;
+        unimplemented!("symmetric task has no separate critic observation")
+    }
+    /// Rolling success metric in [0,1], if the task defines one (DClaw).
+    fn success_rate(&self) -> Option<f32> {
+        None
+    }
+}
+
+/// All task names, in the paper's presentation order.
+pub const TASK_NAMES: [&str; 8] = [
+    "ant",
+    "humanoid",
+    "anymal",
+    "shadow_hand",
+    "allegro_hand",
+    "franka_cube",
+    "ballbalance_vision",
+    "dclaw",
+];
+
+/// Instantiate a task by name with N environments.
+pub fn make(task: &str, num_envs: usize, seed: u64) -> Result<Box<dyn VecEnv>> {
+    let rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
+    Ok(match task {
+        "ant" => Box::new(ant::Ant::new(num_envs, rng)),
+        "humanoid" => Box::new(humanoid::Humanoid::new(num_envs, rng)),
+        "anymal" => Box::new(anymal::Anymal::new(num_envs, rng)),
+        "shadow_hand" => Box::new(shadow_hand::ShadowHand::new(num_envs, rng)),
+        "allegro_hand" => Box::new(allegro_hand::AllegroHand::new(num_envs, rng)),
+        "franka_cube" => Box::new(franka_cube::FrankaCube::new(num_envs, rng)),
+        "ballbalance_vision" => Box::new(ballbalance::BallBalance::new(num_envs, rng)),
+        "dclaw" => Box::new(dclaw::DClaw::new(num_envs, rng)),
+        other => bail!("unknown task {other:?} (see `pql envinfo`)"),
+    })
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// Generic conformance suite every task must pass.
+    pub fn conformance(task: &str) {
+        let n = 8;
+        let mut env = make(task, n, 7).unwrap();
+        assert_eq!(env.num_envs(), n);
+        let (od, ad) = (env.obs_dim(), env.act_dim());
+        assert!(od > 0 && ad > 0);
+        let mut obs = vec![f32::NAN; n * od];
+        env.reset_all(&mut obs);
+        assert!(obs.iter().all(|v| v.is_finite()), "{task}: reset obs finite");
+
+        let mut out = StepOut::new(n, od);
+        let mut rng = Rng::new(3);
+        let mut acts = vec![0.0f32; n * ad];
+        let mut saw_done = false;
+        for step in 0..(env.max_episode_len() + 50) {
+            rng.fill_uniform(&mut acts, -1.0, 1.0);
+            env.step(&acts, &mut out);
+            assert!(
+                out.obs.iter().all(|v| v.is_finite()),
+                "{task}: obs finite at step {step}"
+            );
+            assert!(
+                out.reward.iter().all(|v| v.is_finite()),
+                "{task}: reward finite at step {step}"
+            );
+            for d in &out.done {
+                assert!(*d == 0.0 || *d == 1.0, "{task}: done is binary");
+                saw_done |= *d == 1.0;
+            }
+        }
+        // Every task must terminate within max_episode_len under random play.
+        assert!(saw_done, "{task}: no episode ever terminated");
+
+        // Determinism: same seed, same trajectory.
+        let mut e1 = make(task, 4, 42).unwrap();
+        let mut e2 = make(task, 4, 42).unwrap();
+        let mut o1 = vec![0.0; 4 * od];
+        let mut o2 = vec![0.0; 4 * od];
+        e1.reset_all(&mut o1);
+        e2.reset_all(&mut o2);
+        assert_eq!(o1, o2, "{task}: reset deterministic");
+        let mut s1 = StepOut::new(4, od);
+        let mut s2 = StepOut::new(4, od);
+        let acts = vec![0.3f32; 4 * ad];
+        for _ in 0..20 {
+            e1.step(&acts, &mut s1);
+            e2.step(&acts, &mut s2);
+        }
+        assert_eq!(s1.obs, s2.obs, "{task}: step deterministic");
+        assert_eq!(s1.reward, s2.reward);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_constructible() {
+        for t in TASK_NAMES {
+            let env = make(t, 2, 0).unwrap();
+            assert_eq!(env.num_envs(), 2, "{t}");
+        }
+    }
+
+    #[test]
+    fn unknown_task_rejected() {
+        assert!(make("nope", 1, 0).is_err());
+    }
+
+    #[test]
+    fn conformance_ant() {
+        testutil::conformance("ant");
+    }
+    #[test]
+    fn conformance_humanoid() {
+        testutil::conformance("humanoid");
+    }
+    #[test]
+    fn conformance_anymal() {
+        testutil::conformance("anymal");
+    }
+    #[test]
+    fn conformance_shadow_hand() {
+        testutil::conformance("shadow_hand");
+    }
+    #[test]
+    fn conformance_allegro_hand() {
+        testutil::conformance("allegro_hand");
+    }
+    #[test]
+    fn conformance_franka_cube() {
+        testutil::conformance("franka_cube");
+    }
+    #[test]
+    fn conformance_ballbalance() {
+        testutil::conformance("ballbalance_vision");
+    }
+    #[test]
+    fn conformance_dclaw() {
+        testutil::conformance("dclaw");
+    }
+}

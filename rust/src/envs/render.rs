@@ -1,0 +1,77 @@
+//! Tiny software rasterizer for the vision task: renders the ball-on-plate
+//! scene into a grayscale image (the paper renders 48×48 RGB from Isaac's
+//! camera; we render 24×24 grayscale — same pathway, scaled).
+
+/// Image side length for the vision task.
+pub const IMG: usize = 24;
+/// Flattened image size.
+pub const IMG_PIXELS: usize = IMG * IMG;
+
+/// Render the plate + ball into `out[IMG*IMG]`, values in [0, 1].
+///
+/// The plate occupies the frame; tilt shades the background plane as a
+/// linear gradient (so tilt is observable), and the ball is an anti-aliased
+/// bright disc at its plate coordinates.
+pub fn render_ball(out: &mut [f32], ball_x: f32, ball_y: f32, tilt_x: f32, tilt_y: f32, radius_frac: f32) {
+    debug_assert_eq!(out.len(), IMG_PIXELS);
+    let half = (IMG / 2) as f32;
+    let r_px = radius_frac * half;
+    for py in 0..IMG {
+        for px in 0..IMG {
+            // Pixel center in plate coordinates [-1, 1].
+            let x = (px as f32 + 0.5 - half) / half;
+            let y = (py as f32 + 0.5 - half) / half;
+            // Background: tilt gradient (0.2 .. 0.5).
+            let mut v = 0.35 + 0.15 * (tilt_x * x + tilt_y * y);
+            // Plate edge vignette.
+            let rr = (x * x + y * y).sqrt();
+            if rr > 0.98 {
+                v = 0.05;
+            }
+            // Ball: anti-aliased disc.
+            let dx = (x - ball_x) * half;
+            let dy = (y - ball_y) * half;
+            let d = (dx * dx + dy * dy).sqrt();
+            if d < r_px + 1.0 {
+                let alpha = (r_px + 1.0 - d).clamp(0.0, 1.0);
+                v = v * (1.0 - alpha) + 1.0 * alpha;
+            }
+            out[py * IMG + px] = v.clamp(0.0, 1.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ball_is_brightest_at_its_position() {
+        let mut img = vec![0.0; IMG_PIXELS];
+        render_ball(&mut img, 0.5, -0.5, 0.0, 0.0, 0.12);
+        // Ball at (0.5, -0.5) -> pixel ((0.5+1)*12, (-0.5+1)*12) = (18, 6).
+        let at_ball = img[6 * IMG + 18];
+        let far = img[18 * IMG + 3];
+        assert!(at_ball > 0.95, "at_ball={at_ball}");
+        assert!(far < 0.6, "far={far}");
+    }
+
+    #[test]
+    fn tilt_changes_background_gradient() {
+        let mut a = vec![0.0; IMG_PIXELS];
+        let mut b = vec![0.0; IMG_PIXELS];
+        render_ball(&mut a, 0.0, 0.0, 1.0, 0.0, 0.1);
+        render_ball(&mut b, 0.0, 0.0, -1.0, 0.0, 0.1);
+        // Right side brighter under +x tilt than -x tilt.
+        let right_a = a[12 * IMG + 20];
+        let right_b = b[12 * IMG + 20];
+        assert!(right_a > right_b);
+    }
+
+    #[test]
+    fn all_pixels_in_unit_range() {
+        let mut img = vec![0.0; IMG_PIXELS];
+        render_ball(&mut img, 2.0, 2.0, 3.0, -3.0, 0.2);
+        assert!(img.iter().all(|v| (0.0..=1.0).contains(v)));
+    }
+}

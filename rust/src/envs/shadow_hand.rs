@@ -1,0 +1,248 @@
+//! `shadow_hand` — contact-rich in-hand reorientation analog of Isaac Gym
+//! *Shadow Hand*: 12 stiction-prone finger servos drive an object's angular
+//! velocity through a fixed contact map; the agent must rotate the object
+//! to a target quaternion, which resamples on success (Isaac semantics).
+
+use super::{StepOut, VecEnv};
+use crate::envs::dynamics::{clamp, Quat, Servo};
+use crate::util::Rng;
+
+pub const OBS_DIM: usize = 30;
+pub const ACT_DIM: usize = 12;
+const NJ: usize = ACT_DIM;
+const DT: f32 = 0.0166;
+const EP_LEN: u32 = 300;
+const SUCCESS_ANGLE: f32 = 0.4;
+
+const SERVO: Servo = Servo {
+    kp: 40.0,
+    kd: 3.0,
+    torque_limit: 10.0,
+    stiction: 0.8, // contact-rich: fingers stick
+    inv_inertia: 3.0,
+};
+
+pub struct ShadowHand {
+    n: usize,
+    quat: Vec<Quat>,
+    target: Vec<Quat>,
+    angvel: Vec<[f32; 3]>,
+    jpos: Vec<f32>,
+    jvel: Vec<f32>,
+    /// Fixed joint->angular-velocity contact map [3 x NJ], shared by all
+    /// envs (the hand geometry).
+    contact: [[f32; NJ]; 3],
+    steps: Vec<u32>,
+    consecutive: Vec<u32>,
+    rng: Rng,
+}
+
+impl ShadowHand {
+    pub fn new(n: usize, mut rng: Rng) -> Self {
+        // Deterministic contact map from a fixed stream (geometry, not
+        // per-seed randomness).
+        let mut geo = Rng::new(0xC0FFEE);
+        let mut contact = [[0.0f32; NJ]; 3];
+        for row in contact.iter_mut() {
+            for v in row.iter_mut() {
+                *v = geo.uniform_in(-1.0, 1.0);
+            }
+        }
+        let mut env = ShadowHand {
+            n,
+            quat: vec![Quat::IDENTITY; n],
+            target: vec![Quat::IDENTITY; n],
+            angvel: vec![[0.0; 3]; n],
+            jpos: vec![0.0; n * NJ],
+            jvel: vec![0.0; n * NJ],
+            contact,
+            steps: vec![0; n],
+            consecutive: vec![0; n],
+            rng: rng.split(),
+        };
+        let _ = rng;
+        for i in 0..n {
+            env.reset_env(i, true);
+        }
+        env
+    }
+
+    fn sample_quat(rng: &mut Rng) -> Quat {
+        let axis = [rng.normal(), rng.normal(), rng.normal()];
+        let angle = rng.uniform_in(0.5, std::f32::consts::PI);
+        Quat::from_axis_angle(axis, angle)
+    }
+
+    fn reset_env(&mut self, i: usize, full: bool) {
+        if full {
+            self.quat[i] = Quat::IDENTITY;
+            self.angvel[i] = [0.0; 3];
+            for j in 0..NJ {
+                self.jpos[i * NJ + j] = 0.0;
+                self.jvel[i * NJ + j] = 0.0;
+            }
+            self.steps[i] = 0;
+        }
+        self.target[i] = Self::sample_quat(&mut self.rng);
+        self.consecutive[i] = 0;
+    }
+
+    fn rot_dist(&self, i: usize) -> f32 {
+        self.quat[i].angle_to(self.target[i])
+    }
+
+    fn write_obs(&self, i: usize, obs: &mut [f32]) {
+        let o = &mut obs[i * OBS_DIM..(i + 1) * OBS_DIM];
+        let q = self.quat[i];
+        let t = self.target[i];
+        o[0] = q.w;
+        o[1] = q.x;
+        o[2] = q.y;
+        o[3] = q.z;
+        o[4] = t.w;
+        o[5] = t.x;
+        o[6] = t.y;
+        o[7] = t.z;
+        o[8] = self.angvel[i][0] * 0.2;
+        o[9] = self.angvel[i][1] * 0.2;
+        o[10] = self.angvel[i][2] * 0.2;
+        for j in 0..NJ {
+            o[11 + j] = self.jpos[i * NJ + j];
+        }
+        o[23] = self.rot_dist(i) / std::f32::consts::PI;
+        o[24] = (self.steps[i] as f32 / EP_LEN as f32) * 2.0 - 1.0;
+        // First 5 joint velocities round out the observation.
+        for j in 0..5 {
+            o[25 + j] = self.jvel[i * NJ + j] * 0.1;
+        }
+    }
+}
+
+impl VecEnv for ShadowHand {
+    fn num_envs(&self) -> usize {
+        self.n
+    }
+    fn obs_dim(&self) -> usize {
+        OBS_DIM
+    }
+    fn act_dim(&self) -> usize {
+        ACT_DIM
+    }
+    fn max_episode_len(&self) -> u32 {
+        EP_LEN
+    }
+    fn sim_cost(&self) -> f32 {
+        4.0
+    }
+
+    fn reset_all(&mut self, obs: &mut [f32]) {
+        for i in 0..self.n {
+            self.reset_env(i, true);
+            self.write_obs(i, obs);
+        }
+    }
+
+    fn step(&mut self, actions: &[f32], out: &mut StepOut) {
+        for i in 0..self.n {
+            let a = &actions[i * ACT_DIM..(i + 1) * ACT_DIM];
+            let prev_dist = self.rot_dist(i);
+
+            // Finger servos with stiction.
+            for j in 0..NJ {
+                let idx = i * NJ + j;
+                let (mut p, mut v) = (self.jpos[idx], self.jvel[idx]);
+                SERVO.step(&mut p, &mut v, clamp(a[j], -1.0, 1.0), DT);
+                self.jpos[idx] = clamp(p, -1.0, 1.0);
+                self.jvel[idx] = v;
+            }
+
+            // Contact map: joint velocities torque the object.
+            let mut torque = [0.0f32; 3];
+            for (ax, row) in torque.iter_mut().zip(&self.contact) {
+                for j in 0..NJ {
+                    *ax += row[j] * self.jvel[i * NJ + j] * 0.3;
+                }
+            }
+            for ax in 0..3 {
+                // Object angular damping (fingers gripping).
+                self.angvel[i][ax] +=
+                    (torque[ax] - 2.0 * self.angvel[i][ax]) * DT * 4.0;
+            }
+            self.quat[i] = self.quat[i].integrate(self.angvel[i], DT);
+            self.steps[i] += 1;
+
+            let dist = self.rot_dist(i);
+            let energy: f32 = a.iter().map(|x| x * x).sum::<f32>() * 0.005;
+            // Dense rotation-progress reward + distance shaping + success bonus.
+            let mut reward = 10.0 * (prev_dist - dist) - 0.3 * dist - energy;
+            let mut success = false;
+            if dist < SUCCESS_ANGLE {
+                self.consecutive[i] += 1;
+                if self.consecutive[i] >= 5 {
+                    reward += 25.0;
+                    success = true;
+                }
+            } else {
+                self.consecutive[i] = 0;
+            }
+            if success {
+                // Resample target, keep the object state (Isaac semantics).
+                self.reset_env(i, false);
+            }
+
+            let timeout = self.steps[i] >= EP_LEN;
+            out.reward[i] = reward;
+            out.done[i] = timeout as u32 as f32;
+            if timeout {
+                self.reset_env(i, true);
+            }
+            self.write_obs(i, &mut out.obs);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rotating_toward_target_yields_positive_reward() {
+        let mut env = ShadowHand::new(1, Rng::new(5));
+        let mut obs = vec![0.0; OBS_DIM];
+        env.reset_all(&mut obs);
+        // Force a known target and spin the object straight toward it.
+        env.target[0] = Quat::from_axis_angle([0.0, 0.0, 1.0], 1.5);
+        env.angvel[0] = [0.0, 0.0, 8.0];
+        let mut out = StepOut::new(1, OBS_DIM);
+        env.step(&[0.0; ACT_DIM], &mut out);
+        assert!(out.reward[0] > 0.0, "reward {}", out.reward[0]);
+    }
+
+    #[test]
+    fn stiction_keeps_idle_joints_still() {
+        let mut env = ShadowHand::new(1, Rng::new(6));
+        let mut obs = vec![0.0; OBS_DIM];
+        env.reset_all(&mut obs);
+        let mut out = StepOut::new(1, OBS_DIM);
+        // Tiny action: below stiction threshold, joints should not move.
+        env.step(&[0.01; ACT_DIM], &mut out);
+        let moved: f32 = env.jpos.iter().map(|p| p.abs()).sum();
+        assert!(moved < 1e-4, "moved {moved}");
+    }
+
+    #[test]
+    fn success_resamples_target() {
+        let mut env = ShadowHand::new(1, Rng::new(7));
+        let mut obs = vec![0.0; OBS_DIM];
+        env.reset_all(&mut obs);
+        env.target[0] = env.quat[0]; // already at target
+        let mut out = StepOut::new(1, OBS_DIM);
+        let mut got_bonus = false;
+        for _ in 0..8 {
+            env.step(&[0.0; ACT_DIM], &mut out);
+            got_bonus |= out.reward[0] > 10.0;
+        }
+        assert!(got_bonus);
+        assert!(env.rot_dist(0) > SUCCESS_ANGLE, "target moved away");
+    }
+}

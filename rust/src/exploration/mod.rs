@@ -1,0 +1,125 @@
+//! Exploration strategies for the Actor process (§3.3).
+//!
+//! Mixed exploration: environment i of N gets Gaussian noise with
+//! σ_i = σ_min + (i-1)/(N-1) · (σ_max − σ_min) — the paper's ladder that
+//! removes per-task σ tuning. A fixed-σ strategy is kept for the Fig. 4
+//! ablation.
+
+use crate::config::Exploration;
+use crate::util::Rng;
+
+/// Per-environment Gaussian noise generator with a σ ladder.
+pub struct Noise {
+    sigmas: Vec<f32>,
+    act_dim: usize,
+    rng: Rng,
+}
+
+impl Noise {
+    pub fn new(scheme: Exploration, num_envs: usize, act_dim: usize, rng: Rng) -> Self {
+        let sigmas = match scheme {
+            Exploration::Fixed(s) => vec![s; num_envs],
+            Exploration::Mixed { min, max } => (0..num_envs)
+                .map(|i| {
+                    if num_envs == 1 {
+                        0.5 * (min + max)
+                    } else {
+                        min + (i as f32) / (num_envs as f32 - 1.0) * (max - min)
+                    }
+                })
+                .collect(),
+        };
+        Noise { sigmas, act_dim, rng }
+    }
+
+    /// σ assigned to environment `i`.
+    pub fn sigma(&self, i: usize) -> f32 {
+        self.sigmas[i]
+    }
+
+    /// Add noise in-place to `actions[N * act_dim]` and clamp to [-1, 1]
+    /// (the paper's `a = max(min(π(s)+N(0,σ), a_u), a_l)`).
+    pub fn apply(&mut self, actions: &mut [f32]) {
+        let ad = self.act_dim;
+        debug_assert_eq!(actions.len() % ad, 0);
+        for (i, row) in actions.chunks_exact_mut(ad).enumerate() {
+            let s = self.sigmas[i];
+            if s == 0.0 {
+                continue;
+            }
+            for v in row.iter_mut() {
+                *v = (*v + self.rng.normal() * s).clamp(-1.0, 1.0);
+            }
+        }
+    }
+
+    /// Fill a buffer with standard normals (SAC / PPO sampling noise).
+    pub fn fill_standard(&mut self, out: &mut [f32]) {
+        self.rng.fill_normal(out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_endpoints_match_paper() {
+        let n = Noise::new(
+            Exploration::Mixed { min: 0.05, max: 0.8 },
+            4096,
+            2,
+            Rng::new(0),
+        );
+        assert!((n.sigma(0) - 0.05).abs() < 1e-6);
+        assert!((n.sigma(4095) - 0.8).abs() < 1e-6);
+        // Midpoint is the average.
+        assert!((n.sigma(2047) - 0.425).abs() < 1e-3);
+    }
+
+    #[test]
+    fn fixed_sigma_uniform() {
+        let n = Noise::new(Exploration::Fixed(0.3), 16, 3, Rng::new(1));
+        for i in 0..16 {
+            assert_eq!(n.sigma(i), 0.3);
+        }
+    }
+
+    #[test]
+    fn apply_clamps_and_perturbs() {
+        let mut n = Noise::new(
+            Exploration::Mixed { min: 0.5, max: 0.5 },
+            64,
+            2,
+            Rng::new(2),
+        );
+        let mut a = vec![0.0f32; 128];
+        n.apply(&mut a);
+        assert!(a.iter().all(|v| (-1.0..=1.0).contains(v)));
+        let nonzero = a.iter().filter(|v| v.abs() > 1e-6).count();
+        assert!(nonzero > 100, "noise not applied");
+    }
+
+    #[test]
+    fn noise_scales_with_sigma() {
+        // First env (σ=0) stays deterministic, last env (σ large) moves.
+        let mut n = Noise::new(
+            Exploration::Mixed { min: 0.0, max: 1.0 },
+            8,
+            4,
+            Rng::new(3),
+        );
+        let mut a = vec![0.0f32; 32];
+        n.apply(&mut a);
+        let first: f32 = a[0..4].iter().map(|v| v.abs()).sum();
+        let last: f32 = a[28..32].iter().map(|v| v.abs()).sum();
+        assert_eq!(first, 0.0);
+        assert!(last > 0.0);
+    }
+
+    #[test]
+    fn single_env_uses_midpoint() {
+        let n = Noise::new(Exploration::Mixed { min: 0.2, max: 0.6 }, 1, 1, Rng::new(4));
+        assert!((n.sigma(0) - 0.4).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,35 @@
+//! # PQL — Parallel Q-Learning
+//!
+//! Reproduction of "Parallel Q-Learning: Scaling Off-policy Reinforcement
+//! Learning under Massively Parallel Simulation" (Li et al., ICML 2023).
+//!
+//! Three-layer architecture:
+//! - **Layer 3 (this crate)**: the rust coordinator — Actor / P-learner /
+//!   V-learner processes, replay buffers, speed-ratio control, the
+//!   massively-parallel environment substrate, and baselines.
+//! - **Layer 2**: JAX actor/critic networks + losses + optimizer steps,
+//!   AOT-lowered to HLO text at build time (`python/compile/`).
+//! - **Layer 1**: Pallas kernels for the compute hot-spots (fused n-step
+//!   double-Q TD targets, C51 categorical projection, fused MLP layers).
+//!
+//! Python never runs on the training path: the rust binary loads the
+//! `artifacts/*.hlo.txt` modules through PJRT (`xla` crate) and drives
+//! everything else natively.
+
+pub mod algos;
+pub mod cli;
+pub mod cmd;
+pub mod coordinator;
+pub mod config;
+pub mod device;
+pub mod envs;
+pub mod exploration;
+pub mod metrics;
+pub mod replay;
+pub mod runtime;
+pub mod util;
+
+pub use cli::run_cli;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

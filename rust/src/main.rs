@@ -1,0 +1,8 @@
+//! PQL leader binary — CLI entrypoint. Subcommands are wired in `pql::cli`.
+
+fn main() {
+    if let Err(e) = pql::run_cli(std::env::args().skip(1).collect()) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,155 @@
+//! Metrics: CSV series logging and evaluation.
+//!
+//! Every training run emits a `metrics.csv` with wall-clock, env steps,
+//! update counts and eval returns — the raw series behind every figure in
+//! EXPERIMENTS.md. The bench harnesses aggregate these files.
+
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// One evaluation / progress record.
+#[derive(Debug, Clone, Copy)]
+pub struct Record {
+    pub wall_secs: f64,
+    pub env_steps: u64,
+    pub critic_updates: u64,
+    pub actor_updates: u64,
+    pub eval_return: f64,
+    /// Task-specific success metric (NaN if undefined).
+    pub success_rate: f64,
+}
+
+/// Collects records in memory and optionally streams them to a CSV file.
+pub struct RunLog {
+    pub records: Vec<Record>,
+    file: Option<std::io::BufWriter<std::fs::File>>,
+    start: Instant,
+}
+
+impl RunLog {
+    pub fn new(dir: Option<&str>) -> Result<RunLog> {
+        let file = match dir {
+            Some(d) => {
+                let dir = PathBuf::from(d);
+                std::fs::create_dir_all(&dir)
+                    .with_context(|| format!("creating run dir {dir:?}"))?;
+                let mut f = std::io::BufWriter::new(
+                    std::fs::File::create(dir.join("metrics.csv"))?,
+                );
+                writeln!(
+                    f,
+                    "wall_secs,env_steps,critic_updates,actor_updates,eval_return,success_rate"
+                )?;
+                Some(f)
+            }
+            None => None,
+        };
+        Ok(RunLog { records: Vec::new(), file, start: Instant::now() })
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn push(&mut self, mut r: Record) -> Result<()> {
+        if r.wall_secs == 0.0 {
+            r.wall_secs = self.elapsed();
+        }
+        if let Some(f) = &mut self.file {
+            writeln!(
+                f,
+                "{:.3},{},{},{},{:.4},{:.4}",
+                r.wall_secs,
+                r.env_steps,
+                r.critic_updates,
+                r.actor_updates,
+                r.eval_return,
+                r.success_rate
+            )?;
+            f.flush()?;
+        }
+        self.records.push(r);
+        Ok(())
+    }
+
+    /// Final eval return (NaN when no records).
+    pub fn final_return(&self) -> f64 {
+        self.records.last().map(|r| r.eval_return).unwrap_or(f64::NAN)
+    }
+
+    /// Best eval return over the run.
+    pub fn best_return(&self) -> f64 {
+        self.records
+            .iter()
+            .map(|r| r.eval_return)
+            .fold(f64::NAN, |a, b| if a.is_nan() || b > a { b } else { a })
+    }
+
+    /// First wall-clock time where eval return reached `threshold`
+    /// (time-to-threshold, the paper's headline comparison). NaN if never.
+    pub fn time_to(&self, threshold: f64) -> f64 {
+        self.records
+            .iter()
+            .find(|r| r.eval_return >= threshold)
+            .map(|r| r.wall_secs)
+            .unwrap_or(f64::NAN)
+    }
+}
+
+/// Write a simple CSV of named columns (bench harness output).
+pub fn write_csv(path: &Path, header: &str, rows: &[Vec<f64>]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{header}")?;
+    for row in rows {
+        let line: Vec<String> = row.iter().map(|v| format!("{v:.6}")).collect();
+        writeln!(f, "{}", line.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(t: f64, ret: f64) -> Record {
+        Record {
+            wall_secs: t,
+            env_steps: 0,
+            critic_updates: 0,
+            actor_updates: 0,
+            eval_return: ret,
+            success_rate: f64::NAN,
+        }
+    }
+
+    #[test]
+    fn time_to_threshold() {
+        let mut log = RunLog::new(None).unwrap();
+        log.push(rec(1.0, 0.0)).unwrap();
+        log.push(rec(2.0, 5.0)).unwrap();
+        log.push(rec(3.0, 10.0)).unwrap();
+        assert_eq!(log.time_to(5.0), 2.0);
+        assert!(log.time_to(100.0).is_nan());
+        assert_eq!(log.best_return(), 10.0);
+        assert_eq!(log.final_return(), 10.0);
+    }
+
+    #[test]
+    fn csv_file_written() {
+        let dir = std::env::temp_dir().join("pql_runlog_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let mut log = RunLog::new(Some(dir.to_str().unwrap())).unwrap();
+            log.push(rec(1.0, 2.5)).unwrap();
+        }
+        let text = std::fs::read_to_string(dir.join("metrics.csv")).unwrap();
+        assert!(text.starts_with("wall_secs"));
+        assert!(text.contains("2.5"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,163 @@
+//! Compressed image-observation buffer for the vision task (Appendix B.3).
+//!
+//! The paper compresses camera frames with lz4 to cut cross-process
+//! bandwidth; the vendored crate set has DEFLATE (`flate2`), which plays
+//! the same role (CPU-for-bandwidth trade). Images are quantized to u8
+//! before compression — a [0,1] float image loses < 0.4% precision, far
+//! below policy noise.
+
+use anyhow::Result;
+use flate2::read::ZlibDecoder;
+use flate2::write::ZlibEncoder;
+use flate2::Compression;
+use std::io::{Read, Write};
+
+/// Compress a [0,1] float image to quantized+deflated bytes.
+pub fn compress(img: &[f32]) -> Result<Vec<u8>> {
+    let quantized: Vec<u8> = img
+        .iter()
+        .map(|v| (v.clamp(0.0, 1.0) * 255.0) as u8)
+        .collect();
+    let mut enc = ZlibEncoder::new(Vec::new(), Compression::fast());
+    enc.write_all(&quantized)?;
+    Ok(enc.finish()?)
+}
+
+/// Inverse of [`compress`]; `out.len()` must equal the original pixels.
+pub fn decompress(bytes: &[u8], out: &mut [f32]) -> Result<()> {
+    let mut dec = ZlibDecoder::new(bytes);
+    let mut quantized = vec![0u8; out.len()];
+    dec.read_exact(&mut quantized)?;
+    for (o, q) in out.iter_mut().zip(&quantized) {
+        *o = *q as f32 / 255.0;
+    }
+    Ok(())
+}
+
+/// Ring buffer of compressed images, indexed like a transition buffer so
+/// the V-learner can rehydrate sampled rows.
+pub struct ImageBuffer {
+    capacity: usize,
+    pixels: usize,
+    slots: Vec<Option<Vec<u8>>>,
+    head: usize,
+    len: usize,
+    /// Raw vs stored byte counters (reported in Fig. B.1 bench).
+    pub raw_bytes: u64,
+    pub stored_bytes: u64,
+    compress_enabled: bool,
+    /// Uncompressed fallback storage when compression is disabled.
+    raw: Vec<f32>,
+}
+
+impl ImageBuffer {
+    pub fn new(capacity: usize, pixels: usize, compress_enabled: bool) -> Self {
+        ImageBuffer {
+            capacity,
+            pixels,
+            slots: if compress_enabled { vec![None; capacity] } else { Vec::new() },
+            head: 0,
+            len: 0,
+            raw_bytes: 0,
+            stored_bytes: 0,
+            compress_enabled,
+            raw: if compress_enabled { Vec::new() } else { vec![0.0; capacity * pixels] },
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Store one image, returning its slot index.
+    pub fn push(&mut self, img: &[f32]) -> Result<usize> {
+        debug_assert_eq!(img.len(), self.pixels);
+        let h = self.head;
+        self.raw_bytes += (self.pixels * 4) as u64;
+        if self.compress_enabled {
+            let bytes = compress(img)?;
+            self.stored_bytes += bytes.len() as u64;
+            self.slots[h] = Some(bytes);
+        } else {
+            self.stored_bytes += (self.pixels * 4) as u64;
+            self.raw[h * self.pixels..(h + 1) * self.pixels].copy_from_slice(img);
+        }
+        self.head = (self.head + 1) % self.capacity;
+        self.len = (self.len + 1).min(self.capacity);
+        Ok(h)
+    }
+
+    /// Load slot `i` into `out[pixels]`.
+    pub fn get(&self, i: usize, out: &mut [f32]) -> Result<()> {
+        debug_assert!(i < self.len.max(1));
+        if self.compress_enabled {
+            let bytes = self.slots[i]
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("empty image slot {i}"))?;
+            decompress(bytes, out)
+        } else {
+            out.copy_from_slice(&self.raw[i * self.pixels..(i + 1) * self.pixels]);
+            Ok(())
+        }
+    }
+
+    /// Achieved compression ratio so far (1.0 = no saving).
+    pub fn ratio(&self) -> f64 {
+        if self.stored_bytes == 0 {
+            1.0
+        } else {
+            self.raw_bytes as f64 / self.stored_bytes as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::render::{render_ball, IMG_PIXELS};
+
+    #[test]
+    fn compress_roundtrip_within_quantization() {
+        let mut img = vec![0.0f32; IMG_PIXELS];
+        render_ball(&mut img, 0.2, -0.3, 0.1, 0.0, 0.12);
+        let bytes = compress(&img).unwrap();
+        let mut back = vec![0.0f32; IMG_PIXELS];
+        decompress(&bytes, &mut back).unwrap();
+        for (a, b) in img.iter().zip(&back) {
+            assert!((a - b).abs() <= 1.0 / 255.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn rendered_frames_compress_well() {
+        let mut img = vec![0.0f32; IMG_PIXELS];
+        render_ball(&mut img, 0.0, 0.0, 0.0, 0.0, 0.12);
+        let bytes = compress(&img).unwrap();
+        // Rendered scenes are smooth: expect at least 2x vs u8, 8x vs f32.
+        assert!(bytes.len() < IMG_PIXELS / 2, "compressed {} bytes", bytes.len());
+    }
+
+    #[test]
+    fn buffer_roundtrip_compressed_and_raw() {
+        for compress_enabled in [true, false] {
+            let mut buf = ImageBuffer::new(4, IMG_PIXELS, compress_enabled);
+            let mut img = vec![0.0f32; IMG_PIXELS];
+            render_ball(&mut img, 0.5, 0.5, 0.0, 0.0, 0.12);
+            let slot = buf.push(&img).unwrap();
+            let mut out = vec![0.0f32; IMG_PIXELS];
+            buf.get(slot, &mut out).unwrap();
+            for (a, b) in img.iter().zip(&out) {
+                assert!((a - b).abs() <= 1.0 / 255.0 + 1e-6);
+            }
+            if compress_enabled {
+                assert!(buf.ratio() > 4.0, "ratio {}", buf.ratio());
+            } else {
+                assert!((buf.ratio() - 1.0).abs() < 1e-9);
+            }
+        }
+    }
+}

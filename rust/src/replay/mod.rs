@@ -1,0 +1,18 @@
+//! Replay buffers — the V-learner's local transition store, the
+//! P-learner's state-only store, and a compressed image buffer for the
+//! vision task.
+//!
+//! The paper's key observation (§4.4.4): with N ≫ 1000 parallel envs a
+//! "small" buffer (5M) refreshes every few hundred steps and still works.
+//! Buffers here are flat ring buffers over contiguous `f32` storage with
+//! uniform-with-replacement sampling, sized in *transitions*.
+
+pub mod image;
+mod nstep;
+mod state;
+mod transition;
+
+pub use image::ImageBuffer;
+pub use nstep::NStepAssembler;
+pub use state::StateBuffer;
+pub use transition::{SampleBatch, TransitionBuffer};

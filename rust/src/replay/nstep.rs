@@ -1,0 +1,259 @@
+//! N-step return assembly over vectorized rollouts.
+//!
+//! The Actor streams per-step batches `(s, a, r, s', d)` for N envs in
+//! lockstep; the assembler keeps an n-deep window per environment and
+//! emits `(s_t, a_t, Σ_k γ^k r_{t+k}, s_{t+n}, γ^n·(1-d))` transitions —
+//! the exact inputs of the `critic_update` artifact (Sutton 1988 n-step
+//! targets with termination cut).
+//!
+//! Termination semantics: when any step in the window terminates, the
+//! window is flushed early with `γ^k(1-d)=0` bootstrap mask — partial
+//! windows at episode ends are emitted, not dropped.
+
+/// One emitted n-step transition, borrowed from the assembler's storage.
+pub struct NStepOut<'a> {
+    pub s: &'a [f32],
+    pub a: &'a [f32],
+    pub rn: f32,
+    pub s2: &'a [f32],
+    pub gmask: f32,
+    pub cs: &'a [f32],
+    pub cs2: &'a [f32],
+}
+
+/// Per-environment circular window of the last n steps.
+pub struct NStepAssembler {
+    n_envs: usize,
+    nstep: usize,
+    gamma: f32,
+    obs_dim: usize,
+    act_dim: usize,
+    cobs_dim: usize,
+    // Ring storage: [env][slot] flattened.
+    s: Vec<f32>,
+    a: Vec<f32>,
+    r: Vec<f32>,
+    cs: Vec<f32>,
+    // Number of valid slots / ring head, per env.
+    filled: Vec<usize>,
+    head: Vec<usize>,
+}
+
+impl NStepAssembler {
+    pub fn new(n_envs: usize, nstep: usize, gamma: f32, obs_dim: usize, act_dim: usize) -> Self {
+        Self::with_critic_obs(n_envs, nstep, gamma, obs_dim, act_dim, 0)
+    }
+
+    pub fn with_critic_obs(
+        n_envs: usize,
+        nstep: usize,
+        gamma: f32,
+        obs_dim: usize,
+        act_dim: usize,
+        cobs_dim: usize,
+    ) -> Self {
+        assert!(nstep >= 1);
+        NStepAssembler {
+            n_envs,
+            nstep,
+            gamma,
+            obs_dim,
+            act_dim,
+            cobs_dim,
+            s: vec![0.0; n_envs * nstep * obs_dim],
+            a: vec![0.0; n_envs * nstep * act_dim],
+            r: vec![0.0; n_envs * nstep],
+            cs: vec![0.0; n_envs * nstep * cobs_dim],
+            filled: vec![0; n_envs],
+            head: vec![0; n_envs],
+        }
+    }
+
+    #[inline]
+    fn slot(&self, env: usize, k: usize) -> usize {
+        env * self.nstep + k
+    }
+
+    /// Feed one vectorized step; `emit` is called for every completed
+    /// n-step transition. `s`/`a`/`r`/`done` are the pre-step state, the
+    /// action, the resulting reward and termination; `s2` is the post-step
+    /// observation (already auto-reset if done — the mask handles it).
+    #[allow(clippy::too_many_arguments)]
+    pub fn push_step<F: FnMut(NStepOut<'_>)>(
+        &mut self,
+        s: &[f32],
+        a: &[f32],
+        r: &[f32],
+        s2: &[f32],
+        done: &[f32],
+        cs: &[f32],
+        cs2: &[f32],
+        mut emit: F,
+    ) {
+        let (od, ad, cd, n) = (self.obs_dim, self.act_dim, self.cobs_dim, self.nstep);
+        for e in 0..self.n_envs {
+            // Append (s, a, r) into env e's window.
+            let w = (self.head[e] + self.filled[e]) % n;
+            let sl = self.slot(e, w);
+            self.s[sl * od..(sl + 1) * od].copy_from_slice(&s[e * od..(e + 1) * od]);
+            self.a[sl * ad..(sl + 1) * ad].copy_from_slice(&a[e * ad..(e + 1) * ad]);
+            self.r[sl] = r[e];
+            if cd > 0 {
+                self.cs[sl * cd..(sl + 1) * cd]
+                    .copy_from_slice(&cs[e * cd..(e + 1) * cd]);
+            }
+            self.filled[e] += 1;
+
+            let terminal = done[e] != 0.0;
+            let s2_row = &s2[e * od..(e + 1) * od];
+            let cs2_row = if cd > 0 { &cs2[e * cd..(e + 1) * cd] } else { &[] as &[f32] };
+
+            if terminal {
+                // Flush the whole window: each suffix becomes a transition
+                // ending at the terminal state with gmask 0.
+                while self.filled[e] > 0 {
+                    self.emit_front(e, s2_row, cs2_row, 0.0, &mut emit);
+                }
+            } else if self.filled[e] == n {
+                // Full window: emit the oldest entry with gamma^n bootstrap.
+                let gmask = self.gamma.powi(n as i32);
+                self.emit_front(e, s2_row, cs2_row, gmask, &mut emit);
+            }
+        }
+    }
+
+    fn emit_front<F: FnMut(NStepOut<'_>)>(
+        &mut self,
+        e: usize,
+        s2: &[f32],
+        cs2: &[f32],
+        gmask: f32,
+        emit: &mut F,
+    ) {
+        let (od, ad, cd, n) = (self.obs_dim, self.act_dim, self.cobs_dim, self.nstep);
+        let k = self.filled[e];
+        // Discounted reward sum over the window, oldest first.
+        let mut rn = 0.0;
+        for j in 0..k {
+            let sl = self.slot(e, (self.head[e] + j) % n);
+            rn += self.gamma.powi(j as i32) * self.r[sl];
+        }
+        let front = self.slot(e, self.head[e]);
+        emit(NStepOut {
+            s: &self.s[front * od..(front + 1) * od],
+            a: &self.a[front * ad..(front + 1) * ad],
+            rn,
+            s2,
+            gmask,
+            cs: if cd > 0 { &self.cs[front * cd..(front + 1) * cd] } else { &[] },
+            cs2,
+        });
+        self.head[e] = (self.head[e] + 1) % n;
+        self.filled[e] -= 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collect(
+        asm: &mut NStepAssembler,
+        s: &[f32],
+        a: &[f32],
+        r: &[f32],
+        s2: &[f32],
+        d: &[f32],
+    ) -> Vec<(f32, f32, f32, f32)> {
+        // (s[0], rn, s2[0], gmask)
+        let mut out = Vec::new();
+        asm.push_step(s, a, r, s2, d, &[], &[], |t| {
+            out.push((t.s[0], t.rn, t.s2[0], t.gmask));
+        });
+        out
+    }
+
+    #[test]
+    fn emits_after_n_steps_with_discounted_sum() {
+        let mut asm = NStepAssembler::new(1, 3, 0.9, 1, 1);
+        assert!(collect(&mut asm, &[0.0], &[0.0], &[1.0], &[1.0], &[0.0]).is_empty());
+        assert!(collect(&mut asm, &[1.0], &[0.0], &[2.0], &[2.0], &[0.0]).is_empty());
+        let out = collect(&mut asm, &[2.0], &[0.0], &[4.0], &[3.0], &[0.0]);
+        assert_eq!(out.len(), 1);
+        let (s0, rn, s2, g) = out[0];
+        assert_eq!(s0, 0.0);
+        // rn = 1 + 0.9*2 + 0.81*4 = 6.04
+        assert!((rn - 6.04).abs() < 1e-5);
+        assert_eq!(s2, 3.0);
+        assert!((g - 0.9f32.powi(3)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn termination_flushes_partial_windows_with_zero_mask() {
+        let mut asm = NStepAssembler::new(1, 3, 0.9, 1, 1);
+        collect(&mut asm, &[0.0], &[0.0], &[1.0], &[1.0], &[0.0]);
+        let out = collect(&mut asm, &[1.0], &[0.0], &[2.0], &[9.0], &[1.0]);
+        // Both window entries flush: (s=0: 1 + 0.9*2) and (s=1: 2).
+        assert_eq!(out.len(), 2);
+        assert!((out[0].1 - 2.8).abs() < 1e-5);
+        assert_eq!(out[0].3, 0.0);
+        assert_eq!(out[1].0, 1.0);
+        assert!((out[1].1 - 2.0).abs() < 1e-5);
+        assert_eq!(out[1].3, 0.0);
+        // Window empty afterwards; next episode starts fresh.
+        assert!(collect(&mut asm, &[5.0], &[0.0], &[0.0], &[6.0], &[0.0]).is_empty());
+    }
+
+    #[test]
+    fn n1_equals_standard_one_step() {
+        let mut asm = NStepAssembler::new(1, 1, 0.99, 1, 1);
+        let out = collect(&mut asm, &[7.0], &[0.0], &[3.0], &[8.0], &[0.0]);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].1, 3.0);
+        assert!((out[0].3 - 0.99).abs() < 1e-6);
+    }
+
+    #[test]
+    fn envs_are_independent() {
+        let mut asm = NStepAssembler::new(2, 2, 1.0, 1, 1);
+        // env0 terminates at step 1, env1 does not.
+        let out = collect(&mut asm, &[10.0, 20.0], &[0.0, 0.0], &[1.0, 1.0],
+                          &[11.0, 21.0], &[1.0, 0.0]);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, 10.0);
+        // env1 completes its window next step.
+        let out = collect(&mut asm, &[21.0, 21.0], &[0.0, 0.0], &[1.0, 1.0],
+                          &[12.0, 22.0], &[0.0, 0.0]);
+        // Window for env1 now has 2 entries -> emits the oldest.
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, 20.0);
+        assert_eq!(out[0].1, 2.0);
+    }
+
+    /// Property: total emitted transitions == total pushed steps once all
+    /// windows are flushed by termination (conservation).
+    #[test]
+    fn prop_conservation_under_random_dones() {
+        use crate::util::Rng;
+        for seed in 0..10 {
+            let mut rng = Rng::new(seed);
+            let n_envs = 1 + rng.below(4);
+            let nstep = 1 + rng.below(4);
+            let mut asm = NStepAssembler::new(n_envs, nstep, 0.9, 1, 1);
+            let mut pushed = 0usize;
+            let mut emitted = 0usize;
+            let steps = 100;
+            let mut d = vec![0.0f32; n_envs];
+            let s = vec![0.0f32; n_envs];
+            let r = vec![1.0f32; n_envs];
+            for t in 0..steps {
+                for dv in d.iter_mut() {
+                    *dv = if rng.uniform() < 0.2 || t == steps - 1 { 1.0 } else { 0.0 };
+                }
+                pushed += n_envs;
+                asm.push_step(&s, &s, &r, &s, &d, &[], &[], |_t| emitted += 1);
+            }
+            assert_eq!(pushed, emitted, "seed {seed}");
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! State-only ring buffer — the P-learner's local store (Algorithm 2:
+//! the policy update only needs observations `{s_t}`).
+
+use crate::util::Rng;
+
+pub struct StateBuffer {
+    capacity: usize,
+    dim: usize,
+    data: Vec<f32>,
+    head: usize,
+    len: usize,
+}
+
+impl StateBuffer {
+    pub fn new(capacity: usize, dim: usize) -> Self {
+        assert!(capacity > 0);
+        StateBuffer {
+            capacity,
+            dim,
+            data: vec![0.0; capacity * dim],
+            head: 0,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Push a batch of rows `[k * dim]`.
+    pub fn push_batch(&mut self, rows: &[f32]) {
+        debug_assert_eq!(rows.len() % self.dim, 0);
+        for row in rows.chunks_exact(self.dim) {
+            let h = self.head;
+            self.data[h * self.dim..(h + 1) * self.dim].copy_from_slice(row);
+            self.head = (self.head + 1) % self.capacity;
+            self.len = (self.len + 1).min(self.capacity);
+        }
+    }
+
+    /// Uniform sample of `batch` rows into `out[batch * dim]`.
+    pub fn sample(&self, rng: &mut Rng, batch: usize, out: &mut [f32]) {
+        assert!(self.len > 0);
+        debug_assert_eq!(out.len(), batch * self.dim);
+        for b in 0..batch {
+            let i = rng.below(self.len);
+            out[b * self.dim..(b + 1) * self.dim]
+                .copy_from_slice(&self.data[i * self.dim..(i + 1) * self.dim]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_sample() {
+        let mut buf = StateBuffer::new(8, 2);
+        buf.push_batch(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(buf.len(), 2);
+        let mut rng = Rng::new(0);
+        let mut out = vec![0.0; 4 * 2];
+        buf.sample(&mut rng, 4, &mut out);
+        for row in out.chunks(2) {
+            assert!(row == [1.0, 2.0] || row == [3.0, 4.0]);
+        }
+    }
+
+    #[test]
+    fn wraps_at_capacity() {
+        let mut buf = StateBuffer::new(3, 1);
+        buf.push_batch(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(buf.len(), 3);
+        let mut rng = Rng::new(1);
+        let mut out = vec![0.0; 32];
+        buf.sample(&mut rng, 32, &mut out);
+        for v in &out {
+            assert!((3.0..=5.0).contains(v), "evicted value {v} sampled");
+        }
+    }
+}

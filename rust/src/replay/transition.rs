@@ -1,0 +1,246 @@
+//! The main transition ring buffer: (s, a, r_n, s', γⁿ(1-d)) tuples laid
+//! out struct-of-arrays so a sampled minibatch gathers into contiguous
+//! rows ready to become PJRT literals.
+
+use crate::util::Rng;
+
+/// A sampled minibatch, row-major, ready for the critic-update artifact.
+#[derive(Debug, Clone, Default)]
+pub struct SampleBatch {
+    pub s: Vec<f32>,
+    pub a: Vec<f32>,
+    pub rn: Vec<f32>,
+    pub s2: Vec<f32>,
+    pub gmask: Vec<f32>,
+    /// Optional critic observations (asymmetric tasks); empty otherwise.
+    pub cs: Vec<f32>,
+    pub cs2: Vec<f32>,
+}
+
+impl SampleBatch {
+    pub fn new(batch: usize, obs_dim: usize, act_dim: usize) -> Self {
+        SampleBatch {
+            s: vec![0.0; batch * obs_dim],
+            a: vec![0.0; batch * act_dim],
+            rn: vec![0.0; batch],
+            s2: vec![0.0; batch * obs_dim],
+            gmask: vec![0.0; batch],
+            cs: Vec::new(),
+            cs2: Vec::new(),
+        }
+    }
+}
+
+/// Uniform ring buffer of n-step transitions.
+pub struct TransitionBuffer {
+    capacity: usize,
+    obs_dim: usize,
+    act_dim: usize,
+    cobs_dim: usize, // 0 = symmetric task
+    s: Vec<f32>,
+    a: Vec<f32>,
+    rn: Vec<f32>,
+    s2: Vec<f32>,
+    gmask: Vec<f32>,
+    cs: Vec<f32>,
+    cs2: Vec<f32>,
+    head: usize,
+    len: usize,
+    /// Total transitions ever inserted (for refresh-rate metrics).
+    pub total_inserted: u64,
+}
+
+impl TransitionBuffer {
+    pub fn new(capacity: usize, obs_dim: usize, act_dim: usize) -> Self {
+        Self::with_critic_obs(capacity, obs_dim, act_dim, 0)
+    }
+
+    /// Asymmetric variant that also stores low-dim critic observations.
+    pub fn with_critic_obs(
+        capacity: usize,
+        obs_dim: usize,
+        act_dim: usize,
+        cobs_dim: usize,
+    ) -> Self {
+        assert!(capacity > 0);
+        TransitionBuffer {
+            capacity,
+            obs_dim,
+            act_dim,
+            cobs_dim,
+            s: vec![0.0; capacity * obs_dim],
+            a: vec![0.0; capacity * act_dim],
+            rn: vec![0.0; capacity],
+            s2: vec![0.0; capacity * obs_dim],
+            gmask: vec![0.0; capacity],
+            cs: vec![0.0; capacity * cobs_dim],
+            cs2: vec![0.0; capacity * cobs_dim],
+            head: 0,
+            len: 0,
+            total_inserted: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Insert one transition (FIFO eviction once full).
+    #[allow(clippy::too_many_arguments)]
+    pub fn push(
+        &mut self,
+        s: &[f32],
+        a: &[f32],
+        rn: f32,
+        s2: &[f32],
+        gmask: f32,
+        cs: &[f32],
+        cs2: &[f32],
+    ) {
+        debug_assert_eq!(s.len(), self.obs_dim);
+        debug_assert_eq!(a.len(), self.act_dim);
+        debug_assert_eq!(cs.len(), self.cobs_dim);
+        let h = self.head;
+        self.s[h * self.obs_dim..(h + 1) * self.obs_dim].copy_from_slice(s);
+        self.a[h * self.act_dim..(h + 1) * self.act_dim].copy_from_slice(a);
+        self.rn[h] = rn;
+        self.s2[h * self.obs_dim..(h + 1) * self.obs_dim].copy_from_slice(s2);
+        self.gmask[h] = gmask;
+        if self.cobs_dim > 0 {
+            self.cs[h * self.cobs_dim..(h + 1) * self.cobs_dim].copy_from_slice(cs);
+            self.cs2[h * self.cobs_dim..(h + 1) * self.cobs_dim].copy_from_slice(cs2);
+        }
+        self.head = (self.head + 1) % self.capacity;
+        self.len = (self.len + 1).min(self.capacity);
+        self.total_inserted += 1;
+    }
+
+    /// Uniform sample with replacement into `out` (paper's sampling).
+    pub fn sample(&self, rng: &mut Rng, batch: usize, out: &mut SampleBatch) {
+        assert!(self.len > 0, "sampling from empty buffer");
+        let (od, ad, cd) = (self.obs_dim, self.act_dim, self.cobs_dim);
+        if cd > 0 && out.cs.len() != batch * cd {
+            out.cs.resize(batch * cd, 0.0);
+            out.cs2.resize(batch * cd, 0.0);
+        }
+        for b in 0..batch {
+            let i = rng.below(self.len);
+            out.s[b * od..(b + 1) * od]
+                .copy_from_slice(&self.s[i * od..(i + 1) * od]);
+            out.a[b * ad..(b + 1) * ad]
+                .copy_from_slice(&self.a[i * ad..(i + 1) * ad]);
+            out.rn[b] = self.rn[i];
+            out.s2[b * od..(b + 1) * od]
+                .copy_from_slice(&self.s2[i * od..(i + 1) * od]);
+            out.gmask[b] = self.gmask[i];
+            if cd > 0 {
+                out.cs[b * cd..(b + 1) * cd]
+                    .copy_from_slice(&self.cs[i * cd..(i + 1) * cd]);
+                out.cs2[b * cd..(b + 1) * cd]
+                    .copy_from_slice(&self.cs2[i * cd..(i + 1) * cd]);
+            }
+        }
+    }
+
+    /// Fraction of the buffer replaced per `steps_per_refresh` insertions —
+    /// the §1 "refresh every 100 steps" observation, exposed for metrics.
+    pub fn refresh_interval(&self, inserts_per_step: usize) -> f64 {
+        self.capacity as f64 / inserts_per_step.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn push_n(buf: &mut TransitionBuffer, n: usize, tag: f32) {
+        for k in 0..n {
+            let v = tag + k as f32;
+            buf.push(&[v, v], &[v], v, &[v + 0.5, v + 0.5], 0.9, &[], &[]);
+        }
+    }
+
+    #[test]
+    fn fills_then_wraps_fifo() {
+        let mut buf = TransitionBuffer::new(4, 2, 1);
+        push_n(&mut buf, 3, 0.0);
+        assert_eq!(buf.len(), 3);
+        push_n(&mut buf, 3, 100.0);
+        assert_eq!(buf.len(), 4);
+        // Oldest entries (0,1) evicted; slot values are {2, 100, 101, 102}.
+        let all: Vec<f32> = buf.rn.clone();
+        assert!(all.contains(&2.0));
+        assert!(!all.contains(&0.0) || buf.capacity() > 4);
+    }
+
+    #[test]
+    fn sample_never_reads_unwritten_slots() {
+        let mut buf = TransitionBuffer::new(100, 2, 1);
+        push_n(&mut buf, 5, 1.0); // rn values 1..5
+        let mut rng = Rng::new(0);
+        let mut out = SampleBatch::new(64, 2, 1);
+        buf.sample(&mut rng, 64, &mut out);
+        for v in &out.rn {
+            assert!((1.0..=5.0).contains(v), "sampled unwritten rn={v}");
+        }
+    }
+
+    #[test]
+    fn sample_roundtrips_all_fields() {
+        let mut buf = TransitionBuffer::new(8, 2, 1);
+        buf.push(&[1.0, 2.0], &[3.0], 4.0, &[5.0, 6.0], 0.7, &[], &[]);
+        let mut rng = Rng::new(1);
+        let mut out = SampleBatch::new(2, 2, 1);
+        buf.sample(&mut rng, 2, &mut out);
+        assert_eq!(&out.s[0..2], &[1.0, 2.0]);
+        assert_eq!(out.a[0], 3.0);
+        assert_eq!(out.rn[0], 4.0);
+        assert_eq!(&out.s2[0..2], &[5.0, 6.0]);
+        assert_eq!(out.gmask[0], 0.7);
+    }
+
+    #[test]
+    fn critic_obs_variant_stores_both() {
+        let mut buf = TransitionBuffer::with_critic_obs(4, 3, 1, 2);
+        buf.push(&[1.0; 3], &[0.0], 0.0, &[2.0; 3], 1.0, &[7.0, 8.0], &[9.0, 10.0]);
+        let mut rng = Rng::new(2);
+        let mut out = SampleBatch::new(1, 3, 1);
+        buf.sample(&mut rng, 1, &mut out);
+        assert_eq!(out.cs, vec![7.0, 8.0]);
+        assert_eq!(out.cs2, vec![9.0, 10.0]);
+    }
+
+    /// Property: after many random operations the buffer length never
+    /// exceeds capacity and sampled values are always values that were
+    /// actually inserted (proptest-lite: seeded random cases).
+    #[test]
+    fn prop_ring_invariants() {
+        for seed in 0..20u64 {
+            let mut rng = Rng::new(seed);
+            let cap = 1 + rng.below(50);
+            let mut buf = TransitionBuffer::new(cap, 1, 1);
+            let mut inserted = std::collections::HashSet::new();
+            let ops = 200;
+            for op in 0..ops {
+                let v = (seed * 1000 + op) as f32;
+                buf.push(&[v], &[v], v, &[v], 1.0, &[], &[]);
+                inserted.insert(v as u64);
+                assert!(buf.len() <= cap);
+                let mut out = SampleBatch::new(4, 1, 1);
+                buf.sample(&mut rng, 4, &mut out);
+                for sv in &out.rn {
+                    assert!(inserted.contains(&(*sv as u64)), "ghost value {sv}");
+                }
+            }
+            assert_eq!(buf.total_inserted, ops);
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! The PJRT execution engine: loads HLO-text artifacts, compiles them on
+//! the CPU PJRT client, and exposes typed `run` over host `f32` buffers.
+//!
+//! One `Engine` per OS thread (the PJRT wrapper types are not `Send`);
+//! parameters cross threads as plain `Vec<f32>` — which is exactly the
+//! paper's explicit network-transfer arrows between processes.
+
+use super::manifest::{ArtifactInfo, Manifest};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Host-side tensor handed to / returned from an executable.
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn vec(data: Vec<f32>) -> Self {
+        HostTensor { shape: vec![data.len()], data }
+    }
+
+    pub fn scalar1(v: f32) -> Self {
+        HostTensor { shape: vec![1], data: vec![v] }
+    }
+}
+
+/// A compiled artifact plus its manifest signature.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub info: ArtifactInfo,
+    name: String,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns the tuple elements as host data.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.info.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.info.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, (iname, ishape)) in inputs.iter().zip(&self.info.inputs) {
+            if t.shape != *ishape {
+                bail!(
+                    "{}: input {iname} shape {:?} != manifest {:?}",
+                    self.name,
+                    t.shape,
+                    ishape
+                );
+            }
+            let dims: Vec<i64> = t.shape.iter().map(|d| *d as i64).collect();
+            literals.push(xla::Literal::vec1(&t.data).reshape(&dims)?);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {} result", self.name))?;
+        let parts = tuple.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// Per-thread runtime: PJRT client + compiled executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Arc<Manifest>,
+    cache: BTreeMap<(String, String), Arc<Executable>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Engine> {
+        let manifest = Arc::new(Manifest::load(artifact_dir)?);
+        Ok(Engine {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            manifest,
+            cache: BTreeMap::new(),
+        })
+    }
+
+    /// Engine sharing an already-parsed manifest (thread spawns).
+    pub fn with_manifest(manifest: Arc<Manifest>) -> Result<Engine> {
+        Ok(Engine {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            manifest,
+            cache: BTreeMap::new(),
+        })
+    }
+
+    /// Load + compile (cached) an artifact for `task`.
+    pub fn load(&mut self, task: &str, artifact: &str) -> Result<Arc<Executable>> {
+        let key = (task.to_string(), artifact.to_string());
+        if let Some(e) = self.cache.get(&key) {
+            return Ok(Arc::clone(e));
+        }
+        let info = self
+            .manifest
+            .task(task)?
+            .artifacts
+            .get(artifact)
+            .with_context(|| format!("artifact {task}/{artifact} not in manifest"))?
+            .clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            info.file
+                .to_str()
+                .context("artifact path not valid UTF-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", info.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {task}/{artifact}"))?;
+        let executable = Arc::new(Executable {
+            exe,
+            info,
+            name: format!("{task}/{artifact}"),
+        });
+        self.cache.insert(key, Arc::clone(&executable));
+        Ok(executable)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Engine::new(&root).ok()
+    }
+
+    #[test]
+    fn actor_infer_runs_and_is_bounded() {
+        let Some(mut eng) = engine() else { return };
+        let m = Arc::clone(&eng.manifest);
+        let t = m.task("ant").unwrap();
+        let exe = eng.load("ant", "actor_infer").unwrap();
+        let mut rng = crate::util::Rng::new(0);
+        let theta = t.layouts["actor"].init(&mut rng);
+        let c = m.chunk;
+        let mut obs = vec![0.0f32; c * t.obs_dim];
+        rng.fill_normal(&mut obs);
+        let out = exe
+            .run(&[
+                HostTensor::vec(theta),
+                HostTensor::new(&[c, t.obs_dim], obs),
+                HostTensor::vec(vec![0.0; t.obs_dim]),
+                HostTensor::vec(vec![1.0; t.obs_dim]),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), c * t.act_dim);
+        assert!(out[0].iter().all(|v| v.abs() <= 1.0 && v.is_finite()));
+        // tanh of small-init net: not all identical.
+        assert!(out[0].iter().any(|v| *v != out[0][0]));
+    }
+
+    #[test]
+    fn input_shape_mismatch_is_rejected() {
+        let Some(mut eng) = engine() else { return };
+        let exe = eng.load("ant", "actor_infer").unwrap();
+        let bad = vec![HostTensor::vec(vec![0.0; 3])];
+        assert!(exe.run(&bad).is_err());
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Some(mut eng) = engine() else { return };
+        let a = eng.load("ant", "actor_infer").unwrap();
+        let b = eng.load("ant", "actor_infer").unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

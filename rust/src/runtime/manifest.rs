@@ -1,0 +1,229 @@
+//! `artifacts/manifest.json` — the contract between the python compile
+//! path and the rust runtime: per-task dimensions, flat-parameter layouts
+//! (for native initialization), and artifact input/output shapes.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One tensor inside a flat parameter vector.
+#[derive(Debug, Clone)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+    pub fan_in: usize,
+    pub scale: f32,
+}
+
+/// Flat-vector layout of one network.
+#[derive(Debug, Clone)]
+pub struct Layout {
+    pub size: usize,
+    pub entries: Vec<LayoutEntry>,
+}
+
+impl Layout {
+    fn from_json(j: &Json) -> Result<Layout> {
+        let entries = j
+            .req("entries")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Ok(LayoutEntry {
+                    name: e.req("name")?.as_str()?.to_string(),
+                    offset: e.req("offset")?.as_usize()?,
+                    shape: e.req("shape")?.as_shape()?,
+                    fan_in: e.req("fan_in")?.as_usize()?,
+                    scale: e.req("scale")?.as_f32()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Layout { size: j.req("size")?.as_usize()?, entries })
+    }
+
+    /// Initialize a flat parameter vector: U(−b, b) with b = scale/√fan_in
+    /// per tensor (PyTorch's default linear init, matching model.py tests).
+    pub fn init(&self, rng: &mut crate::util::Rng) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.size];
+        for e in &self.entries {
+            let n: usize = e.shape.iter().product();
+            let bound = e.scale / (e.fan_in.max(1) as f32).sqrt();
+            for v in &mut out[e.offset..e.offset + n] {
+                *v = rng.uniform_in(-bound, bound);
+            }
+        }
+        out
+    }
+}
+
+/// Shape signature of one AOT artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub file: PathBuf,
+    pub inputs: Vec<(String, Vec<usize>)>,
+    pub outputs: Vec<(String, Vec<usize>)>,
+}
+
+/// Per-task manifest section.
+#[derive(Debug, Clone)]
+pub struct TaskInfo {
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub critic_obs_dim: usize,
+    pub reward_scale: f32,
+    pub sim_cost: f32,
+    pub layouts: BTreeMap<String, Layout>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub chunk: usize,
+    pub batch_default: usize,
+    pub atoms: usize,
+    pub nstep: usize,
+    pub gamma: f32,
+    pub tau: f32,
+    pub tasks: BTreeMap<String, TaskInfo>,
+}
+
+impl Manifest {
+    /// Load `<root>/manifest.json`.
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {path:?} — run `make artifacts` first")
+        })?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let mut tasks = BTreeMap::new();
+        for (name, tj) in j.req("tasks")?.as_obj()? {
+            let mut layouts = BTreeMap::new();
+            for (ln, lj) in tj.req("layouts")?.as_obj()? {
+                layouts.insert(ln.clone(), Layout::from_json(lj)?);
+            }
+            let mut artifacts = BTreeMap::new();
+            for (an, aj) in tj.req("artifacts")?.as_obj()? {
+                let parse_io = |key: &str| -> Result<Vec<(String, Vec<usize>)>> {
+                    aj.req(key)?
+                        .as_arr()?
+                        .iter()
+                        .map(|e| {
+                            Ok((
+                                e.req("name")?.as_str()?.to_string(),
+                                e.req("shape")?.as_shape()?,
+                            ))
+                        })
+                        .collect()
+                };
+                artifacts.insert(
+                    an.clone(),
+                    ArtifactInfo {
+                        file: root.join(aj.req("file")?.as_str()?),
+                        inputs: parse_io("inputs")?,
+                        outputs: parse_io("outputs")?,
+                    },
+                );
+            }
+            tasks.insert(
+                name.clone(),
+                TaskInfo {
+                    obs_dim: tj.req("obs_dim")?.as_usize()?,
+                    act_dim: tj.req("act_dim")?.as_usize()?,
+                    critic_obs_dim: tj.req("critic_obs_dim")?.as_usize()?,
+                    reward_scale: tj.req("reward_scale")?.as_f32()?,
+                    sim_cost: tj.req("sim_cost")?.as_f32()?,
+                    layouts,
+                    artifacts,
+                },
+            );
+        }
+        Ok(Manifest {
+            root: root.to_path_buf(),
+            chunk: j.req("chunk")?.as_usize()?,
+            batch_default: j.req("batch_default")?.as_usize()?,
+            atoms: j.req("atoms")?.as_usize()?,
+            nstep: j.req("nstep")?.as_usize()?,
+            gamma: j.req("gamma")?.as_f32()?,
+            tau: j.req("tau")?.as_f32()?,
+            tasks,
+        })
+    }
+
+    pub fn task(&self, name: &str) -> Result<&TaskInfo> {
+        self.tasks
+            .get(name)
+            .with_context(|| format!("task {name:?} not in manifest (re-run `make artifacts`)"))
+    }
+
+    /// Artifact name for an update step at batch size `b` — the default
+    /// batch uses the bare name, sweep batches use the `_b{b}` suffix
+    /// (Fig. 8 artifacts).
+    pub fn batch_artifact(&self, base: &str, b: usize) -> String {
+        if b == self.batch_default {
+            base.to_string()
+        } else {
+            format!("{base}_b{b}")
+        }
+    }
+
+    /// Verify that every artifact file referenced actually exists.
+    pub fn verify_files(&self) -> Result<usize> {
+        let mut n = 0;
+        for (tname, t) in &self.tasks {
+            for (aname, a) in &t.artifacts {
+                if !a.file.exists() {
+                    bail!("missing artifact {tname}/{aname}: {:?}", a.file);
+                }
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<Manifest> {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&root).ok()
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let Some(m) = repo_artifacts() else { return };
+        assert!(m.tasks.contains_key("ant"));
+        let ant = m.task("ant").unwrap();
+        assert_eq!(ant.obs_dim, 12);
+        assert_eq!(ant.act_dim, 4);
+        assert!(ant.layouts.contains_key("actor"));
+        assert!(ant.artifacts.contains_key("critic_update"));
+        m.verify_files().unwrap();
+    }
+
+    #[test]
+    fn layout_init_respects_bounds() {
+        let Some(m) = repo_artifacts() else { return };
+        let lay = &m.task("ant").unwrap().layouts["actor"];
+        let mut rng = crate::util::Rng::new(0);
+        let theta = lay.init(&mut rng);
+        assert_eq!(theta.len(), lay.size);
+        // Values bounded by the largest 1/sqrt(fan_in).
+        let max = theta.iter().fold(0.0f32, |a, b| a.max(b.abs()));
+        assert!(max <= 1.0);
+        // Not all zero.
+        assert!(theta.iter().any(|v| v.abs() > 1e-4));
+    }
+
+    #[test]
+    fn batch_artifact_naming() {
+        let Some(m) = repo_artifacts() else { return };
+        assert_eq!(m.batch_artifact("critic_update", m.batch_default), "critic_update");
+        assert_eq!(m.batch_artifact("critic_update", 64), "critic_update_b64");
+    }
+}

@@ -1,0 +1,148 @@
+//! Runtime layer: artifact manifest, PJRT engine, and typed helpers for
+//! the recurring call patterns (chunked policy inference, Adam-carrying
+//! learner states).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, Executable, HostTensor};
+pub use manifest::{Layout, Manifest, TaskInfo};
+
+use anyhow::Result;
+
+/// Flat parameters + Adam state + step counter for one network — the unit
+/// that `*_update` artifacts consume and produce.
+#[derive(Debug, Clone)]
+pub struct OptState {
+    pub theta: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: f32,
+}
+
+impl OptState {
+    pub fn new(theta: Vec<f32>) -> Self {
+        let n = theta.len();
+        OptState { theta, m: vec![0.0; n], v: vec![0.0; n], t: 0.0 }
+    }
+
+    /// Inputs in the artifact's (theta, m, v, t) order.
+    pub fn tensors(&self) -> [HostTensor; 4] {
+        [
+            HostTensor::vec(self.theta.clone()),
+            HostTensor::vec(self.m.clone()),
+            HostTensor::vec(self.v.clone()),
+            HostTensor::scalar1(self.t + 1.0), // Adam bias-correction step
+        ]
+    }
+
+    /// Absorb the (theta, m, v) outputs of an update artifact.
+    pub fn absorb(&mut self, theta: Vec<f32>, m: Vec<f32>, v: Vec<f32>) {
+        self.theta = theta;
+        self.m = m;
+        self.v = v;
+        self.t += 1.0;
+    }
+}
+
+/// Chunked deterministic policy inference: runs `actor_infer` (compiled
+/// for a fixed chunk C) over any number of rows by padding the tail chunk.
+/// `extra_noise` (SAC) is an optional per-row noise tensor of width
+/// `noise_dim`, passed as the artifact's trailing input.
+#[allow(clippy::too_many_arguments)]
+pub fn infer_chunked(
+    exe: &Executable,
+    theta: &[f32],
+    obs: &[f32],
+    n: usize,
+    obs_dim: usize,
+    act_dim: usize,
+    mu: &[f32],
+    var: &[f32],
+    chunk: usize,
+    noise: Option<(&[f32], usize)>,
+    actions_out: &mut [f32],
+) -> Result<()> {
+    debug_assert_eq!(obs.len(), n * obs_dim);
+    debug_assert_eq!(actions_out.len(), n * act_dim);
+    let mut row = 0;
+    let mut obs_chunk = vec![0.0f32; chunk * obs_dim];
+    while row < n {
+        let take = (n - row).min(chunk);
+        obs_chunk[..take * obs_dim]
+            .copy_from_slice(&obs[row * obs_dim..(row + take) * obs_dim]);
+        if take < chunk {
+            obs_chunk[take * obs_dim..].fill(0.0);
+        }
+        let mut inputs = vec![
+            HostTensor::vec(theta.to_vec()),
+            HostTensor::new(&[chunk, obs_dim], obs_chunk.clone()),
+            HostTensor::vec(mu.to_vec()),
+            HostTensor::vec(var.to_vec()),
+        ];
+        if let Some((nz, nd)) = noise {
+            let mut noise_chunk = vec![0.0f32; chunk * nd];
+            noise_chunk[..take * nd]
+                .copy_from_slice(&nz[row * nd..(row + take) * nd]);
+            inputs.push(HostTensor::new(&[chunk, nd], noise_chunk));
+        }
+        let out = exe.run(&inputs)?;
+        actions_out[row * act_dim..(row + take) * act_dim]
+            .copy_from_slice(&out[0][..take * act_dim]);
+        row += take;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    #[test]
+    fn chunked_inference_matches_single_call() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let Ok(mut eng) = Engine::new(&root) else { return };
+        let m = std::sync::Arc::clone(&eng.manifest);
+        let t = m.task("ant").unwrap();
+        let exe = eng.load("ant", "actor_infer").unwrap();
+        let mut rng = crate::util::Rng::new(9);
+        let theta = t.layouts["actor"].init(&mut rng);
+        let mu = vec![0.0; t.obs_dim];
+        let var = vec![1.0; t.obs_dim];
+
+        // n > chunk, not a multiple.
+        let n = m.chunk + 17;
+        let mut obs = vec![0.0f32; n * t.obs_dim];
+        rng.fill_normal(&mut obs);
+        let mut acts = vec![0.0f32; n * t.act_dim];
+        infer_chunked(&exe, &theta, &obs, n, t.obs_dim, t.act_dim, &mu, &var,
+                      m.chunk, None, &mut acts).unwrap();
+
+        // Reference: rows 0..chunk in one direct call.
+        let direct = exe
+            .run(&[
+                HostTensor::vec(theta.clone()),
+                HostTensor::new(&[m.chunk, t.obs_dim], obs[..m.chunk * t.obs_dim].to_vec()),
+                HostTensor::vec(mu.clone()),
+                HostTensor::vec(var.clone()),
+            ])
+            .unwrap();
+        assert_eq!(&acts[..m.chunk * t.act_dim], &direct[0][..]);
+        // Tail rows produced (nonzero for random obs).
+        let tail = &acts[m.chunk * t.act_dim..];
+        assert!(tail.iter().any(|v| v.abs() > 1e-7));
+    }
+
+    #[test]
+    fn optstate_tensor_order_and_absorb() {
+        let mut st = OptState::new(vec![1.0, 2.0]);
+        let ts = st.tensors();
+        assert_eq!(ts[0].data, vec![1.0, 2.0]);
+        assert_eq!(ts[3].data, vec![1.0]); // t+1 for first step
+        st.absorb(vec![3.0, 4.0], vec![0.1, 0.1], vec![0.2, 0.2]);
+        assert_eq!(st.theta, vec![3.0, 4.0]);
+        assert_eq!(st.t, 1.0);
+        assert_eq!(st.tensors()[3].data, vec![2.0]);
+    }
+}

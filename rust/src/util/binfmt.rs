@@ -1,0 +1,109 @@
+//! Checkpoint format: named f32 tensors in a single flat file.
+//!
+//! Layout: magic `PQL1`, u32 section count, then per section:
+//! u32 name_len, name bytes, u64 element count, raw little-endian f32 data.
+//! Deliberately simple — checkpoints are policy/critic flat vectors plus
+//! normalizer statistics.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"PQL1";
+
+/// Write named tensors to `path`.
+pub fn save(path: &Path, sections: &[(&str, &[f32])]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(sections.len() as u32).to_le_bytes())?;
+    for (name, data) in sections {
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        f.write_all(&(data.len() as u64).to_le_bytes())?;
+        // Safe f32 -> LE bytes without unsafe: chunk through to_le_bytes.
+        let mut buf = Vec::with_capacity(data.len() * 4);
+        for v in *data {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        f.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+/// Read all named tensors from `path`.
+pub fn load(path: &Path) -> Result<BTreeMap<String, Vec<f32>>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not a PQL checkpoint (bad magic)");
+    }
+    let mut u32b = [0u8; 4];
+    let mut u64b = [0u8; 8];
+    f.read_exact(&mut u32b)?;
+    let count = u32::from_le_bytes(u32b);
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        f.read_exact(&mut u32b)?;
+        let name_len = u32::from_le_bytes(u32b) as usize;
+        if name_len > 4096 {
+            bail!("section name too long ({name_len})");
+        }
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        f.read_exact(&mut u64b)?;
+        let n = u64::from_le_bytes(u64b) as usize;
+        let mut bytes = vec![0u8; n * 4];
+        f.read_exact(&mut bytes)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.insert(String::from_utf8(name)?, data);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("pql_binfmt_test");
+        let path = dir.join("ckpt.pql");
+        let a: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5).collect();
+        let b = vec![-1.25f32; 7];
+        save(&path, &[("actor", &a), ("norm_mean", &b)]).unwrap();
+        let m = load(&path).unwrap();
+        assert_eq!(m["actor"], a);
+        assert_eq!(m["norm_mean"], b);
+        assert_eq!(m.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("pql_binfmt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.pql");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_sections_ok() {
+        let dir = std::env::temp_dir().join("pql_binfmt_test3");
+        let path = dir.join("empty.pql");
+        save(&path, &[]).unwrap();
+        assert!(load(&path).unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,11 @@
+//! Small shared utilities (RNG, stats, logging).
+
+pub mod binfmt;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use stats::RunningNorm;

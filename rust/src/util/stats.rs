@@ -1,0 +1,141 @@
+//! Streaming statistics: Welford running mean/variance (observation
+//! normalization) and small summary helpers for benches and metrics.
+
+/// Per-dimension running mean/variance over batches of observations
+/// (Welford / Chan parallel update). Drives the `mu`/`var` inputs of every
+/// AOT artifact — the paper normalizes observations (Table B.1).
+#[derive(Debug, Clone)]
+pub struct RunningNorm {
+    pub mean: Vec<f32>,
+    pub var: Vec<f32>,
+    m2: Vec<f64>,
+    mean64: Vec<f64>,
+    pub count: f64,
+    frozen: bool,
+}
+
+impl RunningNorm {
+    pub fn new(dim: usize) -> Self {
+        RunningNorm {
+            mean: vec![0.0; dim],
+            var: vec![1.0; dim],
+            m2: vec![0.0; dim],
+            mean64: vec![0.0; dim],
+            count: 0.0,
+            frozen: false,
+        }
+    }
+
+    /// Stop updating (evaluation / frozen-normalizer runs).
+    pub fn freeze(&mut self) {
+        self.frozen = true;
+    }
+
+    /// Fold in a batch laid out row-major `[n, dim]`.
+    pub fn update(&mut self, batch: &[f32], dim: usize) {
+        if self.frozen || dim == 0 {
+            return;
+        }
+        debug_assert_eq!(batch.len() % dim, 0);
+        let n = batch.len() / dim;
+        for row in 0..n {
+            self.count += 1.0;
+            let inv = 1.0 / self.count;
+            let base = row * dim;
+            for d in 0..dim {
+                let x = batch[base + d] as f64;
+                let delta = x - self.mean64[d];
+                self.mean64[d] += delta * inv;
+                self.m2[d] += delta * (x - self.mean64[d]);
+            }
+        }
+        if self.count >= 2.0 {
+            let inv = 1.0 / (self.count - 1.0);
+            for d in 0..dim {
+                self.mean[d] = self.mean64[d] as f32;
+                self.var[d] = ((self.m2[d] * inv) as f32).max(1e-6);
+            }
+        }
+    }
+}
+
+/// Summary of a sample (used by bench reporting).
+#[derive(Debug, Clone, Copy)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+}
+
+/// Compute a summary; input need not be sorted.
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty());
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        max: sorted[n - 1],
+        p50: sorted[n / 2],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_norm_matches_batch_stats() {
+        let mut rn = RunningNorm::new(2);
+        let data: Vec<f32> = (0..200).map(|i| (i % 7) as f32).collect();
+        // interpret as [100, 2]
+        rn.update(&data, 2);
+        let col0: Vec<f32> = data.iter().step_by(2).copied().collect();
+        let m: f32 = col0.iter().sum::<f32>() / 100.0;
+        let v: f32 = col0.iter().map(|x| (x - m).powi(2)).sum::<f32>() / 99.0;
+        assert!((rn.mean[0] - m).abs() < 1e-4, "{} vs {}", rn.mean[0], m);
+        assert!((rn.var[0] - v).abs() < 1e-3);
+    }
+
+    #[test]
+    fn running_norm_incremental_equals_oneshot() {
+        let data: Vec<f32> = (0..300).map(|i| (i as f32 * 0.37).sin() * 3.0).collect();
+        let mut a = RunningNorm::new(3);
+        a.update(&data, 3);
+        let mut b = RunningNorm::new(3);
+        for chunk in data.chunks(30) {
+            b.update(chunk, 3);
+        }
+        for d in 0..3 {
+            assert!((a.mean[d] - b.mean[d]).abs() < 1e-5);
+            assert!((a.var[d] - b.var[d]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn freeze_stops_updates() {
+        let mut rn = RunningNorm::new(1);
+        rn.update(&[1.0, 2.0, 3.0], 1);
+        let m = rn.mean[0];
+        rn.freeze();
+        rn.update(&[100.0; 50], 1);
+        assert_eq!(rn.mean[0], m);
+    }
+
+    #[test]
+    fn summarize_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+}

@@ -1,0 +1,207 @@
+//! Integration tests: the full three-layer stack on short budgets.
+//!
+//! These tests need `make artifacts` to have run; they skip (not fail)
+//! when the artifact directory is missing so `cargo test` works on a
+//! fresh checkout, and exercise the real PJRT path when it exists.
+
+use pql::config::{Algo, Exploration, Ratio, TrainConfig};
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard};
+
+/// Trainings are wall-clock-budgeted and this testbed has one core:
+/// running them concurrently starves every run of compute and turns
+/// learning assertions into noise. Serialize all training tests.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn art() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+fn short_cfg(task: &str, algo: Algo, secs: f64) -> TrainConfig {
+    TrainConfig {
+        task: task.into(),
+        algo,
+        num_envs: 32,
+        batch_size: 512,
+        budget_secs: secs,
+        eval_interval_secs: secs / 3.0,
+        warmup_steps: 8,
+        seed: 11,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn pql_trains_and_improves_on_ant() {
+    let Some(art) = art() else { return };
+    let _s = serial();
+    let cfg = short_cfg("ant", Algo::Pql, 25.0);
+    let log = pql::algos::train(&cfg, &art).unwrap();
+    assert!(!log.records.is_empty());
+    // Untrained ant sits near ~180; PQL should clearly beat it in 25 s.
+    assert!(
+        log.best_return() > 250.0,
+        "no learning: best {}",
+        log.best_return()
+    );
+    // All three processes actually ran.
+    let last = log.records.last().unwrap();
+    assert!(last.critic_updates > 50, "v updates {}", last.critic_updates);
+    assert!(last.actor_updates > 10, "p updates {}", last.actor_updates);
+    assert!(last.env_steps > 1000);
+}
+
+#[test]
+fn pace_ratios_are_realized_in_training() {
+    let Some(art) = art() else { return };
+    let _s = serial();
+    let mut cfg = short_cfg("ant", Algo::Pql, 15.0);
+    cfg.beta_av = Ratio::new(1, 4);
+    cfg.beta_pv = Ratio::new(1, 2);
+    let log = pql::algos::train(&cfg, &art).unwrap();
+    let last = log.records.last().unwrap();
+    let steps = last.env_steps / cfg.num_envs as u64;
+    let av = steps as f64 / last.critic_updates.max(1) as f64;
+    let pv = last.actor_updates as f64 / last.critic_updates.max(1) as f64;
+    // Warm-up steps skew a little; generous bands.
+    assert!((0.1..0.6).contains(&av), "a:v realized {av}");
+    assert!((0.3..0.75).contains(&pv), "p:v realized {pv}");
+}
+
+#[test]
+fn sequential_ddpg_trains() {
+    let Some(art) = art() else { return };
+    let _s = serial();
+    let log = pql::algos::train(&short_cfg("ant", Algo::Ddpg, 20.0), &art).unwrap();
+    assert!(log.best_return() > 250.0, "best {}", log.best_return());
+}
+
+#[test]
+fn ppo_runs_and_reports() {
+    let Some(art) = art() else { return };
+    let _s = serial();
+    let log = pql::algos::train(&short_cfg("ant", Algo::Ppo, 15.0), &art).unwrap();
+    assert!(!log.records.is_empty());
+    assert!(log.final_return().is_finite());
+}
+
+#[test]
+fn pql_d_distributional_runs() {
+    let Some(art) = art() else { return };
+    let _s = serial();
+    let log = pql::algos::train(&short_cfg("ant", Algo::PqlD, 15.0), &art).unwrap();
+    assert!(log.final_return().is_finite());
+    assert!(log.records.last().unwrap().critic_updates > 20);
+}
+
+#[test]
+fn pql_sac_runs() {
+    let Some(art) = art() else { return };
+    let _s = serial();
+    let log = pql::algos::train(&short_cfg("ant", Algo::PqlSac, 15.0), &art).unwrap();
+    assert!(log.final_return().is_finite());
+}
+
+#[test]
+fn vision_asymmetric_pql_runs_compressed_and_raw() {
+    let Some(art) = art() else { return };
+    let _s = serial();
+    for compress in [true, false] {
+        let mut cfg = short_cfg("ballbalance_vision", Algo::Pql, 12.0);
+        cfg.compress_images = compress;
+        let log = pql::algos::train(&cfg, &art).unwrap();
+        assert!(log.final_return().is_finite(), "compress={compress}");
+    }
+}
+
+#[test]
+fn fixed_sigma_exploration_variant_runs() {
+    let Some(art) = art() else { return };
+    let _s = serial();
+    let mut cfg = short_cfg("ant", Algo::Pql, 10.0);
+    cfg.exploration = Exploration::Fixed(0.4);
+    let log = pql::algos::train(&cfg, &art).unwrap();
+    assert!(log.final_return().is_finite());
+}
+
+#[test]
+fn no_pace_control_free_running_works() {
+    let Some(art) = art() else { return };
+    let _s = serial();
+    let mut cfg = short_cfg("ant", Algo::Pql, 10.0);
+    cfg.pace_control = false;
+    let log = pql::algos::train(&cfg, &art).unwrap();
+    assert!(log.final_return().is_finite());
+}
+
+#[test]
+fn nstep_1_variant_works() {
+    let Some(art) = art() else { return };
+    let _s = serial();
+    let mut cfg = short_cfg("ant", Algo::Pql, 10.0);
+    cfg.nstep = 1;
+    let log = pql::algos::train(&cfg, &art).unwrap();
+    assert!(log.final_return().is_finite());
+}
+
+#[test]
+fn batch_size_sweep_artifacts_resolve() {
+    let Some(art) = art() else { return };
+    let _s = serial();
+    for b in [64usize, 1024] {
+        let mut cfg = short_cfg("ant", Algo::Pql, 8.0);
+        cfg.batch_size = b;
+        let log = pql::algos::train(&cfg, &art).unwrap();
+        assert!(log.final_return().is_finite(), "batch {b}");
+    }
+}
+
+#[test]
+fn multi_device_placement_runs() {
+    let Some(art) = art() else { return };
+    let _s = serial();
+    let mut cfg = short_cfg("ant", Algo::Pql, 10.0);
+    cfg.device_speeds = vec![1.0, 1.0];
+    cfg.placement = [0, 1, 1];
+    let log = pql::algos::train(&cfg, &art).unwrap();
+    assert!(log.final_return().is_finite());
+}
+
+#[test]
+fn dclaw_success_metric_flows_to_records() {
+    let Some(art) = art() else { return };
+    let _s = serial();
+    let mut cfg = short_cfg("dclaw", Algo::Pql, 12.0);
+    cfg.num_envs = 16;
+    let log = pql::algos::train(&cfg, &art).unwrap();
+    // Success rate defined (not NaN) for dclaw.
+    assert!(log.records.iter().any(|r| !r.success_rate.is_nan()));
+}
+
+#[test]
+fn checkpoint_roundtrip_through_eval() {
+    let Some(art) = art() else { return };
+    let _s = serial();
+    let dir = std::env::temp_dir().join("pql_it_ckpt");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = short_cfg("ant", Algo::Pql, 8.0);
+    cfg.run_dir = Some(dir.to_str().unwrap().to_string());
+    pql::algos::train(&cfg, &art).unwrap();
+    let sections = pql::util::binfmt::load(&dir.join("checkpoint.pql")).unwrap();
+    assert!(sections.contains_key("actor"));
+    let mut engine = pql::runtime::Engine::new(&art).unwrap();
+    let m = std::sync::Arc::clone(&engine.manifest);
+    let infer = engine.load("ant", "actor_infer").unwrap();
+    let (ret, _) = pql::coordinator::evaluate(
+        &infer, &m, "ant", &sections["actor"], &sections["norm_mean"],
+        &sections["norm_var"], 8, 1, None,
+    )
+    .unwrap();
+    assert!(ret.is_finite());
+    std::fs::remove_dir_all(&dir).ok();
+}
