@@ -4,6 +4,10 @@
 //! Covers, per layer:
 //! - L3: vectorized env stepping (per task), replay push/sample, n-step
 //!   assembly, exploration noise, RNG, pace-controller gate overhead.
+//! - Data plane (PERF.md): sharded vs single-core env stepping, batched
+//!   vs per-transition replay ingest, and vectorized sampling at
+//!   N ∈ {256, 4096, 16384}; results land in `BENCH_data_plane.json` at
+//!   the repository root so the perf trajectory is tracked across PRs.
 //! - L2/L1 (through PJRT): actor inference per row, critic/actor update
 //!   latency per batch — the numbers behind EXPERIMENTS.md §Perf.
 
@@ -17,8 +21,15 @@ use pql::util::Rng;
 use std::path::Path;
 use std::time::Instant;
 
-/// Time `f` over `iters` iterations after `warmup` iterations.
-fn bench<F: FnMut()>(name: &str, unit_per_iter: f64, unit: &str, iters: usize, mut f: F) {
+/// Time `f` over `iters` iterations after `iters/10` warmup iterations.
+/// Returns `(ms_per_iter, unit_per_sec)` for machine-readable reporting.
+fn bench<F: FnMut()>(
+    name: &str,
+    unit_per_iter: f64,
+    unit: &str,
+    iters: usize,
+    mut f: F,
+) -> (f64, f64) {
     for _ in 0..iters.div_ceil(10) {
         f();
     }
@@ -30,6 +41,180 @@ fn bench<F: FnMut()>(name: &str, unit_per_iter: f64, unit: &str, iters: usize, m
     let per = dt / iters as f64;
     let rate = unit_per_iter / per;
     println!("{name:<44} {:>10.3} ms/iter {:>14.0} {unit}/s", per * 1e3, rate);
+    (per * 1e3, rate)
+}
+
+/// One machine-readable data-plane measurement.
+struct PlaneRecord {
+    group: &'static str,
+    name: String,
+    n: usize,
+    ms_per_iter: f64,
+    per_sec: f64,
+    unit: &'static str,
+}
+
+/// The before/after data-plane suite (PERF.md): env stepping with and
+/// without sharding, replay ingest per-transition vs batched, vectorized
+/// sampling — each at N ∈ {256, 4096, 16384}.
+fn bench_data_plane() -> Vec<PlaneRecord> {
+    let mut records = Vec::new();
+    let sizes = [256usize, 4096, 16384];
+
+    // --- env stepping: single-core vs sharded --------------------------
+    for &n in &sizes {
+        let iters = (200_000 / n).max(5);
+        let k = envs::auto_shards(0, n);
+        for (label, shards) in [("single", 1usize), ("sharded", k)] {
+            let mut env = envs::make_sharded("ant", n, 0, shards).unwrap();
+            let (od, ad) = (env.obs_dim(), env.act_dim());
+            let mut obs = vec![0.0f32; n * od];
+            env.reset_all(&mut obs);
+            let mut out = StepOut::new(n, od);
+            let mut acts = vec![0.0f32; n * ad];
+            let mut r = Rng::new(1);
+            let name = format!("env step ant {label} K={shards} (N={n})");
+            let (ms, rate) = bench(&name, n as f64, "env-steps", iters, || {
+                r.fill_uniform(&mut acts, -1.0, 1.0);
+                env.step(&acts, &mut out);
+            });
+            records.push(PlaneRecord {
+                group: if label == "single" { "env_step_single" } else { "env_step_sharded" },
+                name,
+                n,
+                ms_per_iter: ms,
+                per_sec: rate,
+                unit: "env-steps",
+            });
+        }
+    }
+
+    // --- replay ingest: per-transition push vs push_batch --------------
+    let (od, ad) = (30usize, 12usize);
+    for &n in &sizes {
+        let iters = (400_000 / n).max(10);
+        let mut rng = Rng::new(2);
+        let mut s = vec![0.0f32; n * od];
+        let mut a = vec![0.0f32; n * ad];
+        let mut rn = vec![0.0f32; n];
+        let mut s2 = vec![0.0f32; n * od];
+        let gm = vec![0.97f32; n];
+        rng.fill_normal(&mut s);
+        rng.fill_uniform(&mut a, -1.0, 1.0);
+        rng.fill_uniform(&mut rn, -1.0, 1.0);
+        rng.fill_normal(&mut s2);
+
+        let mut buf = TransitionBuffer::new(300_000, od, ad);
+        let name = format!("replay ingest push xN (N={n})");
+        let (ms, rate) = bench(&name, n as f64, "transitions", iters, || {
+            for k in 0..n {
+                buf.push(
+                    &s[k * od..(k + 1) * od],
+                    &a[k * ad..(k + 1) * ad],
+                    rn[k],
+                    &s2[k * od..(k + 1) * od],
+                    gm[k],
+                    &[],
+                    &[],
+                );
+            }
+        });
+        records.push(PlaneRecord {
+            group: "ingest_push",
+            name,
+            n,
+            ms_per_iter: ms,
+            per_sec: rate,
+            unit: "transitions",
+        });
+
+        let mut buf = TransitionBuffer::new(300_000, od, ad);
+        let name = format!("replay ingest push_batch (N={n})");
+        let (ms, rate) = bench(&name, n as f64, "transitions", iters, || {
+            buf.push_batch(n, &s, &a, &rn, &s2, &gm, &[], &[]);
+        });
+        records.push(PlaneRecord {
+            group: "ingest_batch",
+            name,
+            n,
+            ms_per_iter: ms,
+            per_sec: rate,
+            unit: "transitions",
+        });
+    }
+
+    // --- sampling: index vector + per-field gather ---------------------
+    {
+        let mut buf = TransitionBuffer::new(300_000, od, ad);
+        let mut rng = Rng::new(3);
+        let mut s = vec![0.0f32; 4096 * od];
+        let mut a = vec![0.0f32; 4096 * ad];
+        rng.fill_normal(&mut s);
+        rng.fill_uniform(&mut a, -1.0, 1.0);
+        let rn = vec![0.5f32; 4096];
+        let gm = vec![0.97f32; 4096];
+        while buf.len() < buf.capacity() {
+            buf.push_batch(4096, &s, &a, &rn, &s, &gm, &[], &[]);
+        }
+        for &n in &sizes {
+            let iters = (500_000 / n).max(20);
+            let mut batch = SampleBatch::new(n, od, ad);
+            let name = format!("replay sample gather (B={n})");
+            let (ms, rate) = bench(&name, n as f64, "rows", iters, || {
+                buf.sample(&mut rng, n, &mut batch);
+            });
+            records.push(PlaneRecord {
+                group: "sample",
+                name,
+                n,
+                ms_per_iter: ms,
+                per_sec: rate,
+                unit: "rows",
+            });
+        }
+    }
+    records
+}
+
+/// Serialize the data-plane records to `BENCH_data_plane.json` at the
+/// repository root (machine-readable perf trajectory, PR over PR).
+fn write_data_plane_json(records: &[PlaneRecord]) -> std::io::Result<std::path::PathBuf> {
+    let rate_of = |group: &str, n: usize| {
+        records
+            .iter()
+            .find(|r| r.group == group && r.n == n)
+            .map(|r| r.per_sec)
+            .unwrap_or(0.0)
+    };
+    let mut rows = Vec::new();
+    for r in records {
+        rows.push(format!(
+            "    {{\"group\": \"{}\", \"name\": \"{}\", \"n\": {}, \"ms_per_iter\": {:.6}, \"per_sec\": {:.1}, \"unit\": \"{}\"}}",
+            r.group, r.name, r.n, r.ms_per_iter, r.per_sec, r.unit
+        ));
+    }
+    let mut speedups = Vec::new();
+    for &n in &[256usize, 4096, 16384] {
+        let ingest = rate_of("ingest_batch", n) / rate_of("ingest_push", n).max(1e-9);
+        let step = rate_of("env_step_sharded", n) / rate_of("env_step_single", n).max(1e-9);
+        speedups.push(format!(
+            "    {{\"n\": {n}, \"ingest_batch_over_push\": {ingest:.3}, \"env_sharded_over_single\": {step:.3}}}"
+        ));
+        if n == 4096 {
+            println!(
+                "ingest speedup at N=4096: {ingest:.2}x (push_batch over per-transition push)"
+            );
+        }
+    }
+    let json = format!(
+        "{{\n  \"schema\": \"pql.bench.data_plane/v1\",\n  \"source\": \"cargo bench --bench throughput\",\n  \"task\": \"ant\",\n  \"env_shards_auto\": {},\n  \"results\": [\n{}\n  ],\n  \"speedups\": [\n{}\n  ]\n}}\n",
+        envs::auto_shards(0, 4096),
+        rows.join(",\n"),
+        speedups.join(",\n")
+    );
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_data_plane.json");
+    std::fs::write(&path, json)?;
+    Ok(path)
 }
 
 fn main() {
@@ -110,6 +295,13 @@ fn main() {
                 ctl.gate_v();
             }
         });
+    }
+
+    println!("\n== data plane (N = 256 / 4096 / 16384) ==");
+    let plane = bench_data_plane();
+    match write_data_plane_json(&plane) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_data_plane.json: {e}"),
     }
 
     println!("\n== L2/L1 through PJRT (artifacts required) ==");

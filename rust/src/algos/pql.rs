@@ -15,11 +15,11 @@
 //! [`ParamBus`] — the paper's network-transfer arrows.
 
 use crate::config::TrainConfig;
-use crate::coordinator::{evaluate, ReturnTracker, Shared, StepMsg};
+use crate::coordinator::{evaluate, MsgPool, ReturnTracker, Shared, StepMsg};
 use crate::envs::{self, StepOut};
 use crate::exploration::Noise;
 use crate::metrics::{Record, RunLog};
-use crate::replay::{NStepAssembler, SampleBatch, StateBuffer, TransitionBuffer};
+use crate::replay::{NStepAssembler, ReadyBatch, SampleBatch, StateBuffer, TransitionBuffer};
 use crate::runtime::{infer_chunked, Engine, HostTensor, Manifest, OptState};
 use crate::util::{Rng, RunningNorm};
 use anyhow::{Context, Result};
@@ -97,6 +97,15 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, variant: Variant
 
     let (tx_v, rx_v) = mpsc::sync_channel::<StepMsg>(4);
     let (tx_p, rx_p) = mpsc::sync_channel::<Vec<f32>>(4);
+    // Recycle channels: drained buffers flow back to the Actor so the
+    // steady-state rollout loop allocates nothing (§Perf data plane).
+    let (recycle_v_tx, msg_pool) = MsgPool::new(
+        cfg.num_envs,
+        od,
+        ad,
+        if vision { tinfo.critic_obs_dim } else { 0 },
+    );
+    let (recycle_p_tx, recycle_p_rx) = mpsc::channel::<Vec<f32>>();
 
     let mut log = RunLog::new(cfg.run_dir.as_deref())?;
 
@@ -109,7 +118,8 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, variant: Variant
             let mut rng = rng.split();
             scope.spawn(move || {
                 if let Err(e) = actor_loop(&cfg, manifest, shared.clone(), variant,
-                                           tx_v, tx_p, &mut rng) {
+                                           tx_v, tx_p, msg_pool, recycle_p_rx,
+                                           &mut rng) {
                     log::error!("actor thread failed: {e:#}");
                     shared.pace.stop();
                 }
@@ -124,7 +134,7 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, variant: Variant
             let critic_init = critic_init.clone();
             scope.spawn(move || {
                 if let Err(e) = v_loop(&cfg, manifest, shared.clone(), variant,
-                                       rx_v, critic_init, &mut rng) {
+                                       rx_v, recycle_v_tx, critic_init, &mut rng) {
                     log::error!("v-learner thread failed: {e:#}");
                     shared.pace.stop();
                 }
@@ -139,7 +149,7 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, variant: Variant
             let actor_init = actor_init.clone();
             scope.spawn(move || {
                 if let Err(e) = p_loop(&cfg, manifest, shared.clone(), variant,
-                                       rx_p, actor_init, &mut rng) {
+                                       rx_p, recycle_p_tx, actor_init, &mut rng) {
                     log::error!("p-learner thread failed: {e:#}");
                     shared.pace.stop();
                 }
@@ -221,6 +231,8 @@ fn actor_loop(
     variant: Variant,
     tx_v: mpsc::SyncSender<StepMsg>,
     tx_p: mpsc::SyncSender<Vec<f32>>,
+    mut msg_pool: MsgPool,
+    recycle_p: mpsc::Receiver<Vec<f32>>,
     rng: &mut Rng,
 ) -> Result<()> {
     let tinfo = manifest.task(&cfg.task)?.clone();
@@ -230,13 +242,22 @@ fn actor_loop(
     let mut engine = Engine::with_manifest(Arc::clone(&manifest))?;
     let infer = engine.load(&cfg.task, variant.infer_artifact())?;
 
-    let mut env = envs::make(&cfg.task, n, cfg.seed)?;
+    let shards = envs::auto_shards(cfg.env_shards, n);
+    let mut env = envs::make_sharded(&cfg.task, n, cfg.seed, shards)?;
+    // Logged because auto mode (env_shards = 0) resolves from the host's
+    // core count: pin --env-shards for cross-machine reproducibility.
+    info!("actor: {n} envs across {shards} shard(s)");
     let mut obs = vec![0.0f32; n * od];
     env.reset_all(&mut obs);
     let mut cobs = vec![0.0f32; if vision { n * cd } else { 0 }];
+    let mut cobs2 = vec![0.0f32; if vision { n * cd } else { 0 }];
     if vision {
         env.fill_critic_obs(&mut cobs);
     }
+    // P-learner state rows round-trip through their own recycle channel;
+    // `p_spare` holds a buffer bounced back by a full queue.
+    let p_row_dim = if vision { od + cd } else { od };
+    let mut p_spare: Option<Vec<f32>> = None;
     let mut out = StepOut::new(n, od);
     let mut acts = vec![0.0f32; n * ad];
     let mut sac_noise = vec![0.0f32; n * ad];
@@ -293,49 +314,48 @@ fn actor_loop(
             shared.set_success(s);
         }
 
-        let mut cobs2 = Vec::new();
         if vision {
-            cobs2 = vec![0.0f32; n * cd];
             env.fill_critic_obs(&mut cobs2);
         }
 
         // Ship the batch: full transitions to V, states to P (Fig. 1).
-        // Vision frames go DEFLATE-compressed when configured (B.3's lz4
-        // bandwidth optimization, substituted per DESIGN.md §3).
+        // Messages come from the recycle pool and are refilled in place,
+        // so on raw (symmetric) payloads the steady-state loop performs
+        // no per-step heap allocation. Vision frames go DEFLATE-compressed
+        // when configured (B.3's lz4 bandwidth optimization, substituted
+        // per DESIGN.md §3) — that path still allocates inside the codec.
         let compress = vision && cfg.compress_images;
-        let (s_pay, s2_pay) = if compress {
-            (
-                crate::coordinator::ObsPayload::compress(&obs, od)?,
-                crate::coordinator::ObsPayload::compress(&out.obs, od)?,
-            )
+        let mut msg = msg_pool.acquire();
+        if compress {
+            msg.s = crate::coordinator::ObsPayload::compress(&obs, od)?;
+            msg.s2 = crate::coordinator::ObsPayload::compress(&out.obs, od)?;
+            msg.fill_pod(&acts, &out.reward, &out.done, &cobs, &cobs2);
         } else {
-            (
-                crate::coordinator::ObsPayload::Raw(obs.clone()),
-                crate::coordinator::ObsPayload::Raw(out.obs.clone()),
-            )
-        };
-        let msg = StepMsg {
-            s: s_pay,
-            a: acts.clone(),
-            r: out.reward.clone(),
-            s2: s2_pay,
-            done: out.done.clone(),
-            cs: cobs.clone(),
-            cs2: cobs2.clone(),
-        };
+            msg.fill_raw(&obs, &acts, &out.reward, &out.obs, &out.done, &cobs, &cobs2);
+        }
         if tx_v.send(msg).is_err() {
             break; // V-learner exited
         }
         // P-learner only needs states; drop if its queue is full rather
         // than stall the rollout (it samples from its own buffer anyway).
         // Vision ships joint (image ++ state) rows so the asymmetric
-        // policy update sees matching pairs.
-        let p_states = if vision {
-            concat_rows(&obs, od, &cobs, cd)
+        // policy update sees matching pairs. Buffers are pooled like the
+        // V-learner's, with a one-slot stash for queue-full bounces.
+        let mut p_states = p_spare
+            .take()
+            .or_else(|| recycle_p.try_recv().ok())
+            .unwrap_or_else(|| Vec::with_capacity(n * p_row_dim));
+        if vision {
+            concat_rows_into(&obs, od, &cobs, cd, &mut p_states);
         } else {
-            obs.clone()
-        };
-        let _ = tx_p.try_send(p_states);
+            crate::coordinator::refill(&mut p_states, &obs);
+        }
+        match tx_p.try_send(p_states) {
+            Ok(()) => {}
+            Err(mpsc::TrySendError::Full(v)) | Err(mpsc::TrySendError::Disconnected(v)) => {
+                p_spare = Some(v);
+            }
+        }
 
         norm.update(&out.obs, od);
         steps += 1;
@@ -366,6 +386,7 @@ fn v_loop(
     shared: Arc<Shared>,
     variant: Variant,
     rx: mpsc::Receiver<StepMsg>,
+    recycle: mpsc::Sender<StepMsg>,
     critic_init: Vec<f32>,
     rng: &mut Rng,
 ) -> Result<()> {
@@ -401,24 +422,33 @@ fn v_loop(
     let mut updates: u64 = 0;
     let scale = tinfo.reward_scale;
     let mut noise = vec![0.0f32; b * ad]; // SAC next-action noise
+    // Hoisted drain scratch: payload decode targets and the staged-rows
+    // batch all retain capacity across iterations.
+    let mut s_flat = Vec::new();
+    let mut s2_flat = Vec::new();
+    let mut ready = ReadyBatch::default();
 
     while !shared.pace.stopped() {
-        // Drain the data channel into replay (local buffer, Fig. 1).
-        let mut s_flat = Vec::new();
-        let mut s2_flat = Vec::new();
+        // Drain the data channel into replay (local buffer, Fig. 1): each
+        // message is n-step-assembled into contiguous ready rows, batch-
+        // ingested, then recycled back to the Actor's pool.
         loop {
             match rx.try_recv() {
-                Ok(msg) => {
-                    let scaled: Vec<f32> = msg.r.iter().map(|r| r * scale).collect();
+                Ok(mut msg) => {
+                    for r in msg.r.iter_mut() {
+                        *r *= scale; // in-place; the buffer is recycled anyway
+                    }
                     msg.s.to_flat(&mut s_flat)?;
                     msg.s2.to_flat(&mut s2_flat)?;
-                    asm.push_step(
-                        &s_flat, &msg.a, &scaled, &s2_flat, &msg.done, &msg.cs,
-                        &msg.cs2,
-                        |t| {
-                            replay.push(t.s, t.a, t.rn, t.s2, t.gmask, t.cs, t.cs2);
-                        },
+                    asm.push_step_into(
+                        &s_flat, &msg.a, &msg.r, &s2_flat, &msg.done, &msg.cs,
+                        &msg.cs2, &mut ready,
                     );
+                    replay.push_batch(
+                        ready.len, &ready.s, &ready.a, &ready.rn, &ready.s2,
+                        &ready.gmask, &ready.cs, &ready.cs2,
+                    );
+                    let _ = recycle.send(msg); // Actor may already be gone
                 }
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => return Ok(()),
@@ -517,6 +547,7 @@ fn p_loop(
     shared: Arc<Shared>,
     variant: Variant,
     rx: mpsc::Receiver<Vec<f32>>,
+    recycle: mpsc::Sender<Vec<f32>>,
     actor_init: Vec<f32>,
     rng: &mut Rng,
 ) -> Result<()> {
@@ -544,7 +575,10 @@ fn p_loop(
         loop {
             match rx.try_recv() {
                 // Vision rows arrive pre-joined as (image ++ state).
-                Ok(s) => states.push_batch(&s),
+                Ok(s) => {
+                    states.push_batch(&s);
+                    let _ = recycle.send(s); // return the buffer to the Actor
+                }
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => return Ok(()),
             }
@@ -614,15 +648,22 @@ fn p_loop(
 }
 
 /// Vision helper: join image rows `[n, od]` and state rows `[n, cd]` into
-/// `[n, od+cd]` rows for the P-learner's joint buffer.
-fn concat_rows(img: &[f32], od: usize, st: &[f32], cd: usize) -> Vec<f32> {
+/// `[n, od+cd]` rows for the P-learner's joint buffer, reusing `out`'s
+/// capacity.
+fn concat_rows_into(img: &[f32], od: usize, st: &[f32], cd: usize, out: &mut Vec<f32>) {
+    out.clear();
     let n = img.len() / od;
-    let rd = od + cd;
-    let mut out = vec![0.0f32; n * rd];
     for i in 0..n {
-        out[i * rd..i * rd + od].copy_from_slice(&img[i * od..(i + 1) * od]);
-        out[i * rd + od..(i + 1) * rd].copy_from_slice(&st[i * cd..(i + 1) * cd]);
+        out.extend_from_slice(&img[i * od..(i + 1) * od]);
+        out.extend_from_slice(&st[i * cd..(i + 1) * cd]);
     }
+}
+
+/// Allocating variant of [`concat_rows_into`] (kept for tests).
+#[cfg(test)]
+fn concat_rows(img: &[f32], od: usize, st: &[f32], cd: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    concat_rows_into(img, od, st, cd, &mut out);
     out
 }
 

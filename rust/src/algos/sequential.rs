@@ -13,7 +13,7 @@ use crate::coordinator::{evaluate, ReturnTracker};
 use crate::envs::{self, StepOut};
 use crate::exploration::Noise;
 use crate::metrics::{Record, RunLog};
-use crate::replay::{NStepAssembler, SampleBatch, TransitionBuffer};
+use crate::replay::{NStepAssembler, ReadyBatch, SampleBatch, TransitionBuffer};
 use crate::runtime::{infer_chunked, Engine, HostTensor, Manifest, OptState};
 use crate::util::{Rng, RunningNorm};
 use anyhow::{Context, Result};
@@ -50,7 +50,8 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, sac: bool) -> Re
     let mut target = critic_init;
     let mut log_alpha = OptState::new(vec![0.0]);
 
-    let mut env = envs::make(&cfg.task, n, cfg.seed)?;
+    let shards = envs::auto_shards(cfg.env_shards, n);
+    let mut env = envs::make_sharded(&cfg.task, n, cfg.seed, shards)?;
     let mut obs = vec![0.0f32; n * od];
     env.reset_all(&mut obs);
     let mut out = StepOut::new(n, od);
@@ -61,6 +62,8 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, sac: bool) -> Re
     norm.update(&obs, od);
     let mut replay = TransitionBuffer::new(cfg.replay_capacity, od, ad);
     let mut asm = NStepAssembler::new(n, cfg.nstep, cfg.gamma, od, ad);
+    let mut ready = ReadyBatch::default();
+    let mut scaled = vec![0.0f32; n];
     let mut batch = SampleBatch::new(b, od, ad);
     let mut unoise = vec![0.0f32; b * ad];
     let mut tracker = ReturnTracker::new(n, 4 * n);
@@ -98,10 +101,14 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, sac: bool) -> Re
             env.step(&acts, &mut out);
         }
         tracker.push_step(&out.reward, &out.done);
-        let scaled: Vec<f32> = out.reward.iter().map(|r| r * scale).collect();
-        asm.push_step(&obs, &acts, &scaled, &out.obs, &out.done, &[], &[], |t| {
-            replay.push(t.s, t.a, t.rn, t.s2, t.gmask, &[], &[]);
-        });
+        for (d, r) in scaled.iter_mut().zip(&out.reward) {
+            *d = r * scale;
+        }
+        asm.push_step_into(&obs, &acts, &scaled, &out.obs, &out.done, &[], &[], &mut ready);
+        replay.push_batch(
+            ready.len, &ready.s, &ready.a, &ready.rn, &ready.s2, &ready.gmask,
+            &ready.cs, &ready.cs2,
+        );
         norm.update(&out.obs, od);
         obs.copy_from_slice(&out.obs);
         steps += 1;

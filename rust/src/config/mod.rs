@@ -100,6 +100,9 @@ pub struct TrainConfig {
     pub algo: Algo,
     pub seed: u64,
     pub num_envs: usize,
+    /// Environment shards stepped on worker threads (0 = one per
+    /// available core, clamped to `num_envs`). See `envs::ShardedEnv`.
+    pub env_shards: usize,
     pub batch_size: usize,
     pub replay_capacity: usize,
     pub nstep: usize,
@@ -141,6 +144,7 @@ impl Default for TrainConfig {
             algo: Algo::Pql,
             seed: 1,
             num_envs: 256,
+            env_shards: 0,
             batch_size: 512,
             replay_capacity: 300_000,
             nstep: 3,
@@ -189,6 +193,9 @@ impl TrainConfig {
                 ("algo" | "train.algo", v) => self.algo = v.as_str()?.parse()?,
                 ("seed" | "train.seed", v) => self.seed = v.as_usize()? as u64,
                 ("num_envs" | "train.num_envs", v) => self.num_envs = v.as_usize()?,
+                ("env_shards" | "train.env_shards", v) => {
+                    self.env_shards = v.as_usize()?
+                }
                 ("batch_size" | "train.batch_size", v) => self.batch_size = v.as_usize()?,
                 ("replay_capacity" | "train.replay_capacity", v) => {
                     self.replay_capacity = v.as_usize()?
@@ -230,6 +237,7 @@ impl TrainConfig {
         }
         self.seed = a.get_parse("seed", self.seed)?;
         self.num_envs = a.get_parse("num-envs", self.num_envs)?;
+        self.env_shards = a.get_parse("env-shards", self.env_shards)?;
         self.batch_size = a.get_parse("batch-size", self.batch_size)?;
         self.replay_capacity = a.get_parse("replay-capacity", self.replay_capacity)?;
         self.nstep = a.get_parse("nstep", self.nstep)?;
@@ -348,6 +356,18 @@ mod tests {
         assert_eq!(c.actor_lr, 5e-4);
         assert_eq!(c.warmup_steps, 32);
         assert_eq!(c.exploration, Exploration::Mixed { min: 0.05, max: 0.8 });
+        assert_eq!(c.env_shards, 0, "default: one shard per available core");
+    }
+
+    #[test]
+    fn env_shards_from_config_file() {
+        let dir = std::env::temp_dir().join("pql_cfg_test_shards");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.toml");
+        std::fs::write(&p, "[train]\nenv_shards = 8\n").unwrap();
+        let c = TrainConfig::from_args(&args(&["--config", p.to_str().unwrap()])).unwrap();
+        assert_eq!(c.env_shards, 8);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
@@ -355,11 +375,13 @@ mod tests {
         let c = TrainConfig::from_args(&args(&[
             "--task", "shadow_hand", "--algo", "pql-d", "--num-envs", "64",
             "--beta-av", "1:4", "--sigma", "0.3", "--no-pace-control",
+            "--env-shards", "4",
         ]))
         .unwrap();
         assert_eq!(c.task, "shadow_hand");
         assert_eq!(c.algo, Algo::PqlD);
         assert_eq!(c.num_envs, 64);
+        assert_eq!(c.env_shards, 4);
         assert_eq!(c.beta_av, Ratio::new(1, 4));
         assert_eq!(c.exploration, Exploration::Fixed(0.3));
         assert!(!c.pace_control);

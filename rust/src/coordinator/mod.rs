@@ -4,9 +4,11 @@
 
 pub mod bus;
 pub mod pace;
+pub mod pool;
 
 pub use bus::{NormBus, ParamBus};
 pub use pace::PaceController;
+pub use pool::MsgPool;
 
 use crate::config::TrainConfig;
 use crate::device::DeviceSim;
@@ -65,6 +67,10 @@ impl ObsPayload {
 
 /// One vectorized Actor step shipped to the V-learner (Fig. 1 "data"
 /// arrow): the full transition batch for all N environments.
+///
+/// Messages are pooled: the V-learner returns drained messages through a
+/// recycle channel (see [`pool::MsgPool`]) and the Actor refills them in
+/// place, so the steady-state rollout loop performs no heap allocation.
 pub struct StepMsg {
     pub s: ObsPayload,
     pub a: Vec<f32>,
@@ -74,6 +80,67 @@ pub struct StepMsg {
     /// Critic observations (asymmetric tasks only; empty otherwise).
     pub cs: Vec<f32>,
     pub cs2: Vec<f32>,
+}
+
+/// Clear-and-refill inside retained capacity (no allocation once the
+/// vector has seen a full batch). Shared by the message pool and the
+/// Actor's pooled P-learner state rows.
+#[inline]
+pub(crate) fn refill(dst: &mut Vec<f32>, src: &[f32]) {
+    dst.clear();
+    dst.extend_from_slice(src);
+}
+
+impl StepMsg {
+    /// An empty message with capacity for an `n`-env step (`cd = 0` for
+    /// symmetric tasks).
+    pub fn with_capacity(n: usize, od: usize, ad: usize, cd: usize) -> StepMsg {
+        StepMsg {
+            s: ObsPayload::Raw(Vec::with_capacity(n * od)),
+            a: Vec::with_capacity(n * ad),
+            r: Vec::with_capacity(n),
+            s2: ObsPayload::Raw(Vec::with_capacity(n * od)),
+            done: Vec::with_capacity(n),
+            cs: Vec::with_capacity(n * cd),
+            cs2: Vec::with_capacity(n * cd),
+        }
+    }
+
+    /// Refill every field in place from the Actor's step buffers with raw
+    /// (uncompressed) observation payloads. Recycled messages reuse their
+    /// backing allocations; a message previously holding compressed
+    /// payloads falls back to re-allocating raw ones.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fill_raw(
+        &mut self,
+        s: &[f32],
+        a: &[f32],
+        r: &[f32],
+        s2: &[f32],
+        done: &[f32],
+        cs: &[f32],
+        cs2: &[f32],
+    ) {
+        match &mut self.s {
+            ObsPayload::Raw(v) => refill(v, s),
+            other => *other = ObsPayload::Raw(s.to_vec()),
+        }
+        match &mut self.s2 {
+            ObsPayload::Raw(v) => refill(v, s2),
+            other => *other = ObsPayload::Raw(s2.to_vec()),
+        }
+        self.fill_pod(a, r, done, cs, cs2);
+    }
+
+    /// Refill the plain (non-payload) fields; used by the compressed
+    /// vision path after setting `s`/`s2` payloads directly.
+    pub fn fill_pod(&mut self, a: &[f32], r: &[f32], done: &[f32], cs: &[f32], cs2: &[f32]) {
+        refill(&mut self.a, a);
+        refill(&mut self.r, r);
+        refill(&mut self.done, done);
+        refill(&mut self.cs, cs);
+        refill(&mut self.cs2, cs2);
+    }
 }
 
 /// State shared by all three processes of one training run.

@@ -13,6 +13,7 @@
 
 pub mod dynamics;
 pub mod render;
+pub mod sharded;
 
 mod allegro_hand;
 mod ant;
@@ -22,6 +23,8 @@ mod dclaw;
 mod franka_cube;
 mod humanoid;
 mod shadow_hand;
+
+pub use sharded::ShardedEnv;
 
 use crate::util::Rng;
 use anyhow::{bail, Result};
@@ -106,14 +109,57 @@ pub fn make(task: &str, num_envs: usize, seed: u64) -> Result<Box<dyn VecEnv>> {
     })
 }
 
+/// Instantiate a task partitioned into `shards` shards stepped on worker
+/// threads (see [`ShardedEnv`]). `shards <= 1` returns the plain
+/// single-core env, so behavior is identical to [`make`] there.
+pub fn make_sharded(
+    task: &str,
+    num_envs: usize,
+    seed: u64,
+    shards: usize,
+) -> Result<Box<dyn VecEnv>> {
+    if shards <= 1 || num_envs <= 1 {
+        return make(task, num_envs, seed);
+    }
+    Ok(Box::new(ShardedEnv::new(task, num_envs, seed, shards)?))
+}
+
+/// Minimum envs per shard for *auto* shard resolution: below this, the
+/// per-step scoped-thread spawn/join overhead outweighs the parallel
+/// stepping win for the cheap CPU dynamics. Explicit `--env-shards`
+/// values are honored as given.
+pub const MIN_ENVS_PER_AUTO_SHARD: usize = 64;
+
+/// Resolve the configured shard count: `0` means one shard per available
+/// core, capped so each shard keeps at least [`MIN_ENVS_PER_AUTO_SHARD`]
+/// envs; the result is always clamped to `[1, num_envs]`.
+pub fn auto_shards(requested: usize, num_envs: usize) -> usize {
+    let k = if requested == 0 {
+        let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        cores.min(num_envs / MIN_ENVS_PER_AUTO_SHARD)
+    } else {
+        requested
+    };
+    k.clamp(1, num_envs.max(1))
+}
+
 #[cfg(test)]
 pub(crate) mod testutil {
     use super::*;
 
-    /// Generic conformance suite every task must pass.
+    /// Factory signature for [`conformance_with`]: `(task, n, seed)`.
+    pub type EnvFactory<'a> = &'a dyn Fn(&str, usize, u64) -> Result<Box<dyn VecEnv>>;
+
+    /// Generic conformance suite every task must pass (plain factory).
     pub fn conformance(task: &str) {
+        conformance_with(task, &make);
+    }
+
+    /// Conformance suite over an arbitrary env factory — the same checks
+    /// are run against sharded envs in `sharded::tests`.
+    pub fn conformance_with(task: &str, factory: EnvFactory<'_>) {
         let n = 8;
-        let mut env = make(task, n, 7).unwrap();
+        let mut env = factory(task, n, 7).unwrap();
         assert_eq!(env.num_envs(), n);
         let (od, ad) = (env.obs_dim(), env.act_dim());
         assert!(od > 0 && ad > 0);
@@ -145,8 +191,8 @@ pub(crate) mod testutil {
         assert!(saw_done, "{task}: no episode ever terminated");
 
         // Determinism: same seed, same trajectory.
-        let mut e1 = make(task, 4, 42).unwrap();
-        let mut e2 = make(task, 4, 42).unwrap();
+        let mut e1 = factory(task, 4, 42).unwrap();
+        let mut e2 = factory(task, 4, 42).unwrap();
         let mut o1 = vec![0.0; 4 * od];
         let mut o2 = vec![0.0; 4 * od];
         e1.reset_all(&mut o1);
@@ -179,6 +225,20 @@ mod tests {
     #[test]
     fn unknown_task_rejected() {
         assert!(make("nope", 1, 0).is_err());
+    }
+
+    #[test]
+    fn auto_shards_bounds() {
+        // Explicit requests are honored, clamped to the env count.
+        assert_eq!(auto_shards(3, 8), 3);
+        assert_eq!(auto_shards(64, 8), 8);
+        assert_eq!(auto_shards(5, 0), 1);
+        // Auto mode keeps at least MIN_ENVS_PER_AUTO_SHARD envs per shard
+        // (small-N runs stay on the zero-overhead single-core path).
+        assert_eq!(auto_shards(0, 32), 1);
+        let k = auto_shards(0, 256);
+        assert!((1..=256 / MIN_ENVS_PER_AUTO_SHARD).contains(&k), "k={k}");
+        assert!(auto_shards(0, 1_000_000) >= 1);
     }
 
     #[test]

@@ -1,0 +1,307 @@
+//! Multi-core environment stepping: partition a task's N environments
+//! into K shards, each an independent `VecEnv`, stepped in lockstep on
+//! scoped worker threads.
+//!
+//! The paper's Actor is the throughput-critical process — with tens of
+//! thousands of environments, stepping them on one core caps the whole
+//! pipeline (PAPERS.md: Stooke & Abbeel's parallelized simulation). The
+//! shard wrapper keeps the `VecEnv` contract intact: flat `f32` batches,
+//! auto-reset semantics, and buffer reuse (per-shard output buffers are
+//! created once; each step spawns scoped worker threads, so auto-shard
+//! resolution keeps a minimum batch per shard to amortize that cost).
+//!
+//! Determinism: shard k is seeded from `(seed, k)` only, so a fixed
+//! `(seed, shard_count)` pair reproduces trajectories bit-for-bit.
+//! Different shard counts are *different* (equally valid) experiments —
+//! exactly like changing N.
+
+use super::{StepOut, VecEnv};
+use anyhow::{ensure, Result};
+
+/// One shard: an inner batched env plus its persistent output buffers.
+struct Shard {
+    env: Box<dyn VecEnv>,
+    n: usize,
+    out: StepOut,
+}
+
+/// K independent shards of one task, presented as a single `VecEnv`.
+pub struct ShardedEnv {
+    shards: Vec<Shard>,
+    num_envs: usize,
+    obs_dim: usize,
+    act_dim: usize,
+    critic_obs_dim: usize,
+    max_episode_len: u32,
+    sim_cost: f32,
+}
+
+/// Derive shard k's seed from the run seed (SplitMix64 finalizer so
+/// adjacent shards get decorrelated streams).
+fn shard_seed(seed: u64, k: usize) -> u64 {
+    let mut z = seed ^ 0xD1B5_4A32_D192_ED03u64.wrapping_mul(k as u64 + 1);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl ShardedEnv {
+    /// Partition `num_envs` environments of `task` into `shards` shards
+    /// (sizes balanced to within one env). `shards` is clamped to
+    /// `[1, num_envs]`.
+    pub fn new(task: &str, num_envs: usize, seed: u64, shards: usize) -> Result<Self> {
+        ensure!(num_envs > 0, "sharded env needs at least one environment");
+        let k = shards.clamp(1, num_envs);
+        let base = num_envs / k;
+        let rem = num_envs % k;
+        let mut parts = Vec::with_capacity(k);
+        for i in 0..k {
+            let n = base + usize::from(i < rem);
+            let env = super::make(task, n, shard_seed(seed, i))?;
+            let od = env.obs_dim();
+            parts.push(Shard { env, n, out: StepOut::new(n, od) });
+        }
+        let first = &parts[0].env;
+        Ok(ShardedEnv {
+            num_envs,
+            obs_dim: first.obs_dim(),
+            act_dim: first.act_dim(),
+            critic_obs_dim: first.critic_obs_dim(),
+            max_episode_len: first.max_episode_len(),
+            sim_cost: first.sim_cost(),
+            shards: parts,
+        })
+    }
+
+    /// Number of shards (worker threads used per step).
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+impl VecEnv for ShardedEnv {
+    fn num_envs(&self) -> usize {
+        self.num_envs
+    }
+    fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+    fn act_dim(&self) -> usize {
+        self.act_dim
+    }
+    fn critic_obs_dim(&self) -> usize {
+        self.critic_obs_dim
+    }
+    fn max_episode_len(&self) -> u32 {
+        self.max_episode_len
+    }
+    fn sim_cost(&self) -> f32 {
+        self.sim_cost
+    }
+
+    fn reset_all(&mut self, obs: &mut [f32]) {
+        let od = self.obs_dim;
+        let mut rest = obs;
+        for sh in self.shards.iter_mut() {
+            let (head, tail) = rest.split_at_mut(sh.n * od);
+            sh.env.reset_all(head);
+            rest = tail;
+        }
+    }
+
+    fn step(&mut self, actions: &[f32], out: &mut StepOut) {
+        let (od, ad) = (self.obs_dim, self.act_dim);
+        debug_assert_eq!(actions.len(), self.num_envs * ad);
+        if self.shards.len() == 1 {
+            self.shards[0].env.step(actions, out);
+            return;
+        }
+        // Hand each shard its action slice and disjoint output windows;
+        // workers step into their persistent buffers and blit results.
+        std::thread::scope(|scope| {
+            let mut acts_rest = actions;
+            let mut obs_rest: &mut [f32] = &mut out.obs;
+            let mut rew_rest: &mut [f32] = &mut out.reward;
+            let mut done_rest: &mut [f32] = &mut out.done;
+            for sh in self.shards.iter_mut() {
+                let n = sh.n;
+                let (a, ar) = acts_rest.split_at(n * ad);
+                acts_rest = ar;
+                let (o, or) = obs_rest.split_at_mut(n * od);
+                obs_rest = or;
+                let (r, rr) = rew_rest.split_at_mut(n);
+                rew_rest = rr;
+                let (d, dr) = done_rest.split_at_mut(n);
+                done_rest = dr;
+                scope.spawn(move || {
+                    sh.env.step(a, &mut sh.out);
+                    o.copy_from_slice(&sh.out.obs);
+                    r.copy_from_slice(&sh.out.reward);
+                    d.copy_from_slice(&sh.out.done);
+                });
+            }
+        });
+    }
+
+    fn fill_critic_obs(&self, out: &mut [f32]) {
+        let cd = self.critic_obs_dim;
+        let mut rest = out;
+        for sh in &self.shards {
+            let (head, tail) = rest.split_at_mut(sh.n * cd);
+            sh.env.fill_critic_obs(head);
+            rest = tail;
+        }
+    }
+
+    fn success_rate(&self) -> Option<f32> {
+        let mut acc = 0.0f32;
+        let mut weight = 0usize;
+        for sh in &self.shards {
+            if let Some(s) = sh.env.success_rate() {
+                acc += s * sh.n as f32;
+                weight += sh.n;
+            }
+        }
+        if weight > 0 {
+            Some(acc / weight as f32)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{make_sharded, testutil, StepOut, TASK_NAMES};
+    use super::*;
+
+    /// The generic conformance suite, run through a 3-shard factory so
+    /// shard sizes are uneven (8 envs -> 3+3+2, 4 envs -> 2+1+1).
+    fn sharded_factory(task: &str, n: usize, seed: u64) -> Result<Box<dyn VecEnv>> {
+        make_sharded(task, n, seed, 3)
+    }
+
+    #[test]
+    fn conformance_sharded_ant() {
+        testutil::conformance_with("ant", &sharded_factory);
+    }
+    #[test]
+    fn conformance_sharded_humanoid() {
+        testutil::conformance_with("humanoid", &sharded_factory);
+    }
+    #[test]
+    fn conformance_sharded_anymal() {
+        testutil::conformance_with("anymal", &sharded_factory);
+    }
+    #[test]
+    fn conformance_sharded_shadow_hand() {
+        testutil::conformance_with("shadow_hand", &sharded_factory);
+    }
+    #[test]
+    fn conformance_sharded_allegro_hand() {
+        testutil::conformance_with("allegro_hand", &sharded_factory);
+    }
+    #[test]
+    fn conformance_sharded_franka_cube() {
+        testutil::conformance_with("franka_cube", &sharded_factory);
+    }
+    #[test]
+    fn conformance_sharded_ballbalance() {
+        testutil::conformance_with("ballbalance_vision", &sharded_factory);
+    }
+    #[test]
+    fn conformance_sharded_dclaw() {
+        testutil::conformance_with("dclaw", &sharded_factory);
+    }
+
+    #[test]
+    fn all_tasks_shardable() {
+        for t in TASK_NAMES {
+            let env = make_sharded(t, 5, 0, 2).unwrap();
+            assert_eq!(env.num_envs(), 5, "{t}");
+        }
+    }
+
+    #[test]
+    fn bit_deterministic_for_fixed_seed_and_shard_count() {
+        let mut e1 = ShardedEnv::new("ant", 16, 9, 4).unwrap();
+        let mut e2 = ShardedEnv::new("ant", 16, 9, 4).unwrap();
+        let od = e1.obs_dim();
+        let ad = e1.act_dim();
+        let mut o1 = vec![0.0f32; 16 * od];
+        let mut o2 = vec![0.0f32; 16 * od];
+        e1.reset_all(&mut o1);
+        e2.reset_all(&mut o2);
+        assert_eq!(o1, o2);
+        let mut s1 = StepOut::new(16, od);
+        let mut s2 = StepOut::new(16, od);
+        let mut rng = crate::util::Rng::new(5);
+        let mut acts = vec![0.0f32; 16 * ad];
+        for _ in 0..50 {
+            rng.fill_uniform(&mut acts, -1.0, 1.0);
+            e1.step(&acts, &mut s1);
+            e2.step(&acts, &mut s2);
+            assert_eq!(s1.obs, s2.obs);
+            assert_eq!(s1.reward, s2.reward);
+            assert_eq!(s1.done, s2.done);
+        }
+    }
+
+    #[test]
+    fn shard_count_is_clamped_to_num_envs() {
+        let env = ShardedEnv::new("ant", 3, 0, 64).unwrap();
+        assert_eq!(env.num_shards(), 3);
+        assert_eq!(env.num_envs(), 3);
+    }
+
+    #[test]
+    fn uneven_shards_cover_all_envs() {
+        let mut env = ShardedEnv::new("anymal", 7, 1, 3).unwrap();
+        assert_eq!(env.num_shards(), 3);
+        let od = env.obs_dim();
+        let mut obs = vec![f32::NAN; 7 * od];
+        env.reset_all(&mut obs);
+        assert!(obs.iter().all(|v| v.is_finite()));
+        let mut out = StepOut::new(7, od);
+        let acts = vec![0.25f32; 7 * env.act_dim()];
+        out.obs.fill(f32::NAN);
+        out.reward.fill(f32::NAN);
+        out.done.fill(f32::NAN);
+        env.step(&acts, &mut out);
+        assert!(out.obs.iter().all(|v| v.is_finite()), "every window written");
+        assert!(out.reward.iter().all(|v| v.is_finite()));
+        assert!(out.done.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn vision_critic_obs_spans_shards() {
+        let mut env = ShardedEnv::new("ballbalance_vision", 6, 3, 2).unwrap();
+        let (od, cd) = (env.obs_dim(), env.critic_obs_dim());
+        assert_ne!(od, cd, "ballbalance is asymmetric");
+        let mut obs = vec![0.0f32; 6 * od];
+        env.reset_all(&mut obs);
+        let mut cobs = vec![f32::NAN; 6 * cd];
+        env.fill_critic_obs(&mut cobs);
+        assert!(cobs.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn success_rate_averages_over_shards() {
+        // DClaw defines a rolling success metric; sharded must expose it.
+        let mut env = ShardedEnv::new("dclaw", 6, 2, 3).unwrap();
+        let od = env.obs_dim();
+        let mut obs = vec![0.0f32; 6 * od];
+        env.reset_all(&mut obs);
+        let mut out = StepOut::new(6, od);
+        let acts = vec![0.0f32; 6 * env.act_dim()];
+        for _ in 0..(env.max_episode_len() + 10) {
+            env.step(&acts, &mut out);
+        }
+        let s = env.success_rate();
+        assert!(s.is_some());
+        assert!((0.0..=1.0).contains(&s.unwrap()));
+        // Symmetric locomotion tasks define none.
+        let ant = ShardedEnv::new("ant", 4, 0, 2).unwrap();
+        assert!(ant.success_rate().is_none());
+    }
+}

@@ -13,6 +13,6 @@ mod state;
 mod transition;
 
 pub use image::ImageBuffer;
-pub use nstep::NStepAssembler;
+pub use nstep::{NStepAssembler, ReadyBatch};
 pub use state::StateBuffer;
 pub use transition::{SampleBatch, TransitionBuffer};

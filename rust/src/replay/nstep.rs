@@ -21,6 +21,41 @@ pub struct NStepOut<'a> {
     pub cs2: &'a [f32],
 }
 
+/// Contiguous staging area of completed n-step rows (struct-of-arrays),
+/// refilled on every [`NStepAssembler::push_step_into`] call and ingested
+/// wholesale by `TransitionBuffer::push_batch` — the batched replacement
+/// for per-transition callback pushes. Vectors retain capacity across
+/// steps, so steady-state refills are allocation-free.
+#[derive(Debug, Default)]
+pub struct ReadyBatch {
+    /// Number of staged rows.
+    pub len: usize,
+    pub s: Vec<f32>,
+    pub a: Vec<f32>,
+    pub rn: Vec<f32>,
+    pub s2: Vec<f32>,
+    pub gmask: Vec<f32>,
+    pub cs: Vec<f32>,
+    pub cs2: Vec<f32>,
+}
+
+impl ReadyBatch {
+    pub fn clear(&mut self) {
+        self.len = 0;
+        self.s.clear();
+        self.a.clear();
+        self.rn.clear();
+        self.s2.clear();
+        self.gmask.clear();
+        self.cs.clear();
+        self.cs2.clear();
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
 /// Per-environment circular window of the last n steps.
 pub struct NStepAssembler {
     n_envs: usize,
@@ -37,6 +72,8 @@ pub struct NStepAssembler {
     // Number of valid slots / ring head, per env.
     filled: Vec<usize>,
     head: Vec<usize>,
+    // Staging reused by the callback-style `push_step` wrapper.
+    scratch: ReadyBatch,
 }
 
 impl NStepAssembler {
@@ -66,6 +103,7 @@ impl NStepAssembler {
             cs: vec![0.0; n_envs * nstep * cobs_dim],
             filled: vec![0; n_envs],
             head: vec![0; n_envs],
+            scratch: ReadyBatch::default(),
         }
     }
 
@@ -74,12 +112,14 @@ impl NStepAssembler {
         env * self.nstep + k
     }
 
-    /// Feed one vectorized step; `emit` is called for every completed
-    /// n-step transition. `s`/`a`/`r`/`done` are the pre-step state, the
-    /// action, the resulting reward and termination; `s2` is the post-step
-    /// observation (already auto-reset if done — the mask handles it).
+    /// Feed one vectorized step, staging every completed n-step transition
+    /// into `ready` as contiguous struct-of-arrays rows (cleared first).
+    /// `s`/`a`/`r`/`done` are the pre-step state, the action, the
+    /// resulting reward and termination; `s2` is the post-step observation
+    /// (already auto-reset if done — the mask handles it). The staged rows
+    /// feed `TransitionBuffer::push_batch` directly.
     #[allow(clippy::too_many_arguments)]
-    pub fn push_step<F: FnMut(NStepOut<'_>)>(
+    pub fn push_step_into(
         &mut self,
         s: &[f32],
         a: &[f32],
@@ -88,8 +128,9 @@ impl NStepAssembler {
         done: &[f32],
         cs: &[f32],
         cs2: &[f32],
-        mut emit: F,
+        ready: &mut ReadyBatch,
     ) {
+        ready.clear();
         let (od, ad, cd, n) = (self.obs_dim, self.act_dim, self.cobs_dim, self.nstep);
         for e in 0..self.n_envs {
             // Append (s, a, r) into env e's window.
@@ -112,23 +153,55 @@ impl NStepAssembler {
                 // Flush the whole window: each suffix becomes a transition
                 // ending at the terminal state with gmask 0.
                 while self.filled[e] > 0 {
-                    self.emit_front(e, s2_row, cs2_row, 0.0, &mut emit);
+                    self.emit_front(e, s2_row, cs2_row, 0.0, ready);
                 }
             } else if self.filled[e] == n {
                 // Full window: emit the oldest entry with gamma^n bootstrap.
                 let gmask = self.gamma.powi(n as i32);
-                self.emit_front(e, s2_row, cs2_row, gmask, &mut emit);
+                self.emit_front(e, s2_row, cs2_row, gmask, ready);
             }
         }
     }
 
-    fn emit_front<F: FnMut(NStepOut<'_>)>(
+    /// Callback-style wrapper over [`push_step_into`] (kept for tests and
+    /// single-transition consumers): stages into an internal scratch
+    /// batch, then emits row views in order.
+    #[allow(clippy::too_many_arguments)]
+    pub fn push_step<F: FnMut(NStepOut<'_>)>(
+        &mut self,
+        s: &[f32],
+        a: &[f32],
+        r: &[f32],
+        s2: &[f32],
+        done: &[f32],
+        cs: &[f32],
+        cs2: &[f32],
+        mut emit: F,
+    ) {
+        let mut scratch = std::mem::take(&mut self.scratch);
+        self.push_step_into(s, a, r, s2, done, cs, cs2, &mut scratch);
+        let (od, ad, cd) = (self.obs_dim, self.act_dim, self.cobs_dim);
+        for i in 0..scratch.len {
+            emit(NStepOut {
+                s: &scratch.s[i * od..(i + 1) * od],
+                a: &scratch.a[i * ad..(i + 1) * ad],
+                rn: scratch.rn[i],
+                s2: &scratch.s2[i * od..(i + 1) * od],
+                gmask: scratch.gmask[i],
+                cs: if cd > 0 { &scratch.cs[i * cd..(i + 1) * cd] } else { &[] },
+                cs2: if cd > 0 { &scratch.cs2[i * cd..(i + 1) * cd] } else { &[] },
+            });
+        }
+        self.scratch = scratch;
+    }
+
+    fn emit_front(
         &mut self,
         e: usize,
         s2: &[f32],
         cs2: &[f32],
         gmask: f32,
-        emit: &mut F,
+        ready: &mut ReadyBatch,
     ) {
         let (od, ad, cd, n) = (self.obs_dim, self.act_dim, self.cobs_dim, self.nstep);
         let k = self.filled[e];
@@ -139,15 +212,16 @@ impl NStepAssembler {
             rn += self.gamma.powi(j as i32) * self.r[sl];
         }
         let front = self.slot(e, self.head[e]);
-        emit(NStepOut {
-            s: &self.s[front * od..(front + 1) * od],
-            a: &self.a[front * ad..(front + 1) * ad],
-            rn,
-            s2,
-            gmask,
-            cs: if cd > 0 { &self.cs[front * cd..(front + 1) * cd] } else { &[] },
-            cs2,
-        });
+        ready.s.extend_from_slice(&self.s[front * od..(front + 1) * od]);
+        ready.a.extend_from_slice(&self.a[front * ad..(front + 1) * ad]);
+        ready.rn.push(rn);
+        ready.s2.extend_from_slice(s2);
+        ready.gmask.push(gmask);
+        if cd > 0 {
+            ready.cs.extend_from_slice(&self.cs[front * cd..(front + 1) * cd]);
+            ready.cs2.extend_from_slice(cs2);
+        }
+        ready.len += 1;
         self.head[e] = (self.head[e] + 1) % n;
         self.filled[e] -= 1;
     }
@@ -228,6 +302,84 @@ mod tests {
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].0, 20.0);
         assert_eq!(out[0].1, 2.0);
+    }
+
+    /// The staged (`push_step_into`) and callback (`push_step`) paths must
+    /// emit identical rows in identical order under random terminations.
+    #[test]
+    fn staged_and_callback_paths_agree() {
+        use crate::util::Rng;
+        for seed in 0..8u64 {
+            let mut rng = Rng::new(seed);
+            let n_envs = 1 + rng.below(3);
+            let nstep = 1 + rng.below(4);
+            let (od, ad) = (2, 1);
+            let mut a1 = NStepAssembler::new(n_envs, nstep, 0.9, od, ad);
+            let mut a2 = NStepAssembler::new(n_envs, nstep, 0.9, od, ad);
+            let mut ready = ReadyBatch::default();
+            for t in 0..60 {
+                let mut s = vec![0.0f32; n_envs * od];
+                let mut a = vec![0.0f32; n_envs * ad];
+                let mut r = vec![0.0f32; n_envs];
+                let mut s2 = vec![0.0f32; n_envs * od];
+                let mut d = vec![0.0f32; n_envs];
+                rng.fill_uniform(&mut s, -1.0, 1.0);
+                rng.fill_uniform(&mut a, -1.0, 1.0);
+                rng.fill_uniform(&mut r, -1.0, 1.0);
+                rng.fill_uniform(&mut s2, -1.0, 1.0);
+                for dv in d.iter_mut() {
+                    *dv = if rng.uniform() < 0.25 { 1.0 } else { 0.0 };
+                }
+                a2.push_step_into(&s, &a, &r, &s2, &d, &[], &[], &mut ready);
+                let mut cb = ReadyBatch::default();
+                a1.push_step(&s, &a, &r, &s2, &d, &[], &[], |row| {
+                    cb.s.extend_from_slice(row.s);
+                    cb.a.extend_from_slice(row.a);
+                    cb.rn.push(row.rn);
+                    cb.s2.extend_from_slice(row.s2);
+                    cb.gmask.push(row.gmask);
+                    cb.len += 1;
+                });
+                assert_eq!(cb.len, ready.len, "seed {seed} step {t}");
+                assert_eq!(cb.s, ready.s);
+                assert_eq!(cb.a, ready.a);
+                assert_eq!(cb.rn, ready.rn);
+                assert_eq!(cb.s2, ready.s2);
+                assert_eq!(cb.gmask, ready.gmask);
+            }
+        }
+    }
+
+    /// The staged rows flow into `TransitionBuffer::push_batch` without
+    /// losing or duplicating transitions (conservation through the whole
+    /// batched ingest path).
+    #[test]
+    fn ready_batch_feeds_push_batch_conserving_rows() {
+        use crate::replay::TransitionBuffer;
+        use crate::util::Rng;
+        let (n_envs, nstep, od, ad) = (4, 3, 2, 1);
+        let mut asm = NStepAssembler::new(n_envs, nstep, 0.95, od, ad);
+        let mut replay = TransitionBuffer::new(10_000, od, ad);
+        let mut ready = ReadyBatch::default();
+        let mut rng = Rng::new(17);
+        let steps = 100;
+        let s = vec![0.5f32; n_envs * od];
+        let a = vec![0.5f32; n_envs * ad];
+        let r = vec![1.0f32; n_envs];
+        let mut d = vec![0.0f32; n_envs];
+        for t in 0..steps {
+            for dv in d.iter_mut() {
+                *dv = if rng.uniform() < 0.2 || t == steps - 1 { 1.0 } else { 0.0 };
+            }
+            asm.push_step_into(&s, &a, &r, &s, &d, &[], &[], &mut ready);
+            replay.push_batch(
+                ready.len, &ready.s, &ready.a, &ready.rn, &ready.s2, &ready.gmask,
+                &ready.cs, &ready.cs2,
+            );
+        }
+        // Terminal final step flushes every window: conservation holds.
+        assert_eq!(replay.total_inserted, (steps * n_envs) as u64);
+        assert_eq!(replay.len(), steps * n_envs);
     }
 
     /// Property: total emitted transitions == total pushed steps once all

@@ -15,6 +15,9 @@ pub struct SampleBatch {
     /// Optional critic observations (asymmetric tasks); empty otherwise.
     pub cs: Vec<f32>,
     pub cs2: Vec<f32>,
+    /// Scratch for the sampled row indices — generated once per `sample`
+    /// call, then gathered field-by-field (reused across calls).
+    pub idx: Vec<u32>,
 }
 
 impl SampleBatch {
@@ -27,7 +30,31 @@ impl SampleBatch {
             gmask: vec![0.0; batch],
             cs: Vec::new(),
             cs2: Vec::new(),
+            idx: Vec::new(),
         }
+    }
+}
+
+/// Copy `count` rows of width `dim` from `src` (starting at row `skip`)
+/// into the ring `dst` starting at row `start`: one contiguous span, or
+/// two when the write wraps the ring end.
+#[inline]
+fn blit_rows(
+    dst: &mut [f32],
+    start: usize,
+    src: &[f32],
+    skip: usize,
+    first: usize,
+    second: usize,
+    dim: usize,
+) {
+    if dim == 0 {
+        return;
+    }
+    let src = &src[skip * dim..];
+    dst[start * dim..(start + first) * dim].copy_from_slice(&src[..first * dim]);
+    if second > 0 {
+        dst[..second * dim].copy_from_slice(&src[first * dim..(first + second) * dim]);
     }
 }
 
@@ -123,7 +150,54 @@ impl TransitionBuffer {
         self.total_inserted += 1;
     }
 
+    /// Ingest a whole vectorized step of `n` transitions, fields given as
+    /// contiguous row-major batches. Equivalent to `n` calls to [`push`]
+    /// (same final ring layout and head), but each field lands with at
+    /// most two `memcpy` spans — one, unless the write wraps the ring.
+    #[allow(clippy::too_many_arguments)]
+    pub fn push_batch(
+        &mut self,
+        n: usize,
+        s: &[f32],
+        a: &[f32],
+        rn: &[f32],
+        s2: &[f32],
+        gmask: &[f32],
+        cs: &[f32],
+        cs2: &[f32],
+    ) {
+        if n == 0 {
+            return;
+        }
+        debug_assert_eq!(s.len(), n * self.obs_dim);
+        debug_assert_eq!(a.len(), n * self.act_dim);
+        debug_assert_eq!(rn.len(), n);
+        debug_assert_eq!(s2.len(), n * self.obs_dim);
+        debug_assert_eq!(gmask.len(), n);
+        debug_assert_eq!(cs.len(), n * self.cobs_dim);
+        debug_assert_eq!(cs2.len(), n * self.cobs_dim);
+        // A batch larger than the ring: only the trailing `capacity` rows
+        // survive, landing exactly where n sequential pushes would put them.
+        let skip = n.saturating_sub(self.capacity);
+        let count = n - skip;
+        let start = (self.head + skip) % self.capacity;
+        let first = count.min(self.capacity - start);
+        let second = count - first;
+        blit_rows(&mut self.s, start, s, skip, first, second, self.obs_dim);
+        blit_rows(&mut self.a, start, a, skip, first, second, self.act_dim);
+        blit_rows(&mut self.rn, start, rn, skip, first, second, 1);
+        blit_rows(&mut self.s2, start, s2, skip, first, second, self.obs_dim);
+        blit_rows(&mut self.gmask, start, gmask, skip, first, second, 1);
+        blit_rows(&mut self.cs, start, cs, skip, first, second, self.cobs_dim);
+        blit_rows(&mut self.cs2, start, cs2, skip, first, second, self.cobs_dim);
+        self.head = (self.head + n) % self.capacity;
+        self.len = (self.len + n).min(self.capacity);
+        self.total_inserted += n as u64;
+    }
+
     /// Uniform sample with replacement into `out` (paper's sampling).
+    /// The index vector is generated once up front, then each field is
+    /// gathered in its own pass — one hot array at a time.
     pub fn sample(&self, rng: &mut Rng, batch: usize, out: &mut SampleBatch) {
         assert!(self.len > 0, "sampling from empty buffer");
         let (od, ad, cd) = (self.obs_dim, self.act_dim, self.cobs_dim);
@@ -131,17 +205,33 @@ impl TransitionBuffer {
             out.cs.resize(batch * cd, 0.0);
             out.cs2.resize(batch * cd, 0.0);
         }
-        for b in 0..batch {
-            let i = rng.below(self.len);
+        out.idx.clear();
+        out.idx.reserve(batch);
+        for _ in 0..batch {
+            out.idx.push(rng.below(self.len) as u32);
+        }
+        for (b, &i) in out.idx.iter().enumerate() {
+            let i = i as usize;
             out.s[b * od..(b + 1) * od]
                 .copy_from_slice(&self.s[i * od..(i + 1) * od]);
+        }
+        for (b, &i) in out.idx.iter().enumerate() {
+            let i = i as usize;
             out.a[b * ad..(b + 1) * ad]
                 .copy_from_slice(&self.a[i * ad..(i + 1) * ad]);
-            out.rn[b] = self.rn[i];
+        }
+        for (b, &i) in out.idx.iter().enumerate() {
+            out.rn[b] = self.rn[i as usize];
+            out.gmask[b] = self.gmask[i as usize];
+        }
+        for (b, &i) in out.idx.iter().enumerate() {
+            let i = i as usize;
             out.s2[b * od..(b + 1) * od]
                 .copy_from_slice(&self.s2[i * od..(i + 1) * od]);
-            out.gmask[b] = self.gmask[i];
-            if cd > 0 {
+        }
+        if cd > 0 {
+            for (b, &i) in out.idx.iter().enumerate() {
+                let i = i as usize;
                 out.cs[b * cd..(b + 1) * cd]
                     .copy_from_slice(&self.cs[i * cd..(i + 1) * cd]);
                 out.cs2[b * cd..(b + 1) * cd]
@@ -175,10 +265,106 @@ mod tests {
         assert_eq!(buf.len(), 3);
         push_n(&mut buf, 3, 100.0);
         assert_eq!(buf.len(), 4);
-        // Oldest entries (0,1) evicted; slot values are {2, 100, 101, 102}.
-        let all: Vec<f32> = buf.rn.clone();
-        assert!(all.contains(&2.0));
-        assert!(!all.contains(&0.0) || buf.capacity() > 4);
+        // Oldest entries (0,1) evicted; 101 and 102 wrapped onto their
+        // slots. Exact post-wrap layout: slot i holds the i-th most
+        // recently usable row modulo the ring.
+        assert_eq!(buf.rn, vec![101.0, 102.0, 2.0, 100.0]);
+        let mut sorted = buf.rn.clone();
+        sorted.sort_by(f32::total_cmp);
+        assert_eq!(sorted, vec![2.0, 100.0, 101.0, 102.0]);
+    }
+
+    /// `push_batch` must land rows exactly where the equivalent sequence
+    /// of scalar pushes would, including wrap-around at batch (shard)
+    /// boundaries that straddle the ring end.
+    #[test]
+    fn push_batch_matches_scalar_push_across_wrap() {
+        let (od, ad, cap) = (2, 1, 7);
+        let mut scalar = TransitionBuffer::new(cap, od, ad);
+        let mut batched = TransitionBuffer::new(cap, od, ad);
+        // Three uneven "shard" batches (4 + 6 + 3 rows) so the second and
+        // third cross the ring end at different offsets.
+        let mut next = 0.0f32;
+        for chunk in [4usize, 6, 3] {
+            let mut s = Vec::new();
+            let mut a = Vec::new();
+            let mut rn = Vec::new();
+            let mut s2 = Vec::new();
+            let mut gm = Vec::new();
+            for _ in 0..chunk {
+                let v = next;
+                next += 1.0;
+                s.extend_from_slice(&[v, v + 0.25]);
+                a.push(v + 0.5);
+                rn.push(v);
+                s2.extend_from_slice(&[v + 0.75, v + 1.0]);
+                gm.push(0.9);
+            }
+            for k in 0..chunk {
+                scalar.push(
+                    &s[k * od..(k + 1) * od],
+                    &a[k * ad..(k + 1) * ad],
+                    rn[k],
+                    &s2[k * od..(k + 1) * od],
+                    gm[k],
+                    &[],
+                    &[],
+                );
+            }
+            batched.push_batch(chunk, &s, &a, &rn, &s2, &gm, &[], &[]);
+            assert_eq!(scalar.s, batched.s, "s after chunk of {chunk}");
+            assert_eq!(scalar.a, batched.a);
+            assert_eq!(scalar.rn, batched.rn);
+            assert_eq!(scalar.s2, batched.s2);
+            assert_eq!(scalar.gmask, batched.gmask);
+            assert_eq!(scalar.head, batched.head);
+            assert_eq!(scalar.len, batched.len);
+            assert_eq!(scalar.total_inserted, batched.total_inserted);
+        }
+    }
+
+    /// A single batch larger than the whole ring keeps only the trailing
+    /// `capacity` rows, in scalar-push layout.
+    #[test]
+    fn push_batch_larger_than_capacity() {
+        let cap = 5;
+        let mut scalar = TransitionBuffer::new(cap, 1, 1);
+        let mut batched = TransitionBuffer::new(cap, 1, 1);
+        // Pre-advance both heads so the oversized batch starts mid-ring.
+        for buf in [&mut scalar, &mut batched] {
+            buf.push(&[-1.0], &[-1.0], -1.0, &[-1.0], 0.0, &[], &[]);
+            buf.push(&[-2.0], &[-2.0], -2.0, &[-2.0], 0.0, &[], &[]);
+        }
+        let n = 13;
+        let rows: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        for &v in &rows {
+            scalar.push(&[v], &[v], v, &[v], 0.5, &[], &[]);
+        }
+        let gm = vec![0.5; n];
+        batched.push_batch(n, &rows, &rows, &rows, &rows, &gm, &[], &[]);
+        assert_eq!(scalar.rn, batched.rn);
+        assert_eq!(scalar.s, batched.s);
+        assert_eq!(scalar.head, batched.head);
+        assert_eq!(scalar.len, cap);
+        assert_eq!(batched.len, cap);
+        assert_eq!(batched.total_inserted, scalar.total_inserted);
+    }
+
+    #[test]
+    fn push_batch_with_critic_obs() {
+        let mut buf = TransitionBuffer::with_critic_obs(3, 1, 1, 2);
+        // 4 rows into a 3-ring: row 0 evicted, rows 1..4 survive.
+        let s: Vec<f32> = (0..4).map(|i| i as f32).collect();
+        let cs: Vec<f32> = (0..8).map(|i| 10.0 + i as f32).collect();
+        buf.push_batch(4, &s, &s, &s, &s, &[1.0; 4], &cs, &cs);
+        let mut rng = Rng::new(3);
+        let mut out = SampleBatch::new(8, 1, 1);
+        buf.sample(&mut rng, 8, &mut out);
+        for (k, v) in out.rn.iter().enumerate() {
+            assert!((1.0..=3.0).contains(v), "row {k}: evicted value {v}");
+            let row = *v as usize;
+            assert_eq!(out.cs[k * 2..(k + 1) * 2], cs[row * 2..(row + 1) * 2]);
+        }
     }
 
     #[test]
