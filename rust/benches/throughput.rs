@@ -16,7 +16,7 @@ use pql::coordinator::PaceController;
 use pql::envs::{self, StepOut};
 use pql::exploration::Noise;
 use pql::replay::{NStepAssembler, SampleBatch, TransitionBuffer};
-use pql::runtime::{infer_chunked, Engine, HostTensor, OptState};
+use pql::runtime::{infer_chunked, Engine, FeedDims, FeedPlan, HostTensor, OptState, Variant};
 use pql::util::Rng;
 use std::path::Path;
 use std::time::Instant;
@@ -176,6 +176,139 @@ fn bench_data_plane() -> Vec<PlaneRecord> {
     records
 }
 
+/// Learner feed plane, host side (PERF.md §Learner feed plane): input
+/// assembly for a critic-update-shaped artifact, owned `HostTensor`
+/// clones (the pre-FeedPlan path) vs `FeedFrame` slice binding + view
+/// resolution, at B ∈ {512, 4096, 16384}. Runs without artifacts — this
+/// isolates exactly the per-iteration heap traffic the feed plane
+/// removed.
+fn bench_learner_feed() -> Vec<PlaneRecord> {
+    let mut records = Vec::new();
+    let (od, ad) = (30usize, 12usize);
+    let (pa, pc) = (50_000usize, 60_000usize);
+    let mut rng = Rng::new(5);
+    for &b in &[512usize, 4096, 16384] {
+        let iters = 300;
+        let critic = OptState::new(vec![0.1; pc]);
+        let target = vec![0.2f32; pc];
+        let theta_a = vec![0.3f32; pa];
+        let mut s = vec![0.0f32; b * od];
+        let mut a = vec![0.0f32; b * ad];
+        rng.fill_normal(&mut s);
+        rng.fill_uniform(&mut a, -1.0, 1.0);
+        let rn = vec![0.5f32; b];
+        let s2 = s.clone();
+        let gm = vec![0.97f32; b];
+        let mu = vec![0.0f32; od];
+        let var = vec![1.0f32; od];
+
+        let name = format!("feed assemble owned clones (B={b})");
+        let (ms, rate) = bench(&name, 1.0, "assemblies", iters, || {
+            let [th, m, v, t] = critic.tensors();
+            let inputs = vec![
+                th, m, v, t,
+                HostTensor::vec(target.clone()),
+                HostTensor::vec(theta_a.clone()),
+                HostTensor::new(&[b, od], s.clone()),
+                HostTensor::new(&[b, ad], a.clone()),
+                HostTensor::vec(rn.clone()),
+                HostTensor::new(&[b, od], s2.clone()),
+                HostTensor::vec(gm.clone()),
+                HostTensor::vec(mu.clone()),
+                HostTensor::vec(var.clone()),
+                HostTensor::scalar1(5e-4),
+            ];
+            std::hint::black_box(&inputs);
+        });
+        records.push(PlaneRecord {
+            group: "assemble_owned",
+            name,
+            n: b,
+            ms_per_iter: ms,
+            per_sec: rate,
+            unit: "assemblies",
+        });
+
+        let dims = FeedDims {
+            batch: b,
+            obs_dim: od,
+            act_dim: ad,
+            critic_obs_dim: od,
+            actor_params: pa,
+            critic_params: pc,
+        };
+        let plan = FeedPlan::critic_update(Variant::Ddpg, &dims, 5e-4);
+        let name = format!("feed assemble FeedFrame refs (B={b})");
+        let (ms, rate) = bench(&name, 1.0, "assemblies", iters, || {
+            let mut f = plan.frame();
+            f.bind_adam(&critic).unwrap();
+            f.bind("target", &target).unwrap();
+            f.bind("theta_a", &theta_a).unwrap();
+            f.bind("s", &s).unwrap();
+            f.bind("a", &a).unwrap();
+            f.bind("rn", &rn).unwrap();
+            f.bind("s2", &s2).unwrap();
+            f.bind("gmask", &gm).unwrap();
+            f.bind("mu", &mu).unwrap();
+            f.bind("var", &var).unwrap();
+            let total: usize =
+                f.with_views(|views| views.iter().map(|v| v.data.len()).sum()).unwrap();
+            std::hint::black_box(total);
+        });
+        records.push(PlaneRecord {
+            group: "assemble_ref",
+            name,
+            n: b,
+            ms_per_iter: ms,
+            per_sec: rate,
+            unit: "assemblies",
+        });
+    }
+    records
+}
+
+/// Serialize the learner-feed records to `BENCH_learner_feed.json` at the
+/// repository root. Called once after the host-side section and again
+/// (overwriting, now including `run_owned`/`run_ref`) when PJRT artifacts
+/// are available.
+fn write_learner_feed_json(records: &[PlaneRecord]) -> std::io::Result<std::path::PathBuf> {
+    let rate_of = |group: &str, n: usize| {
+        records
+            .iter()
+            .find(|r| r.group == group && r.n == n)
+            .map(|r| r.per_sec)
+            .unwrap_or(0.0)
+    };
+    let mut rows = Vec::new();
+    for r in records {
+        rows.push(format!(
+            "    {{\"group\": \"{}\", \"name\": \"{}\", \"n\": {}, \"ms_per_iter\": {:.6}, \"per_sec\": {:.1}, \"unit\": \"{}\"}}",
+            r.group, r.name, r.n, r.ms_per_iter, r.per_sec, r.unit
+        ));
+    }
+    let mut speedups = Vec::new();
+    for &n in &[512usize, 4096, 16384] {
+        let assemble = rate_of("assemble_ref", n) / rate_of("assemble_owned", n).max(1e-9);
+        let run = if rate_of("run_owned", n) > 0.0 {
+            format!(", \"run_ref_over_owned\": {:.3}",
+                    rate_of("run_ref", n) / rate_of("run_owned", n).max(1e-9))
+        } else {
+            String::new()
+        };
+        speedups.push(format!(
+            "    {{\"n\": {n}, \"assemble_ref_over_owned\": {assemble:.3}{run}}}"
+        ));
+    }
+    let json = format!(
+        "{{\n  \"schema\": \"pql.bench.learner_feed/v1\",\n  \"source\": \"cargo bench --bench throughput\",\n  \"task\": \"ant\",\n  \"results\": [\n{}\n  ],\n  \"speedups\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n"),
+        speedups.join(",\n")
+    );
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_learner_feed.json");
+    std::fs::write(&path, json)?;
+    Ok(path)
+}
+
 /// Serialize the data-plane records to `BENCH_data_plane.json` at the
 /// repository root (machine-readable perf trajectory, PR over PR).
 fn write_data_plane_json(records: &[PlaneRecord]) -> std::io::Result<std::path::PathBuf> {
@@ -302,6 +435,13 @@ fn main() {
     match write_data_plane_json(&plane) {
         Ok(path) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("could not write BENCH_data_plane.json: {e}"),
+    }
+
+    println!("\n== learner feed plane (B = 512 / 4096 / 16384) ==");
+    let mut feed = bench_learner_feed();
+    match write_learner_feed_json(&feed) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_learner_feed.json: {e}"),
     }
 
     println!("\n== L2/L1 through PJRT (artifacts required) ==");
@@ -433,5 +573,97 @@ fn main() {
                 .unwrap();
             std::hint::black_box(&outs);
         });
+    }
+
+    {
+        // Learner feed end-to-end: owned `run` vs FeedPlan + `run_ref` on
+        // the critic update, at whichever sweep batches have artifacts.
+        for &bsz in &[512usize, 4096, 16384] {
+            let aname = m.batch_artifact("critic_update", bsz);
+            let Ok(cu) = engine.load("ant", &aname) else {
+                println!("critic_update B={bsz}: no artifact, skipping");
+                continue;
+            };
+            let critic = OptState::new(t.layouts["critic"].init(&mut r));
+            let target = critic.theta.clone();
+            let theta_a = t.layouts["actor"].init(&mut r);
+            let mu = vec![0.0f32; t.obs_dim];
+            let var = vec![1.0f32; t.obs_dim];
+            let mut s = vec![0.0f32; bsz * t.obs_dim];
+            let mut a = vec![0.0f32; bsz * t.act_dim];
+            r.fill_normal(&mut s);
+            r.fill_uniform(&mut a, -1.0, 1.0);
+            let rn = vec![0.5f32; bsz];
+            let gmask = vec![0.97f32; bsz];
+            let iters = (51_200 / bsz).max(4);
+
+            let bname = format!("critic_update run owned (B={bsz})");
+            let (ms, rate) = bench(&bname, bsz as f64, "rows", iters, || {
+                let [th, mm, vv, tt] = critic.tensors();
+                let outs = cu
+                    .run(&[
+                        th, mm, vv, tt,
+                        HostTensor::vec(target.clone()),
+                        HostTensor::vec(theta_a.clone()),
+                        HostTensor::new(&[bsz, t.obs_dim], s.clone()),
+                        HostTensor::new(&[bsz, t.act_dim], a.clone()),
+                        HostTensor::vec(rn.clone()),
+                        HostTensor::new(&[bsz, t.obs_dim], s.clone()),
+                        HostTensor::vec(gmask.clone()),
+                        HostTensor::vec(mu.clone()),
+                        HostTensor::vec(var.clone()),
+                        HostTensor::scalar1(5e-4),
+                    ])
+                    .unwrap();
+                std::hint::black_box(&outs);
+            });
+            feed.push(PlaneRecord {
+                group: "run_owned",
+                name: bname,
+                n: bsz,
+                ms_per_iter: ms,
+                per_sec: rate,
+                unit: "rows",
+            });
+
+            let dims = FeedDims {
+                batch: bsz,
+                obs_dim: t.obs_dim,
+                act_dim: t.act_dim,
+                critic_obs_dim: t.critic_obs_dim,
+                actor_params: t.layouts["actor"].size,
+                critic_params: t.layouts["critic"].size,
+            };
+            let plan = FeedPlan::critic_update(Variant::Ddpg, &dims, 5e-4);
+            plan.validate(&cu.info).unwrap();
+            let bname = format!("critic_update run_ref FeedPlan (B={bsz})");
+            let (ms, rate) = bench(&bname, bsz as f64, "rows", iters, || {
+                let mut f = plan.frame();
+                f.bind_adam(&critic).unwrap();
+                f.bind("target", &target).unwrap();
+                f.bind("theta_a", &theta_a).unwrap();
+                f.bind("s", &s).unwrap();
+                f.bind("a", &a).unwrap();
+                f.bind("rn", &rn).unwrap();
+                f.bind("s2", &s).unwrap();
+                f.bind("gmask", &gmask).unwrap();
+                f.bind("mu", &mu).unwrap();
+                f.bind("var", &var).unwrap();
+                let outs = f.run(&cu).unwrap();
+                std::hint::black_box(&outs);
+            });
+            feed.push(PlaneRecord {
+                group: "run_ref",
+                name: bname,
+                n: bsz,
+                ms_per_iter: ms,
+                per_sec: rate,
+                unit: "rows",
+            });
+        }
+        match write_learner_feed_json(&feed) {
+            Ok(path) => println!("rewrote {} (with PJRT run groups)", path.display()),
+            Err(e) => eprintln!("could not write BENCH_learner_feed.json: {e}"),
+        }
     }
 }

@@ -11,7 +11,7 @@ use crate::config::TrainConfig;
 use crate::coordinator::ReturnTracker;
 use crate::envs::{self, StepOut};
 use crate::metrics::{Record, RunLog};
-use crate::runtime::{Engine, HostTensor, Manifest, OptState};
+use crate::runtime::{Engine, FeedDims, FeedPlan, Manifest, OptState, PreparedInputs, TensorView};
 use crate::util::{Rng, RunningNorm};
 use anyhow::Result;
 use log::info;
@@ -32,6 +32,21 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path) -> Result<RunLog
     let infer = engine.load(&cfg.task, "ppo_infer")?;
     let update = engine.load(&cfg.task, "ppo_update")?;
     let mut state = OptState::new(tinfo.layouts["ppo"].init(&mut rng));
+
+    // Update-input signature resolved once (critic_params is unused by the
+    // joint ppo layout).
+    let plan = FeedPlan::ppo_update(
+        &FeedDims {
+            batch: b,
+            obs_dim: od,
+            act_dim: ad,
+            critic_obs_dim: cd,
+            actor_params: tinfo.layouts["ppo"].size,
+            critic_params: 0,
+        },
+        cfg.actor_lr,
+    );
+    plan.validate(&update.info)?;
 
     let mut env = envs::make(&cfg.task, n, cfg.seed)?;
     let mut obs = vec![0.0f32; n * od];
@@ -61,6 +76,15 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path) -> Result<RunLog
     let mut ret = vec![0.0f32; h * n];
     let mut noise = vec![0.0f32; n * ad];
     let scale = tinfo.reward_scale;
+
+    // Minibatch gather staging — hoisted so the epoch loops stay
+    // allocation-free and the feed plan binds them by reference.
+    let mut s_mb = vec![0.0f32; b * od];
+    let mut cs_mb = vec![0.0f32; b * cd];
+    let mut a_mb = vec![0.0f32; b * ad];
+    let mut adv_mb = vec![0.0f32; b];
+    let mut ret_mb = vec![0.0f32; b];
+    let mut lp_mb = vec![0.0f32; b];
 
     let mut steps: u64 = 0;
     let mut updates: u64 = 0;
@@ -139,12 +163,6 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path) -> Result<RunLog
                 if mb.len() < b {
                     break; // fixed-shape artifact: drop the remainder
                 }
-                let mut s_mb = vec![0.0f32; b * od];
-                let mut cs_mb = vec![0.0f32; b * cd];
-                let mut a_mb = vec![0.0f32; b * ad];
-                let mut adv_mb = vec![0.0f32; b];
-                let mut ret_mb = vec![0.0f32; b];
-                let mut lp_mb = vec![0.0f32; b];
                 for (k, &i) in mb.iter().enumerate() {
                     s_mb[k * od..(k + 1) * od].copy_from_slice(&rs[i * od..(i + 1) * od]);
                     cs_mb[k * cd..(k + 1) * cd].copy_from_slice(&rcs[i * cd..(i + 1) * cd]);
@@ -155,19 +173,17 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path) -> Result<RunLog
                 }
                 let outs = {
                     let _g = device.enter(cfg.placement[1]);
-                    let [th, m, v, t] = state.tensors();
-                    update.run(&[
-                        th, m, v, t,
-                        HostTensor::new(&[b, od], s_mb),
-                        HostTensor::new(&[b, cd], cs_mb),
-                        HostTensor::new(&[b, ad], a_mb),
-                        HostTensor::vec(adv_mb),
-                        HostTensor::vec(ret_mb),
-                        HostTensor::vec(lp_mb),
-                        HostTensor::vec(norm.mean.clone()),
-                        HostTensor::vec(norm.var.clone()),
-                        HostTensor::scalar1(cfg.actor_lr),
-                    ])?
+                    let mut f = plan.frame();
+                    f.bind_adam(&state)?;
+                    f.bind("s", &s_mb)?;
+                    f.bind("cs", &cs_mb)?;
+                    f.bind("a", &a_mb)?;
+                    f.bind("adv", &adv_mb)?;
+                    f.bind("ret", &ret_mb)?;
+                    f.bind("logp", &lp_mb)?;
+                    f.bind("mu", &norm.mean)?;
+                    f.bind("var", &norm.var)?;
+                    f.run(&update)?
                 };
                 let mut it = outs.into_iter();
                 let th = it.next().unwrap();
@@ -199,7 +215,9 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path) -> Result<RunLog
 }
 
 /// Batched PPO inference over all N envs (chunk-padded), returning
-/// (actions, logp, value).
+/// (actions, logp, value). Theta/mu/var literals are staged once per call
+/// (mirroring `infer_chunked`); only obs/critic-obs/noise re-stage per
+/// chunk, into buffers hoisted out of the chunk loop.
 #[allow(clippy::too_many_arguments)]
 fn ppo_infer_batched(
     infer: &crate::runtime::Executable,
@@ -218,23 +236,43 @@ fn ppo_infer_batched(
     let mut acts = vec![0.0f32; n * ad];
     let mut logp = vec![0.0f32; n];
     let mut val = vec![0.0f32; n];
+    let mut o = vec![0.0f32; chunk * od];
+    let mut co = vec![0.0f32; chunk * cd];
+    let mut nz = vec![0.0f32; chunk * ad];
+    let (o_shape, co_shape, nz_shape) = ([chunk, od], [chunk, cd], [chunk, ad]);
+    let mut prepared: Option<PreparedInputs> = None;
     let mut row = 0;
     while row < n {
         let take = (n - row).min(chunk);
-        let mut o = vec![0.0f32; chunk * od];
-        let mut co = vec![0.0f32; chunk * cd];
-        let mut nz = vec![0.0f32; chunk * ad];
         o[..take * od].copy_from_slice(&obs[row * od..(row + take) * od]);
         co[..take * cd].copy_from_slice(&cobs[row * cd..(row + take) * cd]);
         nz[..take * ad].copy_from_slice(&noise[row * ad..(row + take) * ad]);
-        let out = infer.run(&[
-            HostTensor::vec(theta.to_vec()),
-            HostTensor::new(&[chunk, od], o),
-            HostTensor::new(&[chunk, cd], co),
-            HostTensor::vec(mu.to_vec()),
-            HostTensor::vec(var.to_vec()),
-            HostTensor::new(&[chunk, ad], nz),
-        ])?;
+        if take < chunk {
+            o[take * od..].fill(0.0);
+            co[take * cd..].fill(0.0);
+            nz[take * ad..].fill(0.0);
+        }
+        let ov = TensorView::new(&o_shape, &o);
+        let cov = TensorView::new(&co_shape, &co);
+        let nv = TensorView::new(&nz_shape, &nz);
+        match prepared.as_mut() {
+            None => {
+                prepared = Some(infer.prepare(&[
+                    TensorView::vec(theta),
+                    ov,
+                    cov,
+                    TensorView::vec(mu),
+                    TensorView::vec(var),
+                    nv,
+                ])?);
+            }
+            Some(p) => {
+                infer.restage(p, 1, ov)?;
+                infer.restage(p, 2, cov)?;
+                infer.restage(p, 5, nv)?;
+            }
+        }
+        let out = infer.run_prepared(prepared.as_ref().unwrap())?;
         acts[row * ad..(row + take) * ad].copy_from_slice(&out[0][..take * ad]);
         logp[row..row + take].copy_from_slice(&out[1][..take]);
         val[row..row + take].copy_from_slice(&out[2][..take]);

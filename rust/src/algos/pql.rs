@@ -20,7 +20,7 @@ use crate::envs::{self, StepOut};
 use crate::exploration::Noise;
 use crate::metrics::{Record, RunLog};
 use crate::replay::{NStepAssembler, ReadyBatch, SampleBatch, StateBuffer, TransitionBuffer};
-use crate::runtime::{infer_chunked, Engine, HostTensor, Manifest, OptState};
+use crate::runtime::{infer_chunked, Engine, FeedDims, FeedPlan, Manifest, OptState};
 use crate::util::{Rng, RunningNorm};
 use anyhow::{Context, Result};
 use log::{debug, info};
@@ -28,51 +28,20 @@ use std::sync::atomic::Ordering;
 use std::sync::mpsc;
 use std::sync::Arc;
 
-/// Which learner family the PQL scheme wraps.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Variant {
-    /// DDPG with double-Q + n-step (the paper's PQL).
-    Ddpg,
-    /// C51 distributional critic (PQL-D).
-    Dist,
-    /// SAC with learnable temperature (Appendix C PQL+SAC).
-    Sac,
-}
+// The learner-family enum lives with the feed plane (it names artifacts
+// and layouts); re-exported here so `pql::Variant` keeps working.
+pub use crate::runtime::feed::Variant;
 
-impl Variant {
-    fn infer_artifact(self) -> &'static str {
-        match self {
-            Variant::Sac => "sac_actor_infer",
-            _ => "actor_infer",
-        }
-    }
-    fn critic_update_artifact(self) -> &'static str {
-        match self {
-            Variant::Ddpg => "critic_update",
-            Variant::Dist => "critic_update_dist",
-            Variant::Sac => "sac_critic_update",
-        }
-    }
-    fn actor_update_artifact(self) -> &'static str {
-        match self {
-            Variant::Ddpg => "actor_update",
-            Variant::Dist => "actor_update_dist",
-            Variant::Sac => "sac_actor_update",
-        }
-    }
-    fn actor_layout(self) -> &'static str {
-        if self == Variant::Sac {
-            "sac_actor"
-        } else {
-            "actor"
-        }
-    }
-    fn critic_layout(self) -> &'static str {
-        if self == Variant::Dist {
-            "critic_dist"
-        } else {
-            "critic"
-        }
+/// Feed dimensions for one (task, variant, batch) triple — the static
+/// contract both learner plans are resolved against.
+fn feed_dims(tinfo: &crate::runtime::TaskInfo, variant: Variant, batch: usize) -> FeedDims {
+    FeedDims {
+        batch,
+        obs_dim: tinfo.obs_dim,
+        act_dim: tinfo.act_dim,
+        critic_obs_dim: tinfo.critic_obs_dim,
+        actor_params: tinfo.layouts[variant.actor_layout()].size,
+        critic_params: tinfo.layouts[variant.critic_layout()].size,
     }
 }
 
@@ -180,8 +149,14 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, variant: Variant
                 cfg.eval_episodes, eval_seed, noise_dim,
             )?;
             let (a, v, p) = shared.pace.counts();
+            let (aw, vw, pw) = (
+                shared.pace.wait_a_ns.load(Ordering::Relaxed) / 1_000_000,
+                shared.pace.wait_v_ns.load(Ordering::Relaxed) / 1_000_000,
+                shared.pace.wait_p_ns.load(Ordering::Relaxed) / 1_000_000,
+            );
             info!(
-                "eval return {ret:8.2}  steps {}  v {v}  p {p}  train_ret {:.2}",
+                "eval return {ret:8.2}  steps {}  a {a}  v {v}  p {p}  \
+                 pace_wait_ms a/v/p {aw}/{vw}/{pw}  train_ret {:.2}",
                 shared.env_steps.load(Ordering::Relaxed),
                 shared.train_return()
             );
@@ -195,7 +170,6 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, variant: Variant
                     .map(|s| s as f64)
                     .unwrap_or(shared.success() as f64),
             })?;
-            let _ = a;
         }
         shared.pace.stop();
         Ok(())
@@ -400,6 +374,12 @@ fn v_loop(
         .load(&cfg.task, &artifact)
         .with_context(|| format!("batch size {b} needs artifact {artifact}"))?;
 
+    // Input signature resolved once; per-iteration assembly is pure
+    // slice binding (zero heap clones — see tests/alloc_free.rs).
+    let plan = FeedPlan::critic_update(variant, &feed_dims(&tinfo, variant, b), cfg.critic_lr);
+    plan.validate(&update.info)
+        .with_context(|| format!("{artifact} signature"))?;
+
     let mut critic = OptState::new(critic_init.clone());
     let mut target = critic_init; // hard-initialized target critic
     let mut replay = TransitionBuffer::with_critic_obs(
@@ -474,53 +454,34 @@ fn v_loop(
             theta_a_version = v;
             theta_a = t;
         }
-        let (mu, var) = shared.norm_bus.get();
+        let norm = shared.norm_bus.view();
+        let alpha = shared.alpha_bus.snapshot().1;
 
         replay.sample(rng, b, &mut batch);
+        if plan.has("noise") {
+            rng.fill_normal(&mut noise); // SAC next-action noise
+        }
         let outs = {
             let _g = shared.devices.enter(cfg.placement[1]);
-            let [th, m, v, t] = critic.tensors();
-            let mut inputs = vec![
-                th,
-                m,
-                v,
-                t,
-                HostTensor::vec(target.clone()),
-                HostTensor::vec(theta_a.as_ref().clone()),
-            ];
-            if variant == Variant::Sac {
-                let (_, alpha) = shared.alpha_bus.snapshot();
-                inputs.push(HostTensor::vec(alpha.as_ref().clone()));
-            }
-            if vision {
-                // Asymmetric critic: no current-image input (see model.py).
-                inputs.push(HostTensor::new(&[b, cd], batch.cs.clone()));
-                inputs.push(HostTensor::new(&[b, ad], batch.a.clone()));
-                inputs.push(HostTensor::vec(batch.rn.clone()));
-                inputs.push(HostTensor::new(&[b, od], batch.s2.clone()));
-                inputs.push(HostTensor::new(&[b, cd], batch.cs2.clone()));
-                inputs.push(HostTensor::vec(batch.gmask.clone()));
-            } else {
-                inputs.push(HostTensor::new(&[b, od], batch.s.clone()));
-                inputs.push(HostTensor::new(&[b, ad], batch.a.clone()));
-                inputs.push(HostTensor::vec(batch.rn.clone()));
-                inputs.push(HostTensor::new(&[b, od], batch.s2.clone()));
-                inputs.push(HostTensor::vec(batch.gmask.clone()));
-            }
-            if variant == Variant::Sac {
-                rng.fill_normal(&mut noise);
-                inputs.push(HostTensor::new(&[b, ad], noise.clone()));
-            }
-            inputs.push(HostTensor::vec(mu.clone()));
-            inputs.push(HostTensor::vec(var.clone()));
-            if vision {
-                // Asymmetric artifacts also take the critic-obs normalizer;
-                // states are already well-scaled, identity suffices.
-                inputs.push(HostTensor::vec(vec![0.0; cd]));
-                inputs.push(HostTensor::vec(vec![1.0; cd]));
-            }
-            inputs.push(HostTensor::scalar1(cfg.critic_lr));
-            update.run(&inputs)?
+            // Union binding: the plan keeps whichever of s/cs/cs2/alpha/
+            // noise its (variant × vision) signature declares; the
+            // identity critic-obs normalizer and lr ride as plan consts.
+            let mut f = plan.frame();
+            f.bind_adam(&critic)?;
+            f.bind("target", &target)?;
+            f.bind("theta_a", &theta_a[..])?;
+            f.bind_opt("alpha", &alpha[..])?;
+            f.bind_opt("s", &batch.s)?;
+            f.bind_opt("cs", &batch.cs)?;
+            f.bind("a", &batch.a)?;
+            f.bind("rn", &batch.rn)?;
+            f.bind("s2", &batch.s2)?;
+            f.bind_opt("cs2", &batch.cs2)?;
+            f.bind("gmask", &batch.gmask)?;
+            f.bind_opt("noise", &noise)?;
+            f.bind("mu", norm.mean())?;
+            f.bind("var", norm.var())?;
+            f.run(&update)?
         };
         // outputs: theta_c, m, v, theta_ct, loss, qmean
         let mut it = outs.into_iter();
@@ -559,6 +520,10 @@ fn p_loop(
     let artifact = manifest.batch_artifact(variant.actor_update_artifact(), b);
     let update = engine.load(&cfg.task, &artifact)?;
 
+    let plan = FeedPlan::actor_update(variant, &feed_dims(&tinfo, variant, b), cfg.actor_lr);
+    plan.validate(&update.info)
+        .with_context(|| format!("{artifact} signature"))?;
+
     let mut actor = OptState::new(actor_init);
     // SAC temperature state.
     let mut log_alpha = OptState::new(vec![0.0]);
@@ -567,6 +532,9 @@ fn p_loop(
     let row_dim = if vision { od + cd } else { od };
     let mut states = StateBuffer::new(cfg.replay_capacity.min(65_536), row_dim);
     let mut sbuf = vec![0.0f32; b * row_dim];
+    // Vision split staging — retained capacity, refilled in place.
+    let mut img = vec![0.0f32; if vision { b * od } else { 0 }];
+    let mut st = vec![0.0f32; if vision { b * cd } else { 0 }];
     let mut noise = vec![0.0f32; b * ad];
     let mut critic_version = 0u64;
     let mut theta_c = shared.critic_bus.snapshot().1;
@@ -597,44 +565,38 @@ fn p_loop(
             critic_version = v;
             theta_c = t;
         }
-        let (mu, var) = shared.norm_bus.get();
+        let norm = shared.norm_bus.view();
         states.sample(rng, b, &mut sbuf);
+        if vision {
+            split_rows_into(&sbuf, b, od, cd, &mut img, &mut st);
+        }
+        if plan.has("noise") {
+            rng.fill_normal(&mut noise); // SAC reparameterization noise
+        }
 
         let outs = {
             let _g = shared.devices.enter(cfg.placement[2]);
-            let [th, m, v, t] = actor.tensors();
-            let mut inputs = vec![th, m, v, t, HostTensor::vec(theta_c.as_ref().clone())];
-            if variant == Variant::Sac {
-                inputs.push(HostTensor::vec(log_alpha.theta.clone()));
-                inputs.push(HostTensor::vec(log_alpha.m.clone()));
-                inputs.push(HostTensor::vec(log_alpha.v.clone()));
-            }
-            if vision {
-                let (img, st) = split_rows(&sbuf, b, od, cd);
-                inputs.push(HostTensor::new(&[b, od], img));
-                inputs.push(HostTensor::new(&[b, cd], st));
-            } else {
-                inputs.push(HostTensor::new(&[b, od], sbuf.clone()));
-            }
-            if variant == Variant::Sac {
-                rng.fill_normal(&mut noise);
-                inputs.push(HostTensor::new(&[b, ad], noise.clone()));
-            }
-            inputs.push(HostTensor::vec(mu.clone()));
-            inputs.push(HostTensor::vec(var.clone()));
-            if vision {
-                inputs.push(HostTensor::vec(vec![0.0; cd]));
-                inputs.push(HostTensor::vec(vec![1.0; cd]));
-            }
-            inputs.push(HostTensor::scalar1(cfg.actor_lr));
-            update.run(&inputs)?
+            let mut f = plan.frame();
+            f.bind_adam(&actor)?;
+            f.bind("theta_c", &theta_c[..])?;
+            f.bind_opt("alpha", &log_alpha.theta)?;
+            f.bind_opt("alpha_m", &log_alpha.m)?;
+            f.bind_opt("alpha_v", &log_alpha.v)?;
+            f.bind("s", if vision { &img } else { &sbuf })?;
+            f.bind_opt("cs", &st)?;
+            f.bind_opt("noise", &noise)?;
+            f.bind("mu", norm.mean())?;
+            f.bind("var", norm.var())?;
+            f.run(&update)?
         };
         let mut it = outs.into_iter();
         let th = it.next().unwrap();
         let m = it.next().unwrap();
         let v = it.next().unwrap();
         actor.absorb(th, m, v);
-        if variant == Variant::Sac {
+        if plan.has("alpha") {
+            // SAC also steps the temperature (outputs mirror the alpha
+            // input triplet).
             let la = it.next().unwrap();
             let lam = it.next().unwrap();
             let lav = it.next().unwrap();
@@ -667,15 +629,25 @@ fn concat_rows(img: &[f32], od: usize, st: &[f32], cd: usize) -> Vec<f32> {
     out
 }
 
-/// Split joint rows back into (image, state) matrices.
-fn split_rows(rows: &[f32], n: usize, od: usize, cd: usize) -> (Vec<f32>, Vec<f32>) {
+/// Split joint rows back into (image, state) matrices, reusing the
+/// callers' staging buffers (the P-learner keeps them hot across updates).
+fn split_rows_into(rows: &[f32], n: usize, od: usize, cd: usize, img: &mut [f32], st: &mut [f32]) {
     let rd = od + cd;
-    let mut img = vec![0.0f32; n * od];
-    let mut st = vec![0.0f32; n * cd];
+    debug_assert_eq!(rows.len(), n * rd);
+    debug_assert_eq!(img.len(), n * od);
+    debug_assert_eq!(st.len(), n * cd);
     for i in 0..n {
         img[i * od..(i + 1) * od].copy_from_slice(&rows[i * rd..i * rd + od]);
         st[i * cd..(i + 1) * cd].copy_from_slice(&rows[i * rd + od..(i + 1) * rd]);
     }
+}
+
+/// Allocating variant of [`split_rows_into`] (kept for tests).
+#[cfg(test)]
+fn split_rows(rows: &[f32], n: usize, od: usize, cd: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut img = vec![0.0f32; n * od];
+    let mut st = vec![0.0f32; n * cd];
+    split_rows_into(rows, n, od, cd, &mut img, &mut st);
     (img, st)
 }
 
@@ -694,12 +666,11 @@ mod tests {
         assert_eq!(st2, st);
     }
 
+    /// `Variant` moved down into `runtime::feed`; the re-export keeps the
+    /// historical `pql::Variant` path working.
     #[test]
-    fn variant_artifact_names() {
-        assert_eq!(Variant::Ddpg.critic_update_artifact(), "critic_update");
-        assert_eq!(Variant::Dist.actor_update_artifact(), "actor_update_dist");
-        assert_eq!(Variant::Sac.infer_artifact(), "sac_actor_infer");
-        assert_eq!(Variant::Sac.actor_layout(), "sac_actor");
-        assert_eq!(Variant::Dist.critic_layout(), "critic_dist");
+    fn variant_reexport_is_the_feed_enum() {
+        let v: crate::runtime::feed::Variant = Variant::Sac;
+        assert_eq!(v.critic_update_artifact(), "sac_critic_update");
     }
 }

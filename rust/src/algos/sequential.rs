@@ -14,7 +14,7 @@ use crate::envs::{self, StepOut};
 use crate::exploration::Noise;
 use crate::metrics::{Record, RunLog};
 use crate::replay::{NStepAssembler, ReadyBatch, SampleBatch, TransitionBuffer};
-use crate::runtime::{infer_chunked, Engine, HostTensor, Manifest, OptState};
+use crate::runtime::{infer_chunked, Engine, FeedDims, FeedPlan, Manifest, OptState, Variant};
 use crate::util::{Rng, RunningNorm};
 use anyhow::{Context, Result};
 use log::info;
@@ -30,21 +30,32 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, sac: bool) -> Re
     );
     let n = cfg.num_envs;
     let b = cfg.batch_size;
+    let variant = if sac { Variant::Sac } else { Variant::Ddpg };
 
     let mut rng = Rng::new(cfg.seed);
     let mut engine = Engine::with_manifest(Arc::clone(&manifest))?;
-    let (infer_name, cu_name, au_name, actor_layout) = if sac {
-        ("sac_actor_infer", "sac_critic_update", "sac_actor_update", "sac_actor")
-    } else {
-        ("actor_infer", "critic_update", "actor_update", "actor")
-    };
-    let infer = engine.load(&cfg.task, infer_name)?;
+    let infer = engine.load(&cfg.task, variant.infer_artifact())?;
     let cu = engine
-        .load(&cfg.task, &manifest.batch_artifact(cu_name, b))
+        .load(&cfg.task, &manifest.batch_artifact(variant.critic_update_artifact(), b))
         .with_context(|| format!("batch {b} artifact"))?;
-    let au = engine.load(&cfg.task, &manifest.batch_artifact(au_name, b))?;
+    let au = engine.load(&cfg.task, &manifest.batch_artifact(variant.actor_update_artifact(), b))?;
 
-    let mut actor = OptState::new(tinfo.layouts[actor_layout].init(&mut rng));
+    // Same feed plans as the parallel learners — the sequential baselines
+    // differ only in scheduling, exactly the Fig. 3 comparison.
+    let dims = FeedDims {
+        batch: b,
+        obs_dim: od,
+        act_dim: ad,
+        critic_obs_dim: tinfo.critic_obs_dim,
+        actor_params: tinfo.layouts[variant.actor_layout()].size,
+        critic_params: tinfo.layouts[variant.critic_layout()].size,
+    };
+    let cu_plan = FeedPlan::critic_update(variant, &dims, cfg.critic_lr);
+    cu_plan.validate(&cu.info).context("sequential critic_update signature")?;
+    let au_plan = FeedPlan::actor_update(variant, &dims, cfg.actor_lr);
+    au_plan.validate(&au.info).context("sequential actor_update signature")?;
+
+    let mut actor = OptState::new(tinfo.layouts[variant.actor_layout()].init(&mut rng));
     let critic_init = tinfo.layouts["critic"].init(&mut rng);
     let mut critic = OptState::new(critic_init.clone());
     let mut target = critic_init;
@@ -52,6 +63,9 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, sac: bool) -> Re
 
     let shards = envs::auto_shards(cfg.env_shards, n);
     let mut env = envs::make_sharded(&cfg.task, n, cfg.seed, shards)?;
+    // Auto mode resolves from the host's core count: pin --env-shards for
+    // cross-machine seeded reproducibility (same note as the PQL actor).
+    info!("sequential: {n} envs across {shards} shard(s)");
     let mut obs = vec![0.0f32; n * od];
     env.reset_all(&mut obs);
     let mut out = StepOut::new(n, od);
@@ -117,30 +131,25 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, sac: bool) -> Re
         if replay.len() >= b && steps >= cfg.warmup_steps as u64 {
             for _ in 0..upd_per_step {
                 replay.sample(&mut rng, b, &mut batch);
+                if cu_plan.has("noise") {
+                    rng.fill_normal(&mut unoise); // SAC next-action noise
+                }
                 let outs = {
                     let _g = device.enter(cfg.placement[1]);
-                    let [th, m, v, t] = critic.tensors();
-                    let mut inputs = vec![
-                        th, m, v, t,
-                        HostTensor::vec(target.clone()),
-                        HostTensor::vec(actor.theta.clone()),
-                    ];
-                    if sac {
-                        inputs.push(HostTensor::vec(log_alpha.theta.clone()));
-                    }
-                    inputs.push(HostTensor::new(&[b, od], batch.s.clone()));
-                    inputs.push(HostTensor::new(&[b, ad], batch.a.clone()));
-                    inputs.push(HostTensor::vec(batch.rn.clone()));
-                    inputs.push(HostTensor::new(&[b, od], batch.s2.clone()));
-                    inputs.push(HostTensor::vec(batch.gmask.clone()));
-                    if sac {
-                        rng.fill_normal(&mut unoise);
-                        inputs.push(HostTensor::new(&[b, ad], unoise.clone()));
-                    }
-                    inputs.push(HostTensor::vec(norm.mean.clone()));
-                    inputs.push(HostTensor::vec(norm.var.clone()));
-                    inputs.push(HostTensor::scalar1(cfg.critic_lr));
-                    cu.run(&inputs)?
+                    let mut f = cu_plan.frame();
+                    f.bind_adam(&critic)?;
+                    f.bind("target", &target)?;
+                    f.bind("theta_a", &actor.theta)?;
+                    f.bind_opt("alpha", &log_alpha.theta)?;
+                    f.bind("s", &batch.s)?;
+                    f.bind("a", &batch.a)?;
+                    f.bind("rn", &batch.rn)?;
+                    f.bind("s2", &batch.s2)?;
+                    f.bind("gmask", &batch.gmask)?;
+                    f.bind_opt("noise", &unoise)?;
+                    f.bind("mu", &norm.mean)?;
+                    f.bind("var", &norm.var)?;
+                    f.run(&cu)?
                 };
                 let mut it = outs.into_iter();
                 let th = it.next().unwrap();
@@ -152,32 +161,29 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, sac: bool) -> Re
 
                 if v_updates % p_every == 0 {
                     replay.sample(&mut rng, b, &mut batch);
+                    if au_plan.has("noise") {
+                        rng.fill_normal(&mut unoise);
+                    }
                     let outs = {
                         let _g = device.enter(cfg.placement[2]);
-                        let [th, m, v, t] = actor.tensors();
-                        let mut inputs =
-                            vec![th, m, v, t, HostTensor::vec(critic.theta.clone())];
-                        if sac {
-                            inputs.push(HostTensor::vec(log_alpha.theta.clone()));
-                            inputs.push(HostTensor::vec(log_alpha.m.clone()));
-                            inputs.push(HostTensor::vec(log_alpha.v.clone()));
-                        }
-                        inputs.push(HostTensor::new(&[b, od], batch.s.clone()));
-                        if sac {
-                            rng.fill_normal(&mut unoise);
-                            inputs.push(HostTensor::new(&[b, ad], unoise.clone()));
-                        }
-                        inputs.push(HostTensor::vec(norm.mean.clone()));
-                        inputs.push(HostTensor::vec(norm.var.clone()));
-                        inputs.push(HostTensor::scalar1(cfg.actor_lr));
-                        au.run(&inputs)?
+                        let mut f = au_plan.frame();
+                        f.bind_adam(&actor)?;
+                        f.bind("theta_c", &critic.theta)?;
+                        f.bind_opt("alpha", &log_alpha.theta)?;
+                        f.bind_opt("alpha_m", &log_alpha.m)?;
+                        f.bind_opt("alpha_v", &log_alpha.v)?;
+                        f.bind("s", &batch.s)?;
+                        f.bind_opt("noise", &unoise)?;
+                        f.bind("mu", &norm.mean)?;
+                        f.bind("var", &norm.var)?;
+                        f.run(&au)?
                     };
                     let mut it = outs.into_iter();
                     let th = it.next().unwrap();
                     let m = it.next().unwrap();
                     let v = it.next().unwrap();
                     actor.absorb(th, m, v);
-                    if sac {
+                    if au_plan.has("alpha") {
                         let la = it.next().unwrap();
                         let lam = it.next().unwrap();
                         let lav = it.next().unwrap();

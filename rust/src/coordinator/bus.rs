@@ -85,10 +85,34 @@ impl NormBus {
         (data[..self.dim].to_vec(), data[self.dim..].to_vec())
     }
 
+    /// Zero-copy snapshot: holds the published `mean ++ var` buffer by
+    /// `Arc` and exposes borrowed halves — the feed-plane path, which
+    /// replaces the per-update `get()` clones in the learners.
+    pub fn view(&self) -> NormView {
+        let (_, data) = self.inner.snapshot();
+        NormView { data, dim: self.dim }
+    }
+
     pub fn latest(&self, since: u64) -> Option<(u64, Vec<f32>, Vec<f32>)> {
         self.inner
             .latest(since)
             .map(|(v, d)| (v, d[..self.dim].to_vec(), d[self.dim..].to_vec()))
+    }
+}
+
+/// Borrow-friendly normalizer snapshot (see [`NormBus::view`]).
+pub struct NormView {
+    data: Arc<Vec<f32>>,
+    dim: usize,
+}
+
+impl NormView {
+    pub fn mean(&self) -> &[f32] {
+        &self.data[..self.dim]
+    }
+
+    pub fn var(&self) -> &[f32] {
+        &self.data[self.dim..]
     }
 }
 
@@ -141,5 +165,17 @@ mod tests {
         let (m, v) = nb.get();
         assert_eq!(m, vec![1.0, 2.0, 3.0]);
         assert_eq!(v, vec![4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn norm_view_matches_get_without_copying() {
+        let nb = NormBus::new(2);
+        nb.publish(&[1.0, 2.0], &[3.0, 4.0]);
+        let view = nb.view();
+        assert_eq!(view.mean(), &[1.0, 2.0]);
+        assert_eq!(view.var(), &[3.0, 4.0]);
+        // The view pins its own snapshot: later publishes don't mutate it.
+        nb.publish(&[9.0, 9.0], &[9.0, 9.0]);
+        assert_eq!(view.mean(), &[1.0, 2.0]);
     }
 }

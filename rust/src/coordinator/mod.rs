@@ -6,7 +6,7 @@ pub mod bus;
 pub mod pace;
 pub mod pool;
 
-pub use bus::{NormBus, ParamBus};
+pub use bus::{NormBus, NormView, ParamBus};
 pub use pace::PaceController;
 pub use pool::MsgPool;
 

@@ -33,6 +33,77 @@ impl HostTensor {
     }
 }
 
+/// Highest tensor rank an artifact input uses (flat params are rank 1,
+/// batches rank 2; headroom for future conv layouts).
+const MAX_RANK: usize = 4;
+
+/// Borrowed-tensor view: a shape plus a `&[f32]` slice. The zero-copy
+/// counterpart of [`HostTensor`] — input assembly with views performs no
+/// heap allocation, so callers can feed parameter vectors, replay batches,
+/// and bus snapshots straight from their owners.
+///
+/// The shape is stored inline (rank ≤ [`TensorView::MAX_RANK`]) so a view
+/// is `Copy` and never borrows a shape from a temporary.
+#[derive(Debug, Clone, Copy)]
+pub struct TensorView<'a> {
+    dims: [usize; MAX_RANK],
+    rank: usize,
+    pub data: &'a [f32],
+}
+
+impl<'a> TensorView<'a> {
+    /// See the module-level `MAX_RANK`.
+    pub const MAX_RANK: usize = MAX_RANK;
+
+    pub fn new(shape: &[usize], data: &'a [f32]) -> TensorView<'a> {
+        assert!(shape.len() <= MAX_RANK, "rank {} > {}", shape.len(), MAX_RANK);
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        let mut dims = [0usize; MAX_RANK];
+        dims[..shape.len()].copy_from_slice(shape);
+        TensorView { dims, rank: shape.len(), data }
+    }
+
+    /// Rank-1 view over a whole slice.
+    pub fn vec(data: &'a [f32]) -> TensorView<'a> {
+        let mut dims = [0usize; MAX_RANK];
+        dims[0] = data.len();
+        TensorView { dims, rank: 1, data }
+    }
+
+    /// Zero-length placeholder (used to initialize fixed view arrays).
+    pub fn empty() -> TensorView<'static> {
+        TensorView::vec(&[])
+    }
+
+    /// Borrow an owned tensor as a view.
+    pub fn from_host(t: &'a HostTensor) -> TensorView<'a> {
+        TensorView::new(&t.shape, &t.data)
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.dims[..self.rank]
+    }
+}
+
+/// Input literals pre-converted for one executable, reusable across calls.
+/// Produced by [`Executable::prepare`]; individual slots can be re-staged
+/// with [`Executable::restage`] while the rest stay staged — this is how
+/// `infer_chunked` uploads theta/mu/var once per call instead of once per
+/// chunk.
+pub struct PreparedInputs {
+    literals: Vec<xla::Literal>,
+}
+
+impl PreparedInputs {
+    pub fn len(&self) -> usize {
+        self.literals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.literals.is_empty()
+    }
+}
+
 /// A compiled artifact plus its manifest signature.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
@@ -41,8 +112,24 @@ pub struct Executable {
 }
 
 impl Executable {
-    /// Execute with host tensors; returns the tuple elements as host data.
+    /// Execute with owned host tensors. Thin wrapper over [`run_ref`]
+    /// (kept for call sites that build inputs ad hoc; hot loops should use
+    /// `run_ref` / [`crate::runtime::feed::FeedPlan`] instead).
+    ///
+    /// [`run_ref`]: Executable::run_ref
     pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<Vec<f32>>> {
+        let views: Vec<TensorView> = inputs.iter().map(TensorView::from_host).collect();
+        self.run_ref(&views)
+    }
+
+    /// Execute with borrowed tensor views; returns the tuple elements as
+    /// host data. Input assembly is allocation-free on the caller's side.
+    pub fn run_ref(&self, inputs: &[TensorView]) -> Result<Vec<Vec<f32>>> {
+        self.exec(&self.prepare(inputs)?.literals)
+    }
+
+    /// Convert every input to a staged literal in one go.
+    pub fn prepare(&self, inputs: &[TensorView]) -> Result<PreparedInputs> {
         if inputs.len() != self.info.inputs.len() {
             bail!(
                 "{}: expected {} inputs, got {}",
@@ -52,21 +139,61 @@ impl Executable {
             );
         }
         let mut literals = Vec::with_capacity(inputs.len());
-        for (t, (iname, ishape)) in inputs.iter().zip(&self.info.inputs) {
-            if t.shape != *ishape {
-                bail!(
-                    "{}: input {iname} shape {:?} != manifest {:?}",
-                    self.name,
-                    t.shape,
-                    ishape
-                );
-            }
-            let dims: Vec<i64> = t.shape.iter().map(|d| *d as i64).collect();
-            literals.push(xla::Literal::vec1(&t.data).reshape(&dims)?);
+        for (slot, t) in inputs.iter().enumerate() {
+            self.check_slot(slot, t)?;
+            literals.push(Self::literal_of(t)?);
         }
+        Ok(PreparedInputs { literals })
+    }
+
+    /// Replace one staged input; the other slots keep their literals.
+    pub fn restage(&self, p: &mut PreparedInputs, slot: usize, t: TensorView) -> Result<()> {
+        if slot >= p.literals.len() {
+            bail!("{}: restage slot {slot} out of range", self.name);
+        }
+        self.check_slot(slot, &t)?;
+        p.literals[slot] = Self::literal_of(&t)?;
+        Ok(())
+    }
+
+    /// Execute over pre-staged literals.
+    pub fn run_prepared(&self, p: &PreparedInputs) -> Result<Vec<Vec<f32>>> {
+        if p.literals.len() != self.info.inputs.len() {
+            bail!(
+                "{}: prepared inputs {} != expected {}",
+                self.name,
+                p.literals.len(),
+                self.info.inputs.len()
+            );
+        }
+        self.exec(&p.literals)
+    }
+
+    fn check_slot(&self, slot: usize, t: &TensorView) -> Result<()> {
+        let (iname, ishape) = &self.info.inputs[slot];
+        if t.shape() != ishape.as_slice() {
+            bail!(
+                "{}: input {iname} shape {:?} != manifest {:?}",
+                self.name,
+                t.shape(),
+                ishape
+            );
+        }
+        Ok(())
+    }
+
+    fn literal_of(t: &TensorView) -> Result<xla::Literal> {
+        let mut dims = [0i64; MAX_RANK];
+        for (d, s) in dims.iter_mut().zip(t.shape()) {
+            *d = *s as i64;
+        }
+        Ok(xla::Literal::vec1(t.data).reshape(&dims[..t.shape().len()])?)
+    }
+
+    fn exec(&self, literals: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
         let result = self
             .exe
-            .execute::<xla::Literal>(&literals)
+            .execute::<xla::Literal>(literals)
             .with_context(|| format!("executing {}", self.name))?;
         let tuple = result[0][0]
             .to_literal_sync()
@@ -182,6 +309,88 @@ mod tests {
         let exe = eng.load("ant", "actor_infer").unwrap();
         let bad = vec![HostTensor::vec(vec![0.0; 3])];
         assert!(exe.run(&bad).is_err());
+    }
+
+    /// `run_ref` (and the staged `prepare`/`restage`/`run_prepared` path)
+    /// must be bit-identical to the owned `run` path on a real artifact.
+    #[test]
+    fn run_ref_and_prepared_match_owned_run_bitwise() {
+        let Some(mut eng) = engine() else { return };
+        let m = Arc::clone(&eng.manifest);
+        let t = m.task("ant").unwrap();
+        let exe = eng.load("ant", "actor_infer").unwrap();
+        let mut rng = crate::util::Rng::new(7);
+        let theta = t.layouts["actor"].init(&mut rng);
+        let c = m.chunk;
+        let mut obs = vec![0.0f32; c * t.obs_dim];
+        rng.fill_normal(&mut obs);
+        let mu = vec![0.25f32; t.obs_dim];
+        let var = vec![2.0f32; t.obs_dim];
+
+        let owned = exe
+            .run(&[
+                HostTensor::vec(theta.clone()),
+                HostTensor::new(&[c, t.obs_dim], obs.clone()),
+                HostTensor::vec(mu.clone()),
+                HostTensor::vec(var.clone()),
+            ])
+            .unwrap();
+
+        let obs_shape = [c, t.obs_dim];
+        let views = [
+            TensorView::vec(&theta),
+            TensorView::new(&obs_shape, &obs),
+            TensorView::vec(&mu),
+            TensorView::vec(&var),
+        ];
+        let by_ref = exe.run_ref(&views).unwrap();
+        assert_eq!(owned, by_ref, "run_ref diverged from run");
+
+        // Staged path: prepare with garbage obs, restage the real obs.
+        let junk = vec![9.9f32; c * t.obs_dim];
+        let mut p = exe
+            .prepare(&[
+                TensorView::vec(&theta),
+                TensorView::new(&obs_shape, &junk),
+                TensorView::vec(&mu),
+                TensorView::vec(&var),
+            ])
+            .unwrap();
+        exe.restage(&mut p, 1, TensorView::new(&obs_shape, &obs)).unwrap();
+        let staged = exe.run_prepared(&p).unwrap();
+        assert_eq!(owned, staged, "run_prepared diverged from run");
+    }
+
+    #[test]
+    fn run_ref_rejects_shape_and_count_mismatch() {
+        let Some(mut eng) = engine() else { return };
+        let exe = eng.load("ant", "actor_infer").unwrap();
+        let bad = [0.0f32; 3];
+        assert!(exe.run_ref(&[TensorView::vec(&bad)]).is_err()); // wrong count
+        let theta = vec![0.0f32; exe.info.inputs[0].1[0]];
+        let views = [
+            TensorView::vec(&theta),
+            TensorView::vec(&bad), // wrong shape for obs slot
+            TensorView::vec(&bad),
+            TensorView::vec(&bad),
+        ];
+        assert!(exe.run_ref(&views).is_err());
+        // restage out of range / wrong shape
+        let mut p = PreparedInputs { literals: Vec::new() };
+        assert!(exe.restage(&mut p, 0, TensorView::vec(&bad)).is_err());
+    }
+
+    #[test]
+    fn tensor_view_shape_and_empty() {
+        let data = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let v = TensorView::new(&[2, 3], &data);
+        assert_eq!(v.shape(), &[2, 3]);
+        assert_eq!(v.data.len(), 6);
+        let v1 = TensorView::vec(&data);
+        assert_eq!(v1.shape(), &[6]);
+        assert_eq!(TensorView::empty().shape(), &[0]);
+        let h = HostTensor::new(&[3, 2], data.to_vec());
+        assert_eq!(TensorView::from_host(&h).shape(), &[3, 2]);
     }
 
     #[test]

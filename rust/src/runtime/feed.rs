@@ -1,0 +1,596 @@
+//! The declarative learner feed plane.
+//!
+//! Every update loop (PQL's V- and P-learner, the sequential baselines,
+//! PPO) feeds the same kinds of artifacts: Adam-carrying parameter state,
+//! a lagged peer network, a replay minibatch, the observation normalizer,
+//! and a handful of constants. Which slots exist and in what order depends
+//! on (variant × vision × SAC-alpha) — logic that used to be triplicated
+//! as if-chains in each loop. A [`FeedPlan`] resolves that signature ONCE
+//! at loop setup: slot names, static shapes, constant slots (the learning
+//! rate, the identity critic-obs normalizer). Per iteration a [`FeedFrame`]
+//! binds the variable slots by slice reference — no `HostTensor` clones,
+//! no per-call signature branching — and runs through
+//! [`Executable::run_ref`].
+//!
+//! This module is the single owner of update-input ordering; the algo
+//! loops only bind data to names.
+
+use super::engine::{Executable, TensorView};
+use super::manifest::ArtifactInfo;
+use super::OptState;
+use anyhow::{bail, Context, Result};
+
+/// Upper bound on artifact input arity (the widest signature today is the
+/// SAC × vision critic update at 19 slots). Frames use fixed arrays of
+/// this size so binding and view resolution never touch the heap.
+pub const MAX_SLOTS: usize = 24;
+
+/// Which learner family a PQL-style run wraps. Lives in the runtime layer
+/// because it names artifacts and parameter layouts; `algos::pql`
+/// re-exports it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// DDPG with double-Q + n-step (the paper's PQL).
+    Ddpg,
+    /// C51 distributional critic (PQL-D). Same feed signature as DDPG —
+    /// only the critic layout/artifact differ.
+    Dist,
+    /// SAC with learnable temperature (Appendix C PQL+SAC).
+    Sac,
+}
+
+impl Variant {
+    pub fn infer_artifact(self) -> &'static str {
+        match self {
+            Variant::Sac => "sac_actor_infer",
+            _ => "actor_infer",
+        }
+    }
+    pub fn critic_update_artifact(self) -> &'static str {
+        match self {
+            Variant::Ddpg => "critic_update",
+            Variant::Dist => "critic_update_dist",
+            Variant::Sac => "sac_critic_update",
+        }
+    }
+    pub fn actor_update_artifact(self) -> &'static str {
+        match self {
+            Variant::Ddpg => "actor_update",
+            Variant::Dist => "actor_update_dist",
+            Variant::Sac => "sac_actor_update",
+        }
+    }
+    pub fn actor_layout(self) -> &'static str {
+        if self == Variant::Sac {
+            "sac_actor"
+        } else {
+            "actor"
+        }
+    }
+    pub fn critic_layout(self) -> &'static str {
+        if self == Variant::Dist {
+            "critic_dist"
+        } else {
+            "critic"
+        }
+    }
+}
+
+/// How a slot gets its data.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SlotKind {
+    /// Bound by slice reference every frame.
+    Var,
+    /// Bound by value every frame (the Adam step counter).
+    Scalar,
+    /// Owned by the plan, fixed at build time (learning rate, identity
+    /// critic-obs normalizer).
+    Const(Vec<f32>),
+}
+
+/// One resolved input slot: role name, static shape, binding kind.
+#[derive(Debug, Clone)]
+pub struct Slot {
+    pub name: &'static str,
+    pub shape: Vec<usize>,
+    pub kind: SlotKind,
+}
+
+/// Static dimensions a plan is resolved against.
+#[derive(Debug, Clone, Copy)]
+pub struct FeedDims {
+    pub batch: usize,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    /// Equal to `obs_dim` on symmetric tasks.
+    pub critic_obs_dim: usize,
+    /// Flat size of the policy parameters (the plan's "theta_a" / actor
+    /// Adam slots).
+    pub actor_params: usize,
+    /// Flat size of the critic parameters.
+    pub critic_params: usize,
+}
+
+impl FeedDims {
+    pub fn vision(&self) -> bool {
+        self.critic_obs_dim != self.obs_dim
+    }
+}
+
+/// A resolved input signature for one update artifact.
+pub struct FeedPlan {
+    label: &'static str,
+    slots: Vec<Slot>,
+}
+
+/// Internal builder so the three constructors read like the signature
+/// they produce.
+struct PlanBuilder {
+    label: &'static str,
+    slots: Vec<Slot>,
+}
+
+impl PlanBuilder {
+    fn new(label: &'static str) -> PlanBuilder {
+        PlanBuilder { label, slots: Vec::new() }
+    }
+    fn var(mut self, name: &'static str, shape: &[usize]) -> Self {
+        self.slots.push(Slot { name, shape: shape.to_vec(), kind: SlotKind::Var });
+        self
+    }
+    fn var_if(self, cond: bool, name: &'static str, shape: &[usize]) -> Self {
+        if cond {
+            self.var(name, shape)
+        } else {
+            self
+        }
+    }
+    fn scalar(mut self, name: &'static str) -> Self {
+        self.slots.push(Slot { name, shape: vec![1], kind: SlotKind::Scalar });
+        self
+    }
+    fn constant(mut self, name: &'static str, shape: &[usize], data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        self.slots.push(Slot { name, shape: shape.to_vec(), kind: SlotKind::Const(data) });
+        self
+    }
+    fn const_if(self, cond: bool, name: &'static str, shape: &[usize], data: Vec<f32>) -> Self {
+        if cond {
+            self.constant(name, shape, data)
+        } else {
+            self
+        }
+    }
+    /// Adam-carrying parameter block: theta/m/v slots plus the
+    /// bias-correction step scalar, in artifact order.
+    fn adam(self, p: usize) -> Self {
+        self.var("theta", &[p]).var("m", &[p]).var("v", &[p]).scalar("t")
+    }
+    /// Observation normalizer block: running mean/var, plus the identity
+    /// critic-obs normalizer constants on asymmetric artifacts (states are
+    /// already well-scaled; see model.py).
+    fn norm(self, d: &FeedDims, lr: f32) -> Self {
+        let (od, cd) = (d.obs_dim, d.critic_obs_dim);
+        self.var("mu", &[od])
+            .var("var", &[od])
+            .const_if(d.vision(), "cmu", &[cd], vec![0.0; cd])
+            .const_if(d.vision(), "cvar", &[cd], vec![1.0; cd])
+            .constant("lr", &[1], vec![lr])
+    }
+    fn build(self) -> FeedPlan {
+        assert!(self.slots.len() <= MAX_SLOTS, "{}: too many slots", self.label);
+        FeedPlan { label: self.label, slots: self.slots }
+    }
+}
+
+impl FeedPlan {
+    /// Critic-update signature (`critic_update` family): Adam critic state,
+    /// target net, lagged policy, [SAC temperature], the minibatch
+    /// (asymmetric critics see critic-obs instead of the current image),
+    /// [SAC next-action noise], then normalizers and the learning rate.
+    pub fn critic_update(variant: Variant, d: &FeedDims, lr: f32) -> FeedPlan {
+        let sac = variant == Variant::Sac;
+        let (b, od, ad, cd) = (d.batch, d.obs_dim, d.act_dim, d.critic_obs_dim);
+        PlanBuilder::new("critic_update")
+            .adam(d.critic_params)
+            .var("target", &[d.critic_params])
+            .var("theta_a", &[d.actor_params])
+            .var_if(sac, "alpha", &[1])
+            .var_if(d.vision(), "cs", &[b, cd])
+            .var_if(!d.vision(), "s", &[b, od])
+            .var("a", &[b, ad])
+            .var("rn", &[b])
+            .var("s2", &[b, od])
+            .var_if(d.vision(), "cs2", &[b, cd])
+            .var("gmask", &[b])
+            .var_if(sac, "noise", &[b, ad])
+            .norm(d, lr)
+            .build()
+    }
+
+    /// Actor-update signature (`actor_update` family): Adam policy state,
+    /// the local critic copy, [SAC temperature Adam triplet], the sampled
+    /// states (vision feeds matching image + state rows), [SAC noise],
+    /// then normalizers and the learning rate.
+    pub fn actor_update(variant: Variant, d: &FeedDims, lr: f32) -> FeedPlan {
+        let sac = variant == Variant::Sac;
+        let (b, od, ad, cd) = (d.batch, d.obs_dim, d.act_dim, d.critic_obs_dim);
+        PlanBuilder::new("actor_update")
+            .adam(d.actor_params)
+            .var("theta_c", &[d.critic_params])
+            .var_if(sac, "alpha", &[1])
+            .var_if(sac, "alpha_m", &[1])
+            .var_if(sac, "alpha_v", &[1])
+            .var("s", &[b, od])
+            .var_if(d.vision(), "cs", &[b, cd])
+            .var_if(sac, "noise", &[b, ad])
+            .norm(d, lr)
+            .build()
+    }
+
+    /// PPO-update signature: Adam state, the minibatch (obs, critic-obs,
+    /// actions, advantages, returns, behavior log-probs), normalizer, lr.
+    /// `actor_params` carries the joint ppo layout size.
+    pub fn ppo_update(d: &FeedDims, lr: f32) -> FeedPlan {
+        let (b, od, ad, cd) = (d.batch, d.obs_dim, d.act_dim, d.critic_obs_dim);
+        PlanBuilder::new("ppo_update")
+            .adam(d.actor_params)
+            .var("s", &[b, od])
+            .var("cs", &[b, cd])
+            .var("a", &[b, ad])
+            .var("adv", &[b])
+            .var("ret", &[b])
+            .var("logp", &[b])
+            .var("mu", &[od])
+            .var("var", &[od])
+            .constant("lr", &[1], vec![lr])
+            .build()
+    }
+
+    pub fn slots(&self) -> &[Slot] {
+        &self.slots
+    }
+
+    /// Slot role names in artifact order (golden-signature tests).
+    pub fn slot_names(&self) -> Vec<&'static str> {
+        self.slots.iter().map(|s| s.name).collect()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.index(name).is_some()
+    }
+
+    fn index(&self, name: &str) -> Option<usize> {
+        self.slots.iter().position(|s| s.name == name)
+    }
+
+    /// Check the plan against an artifact's manifest signature: slot count
+    /// and every static shape must agree. Run once at loop setup so the
+    /// per-iteration path carries no surprises.
+    pub fn validate(&self, info: &ArtifactInfo) -> Result<()> {
+        if self.slots.len() != info.inputs.len() {
+            bail!(
+                "{} plan: {} slots vs {} manifest inputs ({:?})",
+                self.label,
+                self.slots.len(),
+                info.inputs.len(),
+                info.inputs.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>()
+            );
+        }
+        for (slot, (iname, ishape)) in self.slots.iter().zip(&info.inputs) {
+            if slot.shape != *ishape {
+                bail!(
+                    "{} plan: slot {} shape {:?} != manifest input {iname} {:?}",
+                    self.label,
+                    slot.name,
+                    slot.shape,
+                    ishape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Start a per-iteration binding frame.
+    pub fn frame(&self) -> FeedFrame<'_, '_> {
+        FeedFrame {
+            plan: self,
+            bound: [None; MAX_SLOTS],
+            scalars: [0.0; MAX_SLOTS],
+            scalar_set: [false; MAX_SLOTS],
+        }
+    }
+}
+
+/// One iteration's bindings against a [`FeedPlan`]. Stack-only: binding
+/// and view resolution perform zero heap allocation (enforced by
+/// `tests/alloc_free.rs`).
+pub struct FeedFrame<'p, 'a> {
+    plan: &'p FeedPlan,
+    bound: [Option<&'a [f32]>; MAX_SLOTS],
+    scalars: [f32; MAX_SLOTS],
+    scalar_set: [bool; MAX_SLOTS],
+}
+
+impl<'p, 'a> FeedFrame<'p, 'a> {
+    /// Bind a required slot by reference. Errors on unknown names and
+    /// length mismatches (shapes are static, so length is the whole check).
+    pub fn bind(&mut self, name: &str, data: &'a [f32]) -> Result<()> {
+        let i = self
+            .plan
+            .index(name)
+            .with_context(|| format!("{} plan has no slot {name}", self.plan.label))?;
+        self.bind_at(i, data)
+    }
+
+    /// Bind a slot the plan may not have (e.g. "alpha" on non-SAC, "cs" on
+    /// symmetric tasks). Returns whether the slot exists — this is what
+    /// lets the update loops bind the union of all inputs with no
+    /// variant/vision branching.
+    pub fn bind_opt(&mut self, name: &str, data: &'a [f32]) -> Result<bool> {
+        match self.plan.index(name) {
+            Some(i) => {
+                self.bind_at(i, data)?;
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
+    fn bind_at(&mut self, i: usize, data: &'a [f32]) -> Result<()> {
+        let slot = &self.plan.slots[i];
+        let numel: usize = slot.shape.iter().product();
+        if data.len() != numel {
+            bail!(
+                "{} plan: slot {} expects {numel} values, got {}",
+                self.plan.label,
+                slot.name,
+                data.len()
+            );
+        }
+        if !matches!(slot.kind, SlotKind::Var) {
+            bail!("{} plan: slot {} is not bindable", self.plan.label, slot.name);
+        }
+        self.bound[i] = Some(data);
+        Ok(())
+    }
+
+    /// Bind a per-iteration scalar slot by value.
+    pub fn bind_scalar(&mut self, name: &str, v: f32) -> Result<()> {
+        let i = self
+            .plan
+            .index(name)
+            .with_context(|| format!("{} plan has no slot {name}", self.plan.label))?;
+        if !matches!(self.plan.slots[i].kind, SlotKind::Scalar) {
+            bail!("{} plan: slot {name} is not a scalar", self.plan.label);
+        }
+        self.scalars[i] = v;
+        self.scalar_set[i] = true;
+        Ok(())
+    }
+
+    /// Bind an Adam-carrying parameter state to the plan's theta/m/v/t
+    /// block (no clones; `t` goes in as the bias-corrected step).
+    pub fn bind_adam(&mut self, state: &'a OptState) -> Result<()> {
+        self.bind("theta", &state.theta)?;
+        self.bind("m", &state.m)?;
+        self.bind("v", &state.v)?;
+        self.bind_scalar("t", state.t + 1.0)
+    }
+
+    /// Resolve every slot to a [`TensorView`] (consts and scalars from the
+    /// plan/frame, vars from bindings) and hand the full input list to
+    /// `f`. Errors if any variable or scalar slot is unbound.
+    pub fn with_views<R>(&self, f: impl FnOnce(&[TensorView]) -> R) -> Result<R> {
+        let n = self.plan.slots.len();
+        let mut views = [TensorView::empty(); MAX_SLOTS];
+        for (i, slot) in self.plan.slots.iter().enumerate() {
+            let data: &[f32] = match &slot.kind {
+                SlotKind::Const(v) => v,
+                SlotKind::Scalar => {
+                    if !self.scalar_set[i] {
+                        bail!("{} plan: scalar {} unbound", self.plan.label, slot.name);
+                    }
+                    &self.scalars[i..i + 1]
+                }
+                SlotKind::Var => self.bound[i].with_context(|| {
+                    format!("{} plan: slot {} unbound", self.plan.label, slot.name)
+                })?,
+            };
+            views[i] = TensorView::new(&slot.shape, data);
+        }
+        Ok(f(&views[..n]))
+    }
+
+    /// Resolve and execute.
+    pub fn run(&self, exe: &Executable) -> Result<Vec<Vec<f32>>> {
+        self.with_views(|views| exe.run_ref(views))?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn dims(vision: bool) -> FeedDims {
+        FeedDims {
+            batch: 8,
+            obs_dim: 5,
+            act_dim: 3,
+            critic_obs_dim: if vision { 11 } else { 5 },
+            actor_params: 40,
+            critic_params: 60,
+        }
+    }
+
+    #[test]
+    fn variant_artifact_names() {
+        assert_eq!(Variant::Ddpg.critic_update_artifact(), "critic_update");
+        assert_eq!(Variant::Dist.actor_update_artifact(), "actor_update_dist");
+        assert_eq!(Variant::Sac.infer_artifact(), "sac_actor_infer");
+        assert_eq!(Variant::Sac.actor_layout(), "sac_actor");
+        assert_eq!(Variant::Dist.critic_layout(), "critic_dist");
+    }
+
+    // ---- golden signatures: every (variant × vision) combination -------
+
+    fn sig(p: &FeedPlan) -> String {
+        p.slot_names().join(" ")
+    }
+
+    #[test]
+    fn golden_critic_signatures() {
+        let sym = dims(false);
+        let vis = dims(true);
+        for v in [Variant::Ddpg, Variant::Dist] {
+            assert_eq!(
+                sig(&FeedPlan::critic_update(v, &sym, 1e-3)),
+                "theta m v t target theta_a s a rn s2 gmask mu var lr"
+            );
+            assert_eq!(
+                sig(&FeedPlan::critic_update(v, &vis, 1e-3)),
+                "theta m v t target theta_a cs a rn s2 cs2 gmask mu var cmu cvar lr"
+            );
+        }
+        assert_eq!(
+            sig(&FeedPlan::critic_update(Variant::Sac, &sym, 1e-3)),
+            "theta m v t target theta_a alpha s a rn s2 gmask noise mu var lr"
+        );
+        // SAC × vision is rejected upstream by pql::train, but the plan is
+        // still a well-formed signature (alpha before the batch block).
+        assert_eq!(
+            sig(&FeedPlan::critic_update(Variant::Sac, &vis, 1e-3)),
+            "theta m v t target theta_a alpha cs a rn s2 cs2 gmask noise mu var cmu cvar lr"
+        );
+    }
+
+    #[test]
+    fn golden_actor_signatures() {
+        let sym = dims(false);
+        let vis = dims(true);
+        for v in [Variant::Ddpg, Variant::Dist] {
+            assert_eq!(
+                sig(&FeedPlan::actor_update(v, &sym, 1e-3)),
+                "theta m v t theta_c s mu var lr"
+            );
+            assert_eq!(
+                sig(&FeedPlan::actor_update(v, &vis, 1e-3)),
+                "theta m v t theta_c s cs mu var cmu cvar lr"
+            );
+        }
+        assert_eq!(
+            sig(&FeedPlan::actor_update(Variant::Sac, &sym, 1e-3)),
+            "theta m v t theta_c alpha alpha_m alpha_v s noise mu var lr"
+        );
+    }
+
+    #[test]
+    fn golden_ppo_signature() {
+        assert_eq!(
+            sig(&FeedPlan::ppo_update(&dims(false), 1e-3)),
+            "theta m v t s cs a adv ret logp mu var lr"
+        );
+    }
+
+    #[test]
+    fn shapes_consts_and_kinds_are_resolved() {
+        let d = dims(true);
+        let p = FeedPlan::critic_update(Variant::Ddpg, &d, 5e-4);
+        let by_name = |n: &str| p.slots().iter().find(|s| s.name == n).unwrap();
+        assert_eq!(by_name("theta").shape, vec![d.critic_params]);
+        assert_eq!(by_name("theta_a").shape, vec![d.actor_params]);
+        assert_eq!(by_name("cs").shape, vec![d.batch, d.critic_obs_dim]);
+        assert_eq!(by_name("s2").shape, vec![d.batch, d.obs_dim]);
+        assert_eq!(by_name("t").kind, SlotKind::Scalar);
+        assert_eq!(by_name("cmu").kind, SlotKind::Const(vec![0.0; d.critic_obs_dim]));
+        assert_eq!(by_name("cvar").kind, SlotKind::Const(vec![1.0; d.critic_obs_dim]));
+        assert_eq!(by_name("lr").kind, SlotKind::Const(vec![5e-4]));
+        assert!(p.has("gmask") && !p.has("noise") && !p.has("alpha"));
+    }
+
+    #[test]
+    fn validate_checks_count_and_shapes() {
+        let d = dims(false);
+        let p = FeedPlan::actor_update(Variant::Ddpg, &d, 1e-3);
+        let good = ArtifactInfo {
+            file: PathBuf::new(),
+            inputs: p
+                .slots()
+                .iter()
+                .map(|s| (s.name.to_string(), s.shape.clone()))
+                .collect(),
+            outputs: Vec::new(),
+        };
+        p.validate(&good).unwrap();
+        let mut wrong_shape = good.clone();
+        wrong_shape.inputs[4].1 = vec![999];
+        assert!(p.validate(&wrong_shape).is_err());
+        let mut wrong_count = good;
+        wrong_count.inputs.pop();
+        assert!(p.validate(&wrong_count).is_err());
+    }
+
+    #[test]
+    fn frame_binds_resolve_in_slot_order() {
+        let d = dims(false);
+        let plan = FeedPlan::critic_update(Variant::Ddpg, &d, 1e-3);
+        let critic = OptState::new(vec![0.5; d.critic_params]);
+        let target = vec![1.5; d.critic_params];
+        let theta_a = vec![2.5; d.actor_params];
+        let s = vec![0.1; d.batch * d.obs_dim];
+        let a = vec![0.2; d.batch * d.act_dim];
+        let rn = vec![0.3; d.batch];
+        let s2 = vec![0.4; d.batch * d.obs_dim];
+        let gm = vec![0.97; d.batch];
+        let mu = vec![0.0; d.obs_dim];
+        let var = vec![1.0; d.obs_dim];
+
+        let mut f = plan.frame();
+        f.bind_adam(&critic).unwrap();
+        f.bind("target", &target).unwrap();
+        f.bind("theta_a", &theta_a).unwrap();
+        // Union binding: slots this plan doesn't have are skipped.
+        assert!(f.bind_opt("s", &s).unwrap());
+        assert!(!f.bind_opt("cs", &[]).unwrap());
+        assert!(!f.bind_opt("alpha", &[0.0]).unwrap());
+        f.bind("a", &a).unwrap();
+        f.bind("rn", &rn).unwrap();
+        f.bind("s2", &s2).unwrap();
+        f.bind("gmask", &gm).unwrap();
+        f.bind("mu", &mu).unwrap();
+        f.bind("var", &var).unwrap();
+
+        f.with_views(|views| {
+            assert_eq!(views.len(), plan.slots().len());
+            assert_eq!(views[0].data[0], 0.5); // theta
+            assert_eq!(views[3].data, &[1.0]); // t = state.t + 1
+            assert_eq!(views[4].data[0], 1.5); // target
+            assert_eq!(views[6].shape(), &[d.batch, d.obs_dim]); // s
+            assert_eq!(views[13].data, &[1e-3]); // lr const
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn frame_errors_on_misuse() {
+        let d = dims(false);
+        let plan = FeedPlan::actor_update(Variant::Ddpg, &d, 1e-3);
+        let mut f = plan.frame();
+        assert!(f.bind("nope", &[]).is_err()); // unknown slot
+        assert!(f.bind("theta", &[0.0; 3]).is_err()); // wrong length
+        assert!(f.bind("lr", &[0.0]).is_err()); // consts are not bindable
+        assert!(f.bind("t", &[0.0]).is_err()); // scalars use bind_scalar
+        assert!(f.bind_scalar("theta", 0.0).is_err());
+        // Unbound var and unbound scalar both fail at resolution.
+        let err = f.with_views(|_| ()).unwrap_err().to_string();
+        assert!(err.contains("unbound"), "{err}");
+        let mut f = plan.frame();
+        let big = vec![0.0; d.actor_params];
+        f.bind("theta", &big).unwrap();
+        f.bind("m", &big).unwrap();
+        f.bind("v", &big).unwrap();
+        let err = f.with_views(|_| ()).unwrap_err().to_string();
+        assert!(err.contains("scalar"), "{err}");
+    }
+}

@@ -1,11 +1,13 @@
-//! Runtime layer: artifact manifest, PJRT engine, and typed helpers for
-//! the recurring call patterns (chunked policy inference, Adam-carrying
-//! learner states).
+//! Runtime layer: artifact manifest, PJRT engine, the zero-copy feed
+//! plane, and typed helpers for the recurring call patterns (chunked
+//! policy inference, Adam-carrying learner states).
 
 pub mod engine;
+pub mod feed;
 pub mod manifest;
 
-pub use engine::{Engine, Executable, HostTensor};
+pub use engine::{Engine, Executable, HostTensor, PreparedInputs, TensorView};
+pub use feed::{FeedDims, FeedFrame, FeedPlan, Variant};
 pub use manifest::{Layout, Manifest, TaskInfo};
 
 use anyhow::Result;
@@ -49,6 +51,12 @@ impl OptState {
 /// for a fixed chunk C) over any number of rows by padding the tail chunk.
 /// `extra_noise` (SAC) is an optional per-row noise tensor of width
 /// `noise_dim`, passed as the artifact's trailing input.
+///
+/// The theta/mu/var literals are staged once per call and reused for every
+/// chunk (theta alone is the full policy — re-converting it
+/// `ceil(n/chunk)` times per rollout step was the learner plane's single
+/// biggest redundant host copy); only the obs (and noise) slots are
+/// re-staged per chunk.
 #[allow(clippy::too_many_arguments)]
 pub fn infer_chunked(
     exe: &Executable,
@@ -67,6 +75,9 @@ pub fn infer_chunked(
     debug_assert_eq!(actions_out.len(), n * act_dim);
     let mut row = 0;
     let mut obs_chunk = vec![0.0f32; chunk * obs_dim];
+    let mut noise_chunk = noise.map(|(_, nd)| vec![0.0f32; chunk * nd]);
+    let obs_shape = [chunk, obs_dim];
+    let mut prepared: Option<PreparedInputs> = None;
     while row < n {
         let take = (n - row).min(chunk);
         obs_chunk[..take * obs_dim]
@@ -74,19 +85,36 @@ pub fn infer_chunked(
         if take < chunk {
             obs_chunk[take * obs_dim..].fill(0.0);
         }
-        let mut inputs = vec![
-            HostTensor::vec(theta.to_vec()),
-            HostTensor::new(&[chunk, obs_dim], obs_chunk.clone()),
-            HostTensor::vec(mu.to_vec()),
-            HostTensor::vec(var.to_vec()),
-        ];
-        if let Some((nz, nd)) = noise {
-            let mut noise_chunk = vec![0.0f32; chunk * nd];
-            noise_chunk[..take * nd]
-                .copy_from_slice(&nz[row * nd..(row + take) * nd]);
-            inputs.push(HostTensor::new(&[chunk, nd], noise_chunk));
+        if let (Some((nz, nd)), Some(nc)) = (noise, noise_chunk.as_mut()) {
+            nc[..take * nd].copy_from_slice(&nz[row * nd..(row + take) * nd]);
+            if take < chunk {
+                nc[take * nd..].fill(0.0);
+            }
         }
-        let out = exe.run(&inputs)?;
+        let obs_view = TensorView::new(&obs_shape, &obs_chunk);
+        match prepared.as_mut() {
+            None => {
+                // First chunk: stage everything (theta/mu/var stay staged).
+                let mut views = [TensorView::empty(); 5];
+                views[0] = TensorView::vec(theta);
+                views[1] = obs_view;
+                views[2] = TensorView::vec(mu);
+                views[3] = TensorView::vec(var);
+                let mut count = 4;
+                if let (Some((_, nd)), Some(nc)) = (noise, noise_chunk.as_ref()) {
+                    views[4] = TensorView::new(&[chunk, nd], nc);
+                    count = 5;
+                }
+                prepared = Some(exe.prepare(&views[..count])?);
+            }
+            Some(p) => {
+                exe.restage(p, 1, obs_view)?;
+                if let (Some((_, nd)), Some(nc)) = (noise, noise_chunk.as_ref()) {
+                    exe.restage(p, 4, TensorView::new(&[chunk, nd], nc))?;
+                }
+            }
+        }
+        let out = exe.run_prepared(prepared.as_ref().unwrap())?;
         actions_out[row * act_dim..(row + take) * act_dim]
             .copy_from_slice(&out[0][..take * act_dim]);
         row += take;

@@ -1,0 +1,149 @@
+//! Counting-allocator regression test for the learner feed plane.
+//!
+//! The PR that introduced `FeedPlan` made steady-state update iterations
+//! assemble their artifact inputs purely by slice reference: no clones of
+//! parameter vectors, target nets, batch fields, or normalizers. This test
+//! pins that invariant with a counting `GlobalAlloc`: a full v-/p-style
+//! bind + view-resolution cycle must perform ZERO Rust heap allocations —
+//! independent of how large the bound tensors are — once the plan is
+//! built. (PJRT literal conversion and output fetch allocate by necessity
+//! and are exercised separately in `runtime::engine` tests; this test
+//! covers the host-side assembly path, which is exactly where the old
+//! owned `HostTensor` feed cloned ~66 tensors per iteration.)
+
+use pql::runtime::feed::{FeedDims, FeedPlan, Variant};
+use pql::runtime::OptState;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicUsize = AtomicUsize::new(0);
+static ALLOC_BYTES: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(l.size(), Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> usize {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
+
+/// One steady-state V-learner-shaped iteration: bind Adam critic state,
+/// target, lagged policy, the minibatch, and the normalizer, then resolve
+/// every slot to a `TensorView` (what `run_ref` consumes).
+fn v_iteration(
+    plan: &FeedPlan,
+    critic: &OptState,
+    target: &[f32],
+    theta_a: &[f32],
+    batch: &[&[f32]; 5],
+    mu: &[f32],
+    var: &[f32],
+) -> usize {
+    let mut f = plan.frame();
+    f.bind_adam(critic).unwrap();
+    f.bind("target", target).unwrap();
+    f.bind("theta_a", theta_a).unwrap();
+    f.bind_opt("s", batch[0]).unwrap();
+    f.bind("a", batch[1]).unwrap();
+    f.bind("rn", batch[2]).unwrap();
+    f.bind("s2", batch[3]).unwrap();
+    f.bind("gmask", batch[4]).unwrap();
+    f.bind("mu", mu).unwrap();
+    f.bind("var", var).unwrap();
+    f.with_views(|views| views.iter().map(|v| v.data.len()).sum()).unwrap()
+}
+
+/// All assertions live in one #[test]: a second measuring test in this
+/// binary would race the counters through the harness's worker threads.
+#[test]
+fn steady_state_feed_assembly_is_allocation_free() {
+    // Deliberately large parameters and batch: any hidden clone of a bound
+    // tensor would show up as allocated bytes scaling with these sizes.
+    let d = FeedDims {
+        batch: 4096,
+        obs_dim: 60,
+        act_dim: 21,
+        critic_obs_dim: 60,
+        actor_params: 400_000,
+        critic_params: 600_000,
+    };
+    let plan = FeedPlan::critic_update(Variant::Ddpg, &d, 5e-4);
+    let critic = OptState::new(vec![0.1; d.critic_params]);
+    let target = vec![0.2f32; d.critic_params];
+    let theta_a = vec![0.3f32; d.actor_params];
+    let s = vec![0.4f32; d.batch * d.obs_dim];
+    let a = vec![0.5f32; d.batch * d.act_dim];
+    let rn = vec![0.6f32; d.batch];
+    let s2 = vec![0.7f32; d.batch * d.obs_dim];
+    let gm = vec![0.97f32; d.batch];
+    let mu = vec![0.0f32; d.obs_dim];
+    let var = vec![1.0f32; d.obs_dim];
+    let batch: [&[f32]; 5] = [&s, &a, &rn, &s2, &gm];
+
+    // Warm-up (first iteration may fault in lazily-initialized state).
+    let mut sink = v_iteration(&plan, &critic, &target, &theta_a, &batch, &mu, &var);
+
+    const ITERS: usize = 512;
+    let before = allocs();
+    for _ in 0..ITERS {
+        sink += v_iteration(&plan, &critic, &target, &theta_a, &batch, &mu, &var);
+    }
+    let delta = allocs() - before;
+    assert!(sink > 0);
+    // Strictly zero in practice; the small slack only tolerates harness
+    // threads allocating concurrently. Any per-iteration allocation —
+    // let alone a tensor clone — would cost >= ITERS calls.
+    assert!(
+        delta < ITERS / 8,
+        "feed assembly allocated: {delta} heap allocations across {ITERS} iterations"
+    );
+
+    // P-learner-shaped (actor update) frame, SAC: alpha triplet + noise.
+    let pd = FeedDims { actor_params: 250_000, ..d };
+    let aplan = FeedPlan::actor_update(Variant::Sac, &pd, 5e-4);
+    let actor = OptState::new(vec![0.1; pd.actor_params]);
+    let theta_c = vec![0.2f32; pd.critic_params];
+    let log_alpha = OptState::new(vec![0.0]);
+    let noise = vec![0.9f32; pd.batch * pd.act_dim];
+    let p_iter = || {
+        let mut f = aplan.frame();
+        f.bind_adam(&actor).unwrap();
+        f.bind("theta_c", &theta_c).unwrap();
+        f.bind_opt("alpha", &log_alpha.theta).unwrap();
+        f.bind_opt("alpha_m", &log_alpha.m).unwrap();
+        f.bind_opt("alpha_v", &log_alpha.v).unwrap();
+        f.bind("s", &s).unwrap();
+        f.bind_opt("noise", &noise).unwrap();
+        f.bind("mu", &mu).unwrap();
+        f.bind("var", &var).unwrap();
+        f.with_views(|views| views.len()).unwrap()
+    };
+    let mut sink2 = p_iter();
+    let before = allocs();
+    for _ in 0..ITERS {
+        sink2 += p_iter();
+    }
+    let delta = allocs() - before;
+    assert!(sink2 > 0);
+    assert!(
+        delta < ITERS / 8,
+        "actor feed assembly allocated: {delta} allocations across {ITERS} iterations"
+    );
+}
