@@ -128,6 +128,16 @@ def emit_task(em: Emitter, task_name: str, skip_fig8: bool):
             ["theta_c", "m", "v", "theta_ct", "loss", "qmean"],
         )
 
+    def cu_per_args(batch, cdim=do):
+        """Prioritized critic_update: isw rides after gmask, outputs gain
+        the per-sample |td| vector (see rust `FeedPlan::critic_update_per`
+        for the matching slot order)."""
+        a, n, o = cu_args(batch, cdim)
+        i = n.index("gmask") + 1
+        a = a[:i] + [_sds(batch)] + a[i:]
+        n = n[:i] + ["isw"] + n[i:]
+        return a, n, o + ["td"]
+
     def au_args(batch):
         return (
             [_sds(Pa), _sds(Pa), _sds(Pa), _sds(1), _sds(Pc),
@@ -155,6 +165,12 @@ def emit_task(em: Emitter, task_name: str, skip_fig8: bool):
         em.emit(task_name, "critic_update", model.ddpg_critic_update(spec, tasks.TAU), a, n, o)
         a, n, o = au_args(B)
         em.emit(task_name, "actor_update", model.ddpg_actor_update(spec), a, n, o)
+        if not em.quick:
+            # Prioritized-replay variant (Schaul et al. / Ape-X): IS
+            # weights in, per-sample |td| out for the sum-tree refresh.
+            a, n, o = cu_per_args(B)
+            em.emit(task_name, "critic_update_per",
+                    model.ddpg_critic_update_per(spec, tasks.TAU), a, n, o)
     else:
         # Asymmetric (vision) variants: pixel actor obs + state critic obs.
         em.emit(task_name, "critic_update",
@@ -190,6 +206,14 @@ def emit_task(em: Emitter, task_name: str, skip_fig8: bool):
                  _sds(B, do), _sds(do), _sds(do), _sds(1)],
                 ["theta_a", "m", "v", "t", "theta_c", "s", "mu", "var", "lr"],
                 ["theta_a", "m", "v", "loss"])
+        em.emit(task_name, "critic_update_dist_per",
+                model.dist_critic_update_per(spec, tasks.TAU),
+                [_sds(Pd), _sds(Pd), _sds(Pd), _sds(1), _sds(Pd), _sds(Pa),
+                 _sds(B, do), _sds(B, da), _sds(B), _sds(B, do), _sds(B),
+                 _sds(B), _sds(do), _sds(do), _sds(1)],
+                ["theta_c", "m", "v", "t", "theta_ct", "theta_a", "s", "a",
+                 "rn", "s2", "gmask", "isw", "mu", "var", "lr"],
+                ["theta_c", "m", "v", "theta_ct", "loss", "qmean", "td"])
 
     # ---- SAC ----------------------------------------------------------------
     if not vision and not em.quick:
@@ -204,6 +228,15 @@ def emit_task(em: Emitter, task_name: str, skip_fig8: bool):
                 ["theta_c", "m", "v", "t", "theta_ct", "theta_a", "log_alpha",
                  "s", "a", "rn", "s2", "gmask", "noise", "mu", "var", "lr"],
                 ["theta_c", "m", "v", "theta_ct", "loss", "qmean"])
+        em.emit(task_name, "sac_critic_update_per",
+                model.sac_critic_update_per(spec, tasks.TAU),
+                [_sds(Pc), _sds(Pc), _sds(Pc), _sds(1), _sds(Pc), _sds(Ps),
+                 _sds(1), _sds(B, do), _sds(B, da), _sds(B), _sds(B, do),
+                 _sds(B), _sds(B), _sds(B, da), _sds(do), _sds(do), _sds(1)],
+                ["theta_c", "m", "v", "t", "theta_ct", "theta_a", "log_alpha",
+                 "s", "a", "rn", "s2", "gmask", "isw", "noise", "mu", "var",
+                 "lr"],
+                ["theta_c", "m", "v", "theta_ct", "loss", "qmean", "td"])
         em.emit(task_name, "sac_actor_update",
                 model.sac_actor_update(spec, target_entropy=-float(da)),
                 [_sds(Ps), _sds(Ps), _sds(Ps), _sds(1), _sds(Pc), _sds(1),
@@ -236,6 +269,11 @@ def emit_task(em: Emitter, task_name: str, skip_fig8: bool):
             a, n, o = cu_args(b)
             em.emit(task_name, f"critic_update_b{b}",
                     model.ddpg_critic_update(spec, tasks.TAU), a, n, o)
+            # PER variant rides the sweep too, so --prioritized-replay
+            # composes with --batch-size instead of erroring at load.
+            a, n, o = cu_per_args(b)
+            em.emit(task_name, f"critic_update_per_b{b}",
+                    model.ddpg_critic_update_per(spec, tasks.TAU), a, n, o)
             a, n, o = au_args(b)
             em.emit(task_name, f"actor_update_b{b}",
                     model.ddpg_actor_update(spec), a, n, o)

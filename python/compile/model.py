@@ -202,6 +202,37 @@ def ddpg_critic_update(spec, tau):
     return f
 
 
+def ddpg_critic_update_per(spec, tau):
+    """Prioritized-replay V-learner step (Schaul et al. 2016; distributed
+    as in Ape-X, Horgan et al. 2018): per-sample importance weights `isw`
+    scale the Bellman regression, and the per-sample |TD error| comes back
+    as an extra output so the rust side can refresh its sum-tree
+    priorities. With isw = 1 the gradients reduce exactly to
+    `ddpg_critic_update`'s."""
+
+    def loss_fn(theta_c, s_n, a, y, isw):
+        q1, q2 = spec.critic_fwd(theta_c, s_n, a)
+        per_sample = (q1 - y) ** 2 + (q2 - y) ** 2
+        return jnp.mean(isw * per_sample), (q1, q2)
+
+    def f(theta_c, m, v, t, theta_ct, theta_a, s, a, rn, s2, gmask, isw,
+          mu, var, lr):
+        s_n = normalize_obs(s, mu, var)
+        s2_n = normalize_obs(s2, mu, var)
+        a2 = spec.actor_fwd(theta_a, s2_n, use_pallas=False)
+        q1t, q2t = spec.critic_fwd(theta_ct, s2_n, a2)
+        y = jax.lax.stop_gradient(K.td_target(q1t, q2t, rn, gmask))
+        (loss, (q1, q2)), grad = jax.value_and_grad(loss_fn, has_aux=True)(
+            theta_c, s_n, a, y, isw)
+        theta_c2, m2, v2 = adam_step(theta_c, grad, m, v, t[0], lr[0])
+        theta_ct2 = K.polyak(theta_ct, theta_c2, tau)
+        td = 0.5 * (jnp.abs(q1 - y) + jnp.abs(q2 - y))
+        return (theta_c2, m2, v2, theta_ct2, loss[None], jnp.mean(q1)[None],
+                td)
+
+    return f
+
+
 def ddpg_actor_update(spec):
     """One P-learner step: ascend min_i Q_i(s, pi(s)) with the local
     critic copy Q^p (Algorithm 2)."""
@@ -308,6 +339,44 @@ def dist_critic_update(spec, tau):
     return f
 
 
+def dist_critic_update_per(spec, tau):
+    """Prioritized C51 V-learner step: IS-weighted cross-entropy, with the
+    per-sample cross-entropy magnitude as the priority signal (the
+    standard distributional-RL choice for PER)."""
+
+    z = spec.z
+
+    def loss_fn(theta_c, s_n, a, proj, isw):
+        l1, l2 = spec.critic_dist_fwd(theta_c, s_n, a)
+        ce1 = -jnp.sum(proj * jax.nn.log_softmax(l1), axis=1)
+        ce2 = -jnp.sum(proj * jax.nn.log_softmax(l2), axis=1)
+        q1 = jnp.sum(jax.nn.softmax(l1) * z[None, :], axis=1)
+        return jnp.mean(isw * (ce1 + ce2)), (q1, ce1, ce2)
+
+    def f(theta_c, m, v, t, theta_ct, theta_a, s, a, rn, s2, gmask, isw,
+          mu, var, lr):
+        s_n = normalize_obs(s, mu, var)
+        s2_n = normalize_obs(s2, mu, var)
+        a2 = spec.actor_fwd(theta_a, s2_n, use_pallas=False)
+        l1t, l2t = spec.critic_dist_fwd(theta_ct, s2_n, a2)
+        p1, p2 = jax.nn.softmax(l1t), jax.nn.softmax(l2t)
+        e1 = jnp.sum(p1 * z[None, :], axis=1)
+        e2 = jnp.sum(p2 * z[None, :], axis=1)
+        probs = jnp.where((e1 <= e2)[:, None], p1, p2)  # double-Q: lesser mean
+        proj = K.categorical_projection(probs, z, rn, gmask,
+                                        spec.v_min, spec.v_max)  # L1 kernel
+        proj = jax.lax.stop_gradient(proj)
+        (loss, (q1, ce1, ce2)), grad = jax.value_and_grad(
+            loss_fn, has_aux=True)(theta_c, s_n, a, proj, isw)
+        theta_c2, m2, v2 = adam_step(theta_c, grad, m, v, t[0], lr[0])
+        theta_ct2 = K.polyak(theta_ct, theta_c2, tau)
+        td = 0.5 * (ce1 + ce2)
+        return (theta_c2, m2, v2, theta_ct2, loss[None], jnp.mean(q1)[None],
+                td)
+
+    return f
+
+
 def dist_actor_update(spec):
     """P-learner step against the distributional critic: ascend the lesser
     expected atom value."""
@@ -369,6 +438,36 @@ def sac_critic_update(spec, tau):
         theta_c2, m2, v2 = adam_step(theta_c, grad, m, v, t[0], lr[0])
         theta_ct2 = K.polyak(theta_ct, theta_c2, tau)
         return theta_c2, m2, v2, theta_ct2, loss[None], jnp.mean(q1)[None]
+
+    return f
+
+
+def sac_critic_update_per(spec, tau):
+    """Prioritized SAC V-learner step: IS-weighted soft-Bellman
+    regression, per-sample |TD| output for the priority refresh."""
+
+    def loss_fn(theta_c, s_n, a, y, isw):
+        q1, q2 = spec.critic_fwd(theta_c, s_n, a)
+        per_sample = (q1 - y) ** 2 + (q2 - y) ** 2
+        return jnp.mean(isw * per_sample), (q1, q2)
+
+    def f(theta_c, m, v, t, theta_ct, theta_a, log_alpha, s, a, rn, s2,
+          gmask, isw, noise, mu, var, lr):
+        s_n = normalize_obs(s, mu, var)
+        s2_n = normalize_obs(s2, mu, var)
+        mean2, log_std2 = spec.sac_actor_fwd(theta_a, s2_n)
+        a2, logp2 = sac_sample(mean2, log_std2, noise)
+        q1t, q2t = spec.critic_fwd(theta_ct, s2_n, a2)
+        alpha = jnp.exp(log_alpha[0])
+        soft_q = jnp.minimum(q1t, q2t) - alpha * logp2
+        y = jax.lax.stop_gradient(rn + gmask * soft_q)
+        (loss, (q1, q2)), grad = jax.value_and_grad(loss_fn, has_aux=True)(
+            theta_c, s_n, a, y, isw)
+        theta_c2, m2, v2 = adam_step(theta_c, grad, m, v, t[0], lr[0])
+        theta_ct2 = K.polyak(theta_ct, theta_c2, tau)
+        td = 0.5 * (jnp.abs(q1 - y) + jnp.abs(q2 - y))
+        return (theta_c2, m2, v2, theta_ct2, loss[None], jnp.mean(q1)[None],
+                td)
 
     return f
 

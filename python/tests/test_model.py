@@ -269,6 +269,92 @@ def test_dist_critic_update_reduces_ce_loss():
     assert losses[-1] < losses[0]
 
 
+def test_ddpg_critic_update_per_reduces_to_uniform_at_unit_weights():
+    """With isw = 1 the prioritized graph computes the same loss and the
+    same parameter update as the uniform one, plus a nonnegative
+    per-sample |td| output of shape (B,)."""
+    spec = _spec()
+    rng = np.random.default_rng(9)
+    theta_c = _theta(rng, spec.critic)
+    theta_ct = theta_c
+    theta_a = _theta(rng, spec.actor)
+    m = jnp.zeros(spec.critic.size)
+    v = jnp.zeros(spec.critic.size)
+    mu = jnp.zeros(spec.obs_dim)
+    var = jnp.ones(spec.obs_dim)
+    b = 32
+    s, a, rn, s2, gmask = _cu_inputs(spec, rng, b)
+    isw = jnp.ones(b)
+    t = jnp.array([1.0])
+    lr = jnp.array([3e-3])
+    base = jax.jit(model.ddpg_critic_update(spec, tau=0.05))
+    per = jax.jit(model.ddpg_critic_update_per(spec, tau=0.05))
+    tc_u, m_u, v_u, tct_u, loss_u, q_u = base(
+        theta_c, m, v, t, theta_ct, theta_a, s, a, rn, s2, gmask, mu, var, lr)
+    tc_p, m_p, v_p, tct_p, loss_p, q_p, td = per(
+        theta_c, m, v, t, theta_ct, theta_a, s, a, rn, s2, gmask, isw,
+        mu, var, lr)
+    np.testing.assert_allclose(loss_p, loss_u, rtol=1e-5)
+    np.testing.assert_allclose(q_p, q_u, rtol=1e-5)
+    np.testing.assert_allclose(tc_p, tc_u, rtol=1e-4, atol=1e-7)
+    np.testing.assert_allclose(tct_p, tct_u, rtol=1e-4, atol=1e-7)
+    assert td.shape == (b,)
+    assert np.all(np.asarray(td) >= 0.0)
+    # Non-uniform weights must actually change the update direction.
+    skew = jnp.array(rng.uniform(0.1, 2.0, size=b).astype(np.float32))
+    tc_s, *_rest = per(theta_c, m, v, t, theta_ct, theta_a, s, a, rn, s2,
+                       gmask, skew, mu, var, lr)
+    assert not np.allclose(np.asarray(tc_s), np.asarray(tc_u), atol=1e-8)
+
+
+def test_sac_and_dist_per_variants_reduce_to_uniform_and_emit_td():
+    """The C51 and SAC prioritized graphs must also collapse to their
+    uniform counterparts at isw = 1 (loss and every parameter output),
+    and emit a nonnegative per-sample priority signal."""
+    spec = _spec()
+    rng = np.random.default_rng(10)
+    b = 16
+    mu = jnp.zeros(spec.obs_dim)
+    var = jnp.ones(spec.obs_dim)
+    s, a, rn, s2, gmask = _cu_inputs(spec, rng, b)
+    isw = jnp.ones(b)
+    t = jnp.array([1.0])
+    lr = jnp.array([1e-3])
+
+    def check_matches_uniform(out_u, out_p):
+        # Uniform: (theta, m, v, target, loss, qmean); per adds td.
+        for u, p in zip(out_u, out_p[:-1]):
+            np.testing.assert_allclose(p, u, rtol=1e-4, atol=1e-7)
+        td = out_p[-1]
+        assert td.shape == (b,)
+        assert np.all(np.isfinite(np.asarray(td)))
+        assert np.all(np.asarray(td) >= 0.0)
+
+    theta_d = _theta(rng, spec.critic_dist)
+    theta_a = _theta(rng, spec.actor)
+    md = jnp.zeros(spec.critic_dist.size)
+    fd_u = jax.jit(model.dist_critic_update(spec, tau=0.05))
+    fd_p = jax.jit(model.dist_critic_update_per(spec, tau=0.05))
+    out_u = fd_u(theta_d, md, md, t, theta_d, theta_a, s, a, rn, s2, gmask,
+                 mu, var, lr)
+    out_p = fd_p(theta_d, md, md, t, theta_d, theta_a, s, a, rn, s2, gmask,
+                 isw, mu, var, lr)
+    check_matches_uniform(out_u, out_p)  # cross-entropy priorities
+
+    theta_c = _theta(rng, spec.critic)
+    theta_sa = _theta(rng, spec.sac_actor)
+    mc = jnp.zeros(spec.critic.size)
+    la = jnp.zeros(1)
+    noise = jnp.array(rng.normal(size=(b, spec.act_dim)).astype(np.float32))
+    fs_u = jax.jit(model.sac_critic_update(spec, tau=0.05))
+    fs_p = jax.jit(model.sac_critic_update_per(spec, tau=0.05))
+    out_u = fs_u(theta_c, mc, mc, t, theta_c, theta_sa, la, s, a, rn, s2,
+                 gmask, noise, mu, var, lr)
+    out_p = fs_p(theta_c, mc, mc, t, theta_c, theta_sa, la, s, a, rn, s2,
+                 gmask, isw, noise, mu, var, lr)
+    check_matches_uniform(out_u, out_p)
+
+
 def test_ppo_update_moves_toward_advantage():
     spec = _spec()
     rng = np.random.default_rng(7)

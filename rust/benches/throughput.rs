@@ -15,7 +15,7 @@ use pql::config::{Exploration, Ratio};
 use pql::coordinator::PaceController;
 use pql::envs::{self, StepOut};
 use pql::exploration::Noise;
-use pql::replay::{NStepAssembler, SampleBatch, TransitionBuffer};
+use pql::replay::{NStepAssembler, SampleBatch, SumTree, TransitionBuffer};
 use pql::runtime::{infer_chunked, Engine, FeedDims, FeedPlan, HostTensor, OptState, Variant};
 use pql::util::Rng;
 use std::path::Path;
@@ -52,6 +52,29 @@ struct PlaneRecord {
     ms_per_iter: f64,
     per_sec: f64,
     unit: &'static str,
+}
+
+/// Rate for a (group, n) cell — shared by every BENCH_*.json writer.
+fn rate_of(records: &[PlaneRecord], group: &str, n: usize) -> f64 {
+    records
+        .iter()
+        .find(|r| r.group == group && r.n == n)
+        .map(|r| r.per_sec)
+        .unwrap_or(0.0)
+}
+
+/// Serialize records to the shared `results` row format.
+fn rows_json(records: &[PlaneRecord]) -> String {
+    records
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"group\": \"{}\", \"name\": \"{}\", \"n\": {}, \"ms_per_iter\": {:.6}, \"per_sec\": {:.1}, \"unit\": \"{}\"}}",
+                r.group, r.name, r.n, r.ms_per_iter, r.per_sec, r.unit
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n")
 }
 
 /// The before/after data-plane suite (PERF.md): env stepping with and
@@ -176,6 +199,109 @@ fn bench_data_plane() -> Vec<PlaneRecord> {
     records
 }
 
+/// Prioritized replay (PERF.md §Prioritized replay): uniform sample vs
+/// stratified sum-tree sample + gather, plus the priority-update leg of
+/// the TD-error feedback loop, at B ∈ {4096, 16384} over a full
+/// 300k-slot ring. This is the cost of turning the paper's uniform
+/// replay into the §5 ablation's prioritized arm.
+fn bench_prioritized_replay() -> Vec<PlaneRecord> {
+    let mut records = Vec::new();
+    let (od, ad) = (30usize, 12usize);
+    let cap = 300_000usize;
+    let mut rng = Rng::new(7);
+    // Fill the ring and its lockstep tree to capacity, then skew the
+    // priorities so the tree descent sees a realistic mass profile.
+    let mut buf = TransitionBuffer::new(cap, od, ad);
+    let mut tree = SumTree::new(cap, 0.6, 0.4);
+    {
+        let chunk = 4096;
+        let mut s = vec![0.0f32; chunk * od];
+        let mut a = vec![0.0f32; chunk * ad];
+        rng.fill_normal(&mut s);
+        rng.fill_uniform(&mut a, -1.0, 1.0);
+        let rn = vec![0.5f32; chunk];
+        let gm = vec![0.97f32; chunk];
+        while buf.len() < cap {
+            buf.push_batch(chunk, &s, &a, &rn, &s, &gm, &[], &[]);
+            tree.push_batch(chunk);
+        }
+        let idx: Vec<u32> = (0..cap as u32).collect();
+        let mut td = vec![0.0f32; cap];
+        rng.fill_uniform(&mut td, 0.0, 2.0);
+        tree.update_many(&idx, &td);
+    }
+    for &b in &[4096usize, 16384] {
+        let iters = (500_000 / b).max(20);
+        let mut batch = SampleBatch::new(b, od, ad);
+
+        let name = format!("replay sample uniform (B={b})");
+        let (ms, rate) = bench(&name, b as f64, "rows", iters, || {
+            buf.sample(&mut rng, b, &mut batch);
+        });
+        records.push(PlaneRecord {
+            group: "sample_uniform",
+            name,
+            n: b,
+            ms_per_iter: ms,
+            per_sec: rate,
+            unit: "rows",
+        });
+
+        let name = format!("replay sample prioritized (B={b})");
+        let (ms, rate) = bench(&name, b as f64, "rows", iters, || {
+            tree.sample_into(&mut rng, b, &mut batch.idx, &mut batch.isw);
+            buf.gather(&mut batch);
+        });
+        records.push(PlaneRecord {
+            group: "sample_prioritized",
+            name,
+            n: b,
+            ms_per_iter: ms,
+            per_sec: rate,
+            unit: "rows",
+        });
+
+        // Priority refresh over the indices of the last prioritized draw.
+        let mut td = vec![0.0f32; b];
+        rng.fill_uniform(&mut td, 0.0, 2.0);
+        let name = format!("priority update_many (B={b})");
+        let (ms, rate) = bench(&name, b as f64, "rows", iters, || {
+            tree.update_many(&batch.idx, &td);
+        });
+        records.push(PlaneRecord {
+            group: "priority_update",
+            name,
+            n: b,
+            ms_per_iter: ms,
+            per_sec: rate,
+            unit: "rows",
+        });
+    }
+    records
+}
+
+/// Serialize the prioritized-replay records to
+/// `BENCH_prioritized_replay.json` at the repository root.
+fn write_prioritized_replay_json(records: &[PlaneRecord]) -> std::io::Result<std::path::PathBuf> {
+    let mut speedups = Vec::new();
+    for &n in &[4096usize, 16384] {
+        let ratio =
+            rate_of(records, "sample_prioritized", n) / rate_of(records, "sample_uniform", n).max(1e-9);
+        speedups.push(format!(
+            "    {{\"n\": {n}, \"prioritized_over_uniform\": {ratio:.3}, \"priority_update_rows_per_sec\": {:.1}}}",
+            rate_of(records, "priority_update", n)
+        ));
+    }
+    let json = format!(
+        "{{\n  \"schema\": \"pql.bench.prioritized_replay/v1\",\n  \"source\": \"cargo bench --bench throughput\",\n  \"capacity\": 300000,\n  \"results\": [\n{}\n  ],\n  \"speedups\": [\n{}\n  ]\n}}\n",
+        rows_json(records),
+        speedups.join(",\n")
+    );
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_prioritized_replay.json");
+    std::fs::write(&path, json)?;
+    Ok(path)
+}
+
 /// Learner feed plane, host side (PERF.md §Learner feed plane): input
 /// assembly for a critic-update-shaped artifact, owned `HostTensor`
 /// clones (the pre-FeedPlan path) vs `FeedFrame` slice binding + view
@@ -272,26 +398,13 @@ fn bench_learner_feed() -> Vec<PlaneRecord> {
 /// (overwriting, now including `run_owned`/`run_ref`) when PJRT artifacts
 /// are available.
 fn write_learner_feed_json(records: &[PlaneRecord]) -> std::io::Result<std::path::PathBuf> {
-    let rate_of = |group: &str, n: usize| {
-        records
-            .iter()
-            .find(|r| r.group == group && r.n == n)
-            .map(|r| r.per_sec)
-            .unwrap_or(0.0)
-    };
-    let mut rows = Vec::new();
-    for r in records {
-        rows.push(format!(
-            "    {{\"group\": \"{}\", \"name\": \"{}\", \"n\": {}, \"ms_per_iter\": {:.6}, \"per_sec\": {:.1}, \"unit\": \"{}\"}}",
-            r.group, r.name, r.n, r.ms_per_iter, r.per_sec, r.unit
-        ));
-    }
     let mut speedups = Vec::new();
     for &n in &[512usize, 4096, 16384] {
-        let assemble = rate_of("assemble_ref", n) / rate_of("assemble_owned", n).max(1e-9);
-        let run = if rate_of("run_owned", n) > 0.0 {
+        let assemble =
+            rate_of(records, "assemble_ref", n) / rate_of(records, "assemble_owned", n).max(1e-9);
+        let run = if rate_of(records, "run_owned", n) > 0.0 {
             format!(", \"run_ref_over_owned\": {:.3}",
-                    rate_of("run_ref", n) / rate_of("run_owned", n).max(1e-9))
+                    rate_of(records, "run_ref", n) / rate_of(records, "run_owned", n).max(1e-9))
         } else {
             String::new()
         };
@@ -301,7 +414,7 @@ fn write_learner_feed_json(records: &[PlaneRecord]) -> std::io::Result<std::path
     }
     let json = format!(
         "{{\n  \"schema\": \"pql.bench.learner_feed/v1\",\n  \"source\": \"cargo bench --bench throughput\",\n  \"task\": \"ant\",\n  \"results\": [\n{}\n  ],\n  \"speedups\": [\n{}\n  ]\n}}\n",
-        rows.join(",\n"),
+        rows_json(records),
         speedups.join(",\n")
     );
     let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_learner_feed.json");
@@ -312,24 +425,12 @@ fn write_learner_feed_json(records: &[PlaneRecord]) -> std::io::Result<std::path
 /// Serialize the data-plane records to `BENCH_data_plane.json` at the
 /// repository root (machine-readable perf trajectory, PR over PR).
 fn write_data_plane_json(records: &[PlaneRecord]) -> std::io::Result<std::path::PathBuf> {
-    let rate_of = |group: &str, n: usize| {
-        records
-            .iter()
-            .find(|r| r.group == group && r.n == n)
-            .map(|r| r.per_sec)
-            .unwrap_or(0.0)
-    };
-    let mut rows = Vec::new();
-    for r in records {
-        rows.push(format!(
-            "    {{\"group\": \"{}\", \"name\": \"{}\", \"n\": {}, \"ms_per_iter\": {:.6}, \"per_sec\": {:.1}, \"unit\": \"{}\"}}",
-            r.group, r.name, r.n, r.ms_per_iter, r.per_sec, r.unit
-        ));
-    }
     let mut speedups = Vec::new();
     for &n in &[256usize, 4096, 16384] {
-        let ingest = rate_of("ingest_batch", n) / rate_of("ingest_push", n).max(1e-9);
-        let step = rate_of("env_step_sharded", n) / rate_of("env_step_single", n).max(1e-9);
+        let ingest =
+            rate_of(records, "ingest_batch", n) / rate_of(records, "ingest_push", n).max(1e-9);
+        let step = rate_of(records, "env_step_sharded", n)
+            / rate_of(records, "env_step_single", n).max(1e-9);
         speedups.push(format!(
             "    {{\"n\": {n}, \"ingest_batch_over_push\": {ingest:.3}, \"env_sharded_over_single\": {step:.3}}}"
         ));
@@ -342,7 +443,7 @@ fn write_data_plane_json(records: &[PlaneRecord]) -> std::io::Result<std::path::
     let json = format!(
         "{{\n  \"schema\": \"pql.bench.data_plane/v1\",\n  \"source\": \"cargo bench --bench throughput\",\n  \"task\": \"ant\",\n  \"env_shards_auto\": {},\n  \"results\": [\n{}\n  ],\n  \"speedups\": [\n{}\n  ]\n}}\n",
         envs::auto_shards(0, 4096),
-        rows.join(",\n"),
+        rows_json(records),
         speedups.join(",\n")
     );
     let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_data_plane.json");
@@ -435,6 +536,13 @@ fn main() {
     match write_data_plane_json(&plane) {
         Ok(path) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("could not write BENCH_data_plane.json: {e}"),
+    }
+
+    println!("\n== prioritized replay (B = 4096 / 16384) ==");
+    let per = bench_prioritized_replay();
+    match write_prioritized_replay_json(&per) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_prioritized_replay.json: {e}"),
     }
 
     println!("\n== learner feed plane (B = 512 / 4096 / 16384) ==");

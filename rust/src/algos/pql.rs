@@ -19,7 +19,9 @@ use crate::coordinator::{evaluate, MsgPool, ReturnTracker, Shared, StepMsg};
 use crate::envs::{self, StepOut};
 use crate::exploration::Noise;
 use crate::metrics::{Record, RunLog};
-use crate::replay::{NStepAssembler, ReadyBatch, SampleBatch, StateBuffer, TransitionBuffer};
+use crate::replay::{
+    NStepAssembler, ReadyBatch, SampleBatch, StateBuffer, SumTree, TransitionBuffer,
+};
 use crate::runtime::{infer_chunked, Engine, FeedDims, FeedPlan, Manifest, OptState};
 use crate::util::{Rng, RunningNorm};
 use anyhow::{Context, Result};
@@ -57,6 +59,9 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, variant: Variant
     let vision = tinfo.critic_obs_dim != tinfo.obs_dim;
     if vision && variant != Variant::Ddpg {
         anyhow::bail!("vision task supports the DDPG-based PQL variant only");
+    }
+    if vision && cfg.prioritized_replay {
+        anyhow::bail!("prioritized replay supports state-based (symmetric) tasks only");
     }
 
     let mut rng = Rng::new(cfg.seed);
@@ -368,15 +373,26 @@ fn v_loop(
     let (od, ad, cd) = (tinfo.obs_dim, tinfo.act_dim, tinfo.critic_obs_dim);
     let vision = cd != od;
     let b = cfg.batch_size;
+    let per = cfg.prioritized_replay;
     let mut engine = Engine::with_manifest(Arc::clone(&manifest))?;
-    let artifact = manifest.batch_artifact(variant.critic_update_artifact(), b);
+    let base = if per {
+        variant.critic_update_per_artifact()
+    } else {
+        variant.critic_update_artifact()
+    };
+    let artifact = manifest.batch_artifact(base, b);
     let update = engine
         .load(&cfg.task, &artifact)
         .with_context(|| format!("batch size {b} needs artifact {artifact}"))?;
 
     // Input signature resolved once; per-iteration assembly is pure
     // slice binding (zero heap clones — see tests/alloc_free.rs).
-    let plan = FeedPlan::critic_update(variant, &feed_dims(&tinfo, variant, b), cfg.critic_lr);
+    let dims = feed_dims(&tinfo, variant, b);
+    let plan = if per {
+        FeedPlan::critic_update_per(variant, &dims, cfg.critic_lr)
+    } else {
+        FeedPlan::critic_update(variant, &dims, cfg.critic_lr)
+    };
     plan.validate(&update.info)
         .with_context(|| format!("{artifact} signature"))?;
 
@@ -396,6 +412,10 @@ fn v_loop(
         ad,
         if vision { cd } else { 0 },
     );
+    // Sum-tree priority layer, kept in lockstep with the ring: fresh rows
+    // get max priority at ingest, sampled rows are refreshed from the
+    // artifact's per-sample |td| output (Schaul et al. / Ape-X).
+    let mut pri = per.then(|| SumTree::new(cfg.replay_capacity, cfg.per_alpha, cfg.per_beta0));
     let mut batch = SampleBatch::new(b, od, ad);
     let mut theta_a = shared.actor_bus.snapshot().1;
     let mut theta_a_version = 0u64;
@@ -428,6 +448,9 @@ fn v_loop(
                         ready.len, &ready.s, &ready.a, &ready.rn, &ready.s2,
                         &ready.gmask, &ready.cs, &ready.cs2,
                     );
+                    if let Some(tree) = pri.as_mut() {
+                        tree.push_batch(ready.len); // lockstep with the ring
+                    }
                     let _ = recycle.send(msg); // Actor may already be gone
                 }
                 Err(mpsc::TryRecvError::Empty) => break,
@@ -457,7 +480,14 @@ fn v_loop(
         let norm = shared.norm_bus.view();
         let alpha = shared.alpha_bus.snapshot().1;
 
-        replay.sample(rng, b, &mut batch);
+        if let Some(tree) = pri.as_mut() {
+            // Stratified prioritized draw: indices + IS weights land in
+            // the batch's retained scratch, then the ring gathers rows.
+            tree.sample_into(rng, b, &mut batch.idx, &mut batch.isw);
+            replay.gather(&mut batch);
+        } else {
+            replay.sample(rng, b, &mut batch);
+        }
         if plan.has("noise") {
             rng.fill_normal(&mut noise); // SAC next-action noise
         }
@@ -478,17 +508,24 @@ fn v_loop(
             f.bind("s2", &batch.s2)?;
             f.bind_opt("cs2", &batch.cs2)?;
             f.bind("gmask", &batch.gmask)?;
+            f.bind_opt("isw", &batch.isw)?;
             f.bind_opt("noise", &noise)?;
             f.bind("mu", norm.mean())?;
             f.bind("var", norm.var())?;
             f.run(&update)?
         };
-        // outputs: theta_c, m, v, theta_ct, loss, qmean
+        // outputs: theta_c, m, v, theta_ct, loss, qmean[, td]
         let mut it = outs.into_iter();
         let th = it.next().unwrap();
         let m = it.next().unwrap();
         let v = it.next().unwrap();
         target = it.next().unwrap();
+        if let Some(tree) = pri.as_mut() {
+            // Close the TD-error feedback loop: the per-sample |td|
+            // output (after loss and qmean) refreshes the sampled leaves.
+            let td = it.nth(2).unwrap();
+            tree.update_many(&batch.idx, &td);
+        }
         critic.absorb(th, m, v);
         updates += 1;
         if updates % CRITIC_SYNC_EVERY == 0 {

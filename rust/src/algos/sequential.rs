@@ -13,7 +13,7 @@ use crate::coordinator::{evaluate, ReturnTracker};
 use crate::envs::{self, StepOut};
 use crate::exploration::Noise;
 use crate::metrics::{Record, RunLog};
-use crate::replay::{NStepAssembler, ReadyBatch, SampleBatch, TransitionBuffer};
+use crate::replay::{NStepAssembler, ReadyBatch, SampleBatch, SumTree, TransitionBuffer};
 use crate::runtime::{infer_chunked, Engine, FeedDims, FeedPlan, Manifest, OptState, Variant};
 use crate::util::{Rng, RunningNorm};
 use anyhow::{Context, Result};
@@ -32,11 +32,17 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, sac: bool) -> Re
     let b = cfg.batch_size;
     let variant = if sac { Variant::Sac } else { Variant::Ddpg };
 
+    let per = cfg.prioritized_replay;
     let mut rng = Rng::new(cfg.seed);
     let mut engine = Engine::with_manifest(Arc::clone(&manifest))?;
     let infer = engine.load(&cfg.task, variant.infer_artifact())?;
+    let cu_base = if per {
+        variant.critic_update_per_artifact()
+    } else {
+        variant.critic_update_artifact()
+    };
     let cu = engine
-        .load(&cfg.task, &manifest.batch_artifact(variant.critic_update_artifact(), b))
+        .load(&cfg.task, &manifest.batch_artifact(cu_base, b))
         .with_context(|| format!("batch {b} artifact"))?;
     let au = engine.load(&cfg.task, &manifest.batch_artifact(variant.actor_update_artifact(), b))?;
 
@@ -50,7 +56,11 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, sac: bool) -> Re
         actor_params: tinfo.layouts[variant.actor_layout()].size,
         critic_params: tinfo.layouts[variant.critic_layout()].size,
     };
-    let cu_plan = FeedPlan::critic_update(variant, &dims, cfg.critic_lr);
+    let cu_plan = if per {
+        FeedPlan::critic_update_per(variant, &dims, cfg.critic_lr)
+    } else {
+        FeedPlan::critic_update(variant, &dims, cfg.critic_lr)
+    };
     cu_plan.validate(&cu.info).context("sequential critic_update signature")?;
     let au_plan = FeedPlan::actor_update(variant, &dims, cfg.actor_lr);
     au_plan.validate(&au.info).context("sequential actor_update signature")?;
@@ -75,6 +85,10 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, sac: bool) -> Re
     let mut norm = RunningNorm::new(od);
     norm.update(&obs, od);
     let mut replay = TransitionBuffer::new(cfg.replay_capacity, od, ad);
+    // Optional sum-tree priority layer for the critic's minibatch; the
+    // policy update below keeps sampling uniformly (it mirrors PQL's
+    // P-learner, whose state buffer is always uniform).
+    let mut pri = per.then(|| SumTree::new(cfg.replay_capacity, cfg.per_alpha, cfg.per_beta0));
     let mut asm = NStepAssembler::new(n, cfg.nstep, cfg.gamma, od, ad);
     let mut ready = ReadyBatch::default();
     let mut scaled = vec![0.0f32; n];
@@ -123,6 +137,9 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, sac: bool) -> Re
             ready.len, &ready.s, &ready.a, &ready.rn, &ready.s2, &ready.gmask,
             &ready.cs, &ready.cs2,
         );
+        if let Some(tree) = pri.as_mut() {
+            tree.push_batch(ready.len); // lockstep with the ring
+        }
         norm.update(&out.obs, od);
         obs.copy_from_slice(&out.obs);
         steps += 1;
@@ -130,7 +147,12 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, sac: bool) -> Re
         // ---- sequential learner phase --------------------------------------
         if replay.len() >= b && steps >= cfg.warmup_steps as u64 {
             for _ in 0..upd_per_step {
-                replay.sample(&mut rng, b, &mut batch);
+                if let Some(tree) = pri.as_mut() {
+                    tree.sample_into(&mut rng, b, &mut batch.idx, &mut batch.isw);
+                    replay.gather(&mut batch);
+                } else {
+                    replay.sample(&mut rng, b, &mut batch);
+                }
                 if cu_plan.has("noise") {
                     rng.fill_normal(&mut unoise); // SAC next-action noise
                 }
@@ -146,16 +168,24 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, sac: bool) -> Re
                     f.bind("rn", &batch.rn)?;
                     f.bind("s2", &batch.s2)?;
                     f.bind("gmask", &batch.gmask)?;
+                    f.bind_opt("isw", &batch.isw)?;
                     f.bind_opt("noise", &unoise)?;
                     f.bind("mu", &norm.mean)?;
                     f.bind("var", &norm.var)?;
                     f.run(&cu)?
                 };
+                // outputs: theta_c, m, v, theta_ct, loss, qmean[, td]
                 let mut it = outs.into_iter();
                 let th = it.next().unwrap();
                 let m = it.next().unwrap();
                 let v = it.next().unwrap();
                 target = it.next().unwrap();
+                if let Some(tree) = pri.as_mut() {
+                    // Per-sample |td| (after loss and qmean) refreshes
+                    // the sampled leaves — the PER feedback loop.
+                    let td = it.nth(2).unwrap();
+                    tree.update_many(&batch.idx, &td);
+                }
                 critic.absorb(th, m, v);
                 v_updates += 1;
 

@@ -2,9 +2,12 @@
 //!
 //! ```text
 //! pql train --task ant --algo pql --budget-secs 120 --run-dir runs/ant
+//! pql train --task ant --algo pql --prioritized-replay \
+//!           --per-alpha 0.6 --per-beta0 0.4   # §5 replay-ablation arm
 //! ```
 //! See `TrainConfig::from_args` for the full flag set (β ratios, σ
-//! schedule, placement, device speeds, batch, replay, ...).
+//! schedule, placement, device speeds, batch, replay, prioritized
+//! replay, ...).
 
 use crate::cli::Args;
 use crate::config::TrainConfig;

@@ -105,6 +105,15 @@ pub struct TrainConfig {
     pub env_shards: usize,
     pub batch_size: usize,
     pub replay_capacity: usize,
+    /// Prioritized replay (PER, Schaul et al.) for the critic's minibatch
+    /// sampling. Off by default — the paper ships uniform sampling; this
+    /// is the §5 replay-ablation comparison arm. With it off, training is
+    /// bit-identical to the uniform path.
+    pub prioritized_replay: bool,
+    /// PER priority exponent α (`p_i = (|td_i| + ε)^α`).
+    pub per_alpha: f32,
+    /// PER initial importance-sampling exponent β₀, annealed to 1.
+    pub per_beta0: f32,
     pub nstep: usize,
     pub gamma: f32,
     pub actor_lr: f32,
@@ -147,6 +156,9 @@ impl Default for TrainConfig {
             env_shards: 0,
             batch_size: 512,
             replay_capacity: 300_000,
+            prioritized_replay: false,
+            per_alpha: 0.6,
+            per_beta0: 0.4,
             nstep: 3,
             gamma: 0.99,
             actor_lr: 5e-4,
@@ -200,6 +212,15 @@ impl TrainConfig {
                 ("replay_capacity" | "train.replay_capacity", v) => {
                     self.replay_capacity = v.as_usize()?
                 }
+                ("prioritized" | "replay.prioritized", v) => {
+                    self.prioritized_replay = v.as_bool()?
+                }
+                ("per_alpha" | "replay.per_alpha", v) => {
+                    self.per_alpha = v.as_f64()? as f32
+                }
+                ("per_beta0" | "replay.per_beta0", v) => {
+                    self.per_beta0 = v.as_f64()? as f32
+                }
                 ("nstep" | "train.nstep", v) => self.nstep = v.as_usize()?,
                 ("gamma" | "train.gamma", v) => self.gamma = v.as_f64()? as f32,
                 ("actor_lr" | "train.actor_lr", v) => self.actor_lr = v.as_f64()? as f32,
@@ -240,6 +261,11 @@ impl TrainConfig {
         self.env_shards = a.get_parse("env-shards", self.env_shards)?;
         self.batch_size = a.get_parse("batch-size", self.batch_size)?;
         self.replay_capacity = a.get_parse("replay-capacity", self.replay_capacity)?;
+        if a.flag("prioritized-replay") {
+            self.prioritized_replay = true;
+        }
+        self.per_alpha = a.get_parse("per-alpha", self.per_alpha)?;
+        self.per_beta0 = a.get_parse("per-beta0", self.per_beta0)?;
         self.nstep = a.get_parse("nstep", self.nstep)?;
         self.gamma = a.get_parse("gamma", self.gamma)?;
         self.actor_lr = a.get_parse("actor-lr", self.actor_lr)?;
@@ -334,6 +360,17 @@ impl TrainConfig {
         if self.replay_capacity < self.batch_size {
             bail!("replay_capacity must be >= batch_size");
         }
+        if self.prioritized_replay {
+            if self.algo == Algo::Ppo {
+                bail!("prioritized replay applies to off-policy algos only");
+            }
+            if self.per_alpha < 0.0 {
+                bail!("per_alpha must be >= 0");
+            }
+            if !(0.0..=1.0).contains(&self.per_beta0) {
+                bail!("per_beta0 must be in [0, 1]");
+            }
+        }
         Ok(())
     }
 }
@@ -385,6 +422,54 @@ mod tests {
         assert_eq!(c.beta_av, Ratio::new(1, 4));
         assert_eq!(c.exploration, Exploration::Fixed(0.3));
         assert!(!c.pace_control);
+    }
+
+    #[test]
+    fn prioritized_replay_defaults_off_and_wires_through() {
+        let c = TrainConfig::default();
+        assert!(!c.prioritized_replay, "PER must be opt-in (paper ships uniform)");
+        assert_eq!(c.per_alpha, 0.6);
+        assert_eq!(c.per_beta0, 0.4);
+
+        let c = TrainConfig::from_args(&args(&[
+            "--prioritized-replay", "--per-alpha", "0.7", "--per-beta0", "0.5",
+        ]))
+        .unwrap();
+        assert!(c.prioritized_replay);
+        assert_eq!(c.per_alpha, 0.7);
+        assert_eq!(c.per_beta0, 0.5);
+
+        let dir = std::env::temp_dir().join("pql_cfg_test_per");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.toml");
+        std::fs::write(
+            &p,
+            "[replay]\nprioritized = true\nper_alpha = 0.9\nper_beta0 = 0.3\n",
+        )
+        .unwrap();
+        let c = TrainConfig::from_args(&args(&["--config", p.to_str().unwrap()])).unwrap();
+        assert!(c.prioritized_replay);
+        assert_eq!(c.per_alpha, 0.9);
+        assert_eq!(c.per_beta0, 0.3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prioritized_replay_validation() {
+        assert!(TrainConfig::from_args(&args(&[
+            "--prioritized-replay", "--algo", "ppo",
+        ]))
+        .is_err());
+        assert!(TrainConfig::from_args(&args(&[
+            "--prioritized-replay", "--per-beta0", "1.5",
+        ]))
+        .is_err());
+        assert!(TrainConfig::from_args(&args(&[
+            "--prioritized-replay", "--per-alpha", "-0.1",
+        ]))
+        .is_err());
+        // Out-of-range PER knobs are ignored while PER itself is off.
+        assert!(TrainConfig::from_args(&args(&["--per-beta0", "1.5"])).is_ok());
     }
 
     #[test]

@@ -5,14 +5,18 @@
 //! The paper's key observation (§4.4.4): with N ≫ 1000 parallel envs a
 //! "small" buffer (5M) refreshes every few hundred steps and still works.
 //! Buffers here are flat ring buffers over contiguous `f32` storage with
-//! uniform-with-replacement sampling, sized in *transitions*.
+//! uniform-with-replacement sampling, sized in *transitions*. The
+//! [`priority`] module layers an optional sum-tree prioritized sampler
+//! (Schaul et al.) over the same ring for the replay-refresh ablation.
 
 pub mod image;
 mod nstep;
+pub mod priority;
 mod state;
 mod transition;
 
 pub use image::ImageBuffer;
 pub use nstep::{NStepAssembler, ReadyBatch};
+pub use priority::SumTree;
 pub use state::StateBuffer;
 pub use transition::{SampleBatch, TransitionBuffer};

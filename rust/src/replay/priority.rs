@@ -1,0 +1,415 @@
+//! Prioritized experience replay (Schaul et al. 2016; distributed form as
+//! in Ape-X, Horgan et al. 2018) layered over the SoA transition ring.
+//!
+//! The paper deliberately ships *uniform* sampling (§4.4.4 — with N ≫ 1000
+//! envs the buffer refreshes every few hundred steps), but its replay
+//! ablation (§5) is only testable at scale with a prioritized variant to
+//! compare against. [`SumTree`] is that variant's sampling structure: a
+//! cache-friendly flat-array sum tree sized to the [`TransitionBuffer`]
+//! ring and kept in lockstep with it —
+//!
+//! - `push_batch(n)` mirrors the ring's batch ingest: the `n` freshly
+//!   written slots get the max priority seen so far (fresh data is always
+//!   sampleable, Schaul §3.3), and because ring eviction *is* overwrite,
+//!   the evicted leaves are replaced in the same pass — the tree's
+//!   positive-mass leaves are always exactly the ring's live window.
+//! - `update_many(idx, td)` closes the TD-error feedback loop: the
+//!   `*_per` critic-update artifacts emit a per-sample `|td|` vector, and
+//!   the learner writes `(|td| + ε)^α` back into the sampled leaves.
+//! - `sample_into` draws a stratified batch (one uniform per equal-mass
+//!   segment of the total) and emits indices plus importance-sampling
+//!   weights `w_i = (N_live · P(i))^{-β} / max_j w_j`, with β annealed
+//!   linearly from β₀ to 1 over [`SumTree::with_beta_anneal`] calls.
+//!
+//! All three operations run allocation-free in steady state (the output
+//! vectors retain capacity; tree updates are in-place walks) — enforced
+//! by `tests/alloc_free.rs`.
+//!
+//! [`TransitionBuffer`]: super::TransitionBuffer
+
+use crate::util::Rng;
+
+/// Schaul et al.'s ε: a floor on priority magnitudes so no live row
+/// starves once its TD error reaches zero.
+const PER_EPS: f32 = 1e-6;
+/// Default β annealing horizon, in `sample_into` calls (≈ critic updates).
+const DEFAULT_BETA_ANNEAL: u64 = 100_000;
+
+/// Flat-array sum tree over the replay ring's slot priorities.
+///
+/// Implicit binary heap layout: `t[1]` is the root (total mass), node `i`
+/// has children `2i`/`2i+1`, and the `capacity` leaves live at
+/// `t[size..size + capacity]` with `size = capacity.next_power_of_two()`
+/// (padding leaves stay zero forever). Parents are always recomputed as
+/// the exact f32 sum of their two children, so tree descent maintains a
+/// strict `target < subtree_mass` invariant and internal-node consistency
+/// is exact-equality testable.
+#[derive(Debug, Clone)]
+pub struct SumTree {
+    capacity: usize,
+    /// Leaf block offset: `capacity.next_power_of_two()`.
+    size: usize,
+    t: Vec<f32>,
+    /// Priority exponent α; leaves store already-transformed `p^α`.
+    alpha: f32,
+    /// Initial importance-sampling exponent β₀.
+    beta0: f32,
+    beta_anneal: u64,
+    samples: u64,
+    /// Largest transformed priority seen (assigned to fresh rows).
+    max_priority: f32,
+    // Ring mirror — same arithmetic as `TransitionBuffer::push_batch`.
+    head: usize,
+    len: usize,
+}
+
+/// Largest f32 strictly below a positive finite `x`.
+#[inline]
+fn prev_f32(x: f32) -> f32 {
+    f32::from_bits(x.to_bits() - 1)
+}
+
+impl SumTree {
+    /// A tree for a ring of `capacity` slots with priority exponent
+    /// `alpha` and initial IS exponent `beta0` (annealed to 1).
+    pub fn new(capacity: usize, alpha: f32, beta0: f32) -> Self {
+        assert!(capacity > 0);
+        assert!(alpha >= 0.0, "per_alpha must be >= 0");
+        assert!((0.0..=1.0).contains(&beta0), "per_beta0 must be in [0, 1]");
+        let size = capacity.next_power_of_two();
+        SumTree {
+            capacity,
+            size,
+            t: vec![0.0; 2 * size],
+            alpha,
+            beta0,
+            beta_anneal: DEFAULT_BETA_ANNEAL,
+            samples: 0,
+            max_priority: 1.0,
+            head: 0,
+            len: 0,
+        }
+    }
+
+    /// Override the β annealing horizon (in `sample_into` calls).
+    pub fn with_beta_anneal(mut self, calls: u64) -> Self {
+        self.beta_anneal = calls.max(1);
+        self
+    }
+
+    /// Live slots (mirrors `TransitionBuffer::len`).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Total priority mass (the root).
+    pub fn total(&self) -> f32 {
+        self.t[1]
+    }
+
+    /// Current transformed priority of slot `idx`.
+    pub fn leaf(&self, idx: usize) -> f32 {
+        self.t[self.size + idx]
+    }
+
+    /// Largest transformed priority seen so far.
+    pub fn max_priority(&self) -> f32 {
+        self.max_priority
+    }
+
+    /// Current annealed β.
+    pub fn beta(&self) -> f32 {
+        let f = (self.samples as f64 / self.beta_anneal as f64).min(1.0) as f32;
+        self.beta0 + (1.0 - self.beta0) * f
+    }
+
+    /// Set one leaf and refresh its root path.
+    fn set_leaf(&mut self, idx: usize, p: f32) {
+        let mut node = self.size + idx;
+        self.t[node] = p;
+        while node > 1 {
+            node >>= 1;
+            self.t[node] = self.t[2 * node] + self.t[2 * node + 1];
+        }
+    }
+
+    /// Assign `p` to the contiguous leaf span `[start, start + count)` and
+    /// rebuild the affected parents level by level — O(count + log n)
+    /// instead of `count` root walks.
+    fn assign_span(&mut self, start: usize, count: usize, p: f32) {
+        if count == 0 {
+            return;
+        }
+        debug_assert!(start + count <= self.capacity);
+        let lo = self.size + start;
+        let hi = lo + count; // exclusive
+        self.t[lo..hi].fill(p);
+        let (mut l, mut h) = (lo, hi - 1); // inclusive node range
+        while l > 1 {
+            l >>= 1;
+            h >>= 1;
+            for n in l..=h {
+                self.t[n] = self.t[2 * n] + self.t[2 * n + 1];
+            }
+        }
+    }
+
+    /// Mirror a `TransitionBuffer::push_batch(n, ...)`: the freshly
+    /// written ring slots (the trailing `capacity` rows when `n` exceeds
+    /// the whole ring) get the current max priority. Overwritten slots
+    /// lose their old priority in the same assignment — eviction and
+    /// insertion are one operation on a ring.
+    pub fn push_batch(&mut self, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let skip = n.saturating_sub(self.capacity);
+        let count = n - skip;
+        let start = (self.head + skip) % self.capacity;
+        let first = count.min(self.capacity - start);
+        let second = count - first;
+        let p = self.max_priority;
+        self.assign_span(start, first, p);
+        self.assign_span(0, second, p);
+        self.head = (self.head + n) % self.capacity;
+        self.len = (self.len + n).min(self.capacity);
+    }
+
+    /// Zero one leaf — explicit eviction for callers that clear slots
+    /// without overwriting them (the ring itself never needs this; tests
+    /// use it to carve zero-mass islands into the live window).
+    pub fn clear_slot(&mut self, idx: usize) {
+        self.set_leaf(idx, 0.0);
+    }
+
+    /// Write new priorities for the sampled rows: `p = (|td| + ε)^α`.
+    /// Non-finite TD errors are treated as zero magnitude rather than
+    /// poisoning the tree. Duplicate indices are fine (last write wins).
+    pub fn update_many(&mut self, idx: &[u32], td: &[f32]) {
+        debug_assert_eq!(idx.len(), td.len());
+        for (&i, &d) in idx.iter().zip(td) {
+            debug_assert!((i as usize) < self.len, "priority update outside live window");
+            let mag = if d.is_finite() { d.abs() } else { 0.0 };
+            let p = (mag + PER_EPS).powf(self.alpha);
+            if p > self.max_priority {
+                self.max_priority = p;
+            }
+            self.set_leaf(i as usize, p);
+        }
+    }
+
+    /// Stratified prioritized sample: split the total mass into `batch`
+    /// equal segments, draw one point per segment, and descend. Emits the
+    /// sampled slot indices and max-normalized importance-sampling
+    /// weights into the callers' retained-capacity vectors.
+    ///
+    /// Never returns an unwritten or zero-priority slot: descent keeps
+    /// `target < subtree_mass` at every node, and a final guard walks off
+    /// any leaf a float boundary could land on.
+    pub fn sample_into(
+        &mut self,
+        rng: &mut Rng,
+        batch: usize,
+        idx: &mut Vec<u32>,
+        w: &mut Vec<f32>,
+    ) {
+        assert!(self.len > 0, "sampling from an empty priority tree");
+        let total = self.total();
+        assert!(total > 0.0, "priority mass must be positive");
+        let beta = self.beta();
+        self.samples += 1;
+        idx.clear();
+        w.clear();
+        idx.reserve(batch);
+        w.reserve(batch);
+        let seg = total / batch as f32;
+        let n_live = self.len as f32;
+        let cap = prev_f32(total);
+        let mut w_max = 0.0f32;
+        for k in 0..batch {
+            let mut target = ((k as f32 + rng.uniform()) * seg).min(cap);
+            let mut node = 1usize;
+            while node < self.size {
+                let left = self.t[2 * node];
+                if target < left {
+                    node = 2 * node;
+                } else {
+                    target -= left;
+                    node = 2 * node + 1;
+                }
+            }
+            let mut leaf = node - self.size;
+            // Float-boundary guard: clamp into the live window and step
+            // off any zero-mass leaf (total > 0 guarantees termination).
+            if leaf >= self.len {
+                leaf = self.len - 1;
+            }
+            let mut p = self.t[self.size + leaf];
+            while p <= 0.0 {
+                leaf = if leaf == 0 { self.len - 1 } else { leaf - 1 };
+                p = self.t[self.size + leaf];
+            }
+            idx.push(leaf as u32);
+            let weight = (n_live * (p / total)).powf(-beta);
+            if weight > w_max {
+                w_max = weight;
+            }
+            w.push(weight);
+        }
+        let inv = 1.0 / w_max;
+        for v in w.iter_mut() {
+            *v *= inv;
+        }
+    }
+
+    /// Every internal node equals the exact f32 sum of its children
+    /// (parents are only ever written as `left + right`, so equality is
+    /// exact, not approximate).
+    pub fn nodes_consistent(&self) -> bool {
+        (1..self.size).all(|n| self.t[n] == self.t[2 * n] + self.t[2 * n + 1])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_rows_get_max_priority_and_live_window_tracks_ring() {
+        let mut tree = SumTree::new(8, 0.6, 0.4);
+        assert_eq!(tree.len(), 0);
+        assert_eq!(tree.total(), 0.0);
+        tree.push_batch(3);
+        assert_eq!(tree.len(), 3);
+        for i in 0..3 {
+            assert_eq!(tree.leaf(i), 1.0); // initial max priority
+        }
+        for i in 3..8 {
+            assert_eq!(tree.leaf(i), 0.0, "unwritten slot {i} has mass");
+        }
+        assert_eq!(tree.total(), 3.0);
+        assert!(tree.nodes_consistent());
+    }
+
+    #[test]
+    fn push_batch_wraps_and_caps_like_the_ring() {
+        let mut tree = SumTree::new(5, 1.0, 0.4);
+        tree.push_batch(4);
+        // Depress slot 0 so the wrap-around overwrite is observable.
+        tree.update_many(&[0], &[0.0]);
+        let low = tree.leaf(0);
+        assert!(low < 1.0);
+        // 3 more rows: slots 4, 0, 1 rewritten at max priority.
+        tree.push_batch(3);
+        assert_eq!(tree.len(), 5);
+        assert_eq!(tree.leaf(0), tree.max_priority(), "evicted slot not refreshed");
+        assert!(tree.nodes_consistent());
+        // A batch larger than the whole ring: every leaf at max priority.
+        tree.push_batch(13);
+        for i in 0..5 {
+            assert_eq!(tree.leaf(i), tree.max_priority());
+        }
+        assert!(tree.nodes_consistent());
+    }
+
+    #[test]
+    fn update_many_applies_alpha_transform_and_tracks_max() {
+        let mut tree = SumTree::new(4, 0.5, 0.4);
+        tree.push_batch(4);
+        tree.update_many(&[0, 1, 2], &[4.0, -4.0, f32::NAN]);
+        let expect = (4.0f32 + PER_EPS).sqrt();
+        assert!((tree.leaf(0) - expect).abs() < 1e-5);
+        assert_eq!(tree.leaf(0), tree.leaf(1), "sign must not matter");
+        // NaN td treated as zero magnitude, not propagated.
+        assert!(tree.leaf(2) > 0.0 && tree.leaf(2) < 2e-3);
+        assert!(tree.total().is_finite());
+        assert!((tree.max_priority() - expect.max(1.0)).abs() < 1e-5);
+        assert!(tree.nodes_consistent());
+    }
+
+    #[test]
+    fn beta_anneals_linearly_to_one() {
+        let mut tree = SumTree::new(4, 0.6, 0.4).with_beta_anneal(10);
+        tree.push_batch(4);
+        assert_eq!(tree.beta(), 0.4);
+        let mut rng = Rng::new(0);
+        let (mut idx, mut w) = (Vec::new(), Vec::new());
+        for _ in 0..5 {
+            tree.sample_into(&mut rng, 8, &mut idx, &mut w);
+        }
+        assert!((tree.beta() - 0.7).abs() < 1e-6);
+        for _ in 0..20 {
+            tree.sample_into(&mut rng, 8, &mut idx, &mut w);
+        }
+        assert!((tree.beta() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn equal_priorities_give_unit_is_weights() {
+        let mut tree = SumTree::new(16, 0.6, 0.4);
+        tree.push_batch(16);
+        let mut rng = Rng::new(3);
+        let (mut idx, mut w) = (Vec::new(), Vec::new());
+        tree.sample_into(&mut rng, 64, &mut idx, &mut w);
+        assert_eq!(w.len(), 64);
+        for &x in &w {
+            assert!((x - 1.0).abs() < 1e-5, "equal-priority weight {x} != 1");
+        }
+    }
+
+    #[test]
+    fn weights_are_max_normalized_and_favor_rare_rows() {
+        let mut tree = SumTree::new(8, 1.0, 1.0);
+        tree.push_batch(8);
+        // Slot 0 ten times likelier than the rest.
+        tree.update_many(&[0], &[10.0]);
+        let mut rng = Rng::new(4);
+        let (mut idx, mut w) = (Vec::new(), Vec::new());
+        tree.sample_into(&mut rng, 256, &mut idx, &mut w);
+        let mut w_hot = f32::NAN;
+        let mut w_cold = f32::NAN;
+        for (i, &s) in idx.iter().enumerate() {
+            if s == 0 {
+                w_hot = w[i];
+            } else {
+                w_cold = w[i];
+            }
+        }
+        assert!(w_hot < w_cold, "high-priority rows must get smaller IS weights");
+        assert!((w_cold - 1.0).abs() < 1e-5, "max weight must normalize to 1");
+        assert!(w.iter().all(|&x| x > 0.0 && x <= 1.0 + 1e-6));
+    }
+
+    #[test]
+    fn capacity_one_tree_works() {
+        let mut tree = SumTree::new(1, 0.6, 0.4);
+        tree.push_batch(1);
+        let mut rng = Rng::new(9);
+        let (mut idx, mut w) = (Vec::new(), Vec::new());
+        tree.sample_into(&mut rng, 4, &mut idx, &mut w);
+        assert!(idx.iter().all(|&i| i == 0));
+        assert!(w.iter().all(|&x| (x - 1.0).abs() < 1e-6));
+        assert!(tree.nodes_consistent());
+    }
+
+    #[test]
+    fn non_power_of_two_capacity_pads_with_zero_mass() {
+        let mut tree = SumTree::new(100, 0.6, 0.4);
+        tree.push_batch(100);
+        assert_eq!(tree.total(), 100.0);
+        let mut rng = Rng::new(5);
+        let (mut idx, mut w) = (Vec::new(), Vec::new());
+        for _ in 0..50 {
+            tree.sample_into(&mut rng, 128, &mut idx, &mut w);
+            assert!(idx.iter().all(|&i| (i as usize) < 100), "padding leaf sampled");
+        }
+    }
+}

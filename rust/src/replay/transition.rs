@@ -16,8 +16,13 @@ pub struct SampleBatch {
     pub cs: Vec<f32>,
     pub cs2: Vec<f32>,
     /// Scratch for the sampled row indices — generated once per `sample`
-    /// call, then gathered field-by-field (reused across calls).
+    /// call (or by a prioritized sampler), then gathered field-by-field
+    /// (reused across calls).
     pub idx: Vec<u32>,
+    /// Importance-sampling weights matching `idx`, filled by the
+    /// prioritized sampler (`SumTree::sample_into`); empty — and never
+    /// read — on the uniform path.
+    pub isw: Vec<f32>,
 }
 
 impl SampleBatch {
@@ -31,6 +36,7 @@ impl SampleBatch {
             cs: Vec::new(),
             cs2: Vec::new(),
             idx: Vec::new(),
+            isw: Vec::new(),
         }
     }
 }
@@ -200,15 +206,28 @@ impl TransitionBuffer {
     /// gathered in its own pass — one hot array at a time.
     pub fn sample(&self, rng: &mut Rng, batch: usize, out: &mut SampleBatch) {
         assert!(self.len > 0, "sampling from empty buffer");
-        let (od, ad, cd) = (self.obs_dim, self.act_dim, self.cobs_dim);
-        if cd > 0 && out.cs.len() != batch * cd {
-            out.cs.resize(batch * cd, 0.0);
-            out.cs2.resize(batch * cd, 0.0);
-        }
         out.idx.clear();
         out.idx.reserve(batch);
         for _ in 0..batch {
             out.idx.push(rng.below(self.len) as u32);
+        }
+        self.gather(out);
+    }
+
+    /// Gather the rows named by `out.idx` (however they were chosen —
+    /// uniformly by [`sample`](Self::sample), or by a prioritized sampler
+    /// such as `SumTree::sample_into`) into `out`'s field arrays, one hot
+    /// array at a time. `out.idx` must hold indices into the live window
+    /// and its length must match `out`'s batch dimension.
+    pub fn gather(&self, out: &mut SampleBatch) {
+        let batch = out.idx.len();
+        let (od, ad, cd) = (self.obs_dim, self.act_dim, self.cobs_dim);
+        debug_assert_eq!(out.s.len(), batch * od);
+        debug_assert_eq!(out.a.len(), batch * ad);
+        debug_assert!(out.idx.iter().all(|&i| (i as usize) < self.len));
+        if cd > 0 && out.cs.len() != batch * cd {
+            out.cs.resize(batch * cd, 0.0);
+            out.cs2.resize(batch * cd, 0.0);
         }
         for (b, &i) in out.idx.iter().enumerate() {
             let i = i as usize;
@@ -365,6 +384,66 @@ mod tests {
             let row = *v as usize;
             assert_eq!(out.cs[k * 2..(k + 1) * 2], cs[row * 2..(row + 1) * 2]);
         }
+    }
+
+    /// Differential pin for the sample → (idx-gen + gather) split: the
+    /// refactored `sample` must consume the RNG and lay out every field
+    /// exactly like the pre-refactor single-pass implementation — the
+    /// uniform (default) path stays bit-identical.
+    #[test]
+    fn sample_is_bit_identical_to_pre_gather_refactor() {
+        let (od, ad, cap, b) = (3usize, 2usize, 37usize, 64usize);
+        let mut buf = TransitionBuffer::new(cap, od, ad);
+        let mut fill = Rng::new(99);
+        for k in 0..25 {
+            let mut s = [0.0f32; 3];
+            let mut a = [0.0f32; 2];
+            let mut s2 = [0.0f32; 3];
+            fill.fill_normal(&mut s);
+            fill.fill_normal(&mut a);
+            fill.fill_normal(&mut s2);
+            buf.push(&s, &a, k as f32, &s2, 0.9, &[], &[]);
+        }
+        let mut rng_new = Rng::new(123);
+        let mut rng_old = rng_new.clone();
+        let mut out = SampleBatch::new(b, od, ad);
+        buf.sample(&mut rng_new, b, &mut out);
+        // Reference: the old algorithm, inlined — generate the index
+        // vector with the same RNG calls, then gather field-by-field.
+        let mut idx = Vec::with_capacity(b);
+        for _ in 0..b {
+            idx.push(rng_old.below(buf.len()) as u32);
+        }
+        assert_eq!(out.idx, idx, "index stream diverged");
+        for (k, &i) in idx.iter().enumerate() {
+            let i = i as usize;
+            assert_eq!(out.s[k * od..(k + 1) * od], buf.s[i * od..(i + 1) * od]);
+            assert_eq!(out.a[k * ad..(k + 1) * ad], buf.a[i * ad..(i + 1) * ad]);
+            assert_eq!(out.rn[k], buf.rn[i]);
+            assert_eq!(out.s2[k * od..(k + 1) * od], buf.s2[i * od..(i + 1) * od]);
+            assert_eq!(out.gmask[k], buf.gmask[i]);
+        }
+        // Both RNGs must end in the same state (no extra draws anywhere).
+        assert_eq!(rng_new.next_u64(), rng_old.next_u64());
+        // The uniform path never touches the IS-weight scratch.
+        assert!(out.isw.is_empty());
+    }
+
+    /// `gather` honors externally chosen indices (the prioritized path).
+    #[test]
+    fn gather_uses_caller_indices_verbatim() {
+        let mut buf = TransitionBuffer::new(8, 1, 1);
+        for k in 0..6 {
+            let v = k as f32;
+            buf.push(&[v], &[v + 0.5], v, &[v + 0.25], 0.9, &[], &[]);
+        }
+        let mut out = SampleBatch::new(4, 1, 1);
+        out.idx.clear();
+        out.idx.extend_from_slice(&[5, 0, 3, 3]);
+        buf.gather(&mut out);
+        assert_eq!(out.rn, vec![5.0, 0.0, 3.0, 3.0]);
+        assert_eq!(out.s, vec![5.0, 0.0, 3.0, 3.0]);
+        assert_eq!(out.a, vec![5.5, 0.5, 3.5, 3.5]);
     }
 
     #[test]

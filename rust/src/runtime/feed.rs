@@ -20,9 +20,13 @@ use super::manifest::ArtifactInfo;
 use super::OptState;
 use anyhow::{bail, Context, Result};
 
-/// Upper bound on artifact input arity (the widest signature today is the
-/// SAC × vision critic update at 19 slots). Frames use fixed arrays of
-/// this size so binding and view resolution never touch the heap.
+/// Upper bound on artifact input arity. The widest plan a trainer
+/// actually runs is the symmetric SAC prioritized critic update at 17
+/// slots; the widest constructible plan is the SAC × vision critic
+/// update at 19 (20 with the PER `isw` slot), a combination the trainers
+/// reject upstream but that sizes the headroom here. Frames use fixed
+/// arrays of this size so binding and view resolution never touch the
+/// heap.
 pub const MAX_SLOTS: usize = 24;
 
 /// Which learner family a PQL-style run wraps. Lives in the runtime layer
@@ -51,6 +55,16 @@ impl Variant {
             Variant::Ddpg => "critic_update",
             Variant::Dist => "critic_update_dist",
             Variant::Sac => "sac_critic_update",
+        }
+    }
+    /// Prioritized-replay critic update: same graph with an extra
+    /// per-sample IS-weight input and a per-sample `|td|` output that
+    /// feeds the sum-tree priority refresh.
+    pub fn critic_update_per_artifact(self) -> &'static str {
+        match self {
+            Variant::Ddpg => "critic_update_per",
+            Variant::Dist => "critic_update_dist_per",
+            Variant::Sac => "sac_critic_update_per",
         }
     }
     pub fn actor_update_artifact(self) -> &'static str {
@@ -189,9 +203,22 @@ impl FeedPlan {
     /// (asymmetric critics see critic-obs instead of the current image),
     /// [SAC next-action noise], then normalizers and the learning rate.
     pub fn critic_update(variant: Variant, d: &FeedDims, lr: f32) -> FeedPlan {
+        Self::critic_update_impl(variant, d, lr, false)
+    }
+
+    /// Prioritized-replay critic-update signature (`*_per` artifacts):
+    /// identical to [`critic_update`](Self::critic_update) plus the
+    /// per-sample importance-sampling weight slot `isw` after `gmask`.
+    /// The matching artifacts also emit a per-sample `|td|` output that
+    /// the learner feeds back into the sum-tree priorities.
+    pub fn critic_update_per(variant: Variant, d: &FeedDims, lr: f32) -> FeedPlan {
+        Self::critic_update_impl(variant, d, lr, true)
+    }
+
+    fn critic_update_impl(variant: Variant, d: &FeedDims, lr: f32, per: bool) -> FeedPlan {
         let sac = variant == Variant::Sac;
         let (b, od, ad, cd) = (d.batch, d.obs_dim, d.act_dim, d.critic_obs_dim);
-        PlanBuilder::new("critic_update")
+        PlanBuilder::new(if per { "critic_update_per" } else { "critic_update" })
             .adam(d.critic_params)
             .var("target", &[d.critic_params])
             .var("theta_a", &[d.actor_params])
@@ -203,6 +230,7 @@ impl FeedPlan {
             .var("s2", &[b, od])
             .var_if(d.vision(), "cs2", &[b, cd])
             .var("gmask", &[b])
+            .var_if(per, "isw", &[b])
             .var_if(sac, "noise", &[b, ad])
             .norm(d, lr)
             .build()
@@ -463,6 +491,36 @@ mod tests {
             sig(&FeedPlan::critic_update(Variant::Sac, &vis, 1e-3)),
             "theta m v t target theta_a alpha cs a rn s2 cs2 gmask noise mu var cmu cvar lr"
         );
+    }
+
+    #[test]
+    fn golden_prioritized_critic_signatures() {
+        let sym = dims(false);
+        for v in [Variant::Ddpg, Variant::Dist] {
+            assert_eq!(
+                sig(&FeedPlan::critic_update_per(v, &sym, 1e-3)),
+                "theta m v t target theta_a s a rn s2 gmask isw mu var lr"
+            );
+        }
+        assert_eq!(
+            sig(&FeedPlan::critic_update_per(Variant::Sac, &sym, 1e-3)),
+            "theta m v t target theta_a alpha s a rn s2 gmask isw noise mu var lr"
+        );
+        // The isw slot is exactly one batch row wide and bindable.
+        let p = FeedPlan::critic_update_per(Variant::Ddpg, &sym, 1e-3);
+        let isw = p.slots().iter().find(|s| s.name == "isw").unwrap();
+        assert_eq!(isw.shape, vec![sym.batch]);
+        assert_eq!(isw.kind, SlotKind::Var);
+        // And the uniform plan must NOT grow the slot (differential
+        // guarantee: prioritized off ⇒ signature unchanged).
+        assert!(!FeedPlan::critic_update(Variant::Ddpg, &sym, 1e-3).has("isw"));
+    }
+
+    #[test]
+    fn per_artifact_names() {
+        assert_eq!(Variant::Ddpg.critic_update_per_artifact(), "critic_update_per");
+        assert_eq!(Variant::Dist.critic_update_per_artifact(), "critic_update_dist_per");
+        assert_eq!(Variant::Sac.critic_update_per_artifact(), "sac_critic_update_per");
     }
 
     #[test]

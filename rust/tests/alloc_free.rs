@@ -11,8 +11,10 @@
 //! covers the host-side assembly path, which is exactly where the old
 //! owned `HostTensor` feed cloned ~66 tensors per iteration.)
 
+use pql::replay::{SampleBatch, SumTree, TransitionBuffer};
 use pql::runtime::feed::{FeedDims, FeedPlan, Variant};
 use pql::runtime::OptState;
+use pql::util::Rng;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -145,5 +147,60 @@ fn steady_state_feed_assembly_is_allocation_free() {
     assert!(
         delta < ITERS / 8,
         "actor feed assembly allocated: {delta} allocations across {ITERS} iterations"
+    );
+
+    // ---- prioritized path: the full PER round trip ---------------------
+    // Stratified sum-tree sample → ring gather → IS-weight bind + view
+    // resolution → priority update_many. Once the scratch vectors have
+    // seen one batch, the steady-state loop must be allocation-free —
+    // independent of batch size (any per-row heap traffic would cost
+    // >= ITERS * batch allocations here).
+    let cap = 32_768usize;
+    let mut buf = TransitionBuffer::new(cap, d.obs_dim, d.act_dim);
+    let mut tree = SumTree::new(cap, 0.6, 0.4);
+    {
+        let rows = 4096;
+        let fs = vec![0.1f32; rows * d.obs_dim];
+        let fa = vec![0.2f32; rows * d.act_dim];
+        let frn = vec![0.5f32; rows];
+        let fgm = vec![0.97f32; rows];
+        while buf.len() < cap {
+            buf.push_batch(rows, &fs, &fa, &frn, &fs, &fgm, &[], &[]);
+            tree.push_batch(rows);
+        }
+    }
+    let per_plan = FeedPlan::critic_update_per(Variant::Ddpg, &d, 5e-4);
+    let mut rng = Rng::new(17);
+    let mut sb = SampleBatch::new(d.batch, d.obs_dim, d.act_dim);
+    let td = vec![0.25f32; d.batch];
+    let mut per_round_trip = |sb: &mut SampleBatch, rng: &mut Rng| {
+        tree.sample_into(rng, d.batch, &mut sb.idx, &mut sb.isw);
+        buf.gather(sb);
+        let mut f = per_plan.frame();
+        f.bind_adam(&critic).unwrap();
+        f.bind("target", &target).unwrap();
+        f.bind("theta_a", &theta_a).unwrap();
+        f.bind("s", &sb.s).unwrap();
+        f.bind("a", &sb.a).unwrap();
+        f.bind("rn", &sb.rn).unwrap();
+        f.bind("s2", &sb.s2).unwrap();
+        f.bind("gmask", &sb.gmask).unwrap();
+        f.bind("isw", &sb.isw).unwrap();
+        f.bind("mu", &mu).unwrap();
+        f.bind("var", &var).unwrap();
+        let n = f.with_views(|views| views.len()).unwrap();
+        tree.update_many(&sb.idx, &td);
+        n
+    };
+    let mut sink3 = per_round_trip(&mut sb, &mut rng);
+    let before = allocs();
+    for _ in 0..ITERS {
+        sink3 += per_round_trip(&mut sb, &mut rng);
+    }
+    let delta = allocs() - before;
+    assert!(sink3 > 0);
+    assert!(
+        delta < ITERS / 8,
+        "prioritized round trip allocated: {delta} allocations across {ITERS} iterations"
     );
 }
