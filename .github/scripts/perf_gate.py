@@ -1,0 +1,195 @@
+#!/usr/bin/env python3
+"""CI perf gate: compare freshly emitted BENCH_*.json against committed
+baselines and fail on regressions beyond a configurable tolerance.
+
+The three planes (`cargo bench --bench throughput` writes all of them):
+
+  BENCH_data_plane.json          env stepping / replay ingest / sampling
+  BENCH_learner_feed.json        feed assembly, PJRT run, compile timings
+  BENCH_prioritized_replay.json  sum-tree sample / gather / update
+
+Rules, per (group, n) row keyed on `per_sec` (higher is better — compile
+and staging rows are emitted as rates too):
+
+  * fresh < baseline * (1 - tolerance)     -> FAIL
+  * baseline row missing / empty baseline  -> SKIP with notice (stubs are
+    committed before the first bench run populates them)
+  * baseline row present, fresh missing    -> SKIP with notice for
+    artifact-dependent PJRT rows; FAIL for host-side rows (those are
+    always emitted, so absence means bench breakage or a rename)
+  * one-shot micro-timing groups           -> INFO only, never gated
+
+The owned-vs-ref feed comparison is folded in as an absolute floor: the
+`assemble_ref_over_owned` (and, when artifacts ran, `run_ref_over_owned`)
+speedups in BENCH_learner_feed.json must stay >= the feed floor (a small
+same-run epsilon, NOT the cross-run noise tolerance) — the zero-copy
+path must never become slower than the owned-clone path it replaced.
+
+Tolerance: --tolerance or $PERF_GATE_TOLERANCE, default 0.35 (shared CI
+runners are noisy; tighten locally with PERF_GATE_TOLERANCE=0.1).
+
+Exit status: 0 = pass (possibly with skips), 1 = regression.
+Usage: perf_gate.py --baseline-dir <dir> --fresh-dir <dir> [--tolerance T]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+PLANES = [
+    "BENCH_data_plane.json",
+    "BENCH_learner_feed.json",
+    "BENCH_prioritized_replay.json",
+]
+
+# Speedup ratios gated as absolute floors. These are A/B ratios measured
+# within ONE bench run, so run-to-run jitter largely cancels — they get a
+# small dedicated epsilon (FEED_FLOOR), not the cross-run noise tolerance:
+# the invariant is "the zero-copy path is not slower than the owned path",
+# and 1 - tolerance would quietly weaken it to "not 35% slower".
+FEED_SPEEDUP_KEYS = ("assemble_ref_over_owned", "run_ref_over_owned")
+FEED_FLOOR_DEFAULT = 0.90
+
+# Groups that only exist when rust/artifacts/ is present on the runner
+# (the PJRT section of the bench). ONLY these may be absent from a fresh
+# run without failing the gate — a missing host-side row means the bench
+# itself broke (or a group was renamed without updating the baseline).
+ARTIFACT_DEPENDENT_GROUPS = {"run_owned", "run_ref", "compile", "first_stage", "cached_load"}
+
+# Groups tracked for the perf trajectory but NOT gated: one-shot
+# micro-timings (a single lock+lookup or a single compile) whose run-to-run
+# jitter on shared runners dwarfs any real regression. They still show in
+# the report as INFO lines.
+INFORMATIONAL_GROUPS = {"compile", "first_stage", "cached_load"}
+
+
+def rows_by_key(doc):
+    """Index a plane's `results` list by (group, n, name)."""
+    out = {}
+    for r in doc.get("results", []):
+        out[(r["group"], r["n"], r.get("name", ""))] = r
+    return out
+
+
+def gate_plane(name, baseline, fresh, tol, report):
+    fails = 0
+    base_rows = rows_by_key(baseline)
+    fresh_rows = rows_by_key(fresh)
+    if not base_rows:
+        report.append(f"SKIP  {name}: baseline has no results (stub not yet "
+                      "populated by a bench run) — nothing to gate")
+        return 0
+    for key, b in sorted(base_rows.items()):
+        group, n, label = key
+        f = fresh_rows.get(key)
+        if f is None:
+            if group in ARTIFACT_DEPENDENT_GROUPS:
+                report.append(f"SKIP  {name}: {group}/{n} '{label}' absent "
+                              "from fresh run (PJRT row; artifacts not "
+                              "present on this runner)")
+            else:
+                fails += 1
+                report.append(f"FAIL  {name}: {group}/{n} '{label}' missing "
+                              "from fresh run — host-side rows are always "
+                              "emitted, so the bench broke or the group was "
+                              "renamed without updating the baseline")
+            continue
+        if group in INFORMATIONAL_GROUPS:
+            report.append(
+                f"INFO  {name}: {group}/{n} {f.get('ms_per_iter', 0.0):.3f} ms "
+                f"(baseline {b.get('ms_per_iter', 0.0):.3f} ms) — one-shot "
+                "timing, tracked but not gated"
+            )
+            continue
+        b_rate, f_rate = b.get("per_sec", 0.0), f.get("per_sec", 0.0)
+        if b_rate <= 0.0:
+            report.append(f"SKIP  {name}: {group}/{n} baseline rate is 0")
+            continue
+        ratio = f_rate / b_rate
+        verdict = "ok  " if ratio >= 1.0 - tol else "FAIL"
+        if verdict == "FAIL":
+            fails += 1
+        report.append(
+            f"{verdict}  {name}: {group}/{n} {f_rate:.1f} vs {b_rate:.1f} "
+            f"{b.get('unit', '')}/s ({ratio:.2f}x, floor {1.0 - tol:.2f}x)"
+        )
+    return fails
+
+
+def gate_feed_speedups(fresh, floor, report):
+    """Owned-vs-ref floor on the learner-feed speedup ratios."""
+    fails = 0
+    speedups = fresh.get("speedups", [])
+    if not speedups:
+        report.append("SKIP  learner_feed speedups: none emitted "
+                      "(bench did not run?)")
+        return 0
+    for s in speedups:
+        for k in FEED_SPEEDUP_KEYS:
+            if k not in s:
+                continue  # run_* ratios only exist with artifacts
+            v = s[k]
+            verdict = "ok  " if v >= floor else "FAIL"
+            if verdict == "FAIL":
+                fails += 1
+            report.append(
+                f"{verdict}  learner_feed: {k} @ B={s.get('n')} = {v:.3f} "
+                f"(floor {floor:.2f}: the zero-copy path must not be "
+                "slower than the owned-clone path it retired)"
+            )
+    return fails
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline-dir", required=True)
+    ap.add_argument("--fresh-dir", required=True)
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=float(os.environ.get("PERF_GATE_TOLERANCE", "0.35")),
+        help="allowed fractional regression (default 0.35 or "
+             "$PERF_GATE_TOLERANCE)",
+    )
+    ap.add_argument(
+        "--feed-floor",
+        type=float,
+        default=float(os.environ.get("PERF_GATE_FEED_FLOOR",
+                                     str(FEED_FLOOR_DEFAULT))),
+        help="absolute floor for the owned-vs-ref speedup ratios "
+             f"(default {FEED_FLOOR_DEFAULT} or $PERF_GATE_FEED_FLOOR)",
+    )
+    args = ap.parse_args()
+
+    fails = 0
+    report = []
+    for plane in PLANES:
+        bpath = os.path.join(args.baseline_dir, plane)
+        fpath = os.path.join(args.fresh_dir, plane)
+        if not os.path.exists(bpath):
+            report.append(f"SKIP  {plane}: no committed baseline")
+            continue
+        if not os.path.exists(fpath):
+            report.append(f"SKIP  {plane}: bench did not emit a fresh file")
+            continue
+        with open(bpath) as f:
+            baseline = json.load(f)
+        with open(fpath) as f:
+            fresh = json.load(f)
+        fails += gate_plane(plane, baseline, fresh, args.tolerance, report)
+        if plane == "BENCH_learner_feed.json":
+            fails += gate_feed_speedups(fresh, args.feed_floor, report)
+
+    print(f"perf gate (tolerance {args.tolerance:.0%}):")
+    for line in report:
+        print("  " + line)
+    if fails:
+        print(f"perf gate: {fails} regression(s) beyond tolerance")
+        return 1
+    print("perf gate: pass")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,6 +14,7 @@ Usage:
 """
 
 import argparse
+import hashlib
 import json
 import os
 import time
@@ -23,7 +24,6 @@ import jax.numpy as jnp
 from jax._src.lib import xla_client as xc
 
 from . import model, tasks
-from .layout import Layout
 
 F32 = jnp.float32
 
@@ -76,6 +76,11 @@ class Emitter:
         out_shapes = [list(o.shape) for o in jax.tree.leaves(outs)]
         entry = {
             "file": rel,
+            # Content hash of the HLO text: the rust executable cache keys
+            # on (device, sha256) so identical artifacts share one compile
+            # across threads/tasks and regenerated files never serve stale
+            # executables (PERF.md §Device & compilation plane).
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
             "inputs": [
                 {"name": n, "shape": list(s.shape)}
                 for n, s in zip(arg_names, arg_shapes)

@@ -42,6 +42,17 @@ def test_hlo_files_exist_and_look_like_hlo(quick_artifacts):
         )
 
 
+def test_manifest_sha256_matches_file_content(quick_artifacts):
+    # The rust executable cache keys on this hash; a stale or wrong value
+    # would either miss sharing or serve an outdated compile.
+    import hashlib
+
+    d, manifest = quick_artifacts
+    for name, a in manifest["tasks"]["ant"]["artifacts"].items():
+        text = open(os.path.join(d, a["file"])).read()
+        assert a["sha256"] == hashlib.sha256(text.encode()).hexdigest(), name
+
+
 def test_layout_sizes_consistent(quick_artifacts):
     _, manifest = quick_artifacts
     t = manifest["tasks"]["ant"]

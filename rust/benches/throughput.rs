@@ -21,6 +21,19 @@ use pql::util::Rng;
 use std::path::Path;
 use std::time::Instant;
 
+/// The retired owned-clone Adam assembly (`OptState::tensors()` before
+/// the feed plane; removed from the runtime once the owned-vs-ref
+/// comparison moved into the CI perf gate). Kept here verbatim as the
+/// A-side of that comparison.
+fn owned_adam_tensors(st: &OptState) -> [HostTensor; 4] {
+    [
+        HostTensor::vec(st.theta.clone()),
+        HostTensor::vec(st.m.clone()),
+        HostTensor::vec(st.v.clone()),
+        HostTensor::scalar1(st.t + 1.0), // Adam bias-correction step
+    ]
+}
+
 /// Time `f` over `iters` iterations after `iters/10` warmup iterations.
 /// Returns `(ms_per_iter, unit_per_sec)` for machine-readable reporting.
 fn bench<F: FnMut()>(
@@ -330,7 +343,7 @@ fn bench_learner_feed() -> Vec<PlaneRecord> {
 
         let name = format!("feed assemble owned clones (B={b})");
         let (ms, rate) = bench(&name, 1.0, "assemblies", iters, || {
-            let [th, m, v, t] = critic.tensors();
+            let [th, m, v, t] = owned_adam_tensors(&critic);
             let inputs = vec![
                 th, m, v, t,
                 HostTensor::vec(target.clone()),
@@ -590,7 +603,7 @@ fn main() {
     {
         let b = m.batch_default;
         let cu = engine.load("ant", "critic_update").unwrap();
-        let mut critic = OptState::new(t.layouts["critic"].init(&mut r));
+        let critic = OptState::new(t.layouts["critic"].init(&mut r));
         let target = critic.theta.clone();
         let theta_a = t.layouts["actor"].init(&mut r);
         let mu = vec![0.0f32; t.obs_dim];
@@ -602,7 +615,7 @@ fn main() {
         let rn = vec![0.5f32; b];
         let gmask = vec![0.97f32; b];
         bench(&format!("critic_update ant (B={b})"), b as f64, "rows", 100, || {
-            let [th, mm, vv, tt] = critic.tensors();
+            let [th, mm, vv, tt] = owned_adam_tensors(&critic);
             let outs = cu
                 .run(&[
                     th, mm, vv, tt,
@@ -625,14 +638,14 @@ fn main() {
     {
         let b = m.batch_default;
         let au = engine.load("ant", "actor_update").unwrap();
-        let mut actor = OptState::new(t.layouts["actor"].init(&mut r));
+        let actor = OptState::new(t.layouts["actor"].init(&mut r));
         let theta_c = t.layouts["critic"].init(&mut r);
         let mu = vec![0.0f32; t.obs_dim];
         let var = vec![1.0f32; t.obs_dim];
         let mut s = vec![0.0f32; b * t.obs_dim];
         r.fill_normal(&mut s);
         bench(&format!("actor_update ant (B={b})"), b as f64, "rows", 100, || {
-            let [th, mm, vv, tt] = actor.tensors();
+            let [th, mm, vv, tt] = owned_adam_tensors(&actor);
             let outs = au
                 .run(&[
                     th, mm, vv, tt,
@@ -651,7 +664,7 @@ fn main() {
         // C51 distributional critic — the L1 categorical projection path.
         let b = m.batch_default;
         let cu = engine.load("ant", "critic_update_dist").unwrap();
-        let mut critic = OptState::new(t.layouts["critic_dist"].init(&mut r));
+        let critic = OptState::new(t.layouts["critic_dist"].init(&mut r));
         let target = critic.theta.clone();
         let theta_a = t.layouts["actor"].init(&mut r);
         let mu = vec![0.0f32; t.obs_dim];
@@ -663,7 +676,7 @@ fn main() {
         let rn = vec![0.5f32; b];
         let gmask = vec![0.97f32; b];
         bench(&format!("critic_update_dist ant (B={b}, L=51)"), b as f64, "rows", 50, || {
-            let [th, mm, vv, tt] = critic.tensors();
+            let [th, mm, vv, tt] = owned_adam_tensors(&critic);
             let outs = cu
                 .run(&[
                     th, mm, vv, tt,
@@ -707,7 +720,7 @@ fn main() {
 
             let bname = format!("critic_update run owned (B={bsz})");
             let (ms, rate) = bench(&bname, bsz as f64, "rows", iters, || {
-                let [th, mm, vv, tt] = critic.tensors();
+                let [th, mm, vv, tt] = owned_adam_tensors(&critic);
                 let outs = cu
                     .run(&[
                         th, mm, vv, tt,
@@ -768,9 +781,84 @@ fn main() {
                 per_sec: rate,
                 unit: "rows",
             });
+
+            // First-stage cost: converting one full bound frame to staged
+            // literals. On a GPU client this is the host→device transfer
+            // boundary the `prepare`/`restage` split was designed around.
+            let mut f = plan.frame();
+            f.bind_adam(&critic).unwrap();
+            f.bind("target", &target).unwrap();
+            f.bind("theta_a", &theta_a).unwrap();
+            f.bind("s", &s).unwrap();
+            f.bind("a", &a).unwrap();
+            f.bind("rn", &rn).unwrap();
+            f.bind("s2", &s).unwrap();
+            f.bind("gmask", &gmask).unwrap();
+            f.bind("mu", &mu).unwrap();
+            f.bind("var", &var).unwrap();
+            let t0 = Instant::now();
+            let staged = f.with_views(|views| cu.prepare(views)).unwrap().unwrap();
+            let stage_ms = t0.elapsed().as_secs_f64() * 1e3;
+            std::hint::black_box(&staged);
+            println!("critic_update first stage (B={bsz})          {stage_ms:>10.3} ms");
+            feed.push(PlaneRecord {
+                group: "first_stage",
+                name: format!("critic_update first stage (B={bsz})"),
+                n: bsz,
+                ms_per_iter: stage_ms,
+                per_sec: 1e3 / stage_ms.max(1e-9),
+                unit: "stages",
+            });
         }
+
+        // Compile timings from the process-wide executable cache: one
+        // record per artifact this process actually compiled (cache hits
+        // are free — that's the point). `per_sec` is compiles/s so the
+        // perf gate's higher-is-better rule applies uniformly.
+        let cache = pql::runtime::ExecutableCache::global();
+        for tm in cache.timings() {
+            let total = tm.parse_ms + tm.compile_ms;
+            println!(
+                "compile {:<36} {:>10.1} ms (parse {:>7.1} + xla {:>7.1}) [{}]",
+                tm.name, total, tm.parse_ms, tm.compile_ms, tm.device
+            );
+            feed.push(PlaneRecord {
+                group: "compile",
+                name: format!("compile {} [{}]", tm.name, tm.device),
+                n: 0,
+                ms_per_iter: total,
+                per_sec: 1e3 / total.max(1e-9),
+                unit: "compiles",
+            });
+        }
+        // Cached reload: what every additional thread/engine pays for an
+        // already-compiled artifact (the pre-cache design paid a full
+        // compile here, once per trainer thread). Through a *fresh*
+        // Engine so the timing covers the real hash + cache-lock path,
+        // not the engine-local memo.
+        let rt = std::sync::Arc::clone(engine.runtime());
+        let mut fresh_engine = Engine::with_runtime(rt, std::sync::Arc::clone(&m));
+        let t0 = Instant::now();
+        let again = fresh_engine.load("ant", "critic_update").unwrap();
+        let reload_ms = t0.elapsed().as_secs_f64() * 1e3;
+        std::hint::black_box(&again);
+        println!(
+            "cached reload critic_update                  {reload_ms:>10.3} ms \
+             (cache: {} compiles, {} hits)",
+            cache.compiles(),
+            cache.hits()
+        );
+        feed.push(PlaneRecord {
+            group: "cached_load",
+            name: "cached reload critic_update".to_string(),
+            n: 0,
+            ms_per_iter: reload_ms,
+            per_sec: 1e3 / reload_ms.max(1e-9),
+            unit: "loads",
+        });
+
         match write_learner_feed_json(&feed) {
-            Ok(path) => println!("rewrote {} (with PJRT run groups)", path.display()),
+            Ok(path) => println!("rewrote {} (with PJRT run + compile groups)", path.display()),
             Err(e) => eprintln!("could not write BENCH_learner_feed.json: {e}"),
         }
     }

@@ -11,7 +11,9 @@ use crate::config::TrainConfig;
 use crate::coordinator::ReturnTracker;
 use crate::envs::{self, StepOut};
 use crate::metrics::{Record, RunLog};
-use crate::runtime::{Engine, FeedDims, FeedPlan, Manifest, OptState, PreparedInputs, TensorView};
+use crate::runtime::{
+    Engine, FeedDims, FeedPlan, Manifest, OptState, PreparedInputs, Runtime, TensorView,
+};
 use crate::util::{Rng, RunningNorm};
 use anyhow::Result;
 use log::info;
@@ -28,7 +30,9 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path) -> Result<RunLog
     let chunk = manifest.chunk;
 
     let mut rng = Rng::new(cfg.seed);
-    let mut engine = Engine::with_manifest(Arc::clone(&manifest))?;
+    let runtime = Runtime::shared(cfg.device)?;
+    info!("pjrt device: {} (requested {})", runtime.device_key(), cfg.device);
+    let mut engine = Engine::with_runtime(runtime, Arc::clone(&manifest));
     let infer = engine.load(&cfg.task, "ppo_infer")?;
     let update = engine.load(&cfg.task, "ppo_update")?;
     let mut state = OptState::new(tinfo.layouts["ppo"].init(&mut rng));

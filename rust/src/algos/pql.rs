@@ -22,7 +22,7 @@ use crate::metrics::{Record, RunLog};
 use crate::replay::{
     NStepAssembler, ReadyBatch, SampleBatch, StateBuffer, SumTree, TransitionBuffer,
 };
-use crate::runtime::{infer_chunked, Engine, FeedDims, FeedPlan, Manifest, OptState};
+use crate::runtime::{infer_chunked, Engine, FeedDims, FeedPlan, Manifest, OptState, Runtime};
 use crate::util::{Rng, RunningNorm};
 use anyhow::{Context, Result};
 use log::{debug, info};
@@ -64,6 +64,13 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, variant: Variant
         anyhow::bail!("prioritized replay supports state-based (symmetric) tasks only");
     }
 
+    // One device resolution + one PJRT client for the whole run: the
+    // actor, both learners, and the eval loop compile into the shared
+    // executable cache, so each artifact file compiles exactly once per
+    // process instead of once per thread (ROADMAP "engine sharing").
+    let runtime = Runtime::shared(cfg.device)?;
+    info!("pjrt device: {} (requested {})", runtime.device_key(), cfg.device);
+
     let mut rng = Rng::new(cfg.seed);
     let actor_init = tinfo.layouts[variant.actor_layout()].init(&mut rng);
     let critic_init = tinfo.layouts[variant.critic_layout()].init(&mut rng);
@@ -88,10 +95,11 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, variant: Variant
         {
             let shared = Arc::clone(&shared);
             let manifest = Arc::clone(&manifest);
+            let runtime = Arc::clone(&runtime);
             let cfg = cfg.clone();
             let mut rng = rng.split();
             scope.spawn(move || {
-                if let Err(e) = actor_loop(&cfg, manifest, shared.clone(), variant,
+                if let Err(e) = actor_loop(&cfg, manifest, runtime, shared.clone(), variant,
                                            tx_v, tx_p, msg_pool, recycle_p_rx,
                                            &mut rng) {
                     log::error!("actor thread failed: {e:#}");
@@ -103,11 +111,12 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, variant: Variant
         {
             let shared = Arc::clone(&shared);
             let manifest = Arc::clone(&manifest);
+            let runtime = Arc::clone(&runtime);
             let cfg = cfg.clone();
             let mut rng = rng.split();
             let critic_init = critic_init.clone();
             scope.spawn(move || {
-                if let Err(e) = v_loop(&cfg, manifest, shared.clone(), variant,
+                if let Err(e) = v_loop(&cfg, manifest, runtime, shared.clone(), variant,
                                        rx_v, recycle_v_tx, critic_init, &mut rng) {
                     log::error!("v-learner thread failed: {e:#}");
                     shared.pace.stop();
@@ -118,11 +127,12 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, variant: Variant
         {
             let shared = Arc::clone(&shared);
             let manifest = Arc::clone(&manifest);
+            let runtime = Arc::clone(&runtime);
             let cfg = cfg.clone();
             let mut rng = rng.split();
             let actor_init = actor_init.clone();
             scope.spawn(move || {
-                if let Err(e) = p_loop(&cfg, manifest, shared.clone(), variant,
+                if let Err(e) = p_loop(&cfg, manifest, runtime, shared.clone(), variant,
                                        rx_p, recycle_p_tx, actor_init, &mut rng) {
                     log::error!("p-learner thread failed: {e:#}");
                     shared.pace.stop();
@@ -131,7 +141,7 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, variant: Variant
         }
 
         // ----- Main thread: evaluation + budget -----------------------------
-        let mut eval_engine = Engine::with_manifest(Arc::clone(&manifest))?;
+        let mut eval_engine = Engine::with_runtime(Arc::clone(&runtime), Arc::clone(&manifest));
         let infer = eval_engine.load(&cfg.task, variant.infer_artifact())?;
         let mut eval_seed = cfg.seed ^ 0xEEAA;
         loop {
@@ -203,9 +213,11 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, variant: Variant
 // Actor process (Algorithm 1)
 // ---------------------------------------------------------------------------
 
+#[allow(clippy::too_many_arguments)]
 fn actor_loop(
     cfg: &TrainConfig,
     manifest: Arc<Manifest>,
+    runtime: Arc<Runtime>,
     shared: Arc<Shared>,
     variant: Variant,
     tx_v: mpsc::SyncSender<StepMsg>,
@@ -218,7 +230,7 @@ fn actor_loop(
     let (od, ad, cd) = (tinfo.obs_dim, tinfo.act_dim, tinfo.critic_obs_dim);
     let vision = cd != od;
     let n = cfg.num_envs;
-    let mut engine = Engine::with_manifest(Arc::clone(&manifest))?;
+    let mut engine = Engine::with_runtime(runtime, Arc::clone(&manifest));
     let infer = engine.load(&cfg.task, variant.infer_artifact())?;
 
     let shards = envs::auto_shards(cfg.env_shards, n);
@@ -359,9 +371,11 @@ fn actor_loop(
 // V-learner process (Algorithm 3)
 // ---------------------------------------------------------------------------
 
+#[allow(clippy::too_many_arguments)]
 fn v_loop(
     cfg: &TrainConfig,
     manifest: Arc<Manifest>,
+    runtime: Arc<Runtime>,
     shared: Arc<Shared>,
     variant: Variant,
     rx: mpsc::Receiver<StepMsg>,
@@ -374,7 +388,7 @@ fn v_loop(
     let vision = cd != od;
     let b = cfg.batch_size;
     let per = cfg.prioritized_replay;
-    let mut engine = Engine::with_manifest(Arc::clone(&manifest))?;
+    let mut engine = Engine::with_runtime(runtime, Arc::clone(&manifest));
     let base = if per {
         variant.critic_update_per_artifact()
     } else {
@@ -539,9 +553,11 @@ fn v_loop(
 // P-learner process (Algorithm 2)
 // ---------------------------------------------------------------------------
 
+#[allow(clippy::too_many_arguments)]
 fn p_loop(
     cfg: &TrainConfig,
     manifest: Arc<Manifest>,
+    runtime: Arc<Runtime>,
     shared: Arc<Shared>,
     variant: Variant,
     rx: mpsc::Receiver<Vec<f32>>,
@@ -553,7 +569,7 @@ fn p_loop(
     let (od, ad, cd) = (tinfo.obs_dim, tinfo.act_dim, tinfo.critic_obs_dim);
     let vision = cd != od;
     let b = cfg.batch_size;
-    let mut engine = Engine::with_manifest(Arc::clone(&manifest))?;
+    let mut engine = Engine::with_runtime(runtime, Arc::clone(&manifest));
     let artifact = manifest.batch_artifact(variant.actor_update_artifact(), b);
     let update = engine.load(&cfg.task, &artifact)?;
 

@@ -14,7 +14,9 @@ use crate::envs::{self, StepOut};
 use crate::exploration::Noise;
 use crate::metrics::{Record, RunLog};
 use crate::replay::{NStepAssembler, ReadyBatch, SampleBatch, SumTree, TransitionBuffer};
-use crate::runtime::{infer_chunked, Engine, FeedDims, FeedPlan, Manifest, OptState, Variant};
+use crate::runtime::{
+    infer_chunked, Engine, FeedDims, FeedPlan, Manifest, OptState, Runtime, Variant,
+};
 use crate::util::{Rng, RunningNorm};
 use anyhow::{Context, Result};
 use log::info;
@@ -34,7 +36,12 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, sac: bool) -> Re
 
     let per = cfg.prioritized_replay;
     let mut rng = Rng::new(cfg.seed);
-    let mut engine = Engine::with_manifest(Arc::clone(&manifest))?;
+    // Device-resolved engine on the shared per-process runtime: sweep
+    // harness runs (fig 3/8, table b3) that train many configs in one
+    // process compile each artifact file once, not once per run.
+    let runtime = Runtime::shared(cfg.device)?;
+    info!("pjrt device: {} (requested {})", runtime.device_key(), cfg.device);
+    let mut engine = Engine::with_runtime(runtime, Arc::clone(&manifest));
     let infer = engine.load(&cfg.task, variant.infer_artifact())?;
     let cu_base = if per {
         variant.critic_update_per_artifact()

@@ -105,6 +105,13 @@ COMMANDS:
   artifacts   Verify the AOT artifact set against the manifest
   help        Show this message
 
+DEVICE SELECTION (train / eval / bench):
+  --device cpu|gpu[:N]|auto   PJRT device for compiling + running the HLO
+                              artifacts. Resolution: --device > config
+                              `train.device` > $PALLAS_DEVICE > cpu.
+                              `auto` falls back to cpu when no GPU client
+                              is available.
+
 Run `pql <COMMAND> --help` for per-command options.
 ";
 

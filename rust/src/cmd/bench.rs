@@ -81,7 +81,11 @@ impl Bench<'_> {
 
     fn run_fig(&self, fig: &str) -> Result<()> {
         let series = self.series_for(fig)?;
-        println!("== Fig {fig}: {} series × {} seeds, {}s budget ==",
+        // All series share one resolved device (and, through the shared
+        // runtime, one executable compile per artifact for the whole
+        // sweep — see PERF.md §Device & compilation plane).
+        let device = series.first().map(|s| s.cfg.device).unwrap_or_default();
+        println!("== Fig {fig}: {} series × {} seeds, {}s budget, device {device} ==",
                  series.len(), self.seeds, self.budget);
         let dir = self.out.join(format!("fig{fig}"));
         let mut summary: Vec<(String, f64, f64)> = Vec::new();

@@ -2,11 +2,12 @@
 //!
 //! ```text
 //! pql eval --task ant --checkpoint runs/ant/checkpoint.pql --episodes 32
+//! pql eval --task ant --checkpoint ... --device auto
 //! ```
 
 use crate::cli::Args;
 use crate::coordinator::evaluate;
-use crate::runtime::Engine;
+use crate::runtime::{resolve_spec, Engine};
 use anyhow::{Context, Result};
 use std::path::Path;
 
@@ -20,7 +21,13 @@ pub fn run(args: &Args) -> Result<()> {
     let mu = sections.get("norm_mean").context("missing norm_mean")?;
     let var = sections.get("norm_var").context("missing norm_var")?;
 
-    let mut engine = Engine::new(&super::train::artifact_dir(args))?;
+    // Same device-resolution order and shared executable cache as
+    // training, so eval of a fresh checkpoint in the same process (or a
+    // sweep evaluating many checkpoints) never recompiles `actor_infer`
+    // and never disagrees with the trainer about device selection.
+    let spec = resolve_spec(args.get("device"), None)?;
+    let mut engine = Engine::for_device(&super::train::artifact_dir(args), spec)?;
+    log::info!("pjrt device: {} (requested {spec})", engine.runtime().device_key());
     let manifest = std::sync::Arc::clone(&engine.manifest);
     let infer = engine.load(&task, "actor_infer")?;
     let (ret, succ) = evaluate(&infer, &manifest, &task, theta, mu, var,

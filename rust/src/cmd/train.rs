@@ -22,9 +22,9 @@ pub fn artifact_dir(args: &Args) -> PathBuf {
 pub fn run(args: &Args) -> Result<()> {
     let cfg = TrainConfig::from_args(args)?;
     log::info!(
-        "training {} on {} (N={}, B={}, β_a:v={}, β_p:v={}, seed={})",
+        "training {} on {} (N={}, B={}, β_a:v={}, β_p:v={}, seed={}, device={})",
         cfg.algo, cfg.task, cfg.num_envs, cfg.batch_size, cfg.beta_av,
-        cfg.beta_pv, cfg.seed
+        cfg.beta_pv, cfg.seed, cfg.device
     );
     let log = crate::algos::train(&cfg, &artifact_dir(args))?;
     println!(

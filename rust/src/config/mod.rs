@@ -7,6 +7,7 @@
 pub mod toml;
 
 use crate::cli::Args;
+use crate::runtime::DeviceSpec;
 use anyhow::{bail, Context, Result};
 
 /// Which algorithm drives training.
@@ -98,6 +99,10 @@ impl std::fmt::Display for Ratio {
 pub struct TrainConfig {
     pub task: String,
     pub algo: Algo,
+    /// Physical PJRT device the run compiles and executes on
+    /// (`cpu` | `gpu[:N]` | `auto`). Resolution order:
+    /// `--device` > `train.device` > `$PALLAS_DEVICE` > `cpu`.
+    pub device: DeviceSpec,
     pub seed: u64,
     pub num_envs: usize,
     /// Environment shards stepped on worker threads (0 = one per
@@ -151,6 +156,7 @@ impl Default for TrainConfig {
         TrainConfig {
             task: "ant".to_string(),
             algo: Algo::Pql,
+            device: DeviceSpec::Cpu,
             seed: 1,
             num_envs: 256,
             env_shards: 0,
@@ -187,12 +193,24 @@ impl TrainConfig {
     /// Build from defaults + optional `--config` file + CLI flags.
     pub fn from_args(args: &Args) -> Result<TrainConfig> {
         let mut cfg = TrainConfig::default();
+        let mut file_device: Option<String> = None;
         if let Some(path) = args.get("config") {
             let text = std::fs::read_to_string(path)
                 .with_context(|| format!("reading config {path:?}"))?;
-            cfg.apply_table(&toml::parse(&text)?)?;
+            let table = toml::parse(&text)?;
+            file_device = table
+                .get("train.device")
+                .or_else(|| table.get("device"))
+                .map(|v| v.as_str().map(str::to_string))
+                .transpose()?;
+            cfg.apply_table(&table)?;
         }
         cfg.apply_cli(args)?;
+        // Device resolution has ONE implementation, shared with
+        // `cmd/eval.rs`: `--device` > config file > $PALLAS_DEVICE > cpu,
+        // and a losing layer is never parsed (a stale env value cannot
+        // fail a run that overrides it).
+        cfg.device = crate::runtime::resolve_spec(args.get("device"), file_device.as_deref())?;
         cfg.validate()?;
         Ok(cfg)
     }
@@ -203,6 +221,10 @@ impl TrainConfig {
             match (k.as_str(), v) {
                 ("task" | "train.task", v) => self.task = v.as_str()?.to_string(),
                 ("algo" | "train.algo", v) => self.algo = v.as_str()?.parse()?,
+                // Accepted here so it isn't rejected as unknown; the value
+                // is consumed by `from_args`'s resolve_spec call (the one
+                // implementation of the resolution order).
+                ("device" | "train.device", _) => {}
                 ("seed" | "train.seed", v) => self.seed = v.as_usize()? as u64,
                 ("num_envs" | "train.num_envs", v) => self.num_envs = v.as_usize()?,
                 ("env_shards" | "train.env_shards", v) => {
@@ -256,6 +278,7 @@ impl TrainConfig {
         if let Some(v) = a.get("algo") {
             self.algo = v.parse()?;
         }
+        // (`--device` is handled by `from_args` via resolve_spec.)
         self.seed = a.get_parse("seed", self.seed)?;
         self.num_envs = a.get_parse("num-envs", self.num_envs)?;
         self.env_shards = a.get_parse("env-shards", self.env_shards)?;
@@ -470,6 +493,39 @@ mod tests {
         .is_err());
         // Out-of-range PER knobs are ignored while PER itself is off.
         assert!(TrainConfig::from_args(&args(&["--per-beta0", "1.5"])).is_ok());
+    }
+
+    #[test]
+    fn device_defaults_cpu_and_parses_from_cli_and_file() {
+        // (Resolution through $PALLAS_DEVICE is covered by the pure
+        // `runtime::device::resolve_spec_from` tests; mutating the
+        // process env here would race other tests.)
+        if std::env::var(crate::runtime::DEVICE_ENV).is_err() {
+            assert_eq!(TrainConfig::default().device, DeviceSpec::Cpu);
+            assert_eq!(
+                TrainConfig::from_args(&args(&[])).unwrap().device,
+                DeviceSpec::Cpu
+            );
+        }
+        let c = TrainConfig::from_args(&args(&["--device", "auto"])).unwrap();
+        assert_eq!(c.device, DeviceSpec::Auto);
+        let c = TrainConfig::from_args(&args(&["--device", "gpu:1"])).unwrap();
+        assert_eq!(c.device, DeviceSpec::Gpu { ordinal: 1 });
+        assert!(TrainConfig::from_args(&args(&["--device", "tpu"])).is_err());
+
+        let dir = std::env::temp_dir().join("pql_cfg_test_device");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.toml");
+        std::fs::write(&p, "[train]\ndevice = \"auto\"\n").unwrap();
+        let c = TrainConfig::from_args(&args(&["--config", p.to_str().unwrap()])).unwrap();
+        assert_eq!(c.device, DeviceSpec::Auto);
+        // CLI outranks the file.
+        let c = TrainConfig::from_args(&args(&[
+            "--config", p.to_str().unwrap(), "--device", "cpu",
+        ]))
+        .unwrap();
+        assert_eq!(c.device, DeviceSpec::Cpu);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

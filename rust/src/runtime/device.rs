@@ -1,0 +1,224 @@
+//! Physical-device selection for the PJRT runtime.
+//!
+//! Distinct from [`crate::device`] (the *simulated* GPU contention/speed
+//! model the paper's Figs. 9c/d experiments run on): this module decides
+//! which **real** PJRT client compiles and executes the HLO artifacts.
+//!
+//! A device request is written `cpu`, `gpu`, `gpu:<ordinal>`, or `auto`,
+//! and resolves in this order (first present wins):
+//!
+//! 1. `--device` on the command line,
+//! 2. `device` / `train.device` in the config file,
+//! 3. the `PALLAS_DEVICE` environment variable,
+//! 4. `cpu` (the default — bit-identical to the pre-device-plane builds).
+//!
+//! `auto` probes for a GPU client and falls back to CPU when none can be
+//! constructed (no `gpu` cargo feature, no driver, no device). An explicit
+//! `gpu[:N]` request that cannot be satisfied is an error: silently
+//! training on the wrong device class is worse than failing fast.
+
+use anyhow::{bail, Context, Result};
+use std::fmt;
+
+/// Environment variable consulted when neither `--device` nor the config
+/// file names a device.
+pub const DEVICE_ENV: &str = "PALLAS_DEVICE";
+
+/// A user-facing device request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DeviceSpec {
+    /// The host PJRT CPU client (the default).
+    #[default]
+    Cpu,
+    /// A GPU PJRT client; `ordinal` picks the visible device.
+    Gpu { ordinal: usize },
+    /// Prefer GPU, fall back to CPU when no GPU client is available.
+    Auto,
+}
+
+impl std::str::FromStr for DeviceSpec {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        let s = s.trim().to_ascii_lowercase();
+        Ok(match s.as_str() {
+            "cpu" => DeviceSpec::Cpu,
+            "gpu" | "cuda" => DeviceSpec::Gpu { ordinal: 0 },
+            "auto" => DeviceSpec::Auto,
+            _ => {
+                if let Some(ord) = s.strip_prefix("gpu:").or_else(|| s.strip_prefix("cuda:")) {
+                    DeviceSpec::Gpu {
+                        ordinal: ord
+                            .parse()
+                            .with_context(|| format!("device ordinal in {s:?}"))?,
+                    }
+                } else {
+                    bail!("unknown device {s:?} (expected cpu | gpu[:N] | auto)");
+                }
+            }
+        })
+    }
+}
+
+impl fmt::Display for DeviceSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DeviceSpec::Cpu => write!(f, "cpu"),
+            DeviceSpec::Gpu { ordinal } => write!(f, "gpu:{ordinal}"),
+            DeviceSpec::Auto => write!(f, "auto"),
+        }
+    }
+}
+
+/// What a [`DeviceSpec`] resolved to once a client was constructed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceKind {
+    Cpu,
+    Gpu { ordinal: usize },
+}
+
+impl DeviceKind {
+    /// Stable string key — the device half of the executable-cache key.
+    pub fn key(&self) -> String {
+        match self {
+            DeviceKind::Cpu => "cpu".to_string(),
+            DeviceKind::Gpu { ordinal } => format!("gpu:{ordinal}"),
+        }
+    }
+}
+
+/// Resolve a spec from the CLI / config-file / environment layers.
+/// `cli` and `config` are whatever those layers captured (None = unset);
+/// the environment is read here.
+pub fn resolve_spec(cli: Option<&str>, config: Option<&str>) -> Result<DeviceSpec> {
+    let env = std::env::var(DEVICE_ENV).ok();
+    resolve_spec_from(cli, config, env.as_deref())
+}
+
+/// Pure resolution core (unit-testable without touching the process env).
+pub fn resolve_spec_from(
+    cli: Option<&str>,
+    config: Option<&str>,
+    env: Option<&str>,
+) -> Result<DeviceSpec> {
+    if let Some(s) = cli {
+        return s.parse().context("--device");
+    }
+    if let Some(s) = config {
+        return s.parse().context("config `device`");
+    }
+    if let Some(s) = env {
+        return s.parse().with_context(|| format!("${DEVICE_ENV}"));
+    }
+    Ok(DeviceSpec::Cpu)
+}
+
+/// Construct the PJRT client for `spec`. Returns the concrete kind the
+/// request landed on (`Auto` reports where it fell).
+pub(crate) fn client_for(spec: DeviceSpec) -> Result<(DeviceKind, xla::PjRtClient)> {
+    match spec {
+        DeviceSpec::Cpu => Ok((
+            DeviceKind::Cpu,
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+        )),
+        DeviceSpec::Gpu { ordinal } => {
+            let client = gpu_client(ordinal).with_context(|| {
+                format!("--device gpu:{ordinal} requested but no GPU client is available")
+            })?;
+            Ok((DeviceKind::Gpu { ordinal }, client))
+        }
+        DeviceSpec::Auto => match gpu_client(0) {
+            Ok(client) => Ok((DeviceKind::Gpu { ordinal: 0 }, client)),
+            Err(e) => {
+                log::info!("device auto: no GPU client ({e:#}); falling back to CPU");
+                Ok((
+                    DeviceKind::Cpu,
+                    xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+                ))
+            }
+        },
+    }
+}
+
+/// GPU client constructor — compiled in only with the `gpu` cargo feature
+/// (the vendored crate set ships the CPU plugin everywhere; the GPU plugin
+/// needs a CUDA-enabled `xla_extension` at link time).
+#[cfg(feature = "gpu")]
+fn gpu_client(ordinal: usize) -> Result<xla::PjRtClient> {
+    // The wrapper's GPU constructor takes (memory_fraction, preallocate)
+    // and always binds the first *visible* device — it has no ordinal
+    // parameter. Selecting a different card by mutating
+    // CUDA_VISIBLE_DEVICES here would be wrong twice over: `set_var`
+    // after threads exist is unsound on glibc, and an already-exported
+    // value would be silently honoured while the runtime registers (and
+    // cache-keys) itself as `gpu:{ordinal}` — training on the wrong
+    // device. So: ordinal 0 runs; any other ordinal fails fast with the
+    // correct recipe (restrict visibility in the parent environment).
+    if ordinal != 0 {
+        bail!(
+            "gpu:{ordinal}: the GPU client binds the first visible device; \
+             launch with CUDA_VISIBLE_DEVICES={ordinal} and use --device gpu"
+        );
+    }
+    xla::PjRtClient::gpu(0.9, false).context("creating PJRT GPU client")
+}
+
+#[cfg(not(feature = "gpu"))]
+fn gpu_client(_ordinal: usize) -> Result<xla::PjRtClient> {
+    bail!(
+        "this build has no GPU PJRT client (rebuild with `--features gpu` \
+         and a CUDA xla_extension); use `cpu` or `auto`"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_spellings() {
+        assert_eq!("cpu".parse::<DeviceSpec>().unwrap(), DeviceSpec::Cpu);
+        assert_eq!(
+            "gpu".parse::<DeviceSpec>().unwrap(),
+            DeviceSpec::Gpu { ordinal: 0 }
+        );
+        assert_eq!(
+            "gpu:2".parse::<DeviceSpec>().unwrap(),
+            DeviceSpec::Gpu { ordinal: 2 }
+        );
+        assert_eq!(
+            "CUDA:1".parse::<DeviceSpec>().unwrap(),
+            DeviceSpec::Gpu { ordinal: 1 }
+        );
+        assert_eq!("auto".parse::<DeviceSpec>().unwrap(), DeviceSpec::Auto);
+        assert!("tpu".parse::<DeviceSpec>().is_err());
+        assert!("gpu:x".parse::<DeviceSpec>().is_err());
+    }
+
+    #[test]
+    fn display_roundtrips() {
+        for s in ["cpu", "gpu:0", "gpu:3", "auto"] {
+            assert_eq!(s.parse::<DeviceSpec>().unwrap().to_string(), s);
+        }
+    }
+
+    #[test]
+    fn resolution_order_cli_config_env_default() {
+        let r = |c, f, e| resolve_spec_from(c, f, e).unwrap();
+        assert_eq!(r(None, None, None), DeviceSpec::Cpu);
+        assert_eq!(r(None, None, Some("auto")), DeviceSpec::Auto);
+        assert_eq!(
+            r(None, Some("gpu:1"), Some("auto")),
+            DeviceSpec::Gpu { ordinal: 1 }
+        );
+        assert_eq!(r(Some("cpu"), Some("gpu:1"), Some("auto")), DeviceSpec::Cpu);
+        // A bad value in the winning layer is an error, not a fallthrough.
+        assert!(resolve_spec_from(Some("bogus"), None, None).is_err());
+        assert!(resolve_spec_from(None, None, Some("bogus")).is_err());
+    }
+
+    #[test]
+    fn device_kind_keys() {
+        assert_eq!(DeviceKind::Cpu.key(), "cpu");
+        assert_eq!(DeviceKind::Gpu { ordinal: 3 }.key(), "gpu:3");
+    }
+}

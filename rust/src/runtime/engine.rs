@@ -1,15 +1,30 @@
 //! The PJRT execution engine: loads HLO-text artifacts, compiles them on
-//! the CPU PJRT client, and exposes typed `run` over host `f32` buffers.
+//! a device-selected PJRT client, and exposes typed `run` over host `f32`
+//! buffers.
 //!
-//! One `Engine` per OS thread (the PJRT wrapper types are not `Send`);
-//! parameters cross threads as plain `Vec<f32>` — which is exactly the
-//! paper's explicit network-transfer arrows between processes.
+//! Layered as of the device/compilation plane (PERF.md):
+//!
+//! - [`Runtime`] — one per *physical device*: the PJRT client plus a
+//!   handle to the process-wide [`ExecutableCache`]. Shared across every
+//!   thread of a run (`Runtime::shared` keeps a per-device registry), so
+//!   each artifact file compiles once per device per process.
+//! - [`Engine`] — a thin per-call-site handle: `Arc<Runtime>` + manifest +
+//!   a lock-free local memo of already-fetched executables. The historical
+//!   constructors (`new`, `with_manifest`) still exist and now route to
+//!   the shared CPU runtime, so legacy call sites get compile-sharing for
+//!   free and stay bit-identical on `--device cpu`.
+//!
+//! Parameters still cross threads as plain `Vec<f32>` — the paper's
+//! explicit network-transfer arrows between processes.
 
+use super::device::{client_for, DeviceKind, DeviceSpec};
+use super::exec_cache::ExecutableCache;
 use super::manifest::{ArtifactInfo, Manifest};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// Host-side tensor handed to / returned from an executable.
 #[derive(Debug, Clone)]
@@ -89,7 +104,9 @@ impl<'a> TensorView<'a> {
 /// Produced by [`Executable::prepare`]; individual slots can be re-staged
 /// with [`Executable::restage`] while the rest stay staged — this is how
 /// `infer_chunked` uploads theta/mu/var once per call instead of once per
-/// chunk.
+/// chunk. On a GPU client the staged literals are exactly the host→device
+/// transfer boundary, which is why the first-stage cost is a tracked bench
+/// number (PERF.md §Device & compilation plane).
 pub struct PreparedInputs {
     literals: Vec<xla::Literal>,
 }
@@ -104,14 +121,89 @@ impl PreparedInputs {
     }
 }
 
-/// A compiled artifact plus its manifest signature.
+/// A compiled artifact plus its manifest signature and compile timings.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
     pub info: ArtifactInfo,
     name: String,
+    /// Serializes every client-touching operation across the threads
+    /// sharing this executable's device — see the SAFETY note below.
+    client_lock: Arc<Mutex<()>>,
+    /// HLO-text parse time, milliseconds (set at compile).
+    pub parse_ms: f64,
+    /// XLA compile time, milliseconds (set at compile).
+    pub compile_ms: f64,
 }
 
+// SAFETY: executables live in the process-wide cache and are executed
+// from several OS threads, while the vendored wrapper types are
+// `!Send`/`!Sync` (their handles may be non-atomically refcounted — the
+// wrapper gives no guarantee either way). Soundness therefore does NOT
+// rely on the wrapper's internals; it is enforced structurally:
+//
+// 1. The cache owns each `Executable` (and the `Runtime` its client) for
+//    the process lifetime — entries are never evicted, so the wrapper
+//    values themselves are never cloned or dropped, on any thread.
+// 2. Every operation that can reach the client's shared state — XLA
+//    compilation, `execute`, result-buffer fetch and drop — runs under
+//    the per-client `client_lock` (`Executable::exec`,
+//    `Executable::compile`). All refcount/state mutations are therefore
+//    totally ordered by one mutex: no data race even if the handles are
+//    plain `Rc`s. Temporaries a call creates (result buffers, fetched
+//    literals) are created and dropped inside that critical section.
+// 3. Staged input literals (`PreparedInputs`, `literal_of`) are
+//    standalone host objects with no client reference — building them
+//    needs no lock, which keeps `prepare`/`restage` concurrent.
+//
+// The lock serializes PJRT *dispatch* per device, not compute: XLA's
+// intra-op thread pool still parallelizes inside each call, and on a GPU
+// client per-device serialization mirrors the hardware queue. If the
+// wrapper is ever verified atomically-refcounted/thread-safe, the lock
+// can be relaxed without touching callers. The same argument covers
+// `Runtime` below.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
 impl Executable {
+    /// Parse + compile `info` on `client`, recording the two phase
+    /// timings. Call sites go through [`ExecutableCache::load`] so each
+    /// (device, file-hash) pays this exactly once per process.
+    pub(crate) fn compile(
+        client: &xla::PjRtClient,
+        client_lock: &Arc<Mutex<()>>,
+        name: &str,
+        info: ArtifactInfo,
+    ) -> Result<Executable> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            info.file
+                .to_str()
+                .context("artifact path not valid UTF-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", info.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let parse_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let t1 = Instant::now();
+        let exe = {
+            // Client state is touched here: exclude concurrent executes
+            // (lock order: cache entries lock, then client lock; `exec`
+            // takes the client lock alone — no inversion).
+            let _g = client_lock.lock().unwrap();
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?
+        };
+        let compile_ms = t1.elapsed().as_secs_f64() * 1e3;
+        Ok(Executable {
+            exe,
+            info,
+            name: name.to_string(),
+            client_lock: Arc::clone(client_lock),
+            parse_ms,
+            compile_ms,
+        })
+    }
+
     /// Execute with owned host tensors. Thin wrapper over [`run_ref`]
     /// (kept for call sites that build inputs ad hoc; hot loops should use
     /// `run_ref` / [`crate::runtime::feed::FeedPlan`] instead).
@@ -191,6 +283,11 @@ impl Executable {
     }
 
     fn exec(&self, literals: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        // The whole execute→fetch→buffer-drop sequence holds the
+        // per-client lock: every wrapper temporary that references the
+        // client is created and destroyed inside this critical section
+        // (see the SAFETY note on the Send/Sync impls).
+        let _g = self.client_lock.lock().unwrap();
         let result = self
             .exe
             .execute::<xla::Literal>(literals)
@@ -207,37 +304,166 @@ impl Executable {
     }
 }
 
-/// Per-thread runtime: PJRT client + compiled executable cache.
-pub struct Engine {
+/// One physical device's runtime: the PJRT client plus the executable
+/// cache it compiles into. Shared (`Arc`) across every thread that runs
+/// on that device.
+pub struct Runtime {
+    kind: DeviceKind,
+    key: String,
     client: xla::PjRtClient,
+    /// One lock per client; every compiled executable holds a clone and
+    /// takes it around client-touching operations (SAFETY note above).
+    client_lock: Arc<Mutex<()>>,
+    /// `None` → the process-wide cache; `Some` → a private cache
+    /// ([`Runtime::isolated`], for tests/benches that count compiles).
+    cache: Option<ExecutableCache>,
+}
+
+// SAFETY: see the `Executable` impls above — same argument: the client
+// wrapper value is owned by the registry/`Arc` for the process lifetime,
+// accessed only by reference, and the underlying PJRT client is
+// thread-safe for concurrent compilation and execution.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+/// Per-device-key registry backing [`Runtime::shared`]. Entries live for
+/// the process (a handful of clients at most).
+fn runtime_registry() -> &'static Mutex<BTreeMap<String, Arc<Runtime>>> {
+    static REGISTRY: std::sync::OnceLock<Mutex<BTreeMap<String, Arc<Runtime>>>> =
+        std::sync::OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+impl Runtime {
+    /// The process-shared runtime for `spec`: one client and one
+    /// executable cache per resolved device key. `auto` resolves before
+    /// the registry lookup, so `auto`-that-fell-back and explicit `cpu`
+    /// share the same runtime.
+    pub fn shared(spec: DeviceSpec) -> Result<Arc<Runtime>> {
+        // Where `auto` landed the first time — so repeat `auto` requests
+        // (sweep harnesses train many configs per process) hit the
+        // registry instead of re-probing, which would build a redundant
+        // client per call and could even flip a run to CPU if a GPU
+        // re-probe fails while a live gpu:0 runtime sits in the registry.
+        static AUTO_KEY: std::sync::OnceLock<String> = std::sync::OnceLock::new();
+        // Fast path: an explicit spec's key is known without a client.
+        let known_key = match spec {
+            DeviceSpec::Cpu => Some(DeviceKind::Cpu.key()),
+            DeviceSpec::Gpu { ordinal } => Some(DeviceKind::Gpu { ordinal }.key()),
+            DeviceSpec::Auto => AUTO_KEY.get().cloned(),
+        };
+        let mut reg = runtime_registry().lock().unwrap();
+        if let Some(k) = &known_key {
+            if let Some(rt) = reg.get(k) {
+                return Ok(Arc::clone(rt));
+            }
+        }
+        let (kind, client) = client_for(spec)?;
+        let key = kind.key();
+        if spec == DeviceSpec::Auto {
+            let _ = AUTO_KEY.set(key.clone());
+        }
+        if let Some(rt) = reg.get(&key) {
+            // `auto` resolved onto a device that already has a runtime.
+            return Ok(Arc::clone(rt));
+        }
+        let rt = Arc::new(Runtime {
+            kind,
+            key: key.clone(),
+            client,
+            client_lock: Arc::new(Mutex::new(())),
+            cache: None,
+        });
+        reg.insert(key, Arc::clone(&rt));
+        Ok(rt)
+    }
+
+    /// A runtime with its own private client and cache — for tests and
+    /// benches that assert compile counts without interference from the
+    /// process-wide cache (or other tests running in parallel).
+    pub fn isolated(spec: DeviceSpec) -> Result<Arc<Runtime>> {
+        let (kind, client) = client_for(spec)?;
+        let key = kind.key();
+        Ok(Arc::new(Runtime {
+            kind,
+            key,
+            client,
+            client_lock: Arc::new(Mutex::new(())),
+            cache: Some(ExecutableCache::new()),
+        }))
+    }
+
+    /// Which device this runtime landed on.
+    pub fn kind(&self) -> DeviceKind {
+        self.kind
+    }
+
+    /// Stable device key (`cpu`, `gpu:0`, ...) — the device half of every
+    /// cache key this runtime produces.
+    pub fn device_key(&self) -> &str {
+        &self.key
+    }
+
+    /// The executable cache this runtime compiles into.
+    pub fn cache(&self) -> &ExecutableCache {
+        self.cache.as_ref().unwrap_or_else(ExecutableCache::global)
+    }
+
+    /// Fetch-or-compile `task/artifact` described by `info`.
+    pub fn load(&self, task: &str, artifact: &str, info: &ArtifactInfo) -> Result<Arc<Executable>> {
+        self.cache().load(
+            &self.client,
+            &self.client_lock,
+            &self.key,
+            &format!("{task}/{artifact}"),
+            info,
+        )
+    }
+}
+
+/// Per-call-site engine handle: shared runtime + manifest + a local memo
+/// so hot call sites re-fetch executables without touching the cache lock.
+pub struct Engine {
+    runtime: Arc<Runtime>,
     pub manifest: Arc<Manifest>,
-    cache: BTreeMap<(String, String), Arc<Executable>>,
+    local: BTreeMap<(String, String), Arc<Executable>>,
 }
 
 impl Engine {
-    /// Create a CPU engine over an artifact directory.
+    /// CPU engine over an artifact directory (historical constructor;
+    /// now backed by the shared CPU runtime + process-wide cache).
     pub fn new(artifact_dir: &Path) -> Result<Engine> {
+        Engine::for_device(artifact_dir, DeviceSpec::Cpu)
+    }
+
+    /// Engine over an artifact directory on a selected device.
+    pub fn for_device(artifact_dir: &Path, spec: DeviceSpec) -> Result<Engine> {
         let manifest = Arc::new(Manifest::load(artifact_dir)?);
-        Ok(Engine {
-            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
-            manifest,
-            cache: BTreeMap::new(),
-        })
+        Ok(Engine::with_runtime(Runtime::shared(spec)?, manifest))
     }
 
-    /// Engine sharing an already-parsed manifest (thread spawns).
+    /// Engine sharing an already-parsed manifest (thread spawns) on the
+    /// shared CPU runtime. Prefer [`Engine::with_runtime`] where the
+    /// caller already resolved a device.
     pub fn with_manifest(manifest: Arc<Manifest>) -> Result<Engine> {
-        Ok(Engine {
-            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
-            manifest,
-            cache: BTreeMap::new(),
-        })
+        Ok(Engine::with_runtime(Runtime::shared(DeviceSpec::Cpu)?, manifest))
     }
 
-    /// Load + compile (cached) an artifact for `task`.
+    /// Engine over an existing runtime — the constructor the trainer
+    /// threads use so one device resolution covers the whole run.
+    pub fn with_runtime(runtime: Arc<Runtime>, manifest: Arc<Manifest>) -> Engine {
+        Engine { runtime, manifest, local: BTreeMap::new() }
+    }
+
+    /// The runtime this engine executes on.
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.runtime
+    }
+
+    /// Load + compile (cached process-wide) an artifact for `task`.
     pub fn load(&mut self, task: &str, artifact: &str) -> Result<Arc<Executable>> {
         let key = (task.to_string(), artifact.to_string());
-        if let Some(e) = self.cache.get(&key) {
+        if let Some(e) = self.local.get(&key) {
             return Ok(Arc::clone(e));
         }
         let info = self
@@ -245,26 +471,10 @@ impl Engine {
             .task(task)?
             .artifacts
             .get(artifact)
-            .with_context(|| format!("artifact {task}/{artifact} not in manifest"))?
-            .clone();
-        let proto = xla::HloModuleProto::from_text_file(
-            info.file
-                .to_str()
-                .context("artifact path not valid UTF-8")?,
-        )
-        .with_context(|| format!("parsing HLO text {:?}", info.file))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {task}/{artifact}"))?;
-        let executable = Arc::new(Executable {
-            exe,
-            info,
-            name: format!("{task}/{artifact}"),
-        });
-        self.cache.insert(key, Arc::clone(&executable));
-        Ok(executable)
+            .with_context(|| format!("artifact {task}/{artifact} not in manifest"))?;
+        let exe = self.runtime.load(task, artifact, info)?;
+        self.local.insert(key, Arc::clone(&exe));
+        Ok(exe)
     }
 }
 
@@ -399,5 +609,33 @@ mod tests {
         let a = eng.load("ant", "actor_infer").unwrap();
         let b = eng.load("ant", "actor_infer").unwrap();
         assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    /// Two engines on the shared CPU runtime hand out the *same*
+    /// executable for the same artifact file — the cross-engine half of
+    /// the compile-sharing contract (the cross-thread half lives in
+    /// `tests/exec_cache.rs`).
+    #[test]
+    fn engines_share_executables_via_runtime() {
+        let Some(mut a) = engine() else { return };
+        let Some(mut b) = engine() else { return };
+        assert!(Arc::ptr_eq(a.runtime(), b.runtime()), "shared cpu runtime");
+        let ea = a.load("ant", "actor_infer").unwrap();
+        let eb = b.load("ant", "actor_infer").unwrap();
+        assert!(Arc::ptr_eq(&ea, &eb), "one compile served to both engines");
+        assert!(ea.compile_ms >= 0.0 && ea.parse_ms >= 0.0);
+    }
+
+    #[test]
+    fn shared_runtime_registry_is_per_device_key() {
+        let a = Runtime::shared(DeviceSpec::Cpu).unwrap();
+        let b = Runtime::shared(DeviceSpec::Cpu).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.device_key(), "cpu");
+        assert_eq!(a.kind(), DeviceKind::Cpu);
+        // Isolated runtimes never alias the registry entry.
+        let iso = Runtime::isolated(DeviceSpec::Cpu).unwrap();
+        assert!(!Arc::ptr_eq(&a, &iso));
+        assert_eq!(iso.cache().compiles(), 0);
     }
 }

@@ -1,0 +1,198 @@
+//! Process-wide, thread-safe cache of compiled PJRT executables.
+//!
+//! Keyed by `(device key, artifact file hash)`: every `Engine` that loads
+//! the same artifact file on the same device — the PQL actor thread, the
+//! eval loop on the main thread, every trainer of a multi-task sweep —
+//! shares ONE compile instead of each paying XLA compilation per thread.
+//! Hashing the *file* (not the task/artifact name) means fig8 sweep
+//! artifacts and multi-task runs that point different names at identical
+//! HLO text also share, and that a regenerated artifact (new hash) never
+//! serves a stale executable.
+//!
+//! The hash is taken from the manifest's `sha256` entry when the python
+//! compile layer recorded one, and computed from the file bytes (FNV-1a,
+//! no crypto dependency in the vendored set) otherwise — either way the
+//! key changes when the file does.
+//!
+//! Compiles happen *while holding the cache lock*: artifact compiles are
+//! a loop-setup cost, and serializing them is what turns "compiled at
+//! most once" from a race into a guarantee the test hook
+//! ([`ExecutableCache::compiles`]) can assert exactly.
+
+use super::engine::Executable;
+use super::manifest::ArtifactInfo;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Cache key: which physical device compiled it × what file content.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub device: String,
+    pub file_hash: String,
+}
+
+impl CacheKey {
+    /// Key for `info` on `device`: manifest-recorded hash when present,
+    /// otherwise a fresh content hash of the file (recomputed per load —
+    /// cheap next to a compile, and self-invalidating when the artifact
+    /// is regenerated in place).
+    pub fn for_artifact(device: &str, info: &ArtifactInfo) -> Result<CacheKey> {
+        let file_hash = match &info.sha256 {
+            Some(h) => format!("sha256:{h}"),
+            None => artifact_file_hash(&info.file)?,
+        };
+        Ok(CacheKey { device: device.to_string(), file_hash })
+    }
+}
+
+/// Content hash of an artifact file: FNV-1a 64 over the bytes, prefixed
+/// with the length so the key is readable in logs and collisions need
+/// both a length and a hash match.
+pub fn artifact_file_hash(path: &Path) -> Result<String> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("hashing artifact {path:?}"))?;
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in &bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    Ok(format!("fnv1a:{}:{h:016x}", bytes.len()))
+}
+
+/// Timing record of one compile — the numbers the bench plane folds into
+/// `BENCH_learner_feed.json` (PERF.md §Device & compilation plane).
+#[derive(Debug, Clone)]
+pub struct CompileTiming {
+    /// `task/artifact` of the first loader (later loaders share by hash).
+    pub name: String,
+    pub device: String,
+    /// HLO-text parse portion, milliseconds.
+    pub parse_ms: f64,
+    /// XLA compile portion, milliseconds.
+    pub compile_ms: f64,
+}
+
+/// The process-wide executable cache. See the module docs.
+#[derive(Default)]
+pub struct ExecutableCache {
+    entries: Mutex<HashMap<CacheKey, Arc<Executable>>>,
+    compiles: AtomicU64,
+    hits: AtomicU64,
+    timings: Mutex<Vec<CompileTiming>>,
+}
+
+impl ExecutableCache {
+    /// A fresh, private cache. Production code shares [`global`]; tests
+    /// and benches that count compiles build their own (via
+    /// [`super::Runtime::isolated`]) so parallel tests don't see each
+    /// other's entries.
+    ///
+    /// [`global`]: ExecutableCache::global
+    pub fn new() -> ExecutableCache {
+        ExecutableCache::default()
+    }
+
+    /// The process-wide cache shared by every [`super::Runtime::shared`].
+    pub fn global() -> &'static ExecutableCache {
+        static GLOBAL: OnceLock<ExecutableCache> = OnceLock::new();
+        GLOBAL.get_or_init(ExecutableCache::new)
+    }
+
+    /// Fetch-or-compile `info` for `device`. `name` labels the executable
+    /// in error messages and timing records; `client_lock` is the
+    /// per-client serialization handle every executable carries.
+    pub fn load(
+        &self,
+        client: &xla::PjRtClient,
+        client_lock: &Arc<Mutex<()>>,
+        device: &str,
+        name: &str,
+        info: &ArtifactInfo,
+    ) -> Result<Arc<Executable>> {
+        let key = CacheKey::for_artifact(device, info)?;
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(e) = entries.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(e));
+        }
+        // Compile under the lock — see the module docs for why.
+        let exe = Arc::new(Executable::compile(client, client_lock, name, info.clone())?);
+        self.compiles.fetch_add(1, Ordering::Relaxed);
+        self.timings.lock().unwrap().push(CompileTiming {
+            name: name.to_string(),
+            device: device.to_string(),
+            parse_ms: exe.parse_ms,
+            compile_ms: exe.compile_ms,
+        });
+        entries.insert(key, Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Test hook: how many artifacts this cache actually compiled.
+    pub fn compiles(&self) -> u64 {
+        self.compiles.load(Ordering::Relaxed)
+    }
+
+    /// Test hook: how many loads were served from cache.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Number of distinct (device, file-hash) entries held.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of the per-compile timing records (bench reporting).
+    pub fn timings(&self) -> Vec<CompileTiming> {
+        self.timings.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn file_hash_tracks_content() {
+        let dir = std::env::temp_dir().join("pql_exec_cache_hash");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("a.hlo.txt");
+        std::fs::write(&p, "HloModule a").unwrap();
+        let h1 = artifact_file_hash(&p).unwrap();
+        std::fs::write(&p, "HloModule b").unwrap();
+        let h2 = artifact_file_hash(&p).unwrap();
+        assert_ne!(h1, h2, "content change must change the hash");
+        std::fs::write(&p, "HloModule a").unwrap();
+        assert_eq!(artifact_file_hash(&p).unwrap(), h1, "hash is content-determined");
+        // Same length, different bytes: the hash part still differs.
+        std::fs::write(&p, "HloModule c").unwrap();
+        assert_ne!(artifact_file_hash(&p).unwrap(), h1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cache_key_prefers_manifest_hash_and_separates_devices() {
+        let info = ArtifactInfo {
+            file: std::path::PathBuf::from("/nonexistent/x.hlo.txt"),
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+            sha256: Some("abc123".to_string()),
+        };
+        // Manifest hash present: no file access needed.
+        let k_cpu = CacheKey::for_artifact("cpu", &info).unwrap();
+        assert_eq!(k_cpu.file_hash, "sha256:abc123");
+        let k_gpu = CacheKey::for_artifact("gpu:0", &info).unwrap();
+        assert_ne!(k_cpu, k_gpu, "same file on another device is another key");
+        // No manifest hash and no file: keying fails loudly.
+        let missing = ArtifactInfo { sha256: None, ..info };
+        assert!(CacheKey::for_artifact("cpu", &missing).is_err());
+    }
+}

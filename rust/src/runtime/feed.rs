@@ -579,6 +579,7 @@ mod tests {
                 .map(|s| (s.name.to_string(), s.shape.clone()))
                 .collect(),
             outputs: Vec::new(),
+            sha256: None,
         };
         p.validate(&good).unwrap();
         let mut wrong_shape = good.clone();

@@ -64,6 +64,11 @@ pub struct ArtifactInfo {
     pub file: PathBuf,
     pub inputs: Vec<(String, Vec<usize>)>,
     pub outputs: Vec<(String, Vec<usize>)>,
+    /// Content hash recorded by the python compile layer (newer
+    /// manifests). When present the executable cache keys on it without
+    /// re-reading the file; absent (older manifests), the cache hashes
+    /// the file bytes itself. Either way the key tracks file content.
+    pub sha256: Option<String>,
 }
 
 /// Per-task manifest section.
@@ -125,6 +130,10 @@ impl Manifest {
                         file: root.join(aj.req("file")?.as_str()?),
                         inputs: parse_io("inputs")?,
                         outputs: parse_io("outputs")?,
+                        sha256: aj
+                            .get("sha256")
+                            .map(|h| h.as_str().map(str::to_string))
+                            .transpose()?,
                     },
                 );
             }

@@ -1,0 +1,187 @@
+//! Device runtime + executable-cache integration coverage.
+//!
+//! Artifact-dependent cases skip (early `return`) when `artifacts/` is
+//! absent, like the engine unit tests — the pure key/fallback cases run
+//! everywhere.
+
+use pql::runtime::{
+    artifact_file_hash, CacheKey, DeviceSpec, Engine, Manifest, Runtime, TensorView,
+};
+use std::path::Path;
+use std::sync::Arc;
+
+fn artifact_root() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// `auto` with no GPU client must land on CPU, and land there every time
+/// (the fallback is a deterministic resolution, not a race).
+#[test]
+fn auto_falls_back_to_cpu_deterministically() {
+    let a = Runtime::isolated(DeviceSpec::Auto).unwrap();
+    let b = Runtime::isolated(DeviceSpec::Auto).unwrap();
+    assert_eq!(a.device_key(), b.device_key());
+    // Default (CPU-only) builds have no GPU client at all, so the landing
+    // spot is exactly `cpu`; a `--features gpu` build may legitimately
+    // resolve onto a real GPU here.
+    #[cfg(not(feature = "gpu"))]
+    assert_eq!(a.device_key(), "cpu");
+}
+
+/// Explicit `gpu` on a CPU-only build is a hard error (silent CPU
+/// training on an explicit GPU request would be worse), while `auto`
+/// next to it succeeds.
+#[cfg(not(feature = "gpu"))]
+#[test]
+fn explicit_gpu_without_client_errors() {
+    assert!(Runtime::isolated(DeviceSpec::Gpu { ordinal: 0 }).is_err());
+    assert!(Runtime::isolated(DeviceSpec::Auto).is_ok());
+}
+
+// (Hash-moves-with-content invalidation — the property that stale
+// executables can't be served after `make artifacts` regenerates a file
+// in place — is pinned by the `file_hash_tracks_content` and
+// `cache_key_prefers_manifest_hash_and_separates_devices` unit tests in
+// `runtime::exec_cache`; `distinct_artifacts_distinct_entries` below
+// covers the key construction against a real manifest.)
+
+/// N threads racing to load the same artifact on one shared runtime:
+/// exactly one compile happens (asserted via the cache test hook), every
+/// thread gets a working executable, and all hand-outs alias the same
+/// compiled object.
+#[test]
+fn same_artifact_compiles_once_across_threads() {
+    let Ok(manifest) = Manifest::load(&artifact_root()) else { return };
+    let manifest = Arc::new(manifest);
+    let rt = Runtime::isolated(DeviceSpec::Cpu).unwrap();
+    const THREADS: usize = 4;
+
+    let mut ptrs: Vec<usize> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..THREADS {
+            let rt = Arc::clone(&rt);
+            let manifest = Arc::clone(&manifest);
+            handles.push(scope.spawn(move || {
+                let mut eng = Engine::with_runtime(rt, manifest);
+                let exe = eng.load("ant", "actor_infer").unwrap();
+                // Execute on this thread to exercise concurrent use of
+                // the shared executable, not just concurrent loading.
+                let obs_dim = exe.info.inputs[1].1[1];
+                let chunk = exe.info.inputs[1].1[0];
+                let theta = vec![0.0f32; exe.info.inputs[0].1[0]];
+                let obs = vec![0.1f32; chunk * obs_dim];
+                let mu = vec![0.0f32; obs_dim];
+                let var = vec![1.0f32; obs_dim];
+                let out = exe
+                    .run_ref(&[
+                        TensorView::vec(&theta),
+                        TensorView::new(&[chunk, obs_dim], &obs),
+                        TensorView::vec(&mu),
+                        TensorView::vec(&var),
+                    ])
+                    .unwrap();
+                assert!(out[0].iter().all(|v| v.is_finite()));
+                Arc::as_ptr(&exe) as usize
+            }));
+        }
+        for h in handles {
+            ptrs.push(h.join().unwrap());
+        }
+    });
+
+    assert_eq!(rt.cache().compiles(), 1, "one compile across {THREADS} threads");
+    assert_eq!(rt.cache().hits(), (THREADS - 1) as u64);
+    assert_eq!(rt.cache().len(), 1);
+    assert!(ptrs.windows(2).all(|w| w[0] == w[1]), "all threads share one executable");
+}
+
+/// A cache-served executable must be indistinguishable from a freshly
+/// compiled one: bit-identical `run_ref` outputs on the same inputs.
+#[test]
+fn cached_and_fresh_executables_match_bitwise() {
+    let Ok(manifest) = Manifest::load(&artifact_root()) else { return };
+    let manifest = Arc::new(manifest);
+    let t = manifest.task("ant").unwrap().clone();
+    let chunk = manifest.chunk;
+
+    let mut rng = pql::util::Rng::new(11);
+    let theta = t.layouts["actor"].init(&mut rng);
+    let mut obs = vec![0.0f32; chunk * t.obs_dim];
+    rng.fill_normal(&mut obs);
+    let mu = vec![0.1f32; t.obs_dim];
+    let var = vec![1.5f32; t.obs_dim];
+    let obs_shape = [chunk, t.obs_dim];
+    let views = [
+        TensorView::vec(&theta),
+        TensorView::new(&obs_shape, &obs),
+        TensorView::vec(&mu),
+        TensorView::vec(&var),
+    ];
+
+    // Runtime A: compile once, then fetch the same entry through a second
+    // engine (a cache hit) — must be the same object and the same bits.
+    let rt_a = Runtime::isolated(DeviceSpec::Cpu).unwrap();
+    let mut e1 = Engine::with_runtime(Arc::clone(&rt_a), Arc::clone(&manifest));
+    let fresh = e1.load("ant", "actor_infer").unwrap();
+    let out_fresh = fresh.run_ref(&views).unwrap();
+    let mut e2 = Engine::with_runtime(Arc::clone(&rt_a), Arc::clone(&manifest));
+    let cached = e2.load("ant", "actor_infer").unwrap();
+    assert!(Arc::ptr_eq(&fresh, &cached));
+    assert_eq!(rt_a.cache().compiles(), 1);
+    assert_eq!(out_fresh, cached.run_ref(&views).unwrap());
+
+    // Runtime B: an entirely fresh compile of the same file must also
+    // produce bit-identical outputs (the cache changes nothing numeric).
+    let rt_b = Runtime::isolated(DeviceSpec::Cpu).unwrap();
+    let mut e3 = Engine::with_runtime(rt_b, Arc::clone(&manifest));
+    let recompiled = e3.load("ant", "actor_infer").unwrap();
+    assert!(!Arc::ptr_eq(&fresh, &recompiled));
+    assert_eq!(out_fresh, recompiled.run_ref(&views).unwrap());
+}
+
+/// Distinct artifacts are distinct cache entries; reloading either is a
+/// hit, and manifest-recorded hashes key without re-reading files.
+#[test]
+fn distinct_artifacts_distinct_entries() {
+    let Ok(manifest) = Manifest::load(&artifact_root()) else { return };
+    let manifest = Arc::new(manifest);
+    let rt = Runtime::isolated(DeviceSpec::Cpu).unwrap();
+    let mut eng = Engine::with_runtime(Arc::clone(&rt), Arc::clone(&manifest));
+    eng.load("ant", "actor_infer").unwrap();
+    eng.load("ant", "actor_update").unwrap();
+    assert_eq!(rt.cache().compiles(), 2);
+    assert_eq!(rt.cache().len(), 2);
+    // Second engine re-fetches both: two hits, still two compiles.
+    let mut eng2 = Engine::with_runtime(Arc::clone(&rt), Arc::clone(&manifest));
+    eng2.load("ant", "actor_infer").unwrap();
+    eng2.load("ant", "actor_update").unwrap();
+    assert_eq!(rt.cache().compiles(), 2);
+    assert_eq!(rt.cache().hits(), 2);
+
+    // Key construction agrees with whichever hash source the manifest
+    // provides for a real artifact.
+    let info = &manifest.task("ant").unwrap().artifacts["actor_infer"];
+    let key = CacheKey::for_artifact("cpu", info).unwrap();
+    match &info.sha256 {
+        Some(h) => assert_eq!(key.file_hash, format!("sha256:{h}")),
+        None => assert_eq!(key.file_hash, artifact_file_hash(&info.file).unwrap()),
+    }
+}
+
+/// Compile timings are recorded per compile (the bench plane reads these
+/// into `BENCH_learner_feed.json`).
+#[test]
+fn compile_timings_are_recorded() {
+    let Ok(manifest) = Manifest::load(&artifact_root()) else { return };
+    let manifest = Arc::new(manifest);
+    let rt = Runtime::isolated(DeviceSpec::Cpu).unwrap();
+    let mut eng = Engine::with_runtime(Arc::clone(&rt), manifest);
+    let exe = eng.load("ant", "actor_infer").unwrap();
+    assert!(exe.parse_ms >= 0.0 && exe.compile_ms > 0.0);
+    let tms = rt.cache().timings();
+    assert_eq!(tms.len(), 1);
+    assert_eq!(tms[0].name, "ant/actor_infer");
+    assert_eq!(tms[0].device, "cpu");
+    assert_eq!(tms[0].compile_ms, exe.compile_ms);
+}
