@@ -170,12 +170,15 @@ def emit_task(em: Emitter, task_name: str, skip_fig8: bool):
         em.emit(task_name, "critic_update", model.ddpg_critic_update(spec, tasks.TAU), a, n, o)
         a, n, o = au_args(B)
         em.emit(task_name, "actor_update", model.ddpg_actor_update(spec), a, n, o)
-        if not em.quick:
-            # Prioritized-replay variant (Schaul et al. / Ape-X): IS
-            # weights in, per-sample |td| out for the sum-tree refresh.
-            a, n, o = cu_per_args(B)
-            em.emit(task_name, "critic_update_per",
-                    model.ddpg_critic_update_per(spec, tasks.TAU), a, n, o)
+        # Prioritized-replay variant (Schaul et al. / Ape-X): IS weights
+        # in, per-sample |td| out for the sum-tree refresh. Emitted in
+        # --quick too: quick artifact sets previously had no *_per graph
+        # at all, so `--prioritized-replay` (and the PER differential
+        # tests) silently skipped on CI smoke runs. The Dist/SAC PER
+        # variants stay full-mode only.
+        a, n, o = cu_per_args(B)
+        em.emit(task_name, "critic_update_per",
+                model.ddpg_critic_update_per(spec, tasks.TAU), a, n, o)
     else:
         # Asymmetric (vision) variants: pixel actor obs + state critic obs.
         em.emit(task_name, "critic_update",
@@ -290,7 +293,8 @@ def main():
     ap.add_argument("--tasks", default=",".join(tasks.TASKS))
     ap.add_argument("--skip-fig8", action="store_true")
     ap.add_argument("--quick", action="store_true",
-                    help="core DDPG/PPO artifacts only (CI smoke)")
+                    help="core DDPG (incl. prioritized critic)/PPO "
+                         "artifacts only (CI smoke)")
     args = ap.parse_args()
 
     jax.config.update("jax_platform_name", "cpu")

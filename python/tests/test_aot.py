@@ -79,6 +79,24 @@ def test_actor_infer_io_shapes(quick_artifacts):
     assert a["outputs"][0]["shape"] == [chunk, t["act_dim"]]
 
 
+def test_quick_mode_emits_prioritized_critic(quick_artifacts):
+    # --quick previously omitted every *_per graph, so prioritized replay
+    # had no artifact at all on CI smoke runs (and the rust PER
+    # differential tests silently skipped). The DDPG PER critic now rides
+    # quick mode; the heavier Dist/SAC PER variants stay full-mode only.
+    _, manifest = quick_artifacts
+    arts = manifest["tasks"]["ant"]["artifacts"]
+    assert "critic_update_per" in arts
+    per = arts["critic_update_per"]
+    in_names = [i["name"] for i in per["inputs"]]
+    assert "isw" in in_names
+    # Slot order contract with rust FeedPlan::critic_update_per: isw
+    # rides directly after gmask.
+    assert in_names.index("isw") == in_names.index("gmask") + 1
+    assert [o["name"] for o in per["outputs"]][-1] == "td"
+    assert {"critic_update_dist_per", "sac_critic_update_per"}.isdisjoint(arts)
+
+
 def test_all_tasks_table_covered():
     # Every env the rust side exposes must be in the python task table.
     expected = {"ant", "humanoid", "anymal", "shadow_hand", "allegro_hand",

@@ -16,7 +16,10 @@ use pql::coordinator::PaceController;
 use pql::envs::{self, StepOut};
 use pql::exploration::Noise;
 use pql::replay::{NStepAssembler, SampleBatch, SumTree, TransitionBuffer};
-use pql::runtime::{infer_chunked, Engine, FeedDims, FeedPlan, HostTensor, OptState, Variant};
+use pql::runtime::{
+    infer_chunked, Engine, FeedDims, FeedPlan, HostTensor, OptState, ResidentUpdate, TensorView,
+    Variant,
+};
 use pql::util::Rng;
 use std::path::Path;
 use std::time::Instant;
@@ -421,14 +424,53 @@ fn write_learner_feed_json(records: &[PlaneRecord]) -> std::io::Result<std::path
         } else {
             String::new()
         };
+        let resident = if rate_of(records, "run_resident", n) > 0.0 {
+            format!(", \"resident_over_staged\": {:.3}",
+                    rate_of(records, "run_resident", n) / rate_of(records, "run_ref", n).max(1e-9))
+        } else {
+            String::new()
+        };
         speedups.push(format!(
-            "    {{\"n\": {n}, \"assemble_ref_over_owned\": {assemble:.3}{run}}}"
+            "    {{\"n\": {n}, \"assemble_ref_over_owned\": {assemble:.3}{run}{resident}}}"
         ));
     }
+    // Resident-vs-staged section: the end-to-end update rate with
+    // device-resident training state over the full staged round trip.
+    let resident_rows: Vec<String> = [512usize, 4096, 16384]
+        .iter()
+        .filter(|&&n| rate_of(records, "run_resident", n) > 0.0)
+        .map(|&n| {
+            format!(
+                "    {{\"n\": {n}, \"resident_over_staged\": {:.3}, \"resident_rows_per_sec\": {:.1}}}",
+                rate_of(records, "run_resident", n) / rate_of(records, "run_ref", n).max(1e-9),
+                rate_of(records, "run_resident", n)
+            )
+        })
+        .collect();
+    let resident_section = if resident_rows.is_empty() {
+        String::new()
+    } else {
+        format!(",\n  \"resident_vs_staged\": [\n{}\n  ]", resident_rows.join(",\n"))
+    };
+    // Dispatch-contention section: fixed work set split over T threads —
+    // the ratio is a genuine concurrency speedup (same total work), which
+    // is what the perf gate tracks (absolute rates are machine-bound).
+    let d1 = rate_of(records, "dispatch_contention", 1);
+    let dispatch_section = if d1 > 0.0 {
+        format!(
+            ",\n  \"dispatch_contention\": {{\"threads_2_over_1\": {:.3}, \"threads_4_over_1\": {:.3}}}",
+            rate_of(records, "dispatch_contention", 2) / d1.max(1e-9),
+            rate_of(records, "dispatch_contention", 4) / d1.max(1e-9)
+        )
+    } else {
+        String::new()
+    };
     let json = format!(
-        "{{\n  \"schema\": \"pql.bench.learner_feed/v1\",\n  \"source\": \"cargo bench --bench throughput\",\n  \"task\": \"ant\",\n  \"results\": [\n{}\n  ],\n  \"speedups\": [\n{}\n  ]\n}}\n",
+        "{{\n  \"schema\": \"pql.bench.learner_feed/v1\",\n  \"source\": \"cargo bench --bench throughput\",\n  \"task\": \"ant\",\n  \"results\": [\n{}\n  ],\n  \"speedups\": [\n{}\n  ]{}{}\n}}\n",
         rows_json(records),
-        speedups.join(",\n")
+        speedups.join(",\n"),
+        resident_section,
+        dispatch_section
     );
     let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_learner_feed.json");
     std::fs::write(&path, json)?;
@@ -782,6 +824,48 @@ fn main() {
                 unit: "rows",
             });
 
+            // Device-resident update (PR 6): θ/m/v/target loop back on
+            // device; each iteration restages only the minibatch and
+            // fetches only the loss/qmean scalars. The `run_ref` group
+            // above is the staged baseline for `resident_over_staged`.
+            let mut res = ResidentUpdate::new(
+                std::sync::Arc::clone(&cu),
+                FeedPlan::critic_update(Variant::Ddpg, &dims, 5e-4),
+                0.0,
+                |f| {
+                    f.bind_adam(&critic)?;
+                    f.bind("target", &target)?;
+                    f.bind("theta_a", &theta_a)?;
+                    f.bind("s", &s)?;
+                    f.bind("a", &a)?;
+                    f.bind("rn", &rn)?;
+                    f.bind("s2", &s)?;
+                    f.bind("gmask", &gmask)?;
+                    f.bind("mu", &mu)?;
+                    f.bind("var", &var)?;
+                    Ok(())
+                },
+            )
+            .unwrap();
+            let bname = format!("critic_update run resident (B={bsz})");
+            let (ms, rate) = bench(&bname, bsz as f64, "rows", iters, || {
+                res.restage("s", &s).unwrap();
+                res.restage("a", &a).unwrap();
+                res.restage("rn", &rn).unwrap();
+                res.restage("s2", &s).unwrap();
+                res.restage("gmask", &gmask).unwrap();
+                let outs = res.step().unwrap();
+                std::hint::black_box(&outs);
+            });
+            feed.push(PlaneRecord {
+                group: "run_resident",
+                name: bname,
+                n: bsz,
+                ms_per_iter: ms,
+                per_sec: rate,
+                unit: "rows",
+            });
+
             // First-stage cost: converting one full bound frame to staged
             // literals. On a GPU client this is the host→device transfer
             // boundary the `prepare`/`restage` split was designed around.
@@ -809,6 +893,92 @@ fn main() {
                 per_sec: 1e3 / stage_ms.max(1e-9),
                 unit: "stages",
             });
+        }
+
+        // --- concurrent dispatch: per-executable locks (PR 6) ----------
+        // A fixed work set (each of 4 distinct executables dispatched K
+        // times) split across T ∈ {1, 2, 4} threads — same total work at
+        // every T, so aggregate rate ratios are a true concurrency
+        // speedup. With the old per-client lock the ratio pinned at ~1;
+        // per-executable locks let different graphs overlap. Inputs are
+        // staged in-thread (literals are not Send), like the trainer
+        // threads. `PALLAS_SERIAL_DISPATCH=1` reproduces the old order.
+        {
+            let names = ["critic_update", "actor_update", "actor_infer", "critic_update_dist"];
+            let exes: Vec<_> = names.iter().filter_map(|a| engine.load("ant", a).ok()).collect();
+            if exes.len() == names.len() {
+                // NaN-safe positive inputs per executable slot.
+                let data: Vec<Vec<Vec<f32>>> = exes
+                    .iter()
+                    .map(|e| {
+                        e.info
+                            .inputs
+                            .iter()
+                            .map(|(_, shape)| {
+                                let mut v =
+                                    vec![0.0f32; shape.iter().product::<usize>().max(1)];
+                                r.fill_normal(&mut v);
+                                for x in &mut v {
+                                    *x = x.abs() * 0.05 + 0.01;
+                                }
+                                v
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let dispatch =
+                    |exe: &pql::runtime::Executable, d: &[Vec<f32>]| {
+                        let views: Vec<TensorView> = exe
+                            .info
+                            .inputs
+                            .iter()
+                            .zip(d)
+                            .map(|((_, sh), buf)| TensorView::new(sh, buf))
+                            .collect();
+                        std::hint::black_box(exe.run_ref(&views).unwrap());
+                    };
+                for (exe, d) in exes.iter().zip(&data) {
+                    dispatch(exe, d); // warm every graph once
+                }
+                let k = 10usize;
+                for &threads in &[1usize, 2, 4] {
+                    let per = names.len() / threads;
+                    let t0 = Instant::now();
+                    std::thread::scope(|sc| {
+                        for c in 0..threads {
+                            let exs = &exes[c * per..(c + 1) * per];
+                            let ds = &data[c * per..(c + 1) * per];
+                            let dispatch = &dispatch;
+                            sc.spawn(move || {
+                                for _ in 0..k {
+                                    for (exe, d) in exs.iter().zip(ds) {
+                                        dispatch(exe, d);
+                                    }
+                                }
+                            });
+                        }
+                    });
+                    let dt = t0.elapsed().as_secs_f64();
+                    let total = (names.len() * k) as f64;
+                    let rate = total / dt;
+                    let bname = format!("dispatch contention T={threads}");
+                    println!(
+                        "{bname:<44} {:>10.3} ms/iter {:>14.0} dispatches/s",
+                        dt / total * 1e3,
+                        rate
+                    );
+                    feed.push(PlaneRecord {
+                        group: "dispatch_contention",
+                        name: bname,
+                        n: threads,
+                        ms_per_iter: dt / total * 1e3,
+                        per_sec: rate,
+                        unit: "dispatches",
+                    });
+                }
+            } else {
+                println!("dispatch contention: missing artifacts, skipping");
+            }
         }
 
         // Compile timings from the process-wide executable cache: one

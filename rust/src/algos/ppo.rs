@@ -12,7 +12,8 @@ use crate::coordinator::ReturnTracker;
 use crate::envs::{self, StepOut};
 use crate::metrics::{Record, RunLog};
 use crate::runtime::{
-    Engine, FeedDims, FeedPlan, Manifest, OptState, PreparedInputs, Runtime, TensorView,
+    Engine, FeedDims, FeedPlan, Manifest, OptState, PreparedInputs, ResidentUpdate, Runtime,
+    TensorView,
 };
 use crate::util::{Rng, RunningNorm};
 use anyhow::Result;
@@ -39,17 +40,15 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path) -> Result<RunLog
 
     // Update-input signature resolved once (critic_params is unused by the
     // joint ppo layout).
-    let plan = FeedPlan::ppo_update(
-        &FeedDims {
-            batch: b,
-            obs_dim: od,
-            act_dim: ad,
-            critic_obs_dim: cd,
-            actor_params: tinfo.layouts["ppo"].size,
-            critic_params: 0,
-        },
-        cfg.actor_lr,
-    );
+    let dims = FeedDims {
+        batch: b,
+        obs_dim: od,
+        act_dim: ad,
+        critic_obs_dim: cd,
+        actor_params: tinfo.layouts["ppo"].size,
+        critic_params: 0,
+    };
+    let plan = FeedPlan::ppo_update(&dims, cfg.actor_lr);
     plan.validate(&update.info)?;
 
     let mut env = envs::make(&cfg.task, n, cfg.seed)?;
@@ -90,6 +89,13 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path) -> Result<RunLog
     let mut ret_mb = vec![0.0f32; b];
     let mut lp_mb = vec![0.0f32; b];
 
+    // Device-resident update stream (cfg.resident): θ/m/v loop back on
+    // device across the whole minibatch-epoch schedule; the host policy
+    // mirror the next rollout and eval need is refreshed once per update
+    // phase rather than once per minibatch.
+    let mut res: Option<ResidentUpdate> = None;
+    let mut norm_dirty = false;
+
     let mut steps: u64 = 0;
     let mut updates: u64 = 0;
     let mut next_eval = cfg.eval_interval_secs;
@@ -118,6 +124,7 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path) -> Result<RunLog
                 rdone[t * n + e] = out.done[e];
             }
             norm.update(&out.obs, od);
+            norm_dirty = true;
             obs.copy_from_slice(&out.obs);
             if vision {
                 env.fill_critic_obs(&mut cobs);
@@ -177,25 +184,71 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path) -> Result<RunLog
                 }
                 let outs = {
                     let _g = device.enter(cfg.placement[1]);
-                    let mut f = plan.frame();
-                    f.bind_adam(&state)?;
-                    f.bind("s", &s_mb)?;
-                    f.bind("cs", &cs_mb)?;
-                    f.bind("a", &a_mb)?;
-                    f.bind("adv", &adv_mb)?;
-                    f.bind("ret", &ret_mb)?;
-                    f.bind("logp", &lp_mb)?;
-                    f.bind("mu", &norm.mean)?;
-                    f.bind("var", &norm.var)?;
-                    f.run(&update)?
+                    if cfg.resident && res.is_none() {
+                        let r = ResidentUpdate::new(
+                            Arc::clone(&update),
+                            FeedPlan::ppo_update(&dims, cfg.actor_lr),
+                            state.t,
+                            |f| {
+                                f.bind_adam(&state)?;
+                                f.bind("s", &s_mb)?;
+                                f.bind("cs", &cs_mb)?;
+                                f.bind("a", &a_mb)?;
+                                f.bind("adv", &adv_mb)?;
+                                f.bind("ret", &ret_mb)?;
+                                f.bind("logp", &lp_mb)?;
+                                f.bind("mu", &norm.mean)?;
+                                f.bind("var", &norm.var)?;
+                                Ok(())
+                            },
+                        )?;
+                        res = Some(r);
+                        norm_dirty = false;
+                    }
+                    match res.as_mut() {
+                        Some(r) => {
+                            if norm_dirty {
+                                r.restage("mu", &norm.mean)?;
+                                r.restage("var", &norm.var)?;
+                                norm_dirty = false;
+                            }
+                            r.restage("s", &s_mb)?;
+                            r.restage("cs", &cs_mb)?;
+                            r.restage("a", &a_mb)?;
+                            r.restage("adv", &adv_mb)?;
+                            r.restage("ret", &ret_mb)?;
+                            r.restage("logp", &lp_mb)?;
+                            r.step()?
+                        }
+                        None => {
+                            let mut f = plan.frame();
+                            f.bind_adam(&state)?;
+                            f.bind("s", &s_mb)?;
+                            f.bind("cs", &cs_mb)?;
+                            f.bind("a", &a_mb)?;
+                            f.bind("adv", &adv_mb)?;
+                            f.bind("ret", &ret_mb)?;
+                            f.bind("logp", &lp_mb)?;
+                            f.bind("mu", &norm.mean)?;
+                            f.bind("var", &norm.var)?;
+                            f.run(&update)?
+                        }
+                    }
                 };
-                let mut it = outs.into_iter();
-                let th = it.next().unwrap();
-                let m = it.next().unwrap();
-                let v = it.next().unwrap();
-                state.absorb(th, m, v);
+                if res.is_none() {
+                    let mut it = outs.into_iter();
+                    let th = it.next().unwrap();
+                    let m = it.next().unwrap();
+                    let v = it.next().unwrap();
+                    state.absorb(th, m, v);
+                }
                 updates += 1;
             }
+        }
+        if let Some(r) = res.as_ref() {
+            // One host materialization per update phase: the policy the
+            // next rollout (and eval) runs from.
+            state.theta = r.to_host("theta")?;
         }
 
         // ---- periodic evaluation -------------------------------------------

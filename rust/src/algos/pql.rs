@@ -22,7 +22,9 @@ use crate::metrics::{Record, RunLog};
 use crate::replay::{
     NStepAssembler, ReadyBatch, SampleBatch, StateBuffer, SumTree, TransitionBuffer,
 };
-use crate::runtime::{infer_chunked, Engine, FeedDims, FeedPlan, Manifest, OptState, Runtime};
+use crate::runtime::{
+    infer_chunked, Engine, FeedDims, FeedPlan, Manifest, OptState, ResidentUpdate, Runtime,
+};
 use crate::util::{Rng, RunningNorm};
 use anyhow::{Context, Result};
 use log::{debug, info};
@@ -402,11 +404,14 @@ fn v_loop(
     // Input signature resolved once; per-iteration assembly is pure
     // slice binding (zero heap clones — see tests/alloc_free.rs).
     let dims = feed_dims(&tinfo, variant, b);
-    let plan = if per {
-        FeedPlan::critic_update_per(variant, &dims, cfg.critic_lr)
-    } else {
-        FeedPlan::critic_update(variant, &dims, cfg.critic_lr)
+    let make_plan = || {
+        if per {
+            FeedPlan::critic_update_per(variant, &dims, cfg.critic_lr)
+        } else {
+            FeedPlan::critic_update(variant, &dims, cfg.critic_lr)
+        }
     };
+    let plan = make_plan();
     plan.validate(&update.info)
         .with_context(|| format!("{artifact} signature"))?;
 
@@ -441,6 +446,17 @@ fn v_loop(
     let mut s_flat = Vec::new();
     let mut s2_flat = Vec::new();
     let mut ready = ReadyBatch::default();
+    // Device-resident update stream (cfg.resident, the default): θ/m/v and
+    // the Polyak target live as staged literals and loop back on device
+    // after every step. Per-iteration host→device traffic shrinks to the
+    // batch slots (+ the 1-element Adam step scalar); device→host traffic
+    // to loss/qmean (and PER's per-sample |td|). Host θ is materialized
+    // only at the critic_bus publish cadence via to_host. Seeded lazily on
+    // the first full batch so the initial staging binds real data.
+    let mut res: Option<ResidentUpdate> = None;
+    let mut td_pos: Option<usize> = None;
+    let mut alpha_version = 0u64;
+    let mut norm_version = 0u64;
 
     while !shared.pace.stopped() {
         // Drain the data channel into replay (local buffer, Fig. 1): each
@@ -487,12 +503,12 @@ fn v_loop(
             break;
         }
         // Local lagged policy π^v (synced on P-learner publishes).
+        let mut theta_a_new = false;
         if let Some((v, t)) = shared.actor_bus.latest(theta_a_version) {
             theta_a_version = v;
             theta_a = t;
+            theta_a_new = true;
         }
-        let norm = shared.norm_bus.view();
-        let alpha = shared.alpha_bus.snapshot().1;
 
         if let Some(tree) = pri.as_mut() {
             // Stratified prioritized draw: indices + IS weights land in
@@ -507,43 +523,135 @@ fn v_loop(
         }
         let outs = {
             let _g = shared.devices.enter(cfg.placement[1]);
-            // Union binding: the plan keeps whichever of s/cs/cs2/alpha/
-            // noise its (variant × vision) signature declares; the
-            // identity critic-obs normalizer and lr ride as plan consts.
-            let mut f = plan.frame();
-            f.bind_adam(&critic)?;
-            f.bind("target", &target)?;
-            f.bind("theta_a", &theta_a[..])?;
-            f.bind_opt("alpha", &alpha[..])?;
-            f.bind_opt("s", &batch.s)?;
-            f.bind_opt("cs", &batch.cs)?;
-            f.bind("a", &batch.a)?;
-            f.bind("rn", &batch.rn)?;
-            f.bind("s2", &batch.s2)?;
-            f.bind_opt("cs2", &batch.cs2)?;
-            f.bind("gmask", &batch.gmask)?;
-            f.bind_opt("isw", &batch.isw)?;
-            f.bind_opt("noise", &noise)?;
-            f.bind("mu", norm.mean())?;
-            f.bind("var", norm.var())?;
-            f.run(&update)?
+            if cfg.resident && res.is_none() {
+                // Seed the resident state from one fully-bound frame —
+                // identical bindings to a staged iteration, so the two
+                // paths start bit-equal (tests/resident.rs pins this).
+                let (nv, nview) = shared
+                    .norm_bus
+                    .latest_view(0)
+                    .context("norm bus holds an initial version")?;
+                norm_version = nv;
+                let (av, alpha) = shared.alpha_bus.snapshot();
+                alpha_version = av;
+                let r = ResidentUpdate::new(
+                    Arc::clone(&update),
+                    make_plan(),
+                    critic.t,
+                    |f| {
+                        f.bind_adam(&critic)?;
+                        f.bind("target", &target)?;
+                        f.bind("theta_a", &theta_a[..])?;
+                        f.bind_opt("alpha", &alpha[..])?;
+                        f.bind_opt("s", &batch.s)?;
+                        f.bind_opt("cs", &batch.cs)?;
+                        f.bind("a", &batch.a)?;
+                        f.bind("rn", &batch.rn)?;
+                        f.bind("s2", &batch.s2)?;
+                        f.bind_opt("cs2", &batch.cs2)?;
+                        f.bind("gmask", &batch.gmask)?;
+                        f.bind_opt("isw", &batch.isw)?;
+                        f.bind_opt("noise", &noise)?;
+                        f.bind("mu", nview.mean())?;
+                        f.bind("var", nview.var())?;
+                        Ok(())
+                    },
+                )?;
+                td_pos = r.fetch_pos("td");
+                res = Some(r);
+            }
+            match res.as_mut() {
+                Some(r) => {
+                    // Cross-network parameters restage at bus cadence only.
+                    if theta_a_new {
+                        r.restage("theta_a", &theta_a[..])?;
+                    }
+                    if r.plan().has("alpha") {
+                        if let Some((v, a)) = shared.alpha_bus.latest(alpha_version) {
+                            alpha_version = v;
+                            r.restage("alpha", &a[..])?;
+                        }
+                    }
+                    if let Some((v, nview)) = shared.norm_bus.latest_view(norm_version) {
+                        norm_version = v;
+                        r.restage("mu", nview.mean())?;
+                        r.restage("var", nview.var())?;
+                    }
+                    // Per-step traffic: the sampled batch only.
+                    if vision {
+                        r.restage("cs", &batch.cs)?;
+                        r.restage("cs2", &batch.cs2)?;
+                    } else {
+                        r.restage("s", &batch.s)?;
+                    }
+                    r.restage("a", &batch.a)?;
+                    r.restage("rn", &batch.rn)?;
+                    r.restage("s2", &batch.s2)?;
+                    r.restage("gmask", &batch.gmask)?;
+                    if per {
+                        r.restage("isw", &batch.isw)?;
+                    }
+                    if r.plan().has("noise") {
+                        r.restage("noise", &noise)?;
+                    }
+                    r.step()?
+                }
+                None => {
+                    // Staged fallback (--no-resident): full host round
+                    // trip through the frame. Union binding: the plan
+                    // keeps whichever of s/cs/cs2/alpha/noise its
+                    // (variant × vision) signature declares; the identity
+                    // critic-obs normalizer and lr ride as plan consts.
+                    let nview = shared.norm_bus.view();
+                    let alpha = shared.alpha_bus.snapshot().1;
+                    let mut f = plan.frame();
+                    f.bind_adam(&critic)?;
+                    f.bind("target", &target)?;
+                    f.bind("theta_a", &theta_a[..])?;
+                    f.bind_opt("alpha", &alpha[..])?;
+                    f.bind_opt("s", &batch.s)?;
+                    f.bind_opt("cs", &batch.cs)?;
+                    f.bind("a", &batch.a)?;
+                    f.bind("rn", &batch.rn)?;
+                    f.bind("s2", &batch.s2)?;
+                    f.bind_opt("cs2", &batch.cs2)?;
+                    f.bind("gmask", &batch.gmask)?;
+                    f.bind_opt("isw", &batch.isw)?;
+                    f.bind_opt("noise", &noise)?;
+                    f.bind("mu", nview.mean())?;
+                    f.bind("var", nview.var())?;
+                    f.run(&update)?
+                }
+            }
         };
-        // outputs: theta_c, m, v, theta_ct, loss, qmean[, td]
-        let mut it = outs.into_iter();
-        let th = it.next().unwrap();
-        let m = it.next().unwrap();
-        let v = it.next().unwrap();
-        target = it.next().unwrap();
-        if let Some(tree) = pri.as_mut() {
-            // Close the TD-error feedback loop: the per-sample |td|
-            // output (after loss and qmean) refreshes the sampled leaves.
-            let td = it.nth(2).unwrap();
-            tree.update_many(&batch.idx, &td);
-        }
-        critic.absorb(th, m, v);
-        updates += 1;
-        if updates % CRITIC_SYNC_EVERY == 0 {
-            shared.critic_bus.publish(critic.theta.clone());
+        if let Some(r) = res.as_ref() {
+            // Resident: only loss/qmean[, td] came back.
+            if let (Some(tree), Some(td)) = (pri.as_mut(), td_pos) {
+                tree.update_many(&batch.idx, &outs[td]);
+            }
+            updates += 1;
+            if updates % CRITIC_SYNC_EVERY == 0 {
+                shared.critic_bus.publish(r.to_host("theta")?);
+            }
+        } else {
+            // outputs: theta_c, m, v, theta_ct, loss, qmean[, td]
+            let mut it = outs.into_iter();
+            let th = it.next().unwrap();
+            let m = it.next().unwrap();
+            let v = it.next().unwrap();
+            target = it.next().unwrap();
+            if let Some(tree) = pri.as_mut() {
+                // Close the TD-error feedback loop: the per-sample |td|
+                // output (after loss and qmean) refreshes the sampled
+                // leaves.
+                let td = it.nth(2).unwrap();
+                tree.update_many(&batch.idx, &td);
+            }
+            critic.absorb(th, m, v);
+            updates += 1;
+            if updates % CRITIC_SYNC_EVERY == 0 {
+                shared.critic_bus.publish(critic.theta.clone());
+            }
         }
     }
     Ok(())
@@ -591,6 +699,12 @@ fn p_loop(
     let mut noise = vec![0.0f32; b * ad];
     let mut critic_version = 0u64;
     let mut theta_c = shared.critic_bus.snapshot().1;
+    // Device-resident policy stream (cfg.resident): θ_a/m/v (and the SAC
+    // temperature triplet) loop back on device; per-update traffic is the
+    // sampled states (+ noise) in and the loss diagnostics out, plus the
+    // per-publish to_host("theta") the hard policy-target sync requires.
+    let mut res: Option<ResidentUpdate> = None;
+    let mut norm_version = 0u64;
 
     while !shared.pace.stopped() {
         loop {
@@ -614,11 +728,12 @@ fn p_loop(
             break;
         }
         // Q^p <- Q^v when newer.
+        let mut theta_c_new = false;
         if let Some((v, t)) = shared.critic_bus.latest(critic_version) {
             critic_version = v;
             theta_c = t;
+            theta_c_new = true;
         }
-        let norm = shared.norm_bus.view();
         states.sample(rng, b, &mut sbuf);
         if vision {
             split_rows_into(&sbuf, b, od, cd, &mut img, &mut st);
@@ -629,35 +744,98 @@ fn p_loop(
 
         let outs = {
             let _g = shared.devices.enter(cfg.placement[2]);
-            let mut f = plan.frame();
-            f.bind_adam(&actor)?;
-            f.bind("theta_c", &theta_c[..])?;
-            f.bind_opt("alpha", &log_alpha.theta)?;
-            f.bind_opt("alpha_m", &log_alpha.m)?;
-            f.bind_opt("alpha_v", &log_alpha.v)?;
-            f.bind("s", if vision { &img } else { &sbuf })?;
-            f.bind_opt("cs", &st)?;
-            f.bind_opt("noise", &noise)?;
-            f.bind("mu", norm.mean())?;
-            f.bind("var", norm.var())?;
-            f.run(&update)?
+            if cfg.resident && res.is_none() {
+                let (nv, nview) = shared
+                    .norm_bus
+                    .latest_view(0)
+                    .context("norm bus holds an initial version")?;
+                norm_version = nv;
+                let r = ResidentUpdate::new(
+                    Arc::clone(&update),
+                    FeedPlan::actor_update(variant, &feed_dims(&tinfo, variant, b), cfg.actor_lr),
+                    actor.t,
+                    |f| {
+                        f.bind_adam(&actor)?;
+                        f.bind("theta_c", &theta_c[..])?;
+                        f.bind_opt("alpha", &log_alpha.theta)?;
+                        f.bind_opt("alpha_m", &log_alpha.m)?;
+                        f.bind_opt("alpha_v", &log_alpha.v)?;
+                        f.bind("s", if vision { &img } else { &sbuf })?;
+                        f.bind_opt("cs", &st)?;
+                        f.bind_opt("noise", &noise)?;
+                        f.bind("mu", nview.mean())?;
+                        f.bind("var", nview.var())?;
+                        Ok(())
+                    },
+                )?;
+                res = Some(r);
+            }
+            match res.as_mut() {
+                Some(r) => {
+                    // Cross-network Q^p restages at critic-bus cadence only.
+                    if theta_c_new {
+                        r.restage("theta_c", &theta_c[..])?;
+                    }
+                    if let Some((v, nview)) = shared.norm_bus.latest_view(norm_version) {
+                        norm_version = v;
+                        r.restage("mu", nview.mean())?;
+                        r.restage("var", nview.var())?;
+                    }
+                    // Per-step traffic: the sampled state batch (+ noise).
+                    r.restage("s", if vision { &img } else { &sbuf })?;
+                    if vision {
+                        r.restage("cs", &st)?;
+                    }
+                    if r.plan().has("noise") {
+                        r.restage("noise", &noise)?;
+                    }
+                    r.step()?
+                }
+                None => {
+                    // Staged fallback (--no-resident): host round trip.
+                    let norm = shared.norm_bus.view();
+                    let mut f = plan.frame();
+                    f.bind_adam(&actor)?;
+                    f.bind("theta_c", &theta_c[..])?;
+                    f.bind_opt("alpha", &log_alpha.theta)?;
+                    f.bind_opt("alpha_m", &log_alpha.m)?;
+                    f.bind_opt("alpha_v", &log_alpha.v)?;
+                    f.bind("s", if vision { &img } else { &sbuf })?;
+                    f.bind_opt("cs", &st)?;
+                    f.bind_opt("noise", &noise)?;
+                    f.bind("mu", norm.mean())?;
+                    f.bind("var", norm.var())?;
+                    f.run(&update)?
+                }
+            }
         };
-        let mut it = outs.into_iter();
-        let th = it.next().unwrap();
-        let m = it.next().unwrap();
-        let v = it.next().unwrap();
-        actor.absorb(th, m, v);
-        if plan.has("alpha") {
-            // SAC also steps the temperature (outputs mirror the alpha
-            // input triplet).
-            let la = it.next().unwrap();
-            let lam = it.next().unwrap();
-            let lav = it.next().unwrap();
-            log_alpha.absorb(la, lam, lav);
-            shared.alpha_bus.publish(log_alpha.theta.clone());
+        if let Some(r) = res.as_ref() {
+            // Resident: θ_a/m/v (and the SAC temperature triplet) stayed
+            // on device; host copies materialize only for the publishes
+            // the paper's transfer arrows require.
+            if r.plan().has("alpha") {
+                shared.alpha_bus.publish(r.to_host("alpha")?);
+            }
+            shared.actor_bus.publish(r.to_host("theta")?);
+        } else {
+            let mut it = outs.into_iter();
+            let th = it.next().unwrap();
+            let m = it.next().unwrap();
+            let v = it.next().unwrap();
+            actor.absorb(th, m, v);
+            if plan.has("alpha") {
+                // SAC also steps the temperature (outputs mirror the alpha
+                // input triplet).
+                let la = it.next().unwrap();
+                let lam = it.next().unwrap();
+                let lav = it.next().unwrap();
+                log_alpha.absorb(la, lam, lav);
+                shared.alpha_bus.publish(log_alpha.theta.clone());
+            }
+            // Every policy update publishes π^p — the hard policy-target
+            // sync.
+            shared.actor_bus.publish(actor.theta.clone());
         }
-        // Every policy update publishes π^p — the hard policy-target sync.
-        shared.actor_bus.publish(actor.theta.clone());
     }
     Ok(())
 }

@@ -15,7 +15,8 @@ use crate::exploration::Noise;
 use crate::metrics::{Record, RunLog};
 use crate::replay::{NStepAssembler, ReadyBatch, SampleBatch, SumTree, TransitionBuffer};
 use crate::runtime::{
-    infer_chunked, Engine, FeedDims, FeedPlan, Manifest, OptState, Runtime, Variant,
+    infer_chunked, Engine, FeedDims, FeedPlan, Manifest, OptState, ResidentUpdate, Runtime,
+    Variant,
 };
 use crate::util::{Rng, RunningNorm};
 use anyhow::{Context, Result};
@@ -63,11 +64,14 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, sac: bool) -> Re
         actor_params: tinfo.layouts[variant.actor_layout()].size,
         critic_params: tinfo.layouts[variant.critic_layout()].size,
     };
-    let cu_plan = if per {
-        FeedPlan::critic_update_per(variant, &dims, cfg.critic_lr)
-    } else {
-        FeedPlan::critic_update(variant, &dims, cfg.critic_lr)
+    let make_cu_plan = || {
+        if per {
+            FeedPlan::critic_update_per(variant, &dims, cfg.critic_lr)
+        } else {
+            FeedPlan::critic_update(variant, &dims, cfg.critic_lr)
+        }
     };
+    let cu_plan = make_cu_plan();
     cu_plan.validate(&cu.info).context("sequential critic_update signature")?;
     let au_plan = FeedPlan::actor_update(variant, &dims, cfg.actor_lr);
     au_plan.validate(&au.info).context("sequential actor_update signature")?;
@@ -110,6 +114,20 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, sac: bool) -> Re
         (cfg.beta_av.den as f64 / cfg.beta_av.num as f64).round().max(1.0) as u64;
     let p_every = (cfg.beta_pv.den as f64 / cfg.beta_pv.num as f64).round().max(1.0) as u64;
 
+    // Device-resident update streams (cfg.resident): critic and actor
+    // training state stay staged across the interleaved update schedule.
+    // The single-loop structure needs host mirrors the parallel learners
+    // get from the buses: the rollout/eval policy (`actor.theta`) and the
+    // cross-feeds (θ_c into the actor update, θ_a/α into the critic
+    // update) bounce through `to_host` at their natural cadence — after
+    // each actor update, exactly where PQL's buses publish.
+    let mut cres: Option<ResidentUpdate> = None;
+    let mut ares: Option<ResidentUpdate> = None;
+    let mut cu_td: Option<usize> = None;
+    let mut theta_a_dirty = false;
+    let mut norm_dirty_cu = false;
+    let mut norm_dirty_au = false;
+
     let mut steps: u64 = 0;
     let mut v_updates: u64 = 0;
     let mut p_updates: u64 = 0;
@@ -148,6 +166,8 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, sac: bool) -> Re
             tree.push_batch(ready.len); // lockstep with the ring
         }
         norm.update(&out.obs, od);
+        norm_dirty_cu = true;
+        norm_dirty_au = true;
         obs.copy_from_slice(&out.obs);
         steps += 1;
 
@@ -165,35 +185,99 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, sac: bool) -> Re
                 }
                 let outs = {
                     let _g = device.enter(cfg.placement[1]);
-                    let mut f = cu_plan.frame();
-                    f.bind_adam(&critic)?;
-                    f.bind("target", &target)?;
-                    f.bind("theta_a", &actor.theta)?;
-                    f.bind_opt("alpha", &log_alpha.theta)?;
-                    f.bind("s", &batch.s)?;
-                    f.bind("a", &batch.a)?;
-                    f.bind("rn", &batch.rn)?;
-                    f.bind("s2", &batch.s2)?;
-                    f.bind("gmask", &batch.gmask)?;
-                    f.bind_opt("isw", &batch.isw)?;
-                    f.bind_opt("noise", &unoise)?;
-                    f.bind("mu", &norm.mean)?;
-                    f.bind("var", &norm.var)?;
-                    f.run(&cu)?
+                    if cfg.resident && cres.is_none() {
+                        let r = ResidentUpdate::new(
+                            Arc::clone(&cu),
+                            make_cu_plan(),
+                            critic.t,
+                            |f| {
+                                f.bind_adam(&critic)?;
+                                f.bind("target", &target)?;
+                                f.bind("theta_a", &actor.theta)?;
+                                f.bind_opt("alpha", &log_alpha.theta)?;
+                                f.bind("s", &batch.s)?;
+                                f.bind("a", &batch.a)?;
+                                f.bind("rn", &batch.rn)?;
+                                f.bind("s2", &batch.s2)?;
+                                f.bind("gmask", &batch.gmask)?;
+                                f.bind_opt("isw", &batch.isw)?;
+                                f.bind_opt("noise", &unoise)?;
+                                f.bind("mu", &norm.mean)?;
+                                f.bind("var", &norm.var)?;
+                                Ok(())
+                            },
+                        )?;
+                        cu_td = r.fetch_pos("td");
+                        cres = Some(r);
+                    }
+                    match cres.as_mut() {
+                        Some(r) => {
+                            // Cross-feeds restage only when the actor
+                            // stream actually advanced them.
+                            if theta_a_dirty {
+                                r.restage("theta_a", &actor.theta)?;
+                                if r.plan().has("alpha") {
+                                    r.restage("alpha", &log_alpha.theta)?;
+                                }
+                                theta_a_dirty = false;
+                            }
+                            if norm_dirty_cu {
+                                r.restage("mu", &norm.mean)?;
+                                r.restage("var", &norm.var)?;
+                                norm_dirty_cu = false;
+                            }
+                            r.restage("s", &batch.s)?;
+                            r.restage("a", &batch.a)?;
+                            r.restage("rn", &batch.rn)?;
+                            r.restage("s2", &batch.s2)?;
+                            r.restage("gmask", &batch.gmask)?;
+                            if per {
+                                r.restage("isw", &batch.isw)?;
+                            }
+                            if r.plan().has("noise") {
+                                r.restage("noise", &unoise)?;
+                            }
+                            r.step()?
+                        }
+                        None => {
+                            let mut f = cu_plan.frame();
+                            f.bind_adam(&critic)?;
+                            f.bind("target", &target)?;
+                            f.bind("theta_a", &actor.theta)?;
+                            f.bind_opt("alpha", &log_alpha.theta)?;
+                            f.bind("s", &batch.s)?;
+                            f.bind("a", &batch.a)?;
+                            f.bind("rn", &batch.rn)?;
+                            f.bind("s2", &batch.s2)?;
+                            f.bind("gmask", &batch.gmask)?;
+                            f.bind_opt("isw", &batch.isw)?;
+                            f.bind_opt("noise", &unoise)?;
+                            f.bind("mu", &norm.mean)?;
+                            f.bind("var", &norm.var)?;
+                            f.run(&cu)?
+                        }
+                    }
                 };
-                // outputs: theta_c, m, v, theta_ct, loss, qmean[, td]
-                let mut it = outs.into_iter();
-                let th = it.next().unwrap();
-                let m = it.next().unwrap();
-                let v = it.next().unwrap();
-                target = it.next().unwrap();
-                if let Some(tree) = pri.as_mut() {
-                    // Per-sample |td| (after loss and qmean) refreshes
-                    // the sampled leaves — the PER feedback loop.
-                    let td = it.nth(2).unwrap();
-                    tree.update_many(&batch.idx, &td);
+                if cres.is_some() {
+                    // Resident: only loss/qmean[, td] came back.
+                    if let (Some(tree), Some(td)) = (pri.as_mut(), cu_td) {
+                        tree.update_many(&batch.idx, &outs[td]);
+                    }
+                } else {
+                    // outputs: theta_c, m, v, theta_ct, loss, qmean[, td]
+                    let mut it = outs.into_iter();
+                    let th = it.next().unwrap();
+                    let m = it.next().unwrap();
+                    let v = it.next().unwrap();
+                    target = it.next().unwrap();
+                    if let Some(tree) = pri.as_mut() {
+                        // Per-sample |td| (after loss and qmean) refreshes
+                        // the sampled leaves — the PER feedback loop.
+                        let td = it.nth(2).unwrap();
+                        tree.update_many(&batch.idx, &td);
+                    }
+                    critic.absorb(th, m, v);
                 }
-                critic.absorb(th, m, v);
                 v_updates += 1;
 
                 if v_updates % p_every == 0 {
@@ -203,28 +287,87 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, sac: bool) -> Re
                     }
                     let outs = {
                         let _g = device.enter(cfg.placement[2]);
-                        let mut f = au_plan.frame();
-                        f.bind_adam(&actor)?;
-                        f.bind("theta_c", &critic.theta)?;
-                        f.bind_opt("alpha", &log_alpha.theta)?;
-                        f.bind_opt("alpha_m", &log_alpha.m)?;
-                        f.bind_opt("alpha_v", &log_alpha.v)?;
-                        f.bind("s", &batch.s)?;
-                        f.bind_opt("noise", &unoise)?;
-                        f.bind("mu", &norm.mean)?;
-                        f.bind("var", &norm.var)?;
-                        f.run(&au)?
+                        if cfg.resident && ares.is_none() {
+                            // Cross-feed: the critic stream materializes a
+                            // host θ_c exactly when the actor needs it —
+                            // the same cadence PQL's critic_bus publishes.
+                            let theta_c = match cres.as_ref() {
+                                Some(c) => c.to_host("theta")?,
+                                None => critic.theta.clone(),
+                            };
+                            let r = ResidentUpdate::new(
+                                Arc::clone(&au),
+                                FeedPlan::actor_update(variant, &dims, cfg.actor_lr),
+                                actor.t,
+                                |f| {
+                                    f.bind_adam(&actor)?;
+                                    f.bind("theta_c", &theta_c)?;
+                                    f.bind_opt("alpha", &log_alpha.theta)?;
+                                    f.bind_opt("alpha_m", &log_alpha.m)?;
+                                    f.bind_opt("alpha_v", &log_alpha.v)?;
+                                    f.bind("s", &batch.s)?;
+                                    f.bind_opt("noise", &unoise)?;
+                                    f.bind("mu", &norm.mean)?;
+                                    f.bind("var", &norm.var)?;
+                                    Ok(())
+                                },
+                            )?;
+                            ares = Some(r);
+                            norm_dirty_au = false;
+                        }
+                        match ares.as_mut() {
+                            Some(r) => {
+                                let theta_c = match cres.as_ref() {
+                                    Some(c) => c.to_host("theta")?,
+                                    None => critic.theta.clone(),
+                                };
+                                r.restage("theta_c", &theta_c)?;
+                                if norm_dirty_au {
+                                    r.restage("mu", &norm.mean)?;
+                                    r.restage("var", &norm.var)?;
+                                    norm_dirty_au = false;
+                                }
+                                r.restage("s", &batch.s)?;
+                                if r.plan().has("noise") {
+                                    r.restage("noise", &unoise)?;
+                                }
+                                r.step()?
+                            }
+                            None => {
+                                let mut f = au_plan.frame();
+                                f.bind_adam(&actor)?;
+                                f.bind("theta_c", &critic.theta)?;
+                                f.bind_opt("alpha", &log_alpha.theta)?;
+                                f.bind_opt("alpha_m", &log_alpha.m)?;
+                                f.bind_opt("alpha_v", &log_alpha.v)?;
+                                f.bind("s", &batch.s)?;
+                                f.bind_opt("noise", &unoise)?;
+                                f.bind("mu", &norm.mean)?;
+                                f.bind("var", &norm.var)?;
+                                f.run(&au)?
+                            }
+                        }
                     };
-                    let mut it = outs.into_iter();
-                    let th = it.next().unwrap();
-                    let m = it.next().unwrap();
-                    let v = it.next().unwrap();
-                    actor.absorb(th, m, v);
-                    if au_plan.has("alpha") {
-                        let la = it.next().unwrap();
-                        let lam = it.next().unwrap();
-                        let lav = it.next().unwrap();
-                        log_alpha.absorb(la, lam, lav);
+                    if let Some(r) = ares.as_ref() {
+                        // Refresh the host mirrors: the rollout/eval policy
+                        // and (SAC) the α the critic stream cross-feeds.
+                        actor.theta = r.to_host("theta")?;
+                        if r.plan().has("alpha") {
+                            log_alpha.theta = r.to_host("alpha")?;
+                        }
+                        theta_a_dirty = true;
+                    } else {
+                        let mut it = outs.into_iter();
+                        let th = it.next().unwrap();
+                        let m = it.next().unwrap();
+                        let v = it.next().unwrap();
+                        actor.absorb(th, m, v);
+                        if au_plan.has("alpha") {
+                            let la = it.next().unwrap();
+                            let lam = it.next().unwrap();
+                            let lav = it.next().unwrap();
+                            log_alpha.absorb(la, lam, lav);
+                        }
                     }
                     p_updates += 1;
                 }

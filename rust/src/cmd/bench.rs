@@ -314,6 +314,25 @@ impl Bench<'_> {
                     }
                 }
             }
+            // PR-6 ablation (not a paper figure): device-resident training
+            // state vs the staged host round trip. Learning curves should
+            // match modulo throughput — the resident path is bit-identical
+            // (tests/resident.rs); what differs is updates/sec.
+            "resident" => {
+                for task in &self.tasks {
+                    for resident in [true, false] {
+                        let mut cfg = self.base_cfg(task, Algo::Pql)?;
+                        cfg.resident = resident;
+                        out.push(Series {
+                            label: format!(
+                                "{task}_{}",
+                                if resident { "resident" } else { "staged" }
+                            ),
+                            cfg,
+                        });
+                    }
+                }
+            }
             // Fig C.4: SAC vs PQL-SAC.
             "c4" => {
                 for task in &self.tasks {

@@ -129,6 +129,11 @@ pub struct TrainConfig {
     pub beta_pv: Ratio,
     /// Disable to reproduce the Fig. C.2 "free-running" ablation.
     pub pace_control: bool,
+    /// Keep training state (θ, Adam moments, Polyak target) device-resident
+    /// between update calls, staging only the per-step batch and fetching
+    /// only scalars/td. On by default; `--no-resident` restores the staged
+    /// host round trip (bit-identical — see tests/resident.rs).
+    pub resident: bool,
     pub exploration: Exploration,
     pub warmup_steps: usize,
     /// Wall-clock budget; training stops at whichever of budget/steps hits.
@@ -172,6 +177,7 @@ impl Default for TrainConfig {
             beta_av: Ratio::new(1, 8),
             beta_pv: Ratio::new(1, 2),
             pace_control: true,
+            resident: true,
             exploration: Exploration::Mixed { min: 0.05, max: 0.8 },
             warmup_steps: 32,
             budget_secs: 120.0,
@@ -252,6 +258,7 @@ impl TrainConfig {
                 ("pace_control" | "train.pace_control", v) => {
                     self.pace_control = v.as_bool()?
                 }
+                ("resident" | "train.resident", v) => self.resident = v.as_bool()?,
                 ("sigma" | "explore.sigma", v) => {
                     self.exploration = Exploration::Fixed(v.as_f64()? as f32)
                 }
@@ -301,6 +308,9 @@ impl TrainConfig {
         }
         if a.flag("no-pace-control") {
             self.pace_control = false;
+        }
+        if a.flag("no-resident") {
+            self.resident = false;
         }
         if let Some(v) = a.get("sigma") {
             self.exploration = Exploration::Fixed(v.parse()?);
@@ -445,6 +455,21 @@ mod tests {
         assert_eq!(c.beta_av, Ratio::new(1, 4));
         assert_eq!(c.exploration, Exploration::Fixed(0.3));
         assert!(!c.pace_control);
+    }
+
+    #[test]
+    fn resident_defaults_on_with_opt_outs() {
+        assert!(TrainConfig::default().resident, "resident plane is the default");
+        let c = TrainConfig::from_args(&args(&["--no-resident"])).unwrap();
+        assert!(!c.resident);
+
+        let dir = std::env::temp_dir().join("pql_cfg_test_resident");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.toml");
+        std::fs::write(&p, "[train]\nresident = false\n").unwrap();
+        let c = TrainConfig::from_args(&args(&["--config", p.to_str().unwrap()])).unwrap();
+        assert!(!c.resident);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

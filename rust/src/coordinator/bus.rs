@@ -98,6 +98,16 @@ impl NormBus {
             .latest(since)
             .map(|(v, d)| (v, d[..self.dim].to_vec(), d[self.dim..].to_vec()))
     }
+
+    /// Version-gated zero-copy snapshot: `Some` only when a version newer
+    /// than `since` exists. The device-resident learners restage their
+    /// normalizer slots exactly when this fires, so an unchanged
+    /// normalizer costs neither a host copy nor a device transfer.
+    pub fn latest_view(&self, since: u64) -> Option<(u64, NormView)> {
+        self.inner
+            .latest(since)
+            .map(|(v, data)| (v, NormView { data, dim: self.dim }))
+    }
 }
 
 /// Borrow-friendly normalizer snapshot (see [`NormBus::view`]).
@@ -177,5 +187,21 @@ mod tests {
         // The view pins its own snapshot: later publishes don't mutate it.
         nb.publish(&[9.0, 9.0], &[9.0, 9.0]);
         assert_eq!(view.mean(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn latest_view_is_version_gated() {
+        let nb = NormBus::new(2);
+        // Initial state is version 1: visible to a fresh reader only.
+        let (v1, view) = nb.latest_view(0).unwrap();
+        assert_eq!(view.mean(), &[0.0, 0.0]);
+        assert_eq!(view.var(), &[1.0, 1.0]);
+        assert!(nb.latest_view(v1).is_none(), "no republish → no restage");
+        nb.publish(&[1.0, 2.0], &[3.0, 4.0]);
+        let (v2, view) = nb.latest_view(v1).unwrap();
+        assert!(v2 > v1);
+        assert_eq!(view.mean(), &[1.0, 2.0]);
+        assert_eq!(view.var(), &[3.0, 4.0]);
+        assert!(nb.latest_view(v2).is_none());
     }
 }

@@ -109,6 +109,11 @@ impl<'a> TensorView<'a> {
 /// number (PERF.md §Device & compilation plane).
 pub struct PreparedInputs {
     literals: Vec<xla::Literal>,
+    /// Running count of f32 elements staged host→device through this set
+    /// (`prepare` + every `restage`). Feedback writes in the resident path
+    /// move device-side literals and do NOT count — the differential and
+    /// alloc tests assert the steady-state staging cost from this.
+    staged_elems: u64,
 }
 
 impl PreparedInputs {
@@ -119,6 +124,108 @@ impl PreparedInputs {
     pub fn is_empty(&self) -> bool {
         self.literals.is_empty()
     }
+
+    /// Total f32 elements converted host→literal so far (see field docs).
+    pub fn staged_elems(&self) -> u64 {
+        self.staged_elems
+    }
+}
+
+/// Borrowed handle to one staged/resident literal — the device-side
+/// counterpart of [`TensorView`]. Host data is materialized only through
+/// an explicit [`DeviceTensor::to_host`], which is what makes the publish
+/// points (`critic_bus`/`actor_bus` cadence, eval) visible in the code.
+pub struct DeviceTensor<'a> {
+    lit: &'a xla::Literal,
+}
+
+impl DeviceTensor<'_> {
+    /// Materialize the tensor on the host (one copy, at the caller's
+    /// explicit request).
+    pub fn to_host(&self) -> Result<Vec<f32>> {
+        Ok(self.lit.to_vec::<f32>()?)
+    }
+}
+
+/// Device-resident call state for one executable: the staged inputs plus
+/// an output→input feedback mapping. After each [`Executable::run_resident`]
+/// the mapped output literals are MOVED into their input slots — parameters
+/// and optimizer state never round-trip through `Vec<f32>` between steps —
+/// and only the `fetch` outputs (loss/qmean scalars, the per-sample `td`
+/// vector) are materialized on the host.
+pub struct ResidentState {
+    inputs: PreparedInputs,
+    /// `feedback_by_output[o] = Some(slot)` → output `o` becomes input
+    /// `slot` for the next call. Built once in [`Executable::make_resident`].
+    feedback_by_output: Vec<Option<usize>>,
+    /// Output indices returned to the host by `run_resident`, in order.
+    fetch: Vec<usize>,
+    /// Running count of f32 elements fetched device→host by `run_resident`
+    /// (the `fetch` outputs only; explicit `to_host` calls are the
+    /// caller's own accounting).
+    fetched_elems: u64,
+}
+
+impl ResidentState {
+    /// Total f32 elements staged host→device (prepare + restage).
+    pub fn staged_elems(&self) -> u64 {
+        self.inputs.staged_elems
+    }
+
+    /// Total f32 elements fetched device→host by `run_resident`.
+    pub fn fetched_elems(&self) -> u64 {
+        self.fetched_elems
+    }
+
+    /// Borrow the literal currently staged in input `slot`.
+    pub fn tensor(&self, slot: usize) -> Option<DeviceTensor<'_>> {
+        self.inputs.literals.get(slot).map(|lit| DeviceTensor { lit })
+    }
+
+    /// Materialize input `slot` on the host — the publish-point fetch.
+    pub fn to_host(&self, slot: usize) -> Result<Vec<f32>> {
+        self.tensor(slot)
+            .with_context(|| format!("resident slot {slot} out of range"))?
+            .to_host()
+    }
+}
+
+/// Dispatch serialization granularity for one executable. Default is a
+/// private per-executable mutex, so distinct executables (the actor/V/P/
+/// eval threads each drive their own) dispatch concurrently on one
+/// client; `PALLAS_SERIAL_DISPATCH=1` falls back to sharing the
+/// per-client lock — the pre-relaxation total order — as an escape hatch
+/// for PJRT plugins that turn out not to tolerate concurrent Execute.
+enum DispatchLock {
+    PerExecutable(Mutex<()>),
+    Client(Arc<Mutex<()>>),
+}
+
+impl DispatchLock {
+    fn for_client(client_lock: &Arc<Mutex<()>>) -> DispatchLock {
+        if serial_dispatch() {
+            DispatchLock::Client(Arc::clone(client_lock))
+        } else {
+            DispatchLock::PerExecutable(Mutex::new(()))
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, ()> {
+        match self {
+            DispatchLock::PerExecutable(m) => m.lock().unwrap(),
+            DispatchLock::Client(m) => m.lock().unwrap(),
+        }
+    }
+}
+
+/// `PALLAS_SERIAL_DISPATCH` escape hatch, read once per process (the
+/// granularity choice is baked into each executable at compile time, so
+/// flipping the env mid-run must not produce a mixed regime).
+fn serial_dispatch() -> bool {
+    static FLAG: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *FLAG.get_or_init(|| {
+        std::env::var("PALLAS_SERIAL_DISPATCH").map(|v| v != "0").unwrap_or(false)
+    })
 }
 
 /// A compiled artifact plus its manifest signature and compile timings.
@@ -126,9 +233,8 @@ pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
     pub info: ArtifactInfo,
     name: String,
-    /// Serializes every client-touching operation across the threads
-    /// sharing this executable's device — see the SAFETY note below.
-    client_lock: Arc<Mutex<()>>,
+    /// Serializes dispatch through THIS executable — see the SAFETY note.
+    dispatch: DispatchLock,
     /// HLO-text parse time, milliseconds (set at compile).
     pub parse_ms: f64,
     /// XLA compile time, milliseconds (set at compile).
@@ -136,31 +242,35 @@ pub struct Executable {
 }
 
 // SAFETY: executables live in the process-wide cache and are executed
-// from several OS threads, while the vendored wrapper types are
-// `!Send`/`!Sync` (their handles may be non-atomically refcounted — the
-// wrapper gives no guarantee either way). Soundness therefore does NOT
-// rely on the wrapper's internals; it is enforced structurally:
+// from several OS threads, while the vendored wrapper types are not
+// marked `Send`/`Sync`. The argument for sharing them:
 //
 // 1. The cache owns each `Executable` (and the `Runtime` its client) for
 //    the process lifetime — entries are never evicted, so the wrapper
-//    values themselves are never cloned or dropped, on any thread.
-// 2. Every operation that can reach the client's shared state — XLA
-//    compilation, `execute`, result-buffer fetch and drop — runs under
-//    the per-client `client_lock` (`Executable::exec`,
-//    `Executable::compile`). All refcount/state mutations are therefore
-//    totally ordered by one mutex: no data race even if the handles are
-//    plain `Rc`s. Temporaries a call creates (result buffers, fetched
-//    literals) are created and dropped inside that critical section.
-// 3. Staged input literals (`PreparedInputs`, `literal_of`) are
+//    values themselves are never cloned or dropped, on any thread. The
+//    wrapper structs are raw holders of C API pointers; all Rust-side
+//    access is by `&` reference.
+// 2. The PJRT C API contract (and the XLA C++ implementation behind it)
+//    makes clients, loaded executables, and buffers safe for concurrent
+//    use: JAX dispatches Execute from many Python/C++ threads against
+//    one client, and the shared C++ state is held behind
+//    `std::shared_ptr` (atomic refcounts). Compilation is likewise
+//    thread-safe, but we still serialize it per client (`compile` runs
+//    under the per-client lock, also keeping compile timings honest).
+// 3. Each executable serializes its OWN execute→fetch→buffer-drop
+//    sequence behind `dispatch` (`Executable::exec`/`run_resident`), so
+//    result buffers of one executable are created and dropped in a total
+//    order even when several threads share it, and a `ResidentState`'s
+//    staged literals are never read by a call while another call's
+//    feedback writes them. Across DIFFERENT executables, dispatch is
+//    concurrent by default (measured by the `dispatch_contention` bench);
+//    `PALLAS_SERIAL_DISPATCH=1` restores the historical per-client total
+//    order if a plugin misbehaves.
+// 4. Staged input literals (`PreparedInputs`, `literal_of`) are
 //    standalone host objects with no client reference — building them
 //    needs no lock, which keeps `prepare`/`restage` concurrent.
 //
-// The lock serializes PJRT *dispatch* per device, not compute: XLA's
-// intra-op thread pool still parallelizes inside each call, and on a GPU
-// client per-device serialization mirrors the hardware queue. If the
-// wrapper is ever verified atomically-refcounted/thread-safe, the lock
-// can be relaxed without touching callers. The same argument covers
-// `Runtime` below.
+// The same argument covers `Runtime` below.
 unsafe impl Send for Executable {}
 unsafe impl Sync for Executable {}
 
@@ -185,9 +295,9 @@ impl Executable {
         let parse_ms = t0.elapsed().as_secs_f64() * 1e3;
         let t1 = Instant::now();
         let exe = {
-            // Client state is touched here: exclude concurrent executes
-            // (lock order: cache entries lock, then client lock; `exec`
-            // takes the client lock alone — no inversion).
+            // Compilation stays serialized per client (lock order: cache
+            // entries lock, then client lock; `exec` never takes the
+            // client lock unless PALLAS_SERIAL_DISPATCH — no inversion).
             let _g = client_lock.lock().unwrap();
             client
                 .compile(&comp)
@@ -198,7 +308,7 @@ impl Executable {
             exe,
             info,
             name: name.to_string(),
-            client_lock: Arc::clone(client_lock),
+            dispatch: DispatchLock::for_client(client_lock),
             parse_ms,
             compile_ms,
         })
@@ -231,11 +341,13 @@ impl Executable {
             );
         }
         let mut literals = Vec::with_capacity(inputs.len());
+        let mut staged_elems = 0u64;
         for (slot, t) in inputs.iter().enumerate() {
             self.check_slot(slot, t)?;
+            staged_elems += t.data.len() as u64;
             literals.push(Self::literal_of(t)?);
         }
-        Ok(PreparedInputs { literals })
+        Ok(PreparedInputs { literals, staged_elems })
     }
 
     /// Replace one staged input; the other slots keep their literals.
@@ -244,6 +356,7 @@ impl Executable {
             bail!("{}: restage slot {slot} out of range", self.name);
         }
         self.check_slot(slot, &t)?;
+        p.staged_elems += t.data.len() as u64;
         p.literals[slot] = Self::literal_of(&t)?;
         Ok(())
     }
@@ -282,23 +395,145 @@ impl Executable {
         Ok(xla::Literal::vec1(t.data).reshape(&dims[..t.shape().len()])?)
     }
 
-    fn exec(&self, literals: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
-        // The whole execute→fetch→buffer-drop sequence holds the
-        // per-client lock: every wrapper temporary that references the
-        // client is created and destroyed inside this critical section
-        // (see the SAFETY note on the Send/Sync impls).
-        let _g = self.client_lock.lock().unwrap();
+    /// Execute `literals` and pull the whole result tuple to one host
+    /// literal. The execute→fetch→buffer-drop sequence holds the dispatch
+    /// lock: every result buffer this call creates is created and dropped
+    /// inside the critical section (SAFETY note on the Send/Sync impls).
+    fn exec_tuple(&self, literals: &[xla::Literal]) -> Result<xla::Literal> {
+        let _g = self.dispatch.lock();
         let result = self
             .exe
             .execute::<xla::Literal>(literals)
             .with_context(|| format!("executing {}", self.name))?;
-        let tuple = result[0][0]
+        result[0][0]
             .to_literal_sync()
-            .with_context(|| format!("fetching {} result", self.name))?;
-        let parts = tuple.to_tuple()?;
+            .with_context(|| format!("fetching {} result", self.name))
+    }
+
+    fn exec(&self, literals: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        let parts = self.exec_tuple(literals)?.to_tuple()?;
         let mut out = Vec::with_capacity(parts.len());
         for p in parts {
             out.push(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+
+    /// Build a device-resident call state from already-staged inputs.
+    ///
+    /// `feedback` lists `(output index, input slot)` pairs: after every
+    /// [`run_resident`] the named output literal is moved into that input
+    /// slot for the next call. `fetch` lists the output indices whose host
+    /// values `run_resident` returns (in the given order). Mappings are
+    /// validated against the manifest signature here, once, so the
+    /// per-step path carries no checks beyond a length guard.
+    ///
+    /// [`run_resident`]: Executable::run_resident
+    pub fn make_resident(
+        &self,
+        inputs: PreparedInputs,
+        feedback: &[(usize, usize)],
+        fetch: &[usize],
+    ) -> Result<ResidentState> {
+        if inputs.literals.len() != self.info.inputs.len() {
+            bail!(
+                "{}: resident inputs {} != expected {}",
+                self.name,
+                inputs.literals.len(),
+                self.info.inputs.len()
+            );
+        }
+        let mut feedback_by_output = vec![None; self.info.outputs.len()];
+        let mut slot_taken = vec![false; self.info.inputs.len()];
+        for &(o, slot) in feedback {
+            let (oname, oshape) = self
+                .info
+                .outputs
+                .get(o)
+                .with_context(|| format!("{}: feedback output {o} out of range", self.name))?;
+            let (iname, ishape) = self
+                .info
+                .inputs
+                .get(slot)
+                .with_context(|| format!("{}: feedback slot {slot} out of range", self.name))?;
+            if oshape != ishape {
+                bail!(
+                    "{}: feedback {oname}({o})→{iname}({slot}) shape {:?} != {:?}",
+                    self.name,
+                    oshape,
+                    ishape
+                );
+            }
+            if feedback_by_output[o].replace(slot).is_some() {
+                bail!("{}: output {o} fed back twice", self.name);
+            }
+            if std::mem::replace(&mut slot_taken[slot], true) {
+                bail!("{}: input slot {slot} fed from two outputs", self.name);
+            }
+        }
+        for &o in fetch {
+            if o >= self.info.outputs.len() {
+                bail!("{}: fetch output {o} out of range", self.name);
+            }
+            if feedback_by_output[o].is_some() {
+                bail!("{}: output {o} both fed back and fetched", self.name);
+            }
+        }
+        Ok(ResidentState {
+            inputs,
+            feedback_by_output,
+            fetch: fetch.to_vec(),
+            fetched_elems: 0,
+        })
+    }
+
+    /// Replace one staged input of a resident state (the per-step batch
+    /// slots, plus parameters arriving over a bus at their publish
+    /// cadence). Feedback slots can be restaged too — an explicit
+    /// host-side override, e.g. seeding from a checkpoint.
+    pub fn restage_resident(
+        &self,
+        st: &mut ResidentState,
+        slot: usize,
+        t: TensorView,
+    ) -> Result<()> {
+        self.restage(&mut st.inputs, slot, t)
+    }
+
+    /// One device-resident step: execute over the staged inputs, move the
+    /// feedback outputs into their input slots WITHOUT materializing them
+    /// on the host, and return only the `fetch` outputs. Steady-state
+    /// host↔device traffic is therefore the restaged batch slots one way
+    /// and the fetch outputs the other — parameters and optimizer state
+    /// stay in the staged plane.
+    pub fn run_resident(&self, st: &mut ResidentState) -> Result<Vec<Vec<f32>>> {
+        if st.inputs.literals.len() != self.info.inputs.len() {
+            bail!(
+                "{}: resident inputs {} != expected {}",
+                self.name,
+                st.inputs.literals.len(),
+                self.info.inputs.len()
+            );
+        }
+        let parts = self.exec_tuple(&st.inputs.literals)?.to_tuple()?;
+        if parts.len() != self.info.outputs.len() {
+            bail!(
+                "{}: result tuple arity {} != manifest {}",
+                self.name,
+                parts.len(),
+                self.info.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(st.fetch.len());
+        for &o in &st.fetch {
+            let v = parts[o].to_vec::<f32>()?;
+            st.fetched_elems += v.len() as u64;
+            out.push(v);
+        }
+        for (o, lit) in parts.into_iter().enumerate() {
+            if let Some(slot) = st.feedback_by_output[o] {
+                st.inputs.literals[slot] = lit;
+            }
         }
         Ok(out)
     }
@@ -311,8 +546,9 @@ pub struct Runtime {
     kind: DeviceKind,
     key: String,
     client: xla::PjRtClient,
-    /// One lock per client; every compiled executable holds a clone and
-    /// takes it around client-touching operations (SAFETY note above).
+    /// One lock per client: serializes XLA compilation, and becomes every
+    /// executable's dispatch lock under `PALLAS_SERIAL_DISPATCH` (the
+    /// pre-relaxation per-client total order — SAFETY note above).
     client_lock: Arc<Mutex<()>>,
     /// `None` → the process-wide cache; `Some` → a private cache
     /// ([`Runtime::isolated`], for tests/benches that count compiles).
@@ -586,8 +822,80 @@ mod tests {
         ];
         assert!(exe.run_ref(&views).is_err());
         // restage out of range / wrong shape
-        let mut p = PreparedInputs { literals: Vec::new() };
+        let mut p = PreparedInputs { literals: Vec::new(), staged_elems: 0 };
         assert!(exe.restage(&mut p, 0, TensorView::vec(&bad)).is_err());
+    }
+
+    /// `prepare`/`restage` account every element staged host→device; the
+    /// zero-parameter-copy claims in `tests/resident.rs` hang off this.
+    #[test]
+    fn staged_elems_accounting() {
+        let Some(mut eng) = engine() else { return };
+        let m = Arc::clone(&eng.manifest);
+        let t = m.task("ant").unwrap();
+        let exe = eng.load("ant", "actor_infer").unwrap();
+        let mut rng = crate::util::Rng::new(3);
+        let theta = t.layouts["actor"].init(&mut rng);
+        let c = m.chunk;
+        let obs = vec![0.5f32; c * t.obs_dim];
+        let mu = vec![0.0f32; t.obs_dim];
+        let var = vec![1.0f32; t.obs_dim];
+        let obs_shape = [c, t.obs_dim];
+        let mut p = exe
+            .prepare(&[
+                TensorView::vec(&theta),
+                TensorView::new(&obs_shape, &obs),
+                TensorView::vec(&mu),
+                TensorView::vec(&var),
+            ])
+            .unwrap();
+        let initial = (theta.len() + obs.len() + mu.len() + var.len()) as u64;
+        assert_eq!(p.staged_elems(), initial);
+        exe.restage(&mut p, 1, TensorView::new(&obs_shape, &obs)).unwrap();
+        assert_eq!(p.staged_elems(), initial + obs.len() as u64);
+        // A failed restage (shape mismatch) must not count.
+        let bad = [0.0f32; 3];
+        assert!(exe.restage(&mut p, 1, TensorView::vec(&bad)).is_err());
+        assert_eq!(p.staged_elems(), initial + obs.len() as u64);
+    }
+
+    /// `make_resident` validates the mapping against the manifest
+    /// signature: bad indices, shape mismatches, duplicate targets, and
+    /// fetch-of-feedback are all rejected up front.
+    #[test]
+    fn make_resident_rejects_bad_mappings() {
+        let Some(mut eng) = engine() else { return };
+        let m = Arc::clone(&eng.manifest);
+        let t = m.task("ant").unwrap();
+        let exe = eng.load("ant", "actor_infer").unwrap();
+        let mut rng = crate::util::Rng::new(5);
+        let theta = t.layouts["actor"].init(&mut rng);
+        let c = m.chunk;
+        let obs = vec![0.0f32; c * t.obs_dim];
+        let mu = vec![0.0f32; t.obs_dim];
+        let var = vec![1.0f32; t.obs_dim];
+        let obs_shape = [c, t.obs_dim];
+        let prep = || {
+            exe.prepare(&[
+                TensorView::vec(&theta),
+                TensorView::new(&obs_shape, &obs),
+                TensorView::vec(&mu),
+                TensorView::vec(&var),
+            ])
+            .unwrap()
+        };
+        // actor_infer: 1 output `actions` [c, act_dim]; 4 inputs.
+        assert!(exe.make_resident(prep(), &[], &[0]).is_ok());
+        assert!(exe.make_resident(prep(), &[], &[1]).is_err(), "fetch out of range");
+        assert!(exe.make_resident(prep(), &[(1, 0)], &[]).is_err(), "output out of range");
+        assert!(exe.make_resident(prep(), &[(0, 9)], &[]).is_err(), "slot out of range");
+        assert!(
+            exe.make_resident(prep(), &[(0, 0)], &[]).is_err(),
+            "actions→theta shape mismatch"
+        );
+        // Arity mismatch is caught even with an empty mapping.
+        let empty = PreparedInputs { literals: Vec::new(), staged_elems: 0 };
+        assert!(exe.make_resident(empty, &[], &[]).is_err());
     }
 
     #[test]

@@ -102,8 +102,12 @@ impl ExecutableCache {
     }
 
     /// Fetch-or-compile `info` for `device`. `name` labels the executable
-    /// in error messages and timing records; `client_lock` is the
-    /// per-client serialization handle every executable carries.
+    /// in error messages and timing records; `client_lock` serializes the
+    /// compile against in-flight dispatches on the same client. Since
+    /// PR 6 each compiled executable carries its own dispatch lock (only
+    /// same-executable calls serialize; `PALLAS_SERIAL_DISPATCH=1` falls
+    /// back to sharing `client_lock`), so the cached `Arc<Executable>`s
+    /// handed to different threads can dispatch concurrently.
     pub fn load(
         &self,
         client: &xla::PjRtClient,

@@ -279,6 +279,11 @@ impl FeedPlan {
         &self.slots
     }
 
+    /// The constructor family this plan was built by (error labels).
+    pub fn label(&self) -> &'static str {
+        self.label
+    }
+
     /// Slot role names in artifact order (golden-signature tests).
     pub fn slot_names(&self) -> Vec<&'static str> {
         self.slots.iter().map(|s| s.name).collect()
@@ -288,7 +293,10 @@ impl FeedPlan {
         self.index(name).is_some()
     }
 
-    fn index(&self, name: &str) -> Option<usize> {
+    /// Slot index for a role name. Public because the device-resident
+    /// plane keys its restage targets by plan slot (plan order ==
+    /// artifact input order, enforced by [`validate`](Self::validate)).
+    pub fn index(&self, name: &str) -> Option<usize> {
         self.slots.iter().position(|s| s.name == name)
     }
 

@@ -1,19 +1,25 @@
 //! Runtime layer: artifact manifest, device-selected PJRT engine with a
-//! process-wide executable cache, the zero-copy feed plane, and typed
-//! helpers for the recurring call patterns (chunked policy inference,
-//! Adam-carrying learner states).
+//! process-wide executable cache, the zero-copy feed plane, the
+//! device-resident update plane ([`resident`]), and typed helpers for the
+//! recurring call patterns (chunked policy inference, Adam-carrying
+//! learner states).
 
 pub mod device;
 pub mod engine;
 pub mod exec_cache;
 pub mod feed;
 pub mod manifest;
+pub mod resident;
 
 pub use device::{resolve_spec, DeviceKind, DeviceSpec, DEVICE_ENV};
-pub use engine::{Engine, Executable, HostTensor, PreparedInputs, Runtime, TensorView};
+pub use engine::{
+    DeviceTensor, Engine, Executable, HostTensor, PreparedInputs, ResidentState, Runtime,
+    TensorView,
+};
 pub use exec_cache::{artifact_file_hash, CacheKey, CompileTiming, ExecutableCache};
 pub use feed::{FeedDims, FeedFrame, FeedPlan, Variant};
 pub use manifest::{Layout, Manifest, TaskInfo};
+pub use resident::{ResidentSpec, ResidentUpdate};
 
 use anyhow::Result;
 

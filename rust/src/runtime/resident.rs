@@ -1,0 +1,334 @@
+//! The device-resident update plane.
+//!
+//! A steady-state `*_update` call is almost a fixed point: the parameter
+//! and optimizer-state outputs (`theta/m/v`, the Polyak target, SAC's
+//! temperature triplet) ARE the next call's inputs. The staged host
+//! round-trip pays for that twice per step — `Vec<f32>` → literal on the
+//! way in, literal → `Vec<f32>` on the way out — for tensors that no host
+//! code reads between publishes. This module closes the loop on the
+//! staged-literal plane: [`ResidentSpec`] derives the output→input
+//! feedback mapping from the manifest signature (outputs and inputs share
+//! role names by construction in `aot.py`), and [`ResidentUpdate`] wraps
+//! an executable + [`FeedPlan`] so an update loop stages only the
+//! per-step batch, fetches only the loss/qmean scalars (and the
+//! per-sample `td` vector under prioritized replay), and materializes θ
+//! on the host exclusively at bus-publish points via [`to_host`].
+//!
+//! Bit-identity with the staged path is structural, not numerical luck:
+//! the same literals reach the same executable, and `f32 ⇄ Literal`
+//! round-trips are exact — `tests/resident.rs` pins this differentially.
+//!
+//! [`to_host`]: ResidentUpdate::to_host
+
+use super::engine::{Executable, ResidentState, TensorView};
+use super::feed::{FeedFrame, FeedPlan};
+use super::manifest::ArtifactInfo;
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+/// Output→input feedback mapping plus the fetched-output list for one
+/// artifact, derived from its manifest signature.
+#[derive(Debug, Clone)]
+pub struct ResidentSpec {
+    /// `(output index, input slot)` pairs: outputs that loop back.
+    pub feedback: Vec<(usize, usize)>,
+    /// `(output name, output index)` for every output that does NOT loop
+    /// back, in manifest order — what `run_resident` returns to the host.
+    pub fetch: Vec<(String, usize)>,
+}
+
+impl ResidentSpec {
+    /// Derive the mapping by role name: an output named like an input
+    /// feeds back into that slot (`theta_c → theta_c`, `m → m`, ...);
+    /// everything else (losses, diagnostics, `td`) is fetched. A name
+    /// match with a shape mismatch is a malformed artifact and fails
+    /// loudly rather than silently degrading to a fetch.
+    pub fn from_manifest(info: &ArtifactInfo) -> Result<ResidentSpec> {
+        let mut feedback = Vec::new();
+        let mut fetch = Vec::new();
+        for (o, (oname, oshape)) in info.outputs.iter().enumerate() {
+            match info.inputs.iter().position(|(iname, _)| iname == oname) {
+                Some(slot) => {
+                    let ishape = &info.inputs[slot].1;
+                    if oshape != ishape {
+                        bail!(
+                            "resident spec: output {oname} shape {oshape:?} != \
+                             input slot {slot} shape {ishape:?}"
+                        );
+                    }
+                    feedback.push((o, slot));
+                }
+                None => fetch.push((oname.clone(), o)),
+            }
+        }
+        Ok(ResidentSpec { feedback, fetch })
+    }
+
+    /// Output indices fetched to the host, in return order.
+    pub fn fetch_indices(&self) -> Vec<usize> {
+        self.fetch.iter().map(|(_, o)| *o).collect()
+    }
+
+    /// Position of a fetched output inside `run_resident`'s return value.
+    pub fn fetch_pos(&self, name: &str) -> Option<usize> {
+        self.fetch.iter().position(|(n, _)| n == name)
+    }
+
+    /// Whether input `slot` is written by feedback (restaging it between
+    /// steps would be overwritten by the next run's outputs).
+    pub fn is_feedback_slot(&self, slot: usize) -> bool {
+        self.feedback.iter().any(|&(_, s)| s == slot)
+    }
+}
+
+/// One device-resident update stream: executable + plan + resident call
+/// state + the Adam step counter (the one feedback-shaped input with no
+/// matching output — a single f32 restaged per step, tracked separately
+/// from the zero-parameter-bytes invariant).
+pub struct ResidentUpdate {
+    exe: Arc<Executable>,
+    plan: FeedPlan,
+    spec: ResidentSpec,
+    state: ResidentState,
+    t_slot: usize,
+    t: f32,
+}
+
+impl ResidentUpdate {
+    /// Build from a fully-bound first frame: `bind` must bind every
+    /// variable slot exactly as for a staged [`FeedFrame::run`] (including
+    /// `bind_adam`, which seeds the step counter from `t0`). The staged
+    /// literals become the resident state; after that only batch slots and
+    /// bus-published parameters are restaged.
+    pub fn new(
+        exe: Arc<Executable>,
+        plan: FeedPlan,
+        t0: f32,
+        bind: impl FnOnce(&mut FeedFrame) -> Result<()>,
+    ) -> Result<ResidentUpdate> {
+        plan.validate(&exe.info)?;
+        let spec = ResidentSpec::from_manifest(&exe.info)?;
+        if spec.feedback.is_empty() {
+            bail!("{} plan has no feedback outputs — not an update artifact", plan.label());
+        }
+        let t_slot = plan
+            .index("t")
+            .with_context(|| format!("{} plan has no Adam step slot", plan.label()))?;
+        let state = {
+            let mut frame = plan.frame();
+            bind(&mut frame)?;
+            let prepared = frame.with_views(|views| exe.prepare(views))??;
+            exe.make_resident(prepared, &spec.feedback, &spec.fetch_indices())?
+        };
+        Ok(ResidentUpdate { exe, plan, spec, state, t_slot, t: t0 })
+    }
+
+    /// Restage one variable slot from host data (batch fields each step;
+    /// cross-network parameters and normalizers at their bus cadence).
+    /// The manifest shape for the slot is applied, so callers pass flat
+    /// slices exactly as they do to [`FeedFrame::bind`].
+    pub fn restage(&mut self, name: &str, data: &[f32]) -> Result<()> {
+        let slot = self
+            .plan
+            .index(name)
+            .with_context(|| format!("{} plan has no slot {name}", self.plan.label()))?;
+        let shape = &self.exe.info.inputs[slot].1;
+        self.exe
+            .restage_resident(&mut self.state, slot, TensorView::new(shape, data))
+    }
+
+    /// One update step: execute, loop the parameter outputs back on
+    /// device, advance + restage the Adam step scalar, and return the
+    /// fetched outputs in [`ResidentSpec::fetch`] order.
+    pub fn step(&mut self) -> Result<Vec<Vec<f32>>> {
+        let out = self.exe.run_resident(&mut self.state)?;
+        self.t += 1.0;
+        let tv = [self.t + 1.0];
+        self.exe
+            .restage_resident(&mut self.state, self.t_slot, TensorView::new(&[1], &tv))?;
+        Ok(out)
+    }
+
+    /// Materialize the tensor currently staged in slot `name` on the host
+    /// — THE publish-point / eval / checkpoint fetch. For feedback slots
+    /// this is the newest update output (moved there by [`step`]).
+    ///
+    /// [`step`]: ResidentUpdate::step
+    pub fn to_host(&self, name: &str) -> Result<Vec<f32>> {
+        let slot = self
+            .plan
+            .index(name)
+            .with_context(|| format!("{} plan has no slot {name}", self.plan.label()))?;
+        self.state.to_host(slot)
+    }
+
+    /// Position of a fetched output (e.g. `"loss"`, `"td"`) in the vector
+    /// [`step`] returns — resolve once at loop setup.
+    ///
+    /// [`step`]: ResidentUpdate::step
+    pub fn fetch_pos(&self, name: &str) -> Option<usize> {
+        self.spec.fetch_pos(name)
+    }
+
+    /// Number of update steps taken (the Adam `t` this stream carries).
+    pub fn steps(&self) -> f32 {
+        self.t
+    }
+
+    pub fn spec(&self) -> &ResidentSpec {
+        &self.spec
+    }
+
+    pub fn plan(&self) -> &FeedPlan {
+        &self.plan
+    }
+
+    /// Total f32 elements staged host→device since construction
+    /// (initial prepare + every restage, including the per-step `t`).
+    pub fn staged_elems(&self) -> u64 {
+        self.state.staged_elems()
+    }
+
+    /// Total f32 elements fetched device→host by [`step`].
+    ///
+    /// [`step`]: ResidentUpdate::step
+    pub fn fetched_elems(&self) -> u64 {
+        self.state.fetched_elems()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn info(inputs: &[(&str, &[usize])], outputs: &[(&str, &[usize])]) -> ArtifactInfo {
+        let io = |xs: &[(&str, &[usize])]| {
+            xs.iter().map(|(n, s)| (n.to_string(), s.to_vec())).collect()
+        };
+        ArtifactInfo {
+            file: PathBuf::new(),
+            inputs: io(inputs),
+            outputs: io(outputs),
+            sha256: None,
+        }
+    }
+
+    /// The DDPG critic signature from `aot.py`: θ/m/v/target loop back,
+    /// loss/qmean (and PER's td) are fetched, `t` has no feedback source.
+    #[test]
+    fn critic_update_mapping() {
+        let p = 60usize;
+        let b = 8usize;
+        let art = info(
+            &[
+                ("theta_c", &[p]), ("m", &[p]), ("v", &[p]), ("t", &[1]),
+                ("theta_ct", &[p]), ("theta_a", &[40]), ("s", &[b, 5]),
+                ("a", &[b, 3]), ("rn", &[b]), ("s2", &[b, 5]), ("gmask", &[b]),
+                ("mu", &[5]), ("var", &[5]), ("lr", &[1]),
+            ],
+            &[
+                ("theta_c", &[p]), ("m", &[p]), ("v", &[p]), ("theta_ct", &[p]),
+                ("loss", &[1]), ("qmean", &[1]),
+            ],
+        );
+        let spec = ResidentSpec::from_manifest(&art).unwrap();
+        assert_eq!(spec.feedback, vec![(0, 0), (1, 1), (2, 2), (3, 4)]);
+        assert_eq!(spec.fetch_indices(), vec![4, 5]);
+        assert_eq!(spec.fetch_pos("loss"), Some(0));
+        assert_eq!(spec.fetch_pos("qmean"), Some(1));
+        assert_eq!(spec.fetch_pos("theta_c"), None);
+        assert!(spec.is_feedback_slot(4) && !spec.is_feedback_slot(3));
+
+        // PER variant: isw in, td out — td is fetched, not fed back.
+        let art = info(
+            &[
+                ("theta_c", &[p]), ("m", &[p]), ("v", &[p]), ("t", &[1]),
+                ("theta_ct", &[p]), ("theta_a", &[40]), ("s", &[b, 5]),
+                ("a", &[b, 3]), ("rn", &[b]), ("s2", &[b, 5]), ("gmask", &[b]),
+                ("isw", &[b]), ("mu", &[5]), ("var", &[5]), ("lr", &[1]),
+            ],
+            &[
+                ("theta_c", &[p]), ("m", &[p]), ("v", &[p]), ("theta_ct", &[p]),
+                ("loss", &[1]), ("qmean", &[1]), ("td", &[b]),
+            ],
+        );
+        let spec = ResidentSpec::from_manifest(&art).unwrap();
+        assert_eq!(spec.feedback, vec![(0, 0), (1, 1), (2, 2), (3, 4)]);
+        assert_eq!(spec.fetch_pos("td"), Some(2));
+    }
+
+    /// SAC actor: the temperature Adam triplet loops back alongside θ/m/v.
+    #[test]
+    fn sac_actor_update_mapping() {
+        let p = 40usize;
+        let b = 8usize;
+        let art = info(
+            &[
+                ("theta_a", &[p]), ("m", &[p]), ("v", &[p]), ("t", &[1]),
+                ("theta_c", &[60]), ("log_alpha", &[1]), ("am", &[1]), ("av", &[1]),
+                ("s", &[b, 5]), ("noise", &[b, 3]), ("mu", &[5]), ("var", &[5]),
+                ("lr", &[1]),
+            ],
+            &[
+                ("theta_a", &[p]), ("m", &[p]), ("v", &[p]),
+                ("log_alpha", &[1]), ("am", &[1]), ("av", &[1]),
+                ("pi_loss", &[1]), ("alpha_loss", &[1]), ("entropy", &[1]),
+            ],
+        );
+        let spec = ResidentSpec::from_manifest(&art).unwrap();
+        assert_eq!(
+            spec.feedback,
+            vec![(0, 0), (1, 1), (2, 2), (3, 5), (4, 6), (5, 7)]
+        );
+        assert_eq!(spec.fetch_indices(), vec![6, 7, 8]);
+        assert_eq!(spec.fetch_pos("entropy"), Some(2));
+    }
+
+    /// PPO: θ/m/v loop back; the three diagnostics are fetched.
+    #[test]
+    fn ppo_update_mapping() {
+        let p = 50usize;
+        let art = info(
+            &[
+                ("theta", &[p]), ("m", &[p]), ("v", &[p]), ("t", &[1]),
+                ("s", &[8, 5]), ("critic_s", &[8, 5]), ("a", &[8, 3]),
+                ("adv", &[8]), ("ret", &[8]), ("logp_old", &[8]),
+                ("mu", &[5]), ("var", &[5]), ("lr", &[1]),
+            ],
+            &[
+                ("theta", &[p]), ("m", &[p]), ("v", &[p]),
+                ("pi_loss", &[1]), ("v_loss", &[1]), ("kl", &[1]),
+            ],
+        );
+        let spec = ResidentSpec::from_manifest(&art).unwrap();
+        assert_eq!(spec.feedback, vec![(0, 0), (1, 1), (2, 2)]);
+        assert_eq!(
+            spec.fetch.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+            vec!["pi_loss", "v_loss", "kl"]
+        );
+    }
+
+    /// A name match with a shape mismatch is a malformed artifact.
+    #[test]
+    fn shape_mismatched_name_match_is_rejected() {
+        let art = info(
+            &[("theta", &[10]), ("t", &[1]), ("lr", &[1])],
+            &[("theta", &[11]), ("loss", &[1])],
+        );
+        assert!(ResidentSpec::from_manifest(&art).is_err());
+    }
+
+    /// Inference-style artifacts (no feedback) produce an all-fetch spec;
+    /// `ResidentUpdate::new` is where they get rejected.
+    #[test]
+    fn infer_artifact_has_no_feedback() {
+        let art = info(
+            &[("theta", &[10]), ("obs", &[4, 5]), ("mu", &[5]), ("var", &[5])],
+            &[("actions", &[4, 3])],
+        );
+        let spec = ResidentSpec::from_manifest(&art).unwrap();
+        assert!(spec.feedback.is_empty());
+        assert_eq!(spec.fetch_pos("actions"), Some(0));
+    }
+}

@@ -203,4 +203,68 @@ fn steady_state_feed_assembly_is_allocation_free() {
         delta < ITERS / 8,
         "prioritized round trip allocated: {delta} allocations across {ITERS} iterations"
     );
+
+    // ---- resident path: per-step host-side bookkeeping ------------------
+    // With parameters device-resident (`ResidentUpdate`), the only host
+    // work repeated every step is name→slot resolution, feedback
+    // membership checks, and wrapping the fresh batch slices in
+    // `TensorView`s for restaging. That bookkeeping must be
+    // allocation-free. (The literal conversion and device feedback it
+    // precedes allocate by necessity and are pinned by ELEMENT counters —
+    // batch in, scalars out, zero parameter elements — in
+    // tests/resident.rs, which needs a compiled artifact.)
+    use pql::runtime::manifest::ArtifactInfo;
+    use pql::runtime::{ResidentSpec, TensorView};
+    let v1 = |n: usize| vec![n];
+    let info = ArtifactInfo {
+        file: std::path::PathBuf::from("synthetic.pb"),
+        inputs: vec![
+            ("theta_c".into(), v1(d.critic_params)),
+            ("m".into(), v1(d.critic_params)),
+            ("v".into(), v1(d.critic_params)),
+            ("t".into(), v1(1)),
+            ("theta_ct".into(), v1(d.critic_params)),
+            ("theta_a".into(), v1(d.actor_params)),
+            ("s".into(), vec![d.batch, d.obs_dim]),
+            ("a".into(), vec![d.batch, d.act_dim]),
+            ("rn".into(), v1(d.batch)),
+            ("s2".into(), vec![d.batch, d.obs_dim]),
+            ("gmask".into(), v1(d.batch)),
+            ("mu".into(), v1(d.obs_dim)),
+            ("var".into(), v1(d.obs_dim)),
+            ("lr".into(), v1(1)),
+        ],
+        outputs: vec![
+            ("theta_c".into(), v1(d.critic_params)),
+            ("m".into(), v1(d.critic_params)),
+            ("v".into(), v1(d.critic_params)),
+            ("theta_ct".into(), v1(d.critic_params)),
+            ("loss".into(), v1(1)),
+            ("qmean".into(), v1(1)),
+        ],
+        sha256: None,
+    };
+    let spec = ResidentSpec::from_manifest(&info).unwrap();
+    let resident_resolution = || {
+        let mut acc = 0usize;
+        for name in ["s", "a", "rn", "s2", "gmask"] {
+            let slot = plan.index(name).unwrap();
+            // Batch slots must never be feedback targets.
+            acc += usize::from(!spec.is_feedback_slot(slot));
+            let shape = &info.inputs[slot].1;
+            acc += TensorView::new(shape, &s[..shape.iter().product()]).data.len();
+        }
+        acc + spec.fetch_pos("qmean").unwrap()
+    };
+    let mut sink4 = resident_resolution();
+    let before = allocs();
+    for _ in 0..ITERS {
+        sink4 += resident_resolution();
+    }
+    let delta = allocs() - before;
+    assert!(sink4 > 0);
+    assert!(
+        delta < ITERS / 8,
+        "resident step bookkeeping allocated: {delta} allocations across {ITERS} iterations"
+    );
 }

@@ -1,0 +1,355 @@
+//! Differential tests for the device-resident update plane.
+//!
+//! The resident path (`ResidentUpdate`: parameters and optimizer state
+//! loop back on device, only the batch is staged and only diagnostics are
+//! fetched) must be BIT-IDENTICAL to the staged path (full host round
+//! trip through `FeedFrame::run`) — same literals reach the same
+//! executable, and `f32 ⇄ Literal` round-trips are exact. These tests run
+//! both paths over the same pre-generated batch sequence on the CPU PJRT
+//! client and compare every per-step diagnostic and the final training
+//! state bitwise.
+//!
+//! They also pin the zero-copy invariant the tentpole is about, via the
+//! engine's element counters: a steady-state resident step stages exactly
+//! the batch slots plus the 1-element Adam step scalar, and fetches
+//! exactly the loss/qmean scalars (plus the per-sample |td| vector under
+//! prioritized replay). Zero parameter or optimizer-state elements cross
+//! the host boundary between publish points.
+//!
+//! Tests skip (not fail) when `make artifacts` hasn't run.
+
+use pql::runtime::{Engine, FeedDims, FeedPlan, OptState, ResidentUpdate, Variant};
+use pql::util::Rng;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn art() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+/// One pre-generated critic minibatch (identical for both paths).
+struct Batch {
+    s: Vec<f32>,
+    a: Vec<f32>,
+    rn: Vec<f32>,
+    s2: Vec<f32>,
+    gm: Vec<f32>,
+    isw: Vec<f32>,
+}
+
+fn make_batches(rng: &mut Rng, steps: usize, b: usize, od: usize, ad: usize) -> Vec<Batch> {
+    (0..steps)
+        .map(|_| {
+            let mut bt = Batch {
+                s: vec![0.0; b * od],
+                a: vec![0.0; b * ad],
+                rn: vec![0.0; b],
+                s2: vec![0.0; b * od],
+                gm: vec![0.97; b],
+                isw: vec![0.0; b],
+            };
+            rng.fill_normal(&mut bt.s);
+            rng.fill_normal(&mut bt.a);
+            rng.fill_normal(&mut bt.rn);
+            rng.fill_normal(&mut bt.s2);
+            for (i, w) in bt.isw.iter_mut().enumerate() {
+                *w = 1.0 / (1.0 + (i % 7) as f32);
+            }
+            bt
+        })
+        .collect()
+}
+
+fn dims_for(t: &pql::runtime::TaskInfo, b: usize) -> FeedDims {
+    FeedDims {
+        batch: b,
+        obs_dim: t.obs_dim,
+        act_dim: t.act_dim,
+        critic_obs_dim: t.critic_obs_dim,
+        actor_params: t.layouts["actor"].size,
+        critic_params: t.layouts["critic"].size,
+    }
+}
+
+/// ≥100 steps of DDPG critic updates: per-step loss/qmean and the final
+/// θ/m/v/target must match the staged path bitwise, and the steady-state
+/// counters must show batch-only staging and scalar-only fetching.
+#[test]
+fn resident_critic_update_matches_staged_bitwise() {
+    const STEPS: usize = 120;
+    let Some(art) = art() else { return };
+    let mut eng = Engine::new(&art).unwrap();
+    let m = Arc::clone(&eng.manifest);
+    let t = m.task("ant").unwrap().clone();
+    let b = m.batch_default;
+    let exe = eng.load("ant", "critic_update").unwrap();
+    let dims = dims_for(&t, b);
+    let plan = FeedPlan::critic_update(Variant::Ddpg, &dims, 5e-4);
+    plan.validate(&exe.info).unwrap();
+
+    let mut rng = Rng::new(42);
+    let critic_init = t.layouts["critic"].init(&mut rng);
+    let theta_a1 = t.layouts["actor"].init(&mut rng);
+    let theta_a2 = t.layouts["actor"].init(&mut rng);
+    let mu = vec![0.0f32; t.obs_dim];
+    let var = vec![1.0f32; t.obs_dim];
+    let batches = make_batches(&mut rng, STEPS, b, t.obs_dim, t.act_dim);
+
+    // ---- staged reference: full host round trip every step -------------
+    let mut critic = OptState::new(critic_init.clone());
+    let mut target = critic_init.clone();
+    let mut staged_scalars = Vec::with_capacity(STEPS);
+    for (k, bt) in batches.iter().enumerate() {
+        // The lagged policy switches mid-run — the cross-network restage
+        // the V-learner performs at actor_bus cadence.
+        let ta = if k < STEPS / 2 { &theta_a1 } else { &theta_a2 };
+        let mut f = plan.frame();
+        f.bind_adam(&critic).unwrap();
+        f.bind("target", &target).unwrap();
+        f.bind("theta_a", ta).unwrap();
+        f.bind("s", &bt.s).unwrap();
+        f.bind("a", &bt.a).unwrap();
+        f.bind("rn", &bt.rn).unwrap();
+        f.bind("s2", &bt.s2).unwrap();
+        f.bind("gmask", &bt.gm).unwrap();
+        f.bind("mu", &mu).unwrap();
+        f.bind("var", &var).unwrap();
+        let outs = f.run(&exe).unwrap();
+        let mut it = outs.into_iter();
+        let th = it.next().unwrap();
+        let mm = it.next().unwrap();
+        let vv = it.next().unwrap();
+        target = it.next().unwrap();
+        let loss = it.next().unwrap();
+        let qmean = it.next().unwrap();
+        critic.absorb(th, mm, vv);
+        staged_scalars.push((loss, qmean));
+    }
+
+    // ---- resident path over the same sequence ---------------------------
+    let critic0 = OptState::new(critic_init.clone());
+    let target0 = critic_init.clone();
+    let b0 = &batches[0];
+    let mut res = ResidentUpdate::new(
+        Arc::clone(&exe),
+        FeedPlan::critic_update(Variant::Ddpg, &dims, 5e-4),
+        0.0,
+        |f| {
+            f.bind_adam(&critic0)?;
+            f.bind("target", &target0)?;
+            f.bind("theta_a", &theta_a1)?;
+            f.bind("s", &b0.s)?;
+            f.bind("a", &b0.a)?;
+            f.bind("rn", &b0.rn)?;
+            f.bind("s2", &b0.s2)?;
+            f.bind("gmask", &b0.gm)?;
+            f.bind("mu", &mu)?;
+            f.bind("var", &var)?;
+            Ok(())
+        },
+    )
+    .unwrap();
+    let loss_pos = res.fetch_pos("loss").unwrap();
+    let qmean_pos = res.fetch_pos("qmean").unwrap();
+    let batch_elems =
+        (b * t.obs_dim + b * t.act_dim + b + b * t.obs_dim + b) as u64;
+
+    for (k, bt) in batches.iter().enumerate() {
+        if k == STEPS / 2 {
+            res.restage("theta_a", &theta_a2).unwrap();
+        }
+        let (s0, f0) = (res.staged_elems(), res.fetched_elems());
+        res.restage("s", &bt.s).unwrap();
+        res.restage("a", &bt.a).unwrap();
+        res.restage("rn", &bt.rn).unwrap();
+        res.restage("s2", &bt.s2).unwrap();
+        res.restage("gmask", &bt.gm).unwrap();
+        let out = res.step().unwrap();
+        // Steady-state traffic: the batch + the 1-element Adam t in, two
+        // scalars out. Zero parameter/optimizer-state elements either way.
+        assert_eq!(res.staged_elems() - s0, batch_elems + 1, "staged at step {k}");
+        assert_eq!(res.fetched_elems() - f0, 2, "fetched at step {k}");
+        let (loss, qmean) = &staged_scalars[k];
+        assert_eq!(&out[loss_pos], loss, "loss diverged at step {k}");
+        assert_eq!(&out[qmean_pos], qmean, "qmean diverged at step {k}");
+    }
+
+    // Final parameters, optimizer state, and Polyak target — the values a
+    // publish point would materialize — bitwise equal to the staged run.
+    assert_eq!(res.to_host("theta").unwrap(), critic.theta);
+    assert_eq!(res.to_host("m").unwrap(), critic.m);
+    assert_eq!(res.to_host("v").unwrap(), critic.v);
+    assert_eq!(res.to_host("target").unwrap(), target);
+    assert_eq!(res.steps(), STEPS as f32);
+}
+
+/// Actor-update stream (the P-learner shape): θ_c cross-feed switches
+/// mid-run; diagnostics and final state must match staged bitwise.
+#[test]
+fn resident_actor_update_matches_staged_bitwise() {
+    const STEPS: usize = 100;
+    let Some(art) = art() else { return };
+    let mut eng = Engine::new(&art).unwrap();
+    let m = Arc::clone(&eng.manifest);
+    let t = m.task("ant").unwrap().clone();
+    let b = m.batch_default;
+    let exe = eng.load("ant", "actor_update").unwrap();
+    let dims = dims_for(&t, b);
+    let plan = FeedPlan::actor_update(Variant::Ddpg, &dims, 5e-4);
+    plan.validate(&exe.info).unwrap();
+
+    let mut rng = Rng::new(7);
+    let actor_init = t.layouts["actor"].init(&mut rng);
+    let theta_c1 = t.layouts["critic"].init(&mut rng);
+    let theta_c2 = t.layouts["critic"].init(&mut rng);
+    let mu = vec![0.0f32; t.obs_dim];
+    let var = vec![1.0f32; t.obs_dim];
+    let batches = make_batches(&mut rng, STEPS, b, t.obs_dim, t.act_dim);
+
+    let mut actor = OptState::new(actor_init.clone());
+    let mut staged_tails = Vec::with_capacity(STEPS);
+    for (k, bt) in batches.iter().enumerate() {
+        let tc = if k < STEPS / 2 { &theta_c1 } else { &theta_c2 };
+        let mut f = plan.frame();
+        f.bind_adam(&actor).unwrap();
+        f.bind("theta_c", tc).unwrap();
+        f.bind("s", &bt.s).unwrap();
+        f.bind("mu", &mu).unwrap();
+        f.bind("var", &var).unwrap();
+        let outs = f.run(&exe).unwrap();
+        let mut it = outs.into_iter();
+        let th = it.next().unwrap();
+        let mm = it.next().unwrap();
+        let vv = it.next().unwrap();
+        actor.absorb(th, mm, vv);
+        // Whatever diagnostics the artifact emits after θ/m/v, in order —
+        // exactly what the resident fetch list returns.
+        staged_tails.push(it.collect::<Vec<_>>());
+    }
+
+    let actor0 = OptState::new(actor_init.clone());
+    let b0 = &batches[0];
+    let mut res = ResidentUpdate::new(
+        Arc::clone(&exe),
+        FeedPlan::actor_update(Variant::Ddpg, &dims, 5e-4),
+        0.0,
+        |f| {
+            f.bind_adam(&actor0)?;
+            f.bind("theta_c", &theta_c1)?;
+            f.bind("s", &b0.s)?;
+            f.bind("mu", &mu)?;
+            f.bind("var", &var)?;
+            Ok(())
+        },
+    )
+    .unwrap();
+    for (k, bt) in batches.iter().enumerate() {
+        if k == STEPS / 2 {
+            res.restage("theta_c", &theta_c2).unwrap();
+        }
+        res.restage("s", &bt.s).unwrap();
+        let out = res.step().unwrap();
+        assert_eq!(out, staged_tails[k], "diagnostics diverged at step {k}");
+    }
+    assert_eq!(res.to_host("theta").unwrap(), actor.theta);
+    assert_eq!(res.to_host("m").unwrap(), actor.m);
+    assert_eq!(res.to_host("v").unwrap(), actor.v);
+}
+
+/// Prioritized variant: the per-sample |td| vector is fetched (B extra
+/// elements per step) while parameters still stay resident.
+#[test]
+fn resident_per_critic_update_matches_staged_and_fetches_td() {
+    const STEPS: usize = 40;
+    let Some(art) = art() else { return };
+    let mut eng = Engine::new(&art).unwrap();
+    let m = Arc::clone(&eng.manifest);
+    let t = m.task("ant").unwrap().clone();
+    let b = m.batch_default;
+    // PER graphs may be absent from minimal artifact sets — skip, like a
+    // missing artifact dir.
+    let Ok(exe) = eng.load("ant", "critic_update_per") else { return };
+    let dims = dims_for(&t, b);
+    let plan = FeedPlan::critic_update_per(Variant::Ddpg, &dims, 5e-4);
+    plan.validate(&exe.info).unwrap();
+
+    let mut rng = Rng::new(11);
+    let critic_init = t.layouts["critic"].init(&mut rng);
+    let theta_a = t.layouts["actor"].init(&mut rng);
+    let mu = vec![0.0f32; t.obs_dim];
+    let var = vec![1.0f32; t.obs_dim];
+    let batches = make_batches(&mut rng, STEPS, b, t.obs_dim, t.act_dim);
+
+    let td_out = exe
+        .info
+        .outputs
+        .iter()
+        .position(|(n, _)| n == "td")
+        .expect("PER graph emits td");
+    let mut critic = OptState::new(critic_init.clone());
+    let mut target = critic_init.clone();
+    let mut staged_td = Vec::with_capacity(STEPS);
+    for bt in &batches {
+        let mut f = plan.frame();
+        f.bind_adam(&critic).unwrap();
+        f.bind("target", &target).unwrap();
+        f.bind("theta_a", &theta_a).unwrap();
+        f.bind("s", &bt.s).unwrap();
+        f.bind("a", &bt.a).unwrap();
+        f.bind("rn", &bt.rn).unwrap();
+        f.bind("s2", &bt.s2).unwrap();
+        f.bind("gmask", &bt.gm).unwrap();
+        f.bind("isw", &bt.isw).unwrap();
+        f.bind("mu", &mu).unwrap();
+        f.bind("var", &var).unwrap();
+        let mut outs = f.run(&exe).unwrap();
+        staged_td.push(std::mem::take(&mut outs[td_out]));
+        let mut it = outs.into_iter();
+        let th = it.next().unwrap();
+        let mm = it.next().unwrap();
+        let vv = it.next().unwrap();
+        target = it.next().unwrap();
+        critic.absorb(th, mm, vv);
+    }
+
+    let critic0 = OptState::new(critic_init.clone());
+    let target0 = critic_init.clone();
+    let b0 = &batches[0];
+    let mut res = ResidentUpdate::new(
+        Arc::clone(&exe),
+        FeedPlan::critic_update_per(Variant::Ddpg, &dims, 5e-4),
+        0.0,
+        |f| {
+            f.bind_adam(&critic0)?;
+            f.bind("target", &target0)?;
+            f.bind("theta_a", &theta_a)?;
+            f.bind("s", &b0.s)?;
+            f.bind("a", &b0.a)?;
+            f.bind("rn", &b0.rn)?;
+            f.bind("s2", &b0.s2)?;
+            f.bind("gmask", &b0.gm)?;
+            f.bind("isw", &b0.isw)?;
+            f.bind("mu", &mu)?;
+            f.bind("var", &var)?;
+            Ok(())
+        },
+    )
+    .unwrap();
+    let td_pos = res.fetch_pos("td").unwrap();
+    for (k, bt) in batches.iter().enumerate() {
+        let f0 = res.fetched_elems();
+        res.restage("s", &bt.s).unwrap();
+        res.restage("a", &bt.a).unwrap();
+        res.restage("rn", &bt.rn).unwrap();
+        res.restage("s2", &bt.s2).unwrap();
+        res.restage("gmask", &bt.gm).unwrap();
+        res.restage("isw", &bt.isw).unwrap();
+        let out = res.step().unwrap();
+        // loss + qmean + the B-element td vector.
+        assert_eq!(res.fetched_elems() - f0, 2 + b as u64, "fetched at step {k}");
+        assert_eq!(out[td_pos], staged_td[k], "td diverged at step {k}");
+    }
+    assert_eq!(res.to_host("theta").unwrap(), critic.theta);
+    assert_eq!(res.to_host("target").unwrap(), target);
+}
