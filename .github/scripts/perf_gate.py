@@ -29,8 +29,11 @@ Two PR-6 additions: the `resident_over_staged` ratio (device-resident
 update vs full staged round trip) joins the same absolute-floor rule,
 and the dispatch-contention section is gated on its T=4/T=1 SCALING
 ratio against the baseline's — never on absolute dispatch rates, which
-are machine-bound. When $GITHUB_STEP_SUMMARY is set, a per-group delta
-table is appended to the job summary.
+are machine-bound. PR 7 adds the `device_env` section of
+BENCH_data_plane.json: its `fused_over_host` ratio (fused step_infer
+dispatch vs host step + chunked inference) is floored like the feed
+speedups. When $GITHUB_STEP_SUMMARY is set, a per-group delta table is
+appended to the job summary.
 
 Tolerance: --tolerance or $PERF_GATE_TOLERANCE, default 0.35 (shared CI
 runners are noisy; tighten locally with PERF_GATE_TOLERANCE=0.1).
@@ -77,6 +80,11 @@ ARTIFACT_DEPENDENT_GROUPS = {
     "compile",
     "first_stage",
     "cached_load",
+    # PR-7 accelerator-resident env rows: need actor_infer plus the
+    # env_step/step_infer graphs, which exist only on the emitted N grid.
+    "host_step_infer",
+    "env_step_device",
+    "step_infer_fused",
 }
 
 # Groups tracked for the perf trajectory but NOT gated: one-shot
@@ -169,6 +177,37 @@ def gate_feed_speedups(fresh, floor, report):
                 f"(floor {floor:.2f}: the zero-copy path must not be "
                 "slower than the owned-clone path it retired)"
             )
+    return fails
+
+
+def gate_device_env_speedups(fresh, floor, report):
+    """Absolute floor on the fused step+infer dispatch (PR 7).
+
+    `fused_over_host` is a same-run A/B (fused step_infer dispatch vs the
+    host env-step + chunked-inference composition it replaces), so it
+    gets the feed floor, not the cross-run tolerance: fusing the env step
+    into the inference dispatch — and dropping the per-step obs upload —
+    must never make the actor loop slower than the host composition.
+    The section only exists when the runner has env graphs; absence skips.
+    """
+    fails = 0
+    rows = fresh.get("device_env", [])
+    if not rows:
+        report.append("SKIP  device_env speedups: no section in fresh run "
+                      "(env graphs not present on this runner)")
+        return 0
+    for s in rows:
+        v = s.get("fused_over_host")
+        if v is None:
+            continue
+        verdict = "ok  " if v >= floor else "FAIL"
+        if verdict == "FAIL":
+            fails += 1
+        report.append(
+            f"{verdict}  data_plane: fused_over_host @ N={s.get('n')} = "
+            f"{v:.3f} (floor {floor:.2f}: the fused dispatch must not be "
+            "slower than the host step+infer it replaces)"
+        )
     return fails
 
 
@@ -289,6 +328,8 @@ def main():
             fresh = json.load(f)
         fails += gate_plane(plane, baseline, fresh, args.tolerance, report)
         deltas.append((plane, group_deltas(baseline, fresh)))
+        if plane == "BENCH_data_plane.json":
+            fails += gate_device_env_speedups(fresh, args.feed_floor, report)
         if plane == "BENCH_learner_feed.json":
             fails += gate_feed_speedups(fresh, args.feed_floor, report)
             fails += gate_dispatch_scaling(baseline, fresh, args.tolerance,

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax._src.lib import xla_client as xc
 
-from . import model, tasks
+from . import env_step, model, tasks
 
 F32 = jnp.float32
 
@@ -200,20 +200,26 @@ def emit_task(em: Emitter, task_name: str, skip_fig8: bool):
                 ["theta_a", "m", "v", "loss"])
 
     # ---- PQL-D (C51) -------------------------------------------------------
-    if not vision and not em.quick:
-        em.emit(task_name, "critic_update_dist",
-                model.dist_critic_update(spec, tasks.TAU),
-                [_sds(Pd), _sds(Pd), _sds(Pd), _sds(1), _sds(Pd), _sds(Pa),
-                 _sds(B, do), _sds(B, da), _sds(B), _sds(B, do), _sds(B),
-                 _sds(do), _sds(do), _sds(1)],
-                ["theta_c", "m", "v", "t", "theta_ct", "theta_a", "s", "a",
-                 "rn", "s2", "gmask", "mu", "var", "lr"],
-                ["theta_c", "m", "v", "theta_ct", "loss", "qmean"])
-        em.emit(task_name, "actor_update_dist", model.dist_actor_update(spec),
-                [_sds(Pa), _sds(Pa), _sds(Pa), _sds(1), _sds(Pd),
-                 _sds(B, do), _sds(do), _sds(do), _sds(1)],
-                ["theta_a", "m", "v", "t", "theta_c", "s", "mu", "var", "lr"],
-                ["theta_a", "m", "v", "loss"])
+    if not vision:
+        if not em.quick:
+            em.emit(task_name, "critic_update_dist",
+                    model.dist_critic_update(spec, tasks.TAU),
+                    [_sds(Pd), _sds(Pd), _sds(Pd), _sds(1), _sds(Pd), _sds(Pa),
+                     _sds(B, do), _sds(B, da), _sds(B), _sds(B, do), _sds(B),
+                     _sds(do), _sds(do), _sds(1)],
+                    ["theta_c", "m", "v", "t", "theta_ct", "theta_a", "s", "a",
+                     "rn", "s2", "gmask", "mu", "var", "lr"],
+                    ["theta_c", "m", "v", "theta_ct", "loss", "qmean"])
+            em.emit(task_name, "actor_update_dist",
+                    model.dist_actor_update(spec),
+                    [_sds(Pa), _sds(Pa), _sds(Pa), _sds(1), _sds(Pd),
+                     _sds(B, do), _sds(do), _sds(do), _sds(1)],
+                    ["theta_a", "m", "v", "t", "theta_c", "s", "mu", "var",
+                     "lr"],
+                    ["theta_a", "m", "v", "loss"])
+        # The PER variant rides --quick like the DDPG one does: without it,
+        # quick artifact sets can't smoke-test prioritized replay on the
+        # Dist variant (the rust differential tests silently skip).
         em.emit(task_name, "critic_update_dist_per",
                 model.dist_critic_update_per(spec, tasks.TAU),
                 [_sds(Pd), _sds(Pd), _sds(Pd), _sds(1), _sds(Pd), _sds(Pa),
@@ -224,18 +230,21 @@ def emit_task(em: Emitter, task_name: str, skip_fig8: bool):
                 ["theta_c", "m", "v", "theta_ct", "loss", "qmean", "td"])
 
     # ---- SAC ----------------------------------------------------------------
-    if not vision and not em.quick:
-        em.emit(task_name, "sac_actor_infer", model.sac_actor_infer(spec),
-                [_sds(Ps), _sds(C, do), _sds(do), _sds(do), _sds(C, da)],
-                ["theta_a", "obs", "mu", "var", "noise"], ["act"])
-        em.emit(task_name, "sac_critic_update",
-                model.sac_critic_update(spec, tasks.TAU),
-                [_sds(Pc), _sds(Pc), _sds(Pc), _sds(1), _sds(Pc), _sds(Ps),
-                 _sds(1), _sds(B, do), _sds(B, da), _sds(B), _sds(B, do),
-                 _sds(B), _sds(B, da), _sds(do), _sds(do), _sds(1)],
-                ["theta_c", "m", "v", "t", "theta_ct", "theta_a", "log_alpha",
-                 "s", "a", "rn", "s2", "gmask", "noise", "mu", "var", "lr"],
-                ["theta_c", "m", "v", "theta_ct", "loss", "qmean"])
+    if not vision:
+        if not em.quick:
+            em.emit(task_name, "sac_actor_infer", model.sac_actor_infer(spec),
+                    [_sds(Ps), _sds(C, do), _sds(do), _sds(do), _sds(C, da)],
+                    ["theta_a", "obs", "mu", "var", "noise"], ["act"])
+            em.emit(task_name, "sac_critic_update",
+                    model.sac_critic_update(spec, tasks.TAU),
+                    [_sds(Pc), _sds(Pc), _sds(Pc), _sds(1), _sds(Pc), _sds(Ps),
+                     _sds(1), _sds(B, do), _sds(B, da), _sds(B), _sds(B, do),
+                     _sds(B), _sds(B, da), _sds(do), _sds(do), _sds(1)],
+                    ["theta_c", "m", "v", "t", "theta_ct", "theta_a",
+                     "log_alpha", "s", "a", "rn", "s2", "gmask", "noise",
+                     "mu", "var", "lr"],
+                    ["theta_c", "m", "v", "theta_ct", "loss", "qmean"])
+        # Rides --quick for the same reason as critic_update_dist_per.
         em.emit(task_name, "sac_critic_update_per",
                 model.sac_critic_update_per(spec, tasks.TAU),
                 [_sds(Pc), _sds(Pc), _sds(Pc), _sds(1), _sds(Pc), _sds(Ps),
@@ -245,6 +254,7 @@ def emit_task(em: Emitter, task_name: str, skip_fig8: bool):
                  "s", "a", "rn", "s2", "gmask", "isw", "noise", "mu", "var",
                  "lr"],
                 ["theta_c", "m", "v", "theta_ct", "loss", "qmean", "td"])
+    if not vision and not em.quick:
         em.emit(task_name, "sac_actor_update",
                 model.sac_actor_update(spec, target_entropy=-float(da)),
                 [_sds(Ps), _sds(Ps), _sds(Ps), _sds(1), _sds(Pc), _sds(1),
@@ -269,6 +279,9 @@ def emit_task(em: Emitter, task_name: str, skip_fig8: bool):
              "logp_old", "mu", "var", "lr"],
             ["theta", "m", "v", "pi_loss", "v_loss", "kl"])
 
+    # ---- Accelerator-resident simulation graphs ------------------------------
+    emit_env(em, task_name)
+
     # ---- Fig. 8 batch-size sweep (ant only) ----------------------------------
     if task_name == "ant" and not skip_fig8 and not em.quick:
         for b in tasks.FIG8_BATCHES:
@@ -287,14 +300,57 @@ def emit_task(em: Emitter, task_name: str, skip_fig8: bool):
                     model.ddpg_actor_update(spec), a, n, o)
 
 
+def emit_env(em: Emitter, task_name: str):
+    """Device-stepping graphs for tasks with an XLA dynamics mirror.
+
+    Two graphs per env count N (static shapes; see env_step.emit_ns for
+    which Ns each mode emits):
+
+      env_step_nN    (state, action) -> (state, obs, reward, done[, cobs])
+      step_infer_nN  (state, theta_a, mu, var, noise)
+                       -> (state, obs, reward, done, act[, cobs])
+
+    The `state` output shares the `state` input's name so the rust
+    resident plane derives the on-device feedback loop from the manifest
+    (ResidentSpec::from_manifest); everything else lands in the fetch set.
+    No-op for tasks without a mirror (they stay host-stepped).
+    """
+    if task_name not in env_step.ENV_TASKS:
+        return
+    cfg = tasks.TASKS[task_name]
+    do, da = cfg["obs"], cfg["act"]
+    cdo = cfg.get("critic_obs", do)
+    spec = model.Spec(do, da, hidden=tasks.HIDDEN, atoms=tasks.ATOMS,
+                      v_min=tasks.V_MIN, v_max=tasks.V_MAX,
+                      critic_obs_dim=cdo)
+    sd = env_step.state_dim(task_name)
+    ns = env_step.emit_ns(task_name, em.quick)
+    entry = em.manifest["tasks"].setdefault(task_name, {"artifacts": {}})
+    # Unknown-to-rust-parser metadata (ignored keys are tolerated); the
+    # device env derives N/state_dim from the artifact input shapes, this
+    # just documents the emitted grid for humans and python tests.
+    entry["env"] = {"state_dim": sd, "ns": list(ns)}
+    Pa = spec.actor.size
+    for n in ns:
+        em.emit(task_name, f"env_step_n{n}", env_step.env_step_fn(task_name),
+                [_sds(n, sd), _sds(n, da)], ["state", "action"],
+                env_step.env_outputs(task_name))
+        em.emit(task_name, f"step_infer_n{n}",
+                env_step.step_infer_fn(spec, task_name),
+                [_sds(n, sd), _sds(Pa), _sds(do), _sds(do), _sds(n, da)],
+                ["state", "theta_a", "mu", "var", "noise"],
+                env_step.step_infer_outputs(task_name))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out-dir", default="../artifacts")
     ap.add_argument("--tasks", default=",".join(tasks.TASKS))
     ap.add_argument("--skip-fig8", action="store_true")
     ap.add_argument("--quick", action="store_true",
-                    help="core DDPG (incl. prioritized critic)/PPO "
-                         "artifacts only (CI smoke)")
+                    help="core DDPG/PPO artifacts plus every prioritized "
+                         "critic variant and the small-N env graphs "
+                         "(CI smoke)")
     args = ap.parse_args()
 
     jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,278 @@
+"""Batched XLA mirrors of the closed-form env dynamics (accelerator-resident
+simulation plane).
+
+Each supported task gets two graphs, lowered by `aot.py` at a fixed set of
+env counts N (static XLA shapes):
+
+  env_step_n{N}:   (state, action)                    -> (state, obs, reward, done[, cobs])
+  step_infer_n{N}: (state, theta_a, mu, var, noise)   -> (state, obs, reward, done, act[, cobs])
+
+The `state` output is named like the `state` input on purpose: the rust
+resident plane (`ResidentSpec::from_manifest`) derives the output->input
+feedback map by role name, so env state loops back on device and only the
+transition fields (obs/reward/done[/act/cobs]) are fetched per step.
+
+Auto-reset stays HOST-side: the rust `DeviceVecEnv` fetches the looped-back
+state on done steps, redraws the reset rows from the same xoshiro stream the
+host envs use (draws happen only for done envs, in env-index order — the
+property that makes host/device trajectories comparable), and restages.
+Mirroring the integer RNG inside an all-f32 graph would break that draw
+order, so the graphs are reset-free by design.
+
+Parity contract with `rust/src/envs/{ant,ballbalance}.rs`:
+
+- Op ORDER mirrors the rust scalar code exactly (left-associated sums,
+  semi-implicit Euler update order, clamp placement). Bit-for-bit parity is
+  still unattainable: the XLA CPU backend contracts mul+add chains into FMA
+  (measured 1-2 ulp per step, independent of --xla_cpu_enable_fast_math),
+  and ant additionally goes through sin/cos where libm and XLA differ in
+  the last ulp. So parity is tolerance-banded everywhere — tight for
+  ballbalance (pure add/mul/div/sqrt/clamp, ~1e-5 over 200 steps), looser
+  for ant (~2e-4) — while done and the steps counter must match exactly
+  (see rust/tests/env_parity.rs and python/tests/test_env_step.py).
+- Scalar constants that rust computes at runtime in f32 (e.g. the render's
+  `r_px = 0.12 * half`) are precomputed here with numpy float32 arithmetic,
+  never in python float64.
+
+State row layouts (must match `rust/src/envs/device.rs`):
+
+  ant:         [px, py, vx, vy, th, om, pa0, pa1, pa2, pa3, steps]   (11)
+  ballbalance: [bx, by, vx, vy, tx, ty, steps]                       (7)
+
+`steps` rides as f32 (exact integer arithmetic well past any episode len).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+
+F32 = jnp.float32
+
+# Tasks with a device-stepping mirror; everything else stays host-only
+# (quaternion/Servo tasks in dynamics.rs are stateful in ways worth their
+# own PR — see ROADMAP).
+ENV_TASKS = ("ant", "ballbalance_vision")
+
+# Env counts the artifacts are emitted at (static XLA shapes). The large
+# sizes exist for the bench sweep and are ant-only to keep the artifact
+# set small; parity tests run at 64.
+EMIT_NS_QUICK = (64, 256)
+EMIT_NS_FULL_ANT = (64, 256, 4096, 16384)
+
+ANT_STATE_DIM = 11
+BALL_STATE_DIM = 7
+
+PI = np.float32(np.pi)
+TWO_PI = np.float32(2.0) * PI
+
+
+def state_dim(task):
+    return {"ant": ANT_STATE_DIM, "ballbalance_vision": BALL_STATE_DIM}[task]
+
+
+def emit_ns(task, quick):
+    if quick:
+        return EMIT_NS_QUICK
+    return EMIT_NS_FULL_ANT if task == "ant" else EMIT_NS_QUICK
+
+
+def wrap_angle(a):
+    """Wrap to (-pi, pi] — mirrors the fixed rust `wrap_angle` (the x <= 0
+    fixup maps both exact-boundary cases, pi + 2*pi*k and -pi + 2*pi*k,
+    onto +pi)."""
+    x = jnp.fmod(a + PI, TWO_PI)
+    x = jnp.where(x <= 0.0, x + TWO_PI, x)
+    return x - PI
+
+
+# ---------------------------------------------------------------------------
+# ant — planar thruster locomotion (rust/src/envs/ant.rs)
+# ---------------------------------------------------------------------------
+
+ANT_DT = 0.05
+ANT_EP_LEN = 300.0
+ANT_TRACK_HALF_WIDTH = 3.0
+ANT_MOUNT = tuple(np.float32(m) for m in (0.785, 2.356, -2.356, -0.785))
+ANT_TORQUE_ARM = (0.4, -0.4, 0.4, -0.4)
+
+
+def ant_obs(state):
+    """Observation from a state batch [N, 11] -> [N, 12] (write_obs)."""
+    vx, vy, th, om = state[:, 2], state[:, 3], state[:, 4], state[:, 5]
+    py, pa, steps = state[:, 1], state[:, 6:10], state[:, 10]
+    cols = [vx, vy, jnp.sin(th), jnp.cos(th), om, py / ANT_TRACK_HALF_WIDTH]
+    o = jnp.stack(cols, axis=1)
+    tail = jnp.stack(
+        [steps / ANT_EP_LEN * 2.0 - 1.0, jnp.ones_like(steps)], axis=1
+    )
+    return jnp.concatenate([o, pa, tail], axis=1)
+
+
+def ant_step(state, action):
+    """(state [N,11], action [N,4]) -> (state', obs', reward, done)."""
+    px, py = state[:, 0], state[:, 1]
+    vx, vy = state[:, 2], state[:, 3]
+    th, om = state[:, 4], state[:, 5]
+    steps = state[:, 10]
+    thrust = jnp.clip(action, -1.0, 1.0)
+    # Left-associated sums mirror the rust `+=` accumulation order.
+    d0, d1 = th + ANT_MOUNT[0], th + ANT_MOUNT[1]
+    d2, d3 = th + ANT_MOUNT[2], th + ANT_MOUNT[3]
+    t0, t1, t2, t3 = (thrust[:, k] for k in range(4))
+    fx = t0 * jnp.cos(d0) + t1 * jnp.cos(d1) + t2 * jnp.cos(d2) + t3 * jnp.cos(d3)
+    fy = t0 * jnp.sin(d0) + t1 * jnp.sin(d1) + t2 * jnp.sin(d2) + t3 * jnp.sin(d3)
+    tq = (
+        t0 * ANT_TORQUE_ARM[0] + t1 * ANT_TORQUE_ARM[1]
+        + t2 * ANT_TORQUE_ARM[2] + t3 * ANT_TORQUE_ARM[3]
+    )
+    # Semi-implicit Euler with drag, same update order as the rust step.
+    vx2 = vx + (2.0 * fx - 0.8 * vx) * ANT_DT
+    vy2 = vy + (2.0 * fy - 0.8 * vy) * ANT_DT
+    om2 = om + (4.0 * tq - 1.5 * om) * ANT_DT
+    px2 = px + vx2 * ANT_DT
+    py2 = py + vy2 * ANT_DT
+    th2 = wrap_angle(th + om2 * ANT_DT)
+    steps2 = steps + 1.0
+
+    a0, a1, a2, a3 = (action[:, k] for k in range(4))
+    ctrl = (a0 * a0 + a1 * a1 + a2 * a2 + a3 * a3) * 0.05  # raw actions
+    reward = vx2 + 0.5 - ctrl - 0.1 * jnp.abs(om2)
+    off = jnp.abs(py2) > ANT_TRACK_HALF_WIDTH
+    reward = jnp.where(off, reward - 5.0, reward)
+    done = jnp.logical_or(off, steps2 >= ANT_EP_LEN).astype(F32)
+
+    state2 = jnp.concatenate(
+        [
+            jnp.stack([px2, py2, vx2, vy2, th2, om2], axis=1),
+            action,  # prev_act <- raw action (pre-reset, as in rust)
+            steps2[:, None],
+        ],
+        axis=1,
+    )
+    return state2, ant_obs(state2), reward, done
+
+
+# ---------------------------------------------------------------------------
+# ballbalance_vision — ball-on-plate + 24x24 render (ballbalance.rs/render.rs)
+# ---------------------------------------------------------------------------
+
+BALL_DT = 0.05
+BALL_EP_LEN = 250.0
+BALL_G = 6.0
+IMG = 24
+
+# Pixel-center grids, precomputed with the same f32 arithmetic the rust
+# rasterizer performs per pixel (render.rs): x = (px + 0.5 - half) / half.
+_HALF = np.float32(IMG / 2)
+_AXIS = (np.arange(IMG, dtype=np.float32) + np.float32(0.5) - _HALF) / _HALF
+_XS = np.tile(_AXIS, IMG)  # x varies fastest: out[py * IMG + px]
+_YS = np.repeat(_AXIS, IMG)
+_EDGE = np.sqrt(_XS * _XS + _YS * _YS) > np.float32(0.98)
+_R_PX = np.float32(0.12) * _HALF  # radius_frac * half, computed in f32
+_R_PX1 = _R_PX + np.float32(1.0)
+
+
+def ball_render(bx, by, tx, ty):
+    """Batched mirror of `render_ball` ([N] coords -> [N, 576] frames)."""
+    x, y = jnp.asarray(_XS), jnp.asarray(_YS)
+    v = 0.35 + 0.15 * (tx[:, None] * x[None, :] + ty[:, None] * y[None, :])
+    v = jnp.where(jnp.asarray(_EDGE)[None, :], 0.05, v)
+    dx = (x[None, :] - bx[:, None]) * _HALF
+    dy = (y[None, :] - by[:, None]) * _HALF
+    d = jnp.sqrt(dx * dx + dy * dy)
+    # Outside the disc alpha clamps to 0 and the blend is exact identity,
+    # so the rust `if d < r_px + 1.0` branch needs no mask.
+    alpha = jnp.clip(_R_PX1 - d, 0.0, 1.0)
+    v = v * (1.0 - alpha) + 1.0 * alpha
+    return jnp.clip(v, 0.0, 1.0)
+
+
+def ball_obs(state):
+    return ball_render(state[:, 0], state[:, 1], state[:, 4], state[:, 5])
+
+
+def ball_critic_obs(state):
+    """[N, 7] state -> [N, 8] critic rows (fill_critic_obs)."""
+    bx, by = state[:, 0], state[:, 1]
+    dist = jnp.sqrt(bx * bx + by * by)
+    return jnp.concatenate(
+        [state[:, 0:6], dist[:, None], jnp.ones_like(dist)[:, None]], axis=1
+    )
+
+
+def ball_step(state, action):
+    """(state [N,7], action [N,2]) -> (state', obs', reward, done, cobs')."""
+    bx, by = state[:, 0], state[:, 1]
+    vx, vy = state[:, 2], state[:, 3]
+    tx, ty = state[:, 4], state[:, 5]
+    steps = state[:, 6]
+    tx2 = jnp.clip(tx + jnp.clip(action[:, 0], -1.0, 1.0) * 0.6 * BALL_DT, -0.4, 0.4)
+    ty2 = jnp.clip(ty + jnp.clip(action[:, 1], -1.0, 1.0) * 0.6 * BALL_DT, -0.4, 0.4)
+    vx2 = vx + (-BALL_G * tx2 - 0.2 * vx) * BALL_DT
+    vy2 = vy + (-BALL_G * ty2 - 0.2 * vy) * BALL_DT
+    bx2 = bx + vx2 * BALL_DT
+    by2 = by + vy2 * BALL_DT
+    steps2 = steps + 1.0
+
+    r2 = bx2 * bx2 + by2 * by2
+    dist = jnp.sqrt(r2)
+    off = dist > 0.95
+    reward = 1.0 - 1.5 * dist - 0.05 * (jnp.abs(vx2) + jnp.abs(vy2))
+    reward = jnp.where(off, reward - 10.0, reward)
+    done = jnp.logical_or(off, steps2 >= BALL_EP_LEN).astype(F32)
+
+    state2 = jnp.stack([bx2, by2, vx2, vy2, tx2, ty2, steps2], axis=1)
+    return state2, ball_obs(state2), reward, done, ball_critic_obs(state2)
+
+
+# ---------------------------------------------------------------------------
+# Graph builders (what aot.py lowers)
+# ---------------------------------------------------------------------------
+
+
+def env_step_fn(task):
+    """Pure dynamics graph: (state, action) -> transition fields."""
+    if task == "ant":
+        return ant_step
+    if task == "ballbalance_vision":
+        return ball_step
+    raise ValueError(f"no device env mirror for task {task!r}")
+
+
+def obs_fn(task):
+    return {"ant": ant_obs, "ballbalance_vision": ball_obs}[task]
+
+
+def env_outputs(task):
+    """Output names of env_step_fn, in return order."""
+    base = ["state", "obs", "reward", "done"]
+    return base + ["cobs"] if task == "ballbalance_vision" else base
+
+
+def step_infer_fn(spec, task):
+    """Fused actor-forward + env-step graph: one dispatch per rollout step.
+
+    The actor sees the obs of the CURRENT state (recomputed on device from
+    the resident state — for ballbalance that re-renders the frame the
+    previous dispatch produced, which is cheaper than a second obs feedback
+    slot), `noise` arrives pre-scaled by the per-env sigma ladder
+    (exploration.rs draws it host-side), and the action is clamped in-graph
+    exactly like `Noise::apply`.
+    """
+    step = env_step_fn(task)
+    obs_of = obs_fn(task)
+
+    def fused(state, theta_a, mu, var, noise):
+        obs0 = obs_of(state)
+        act = spec.actor_fwd(theta_a, model.normalize_obs(obs0, mu, var))
+        act = jnp.clip(act + noise, -1.0, 1.0)
+        out = step(state, act)
+        return out[:4] + (act,) + out[4:]
+
+    return fused
+
+
+def step_infer_outputs(task):
+    base = ["state", "obs", "reward", "done", "act"]
+    return base + ["cobs"] if task == "ballbalance_vision" else base

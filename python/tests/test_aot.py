@@ -82,19 +82,78 @@ def test_actor_infer_io_shapes(quick_artifacts):
 def test_quick_mode_emits_prioritized_critic(quick_artifacts):
     # --quick previously omitted every *_per graph, so prioritized replay
     # had no artifact at all on CI smoke runs (and the rust PER
-    # differential tests silently skipped). The DDPG PER critic now rides
-    # quick mode; the heavier Dist/SAC PER variants stay full-mode only.
+    # differential tests silently skipped). All three PER critic variants
+    # (DDPG, Dist, SAC) now ride quick mode.
     _, manifest = quick_artifacts
     arts = manifest["tasks"]["ant"]["artifacts"]
-    assert "critic_update_per" in arts
-    per = arts["critic_update_per"]
-    in_names = [i["name"] for i in per["inputs"]]
-    assert "isw" in in_names
-    # Slot order contract with rust FeedPlan::critic_update_per: isw
-    # rides directly after gmask.
-    assert in_names.index("isw") == in_names.index("gmask") + 1
-    assert [o["name"] for o in per["outputs"]][-1] == "td"
-    assert {"critic_update_dist_per", "sac_critic_update_per"}.isdisjoint(arts)
+    for name in ("critic_update_per", "critic_update_dist_per",
+                 "sac_critic_update_per"):
+        assert name in arts, name
+        per = arts[name]
+        in_names = [i["name"] for i in per["inputs"]]
+        # Slot order contract with the rust FeedPlans: isw rides directly
+        # after gmask, |td| is the last output.
+        assert in_names.index("isw") == in_names.index("gmask") + 1, name
+        assert [o["name"] for o in per["outputs"]][-1] == "td", name
+    # SAC keeps its exploration noise right after isw.
+    sac = [i["name"] for i in arts["sac_critic_update_per"]["inputs"]]
+    assert sac.index("noise") == sac.index("isw") + 1
+    # The non-PER Dist/SAC family stays full-mode only.
+    assert {"critic_update_dist", "sac_critic_update",
+            "sac_actor_update"}.isdisjoint(arts)
+
+
+def test_quick_mode_emits_env_graphs(quick_artifacts):
+    # Accelerator-resident simulation plane: env_step + fused step_infer at
+    # the quick-grid env counts, with the state output named like the state
+    # input so ResidentSpec::from_manifest derives the device feedback loop.
+    _, manifest = quick_artifacts
+    t = manifest["tasks"]["ant"]
+    assert t["env"] == {"state_dim": 11, "ns": [64, 256]}
+    for n in (64, 256):
+        es = t["artifacts"][f"env_step_n{n}"]
+        assert [(i["name"], i["shape"]) for i in es["inputs"]] == [
+            ("state", [n, 11]), ("action", [n, 4])]
+        assert [(o["name"], o["shape"]) for o in es["outputs"]] == [
+            ("state", [n, 11]), ("obs", [n, 12]), ("reward", [n]),
+            ("done", [n])]
+        si = t["artifacts"][f"step_infer_n{n}"]
+        assert [i["name"] for i in si["inputs"]] == [
+            "state", "theta_a", "mu", "var", "noise"]
+        assert si["inputs"][4]["shape"] == [n, 4]
+        out = {o["name"]: o["shape"] for o in si["outputs"]}
+        assert out["state"] == [n, 11] and out["act"] == [n, 4]
+        assert [o["name"] for o in si["outputs"]][0] == "state"
+
+
+@pytest.fixture(scope="module")
+def ball_env_artifacts():
+    # Env-graph-only emission for the vision task (full emit_task lowers the
+    # heavy B=512 vision critic graphs; emit_env alone keeps the fixture
+    # cheap and exercises its standalone manifest-entry path).
+    with tempfile.TemporaryDirectory() as d:
+        em = aot.Emitter(d, quick=True)
+        aot.emit_env(em, "ballbalance_vision")
+        yield d, em.manifest
+
+
+def test_vision_env_graphs_carry_critic_obs(ball_env_artifacts):
+    d, manifest = ball_env_artifacts
+    t = manifest["tasks"]["ballbalance_vision"]
+    assert t["env"] == {"state_dim": 7, "ns": [64, 256]}
+    for n in (64, 256):
+        es = t["artifacts"][f"env_step_n{n}"]
+        assert [(o["name"], o["shape"]) for o in es["outputs"]] == [
+            ("state", [n, 7]), ("obs", [n, 576]), ("reward", [n]),
+            ("done", [n]), ("cobs", [n, 8])]
+        si = t["artifacts"][f"step_infer_n{n}"]
+        assert [o["name"] for o in si["outputs"]] == [
+            "state", "obs", "reward", "done", "act", "cobs"]
+    # The lowered modules keep every declared parameter (nothing pruned).
+    for name, a in t["artifacts"].items():
+        text = open(os.path.join(d, a["file"])).read()
+        entry = text[text.index("ENTRY"):]
+        assert entry.count("parameter(") == len(a["inputs"]), name
 
 
 def test_all_tasks_table_covered():

@@ -1,0 +1,347 @@
+"""Differential tests for the XLA env-dynamics mirrors (env_step.py).
+
+Ground truth here is an independent numpy-float32 transcription of the rust
+scalar code (ant.rs / ballbalance.rs / render.rs / dynamics.rs), written in
+the same op order. numpy f32 elementwise ops are IEEE-754 single ops, i.e.
+the same instructions the rust scalar loops execute — so:
+
+- ballbalance is add/mul/div/sqrt/clamp only (render included), but the XLA
+  CPU backend contracts mul+add chains into FMA (measured: 1-2 ulp on state,
+  independent of --xla_cpu_enable_fast_math), so even the trig-free kernel
+  is tolerance-banded — single-step drift must stay within a few ulp
+  (atol 1e-6) and the discrete fields (done, steps) exact.
+- ant additionally goes through sin/cos (libm vs XLA vs numpy differ in the
+  last ulp): banded at 1e-5 per step, 2e-4 over a 50-step rollout.
+
+The authoritative host-vs-device check lives in rust/tests/env_parity.rs;
+this file is the fast CI guard that the emitted graphs compute the right
+math at all.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+from compile import env_step, model, tasks  # noqa: E402
+
+F = np.float32
+PI = F(np.pi)
+TWO_PI = F(2.0) * PI
+rng = np.random.default_rng(7)
+
+
+# ---------------------------------------------------------------------------
+# numpy reference mirrors (transcribed from the rust envs, f32 throughout)
+# ---------------------------------------------------------------------------
+
+
+def ref_wrap_angle(a):
+    """dynamics.rs wrap_angle with the (-pi, pi] boundary fix."""
+    x = np.fmod(a + PI, TWO_PI)  # truncated remainder, like rust `%`
+    x = np.where(x <= F(0.0), x + TWO_PI, x)
+    return (x - PI).astype(np.float32)
+
+
+ANT_MOUNT = [F(0.785), F(2.356), F(-2.356), F(-0.785)]
+ANT_ARM = [F(0.4), F(-0.4), F(0.4), F(-0.4)]
+
+
+def ref_ant_step(state, action):
+    DT = F(0.05)
+    px, py, vx, vy, th, om = (state[:, k] for k in range(6))
+    steps = state[:, 10]
+    fx = np.zeros_like(px)
+    fy = np.zeros_like(px)
+    tq = np.zeros_like(px)
+    for k in range(4):
+        thrust = np.clip(action[:, k], F(-1.0), F(1.0))
+        d = th + ANT_MOUNT[k]
+        fx = fx + thrust * np.cos(d)
+        fy = fy + thrust * np.sin(d)
+        tq = tq + thrust * ANT_ARM[k]
+    vx2 = vx + (F(2.0) * fx - F(0.8) * vx) * DT
+    vy2 = vy + (F(2.0) * fy - F(0.8) * vy) * DT
+    om2 = om + (F(4.0) * tq - F(1.5) * om) * DT
+    px2 = px + vx2 * DT
+    py2 = py + vy2 * DT
+    th2 = ref_wrap_angle(th + om2 * DT)
+    steps2 = steps + F(1.0)
+    ctrl = (
+        action[:, 0] * action[:, 0] + action[:, 1] * action[:, 1]
+        + action[:, 2] * action[:, 2] + action[:, 3] * action[:, 3]
+    ) * F(0.05)
+    reward = vx2 + F(0.5) - ctrl - F(0.1) * np.abs(om2)
+    off = np.abs(py2) > F(3.0)
+    reward = np.where(off, reward - F(5.0), reward)
+    done = np.logical_or(off, steps2 >= F(300.0)).astype(np.float32)
+    state2 = np.concatenate(
+        [np.stack([px2, py2, vx2, vy2, th2, om2], axis=1), action,
+         steps2[:, None]], axis=1,
+    ).astype(np.float32)
+    obs = np.stack(
+        [vx2, vy2, np.sin(th2), np.cos(th2), om2, py2 / F(3.0)], axis=1
+    )
+    tail = np.stack(
+        [steps2 / F(300.0) * F(2.0) - F(1.0), np.ones_like(steps2)], axis=1
+    )
+    obs = np.concatenate([obs, action, tail], axis=1).astype(np.float32)
+    return state2, obs, reward.astype(np.float32), done
+
+
+def ref_render(bx, by, tx, ty):
+    half = F(12.0)
+    ax = (np.arange(24, dtype=np.float32) + F(0.5) - half) / half
+    xs, ys = np.tile(ax, 24), np.repeat(ax, 24)
+    v = F(0.35) + F(0.15) * (tx[:, None] * xs[None, :] + ty[:, None] * ys[None, :])
+    rr = np.sqrt(xs * xs + ys * ys)
+    v = np.where(rr[None, :] > F(0.98), F(0.05), v)
+    r_px = F(0.12) * half
+    dx = (xs[None, :] - bx[:, None]) * half
+    dy = (ys[None, :] - by[:, None]) * half
+    d = np.sqrt(dx * dx + dy * dy)
+    alpha = np.clip(r_px + F(1.0) - d, F(0.0), F(1.0))
+    v = v * (F(1.0) - alpha) + F(1.0) * alpha
+    return np.clip(v, F(0.0), F(1.0)).astype(np.float32)
+
+
+def ref_ball_step(state, action):
+    DT, G = F(0.05), F(6.0)
+    bx, by, vx, vy, tx, ty, steps = (state[:, k] for k in range(7))
+    tx2 = np.clip(tx + np.clip(action[:, 0], F(-1), F(1)) * F(0.6) * DT,
+                  F(-0.4), F(0.4))
+    ty2 = np.clip(ty + np.clip(action[:, 1], F(-1), F(1)) * F(0.6) * DT,
+                  F(-0.4), F(0.4))
+    vx2 = vx + (-G * tx2 - F(0.2) * vx) * DT
+    vy2 = vy + (-G * ty2 - F(0.2) * vy) * DT
+    bx2 = bx + vx2 * DT
+    by2 = by + vy2 * DT
+    steps2 = steps + F(1.0)
+    r2 = bx2 * bx2 + by2 * by2
+    dist = np.sqrt(r2)
+    off = dist > F(0.95)
+    reward = F(1.0) - F(1.5) * dist - F(0.05) * (np.abs(vx2) + np.abs(vy2))
+    reward = np.where(off, reward - F(10.0), reward)
+    done = np.logical_or(off, steps2 >= F(250.0)).astype(np.float32)
+    state2 = np.stack([bx2, by2, vx2, vy2, tx2, ty2, steps2], axis=1)
+    obs = ref_render(bx2, by2, tx2, ty2)
+    cobs = np.concatenate(
+        [state2[:, 0:6], dist[:, None], np.ones_like(dist)[:, None]], axis=1
+    ).astype(np.float32)
+    return state2.astype(np.float32), obs, reward.astype(np.float32), done, cobs
+
+
+def rand_ant_state(n):
+    s = np.zeros((n, 11), dtype=np.float32)
+    s[:, 0] = rng.uniform(-5, 5, n)       # px
+    s[:, 1] = rng.uniform(-2.0, 2.0, n)   # py, away from the |py|>3 boundary
+    s[:, 2:4] = rng.uniform(-2, 2, (n, 2))
+    s[:, 4] = rng.uniform(-3.1, 3.1, n)   # th
+    s[:, 5] = rng.uniform(-2, 2, n)       # om
+    s[:, 6:10] = rng.uniform(-1, 1, (n, 4))
+    s[:, 10] = rng.integers(0, 290, n)    # steps, away from timeout
+    return s
+
+
+def rand_ball_state(n):
+    s = np.zeros((n, 7), dtype=np.float32)
+    s[:, 0:2] = rng.uniform(-0.6, 0.6, (n, 2))
+    s[:, 2:4] = rng.uniform(-1, 1, (n, 2))
+    s[:, 4:6] = rng.uniform(-0.4, 0.4, (n, 2))
+    s[:, 6] = rng.integers(0, 248, n)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# wrap_angle
+# ---------------------------------------------------------------------------
+
+
+def test_wrap_angle_boundary_contract():
+    # The contract the rust fix pins: range (-pi, pi], both exact boundary
+    # inputs land on +pi.
+    wa = jax.jit(env_step.wrap_angle)
+    assert float(wa(jnp.float32(PI))) == float(PI)
+    assert float(wa(jnp.float32(-PI))) == float(PI)
+    ks = np.arange(-3, 4, dtype=np.float32)
+    a = (PI + TWO_PI * ks).astype(np.float32)
+    out = np.asarray(wa(a))
+    assert np.all(out > -PI) and np.all(out <= PI)
+
+
+def test_wrap_angle_matches_reference_and_trig():
+    wa = jax.jit(env_step.wrap_angle)
+    a = rng.uniform(-30, 30, 4096).astype(np.float32)
+    out = np.asarray(wa(a))
+    assert np.array_equal(out, ref_wrap_angle(a))
+    np.testing.assert_allclose(np.sin(out), np.sin(a), atol=1e-4)
+    np.testing.assert_allclose(np.cos(out), np.cos(a), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ballbalance: FMA-contraction-banded against the numpy mirror
+# ---------------------------------------------------------------------------
+
+
+def test_ball_step_matches_reference():
+    n = 128
+    state = rand_ball_state(n)
+    action = rng.uniform(-1.5, 1.5, (n, 2)).astype(np.float32)  # hits clamp
+    out = jax.jit(env_step.ball_step)(state, action)
+    ref = ref_ball_step(state, action)
+    for got, want, name in zip(out, ref, ["state", "obs", "reward", "done",
+                                          "cobs"]):
+        got = np.asarray(got)
+        if name == "done":
+            assert np.array_equal(got, want)
+        else:
+            np.testing.assert_allclose(got, want, atol=1e-6, err_msg=name)
+    # FMA contraction can't touch the discrete counter.
+    assert np.array_equal(np.asarray(out[0])[:, 6], ref[0][:, 6])
+
+
+def test_ball_rollout_stays_banded():
+    n = 32
+    s = rand_ball_state(n)
+    s[:, 6] = 0.0
+    sj = s.copy()
+    step = jax.jit(env_step.ball_step)
+    for t in range(100):
+        a = rng.uniform(-1, 1, (n, 2)).astype(np.float32)
+        sj, obs_j, rew_j, done_j, _ = step(np.asarray(sj), a)
+        s, obs_r, rew_r, done_r, _ = ref_ball_step(s, a)
+        assert np.array_equal(np.asarray(done_j), done_r), t
+        # Keep rolling past falls: the graph has no reset, both mirrors just
+        # integrate on, which still exercises the banded drift claim.
+    np.testing.assert_allclose(np.asarray(sj), s, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(obs_j), obs_r, atol=1e-5)
+
+
+def test_ball_rollout_timeout_and_falloff():
+    step = jax.jit(env_step.ball_step)
+    # Centered, still ball: survives to the 250-step timeout.
+    s = np.zeros((1, 7), dtype=np.float32)
+    s[0, 6] = 248.0
+    a = np.zeros((1, 2), dtype=np.float32)
+    s1, _, _, d1, _ = step(s, a)
+    assert float(d1[0]) == 0.0 and float(s1[0, 6]) == 249.0
+    _, _, _, d2, _ = step(np.asarray(s1), a)
+    assert float(d2[0]) == 1.0
+    # Ball past the rim: done with the -10 penalty.
+    s = np.zeros((1, 7), dtype=np.float32)
+    s[0, 0], s[0, 2] = 0.94, 1.0
+    _, _, r, d, _ = step(s, a)
+    assert float(d[0]) == 1.0 and float(r[0]) < -9.0
+
+
+# ---------------------------------------------------------------------------
+# ant: banded on trig-touched fields, exact on discrete ones
+# ---------------------------------------------------------------------------
+
+
+def test_ant_step_matches_reference():
+    n = 256
+    state = rand_ant_state(n)
+    action = rng.uniform(-1.3, 1.3, (n, 4)).astype(np.float32)
+    s2, obs, rew, done = jax.jit(env_step.ant_step)(state, action)
+    rs2, robs, rrew, rdone = ref_ant_step(state, action)
+    np.testing.assert_allclose(np.asarray(s2), rs2, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(obs), robs, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(rew), rrew, atol=1e-5)
+    assert np.array_equal(np.asarray(done), rdone)
+    # Trig-free fields are bit-exact: steps counter and prev_act passthrough.
+    assert np.array_equal(np.asarray(s2)[:, 6:11], rs2[:, 6:11])
+    assert np.array_equal(np.asarray(obs)[:, 6:10], robs[:, 6:10])
+
+
+def test_ant_rollout_stays_banded():
+    # 50 feedback steps: divergence vs the numpy mirror must stay ulp-scale
+    # (damped dynamics), not compound past the env_parity band.
+    n = 32
+    s = rand_ant_state(n)
+    s[:, 10] = 0.0
+    sj = s.copy()
+    step = jax.jit(env_step.ant_step)
+    for t in range(50):
+        a = rng.uniform(-1, 1, (n, 4)).astype(np.float32)
+        sj, obs_j, rew_j, done_j = step(np.asarray(sj), a)
+        s, obs_r, rew_r, done_r = ref_ant_step(s, a)
+        assert np.array_equal(np.asarray(done_j), done_r), t
+    np.testing.assert_allclose(np.asarray(sj), s, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(obs_j), obs_r, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(rew_j), rew_r, atol=2e-4)
+
+
+def test_ant_offtrack_penalty_and_timeout():
+    step = jax.jit(env_step.ant_step)
+    s = np.zeros((2, 11), dtype=np.float32)
+    s[0, 1], s[0, 3] = 2.999, 2.0   # py + vy: crosses the track edge
+    s[1, 10] = 299.0                # one step from timeout
+    a = np.zeros((2, 4), dtype=np.float32)
+    _, _, r, d = step(s, a)
+    assert float(d[0]) == 1.0 and float(r[0]) < -4.0
+    assert float(d[1]) == 1.0 and float(r[1]) > -1.0
+
+
+# ---------------------------------------------------------------------------
+# fused step_infer: actor composition + env part agree with the pieces
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("task", env_step.ENV_TASKS)
+def test_step_infer_composes(task):
+    cfg = tasks.TASKS[task]
+    do, da = cfg["obs"], cfg["act"]
+    spec = model.Spec(do, da, hidden=tasks.HIDDEN, atoms=tasks.ATOMS,
+                      v_min=tasks.V_MIN, v_max=tasks.V_MAX,
+                      critic_obs_dim=cfg.get("critic_obs", do))
+    n = 32
+    state = rand_ant_state(n) if task == "ant" else rand_ball_state(n)
+    theta = (rng.standard_normal(spec.actor.size) * 0.1).astype(np.float32)
+    mu = rng.uniform(-0.5, 0.5, do).astype(np.float32)
+    var = rng.uniform(0.5, 2.0, do).astype(np.float32)
+    noise = (rng.standard_normal((n, da)) * 0.2).astype(np.float32)
+
+    out = jax.jit(env_step.step_infer_fn(spec, task))(
+        state, theta, mu, var, noise)
+    names = env_step.step_infer_outputs(task)
+    act = np.asarray(out[names.index("act")])
+    assert np.all(act >= -1.0) and np.all(act <= 1.0)
+
+    obs0 = env_step.obs_fn(task)(jnp.asarray(state))
+    act_ref = jnp.clip(
+        spec.actor_fwd(jnp.asarray(theta),
+                       model.normalize_obs(obs0, jnp.asarray(mu),
+                                           jnp.asarray(var)))
+        + noise, -1.0, 1.0)
+    np.testing.assert_allclose(act, np.asarray(act_ref), atol=1e-6)
+
+    env_out = jax.jit(env_step.env_step_fn(task))(state, act)
+    env_names = env_step.env_outputs(task)
+    for i, nm in enumerate(env_names):
+        got = np.asarray(out[names.index(nm)])
+        want = np.asarray(env_out[i])
+        if nm == "done":
+            assert np.array_equal(got, want)
+        else:
+            np.testing.assert_allclose(got, want, atol=1e-6, err_msg=nm)
+
+
+# ---------------------------------------------------------------------------
+# emission metadata
+# ---------------------------------------------------------------------------
+
+
+def test_state_dims_and_emit_grid():
+    assert env_step.state_dim("ant") == 11
+    assert env_step.state_dim("ballbalance_vision") == 7
+    assert env_step.emit_ns("ant", quick=True) == (64, 256)
+    assert env_step.emit_ns("ballbalance_vision", quick=False) == (64, 256)
+    assert 16384 in env_step.emit_ns("ant", quick=False)
+    # Both graphs name the looped-back state output like the state input —
+    # the rust feedback map derives from this.
+    assert env_step.env_outputs("ant")[0] == "state"
+    assert env_step.step_infer_outputs("ballbalance_vision") == [
+        "state", "obs", "reward", "done", "act", "cobs"]

@@ -479,6 +479,8 @@ fn write_learner_feed_json(records: &[PlaneRecord]) -> std::io::Result<std::path
 
 /// Serialize the data-plane records to `BENCH_data_plane.json` at the
 /// repository root (machine-readable perf trajectory, PR over PR).
+/// Called once after the host-side section and again (overwriting, now
+/// with the `device_env` section) when the PJRT env graphs are available.
 fn write_data_plane_json(records: &[PlaneRecord]) -> std::io::Result<std::path::PathBuf> {
     let mut speedups = Vec::new();
     for &n in &[256usize, 4096, 16384] {
@@ -495,11 +497,33 @@ fn write_data_plane_json(records: &[PlaneRecord]) -> std::io::Result<std::path::
             );
         }
     }
+    // Accelerator-resident env section: the fused step_infer dispatch vs
+    // the host composition it replaces (sharded env step + chunked
+    // inference), same-run A/B at each N with emitted env graphs.
+    let device_rows: Vec<String> = [256usize, 4096, 16384]
+        .iter()
+        .filter(|&&n| rate_of(records, "step_infer_fused", n) > 0.0)
+        .map(|&n| {
+            format!(
+                "    {{\"n\": {n}, \"fused_over_host\": {:.3}, \"device_step_over_host\": {:.3}}}",
+                rate_of(records, "step_infer_fused", n)
+                    / rate_of(records, "host_step_infer", n).max(1e-9),
+                rate_of(records, "env_step_device", n)
+                    / rate_of(records, "host_step_infer", n).max(1e-9)
+            )
+        })
+        .collect();
+    let device_section = if device_rows.is_empty() {
+        String::new()
+    } else {
+        format!(",\n  \"device_env\": [\n{}\n  ]", device_rows.join(",\n"))
+    };
     let json = format!(
-        "{{\n  \"schema\": \"pql.bench.data_plane/v1\",\n  \"source\": \"cargo bench --bench throughput\",\n  \"task\": \"ant\",\n  \"env_shards_auto\": {},\n  \"results\": [\n{}\n  ],\n  \"speedups\": [\n{}\n  ]\n}}\n",
+        "{{\n  \"schema\": \"pql.bench.data_plane/v1\",\n  \"source\": \"cargo bench --bench throughput\",\n  \"task\": \"ant\",\n  \"env_shards_auto\": {},\n  \"results\": [\n{}\n  ],\n  \"speedups\": [\n{}\n  ]{}\n}}\n",
         envs::auto_shards(0, 4096),
         rows_json(records),
-        speedups.join(",\n")
+        speedups.join(",\n"),
+        device_section
     );
     let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_data_plane.json");
     std::fs::write(&path, json)?;
@@ -587,7 +611,7 @@ fn main() {
     }
 
     println!("\n== data plane (N = 256 / 4096 / 16384) ==");
-    let plane = bench_data_plane();
+    let mut plane = bench_data_plane();
     match write_data_plane_json(&plane) {
         Ok(path) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("could not write BENCH_data_plane.json: {e}"),
@@ -639,6 +663,102 @@ fn main() {
                               &var, m.chunk, None, &mut acts)
                     .unwrap();
             });
+        }
+    }
+
+    {
+        // Accelerator-resident env stepping (PERF.md §Accelerator-resident
+        // simulation plane): the host actor composition (sharded env step
+        // + chunked PJRT inference, obs staged every step) vs the device
+        // explicit-action plane vs the fused step_infer dispatch (state,
+        // θ_a, μ, σ² resident; noise up, transition down). Env graphs are
+        // lowered on a fixed N grid — sizes without artifacts skip.
+        println!("\n-- device env plane (ant) --");
+        let infer = engine.load("ant", "actor_infer").unwrap();
+        let theta = t.layouts["actor"].init(&mut r);
+        let mu = vec![0.0f32; t.obs_dim];
+        let var = vec![1.0f32; t.obs_dim];
+        for &n in &[256usize, 4096, 16384] {
+            let iters = (100_000 / n).max(5).min(200);
+
+            let mut env =
+                envs::make_sharded("ant", n, 0, envs::auto_shards(0, n)).unwrap();
+            let mut obs = vec![0.0f32; n * t.obs_dim];
+            env.reset_all(&mut obs);
+            let mut out = StepOut::new(n, t.obs_dim);
+            let mut acts = vec![0.0f32; n * t.act_dim];
+            let name = format!("host step+infer ant (N={n})");
+            let (ms, rate) = bench(&name, n as f64, "env-steps", iters, || {
+                infer_chunked(&infer, &theta, &obs, n, t.obs_dim, t.act_dim, &mu,
+                              &var, m.chunk, None, &mut acts)
+                    .unwrap();
+                env.step(&acts, &mut out);
+                obs.copy_from_slice(&out.obs);
+            });
+            plane.push(PlaneRecord {
+                group: "host_step_infer",
+                name,
+                n,
+                ms_per_iter: ms,
+                per_sec: rate,
+                unit: "env-steps",
+            });
+
+            let mut dev = match envs::DeviceVecEnv::new(&mut engine, "ant", n, 0) {
+                Ok(d) => d,
+                Err(e) => {
+                    println!("device env N={n}: no env graphs ({e:#}), skipping");
+                    continue;
+                }
+            };
+            dev.reset_all(&mut obs);
+            let name = format!("device env_step ant (N={n})");
+            let (ms, rate) = bench(&name, n as f64, "env-steps", iters, || {
+                r.fill_uniform(&mut acts, -1.0, 1.0);
+                dev.step(&acts, &mut out);
+            });
+            plane.push(PlaneRecord {
+                group: "env_step_device",
+                name,
+                n,
+                ms_per_iter: ms,
+                per_sec: rate,
+                unit: "env-steps",
+            });
+
+            let mut fused = match envs::DeviceEnv::new(&mut engine, "ant", n, 0, true) {
+                Ok(d) => d,
+                Err(e) => {
+                    println!("fused env N={n}: no step_infer graph ({e:#}), skipping");
+                    continue;
+                }
+            };
+            fused.set_theta(&theta).unwrap();
+            fused.set_norm(&mu, &var).unwrap();
+            fused.reset_all(&mut obs);
+            let mut noise = vec![0.0f32; n * t.act_dim];
+            let name = format!("fused step_infer ant (N={n})");
+            let (ms, rate) = bench(&name, n as f64, "env-steps", iters, || {
+                r.fill_uniform(&mut noise, -0.05, 0.05);
+                fused.step_fused(&noise, &mut out, &mut acts).unwrap();
+            });
+            plane.push(PlaneRecord {
+                group: "step_infer_fused",
+                name,
+                n,
+                ms_per_iter: ms,
+                per_sec: rate,
+                unit: "env-steps",
+            });
+            println!(
+                "device env N={n}: staged {} fetched {} f32 elems (fused plane incl. seeding)",
+                fused.staged_elems(),
+                fused.fetched_elems()
+            );
+        }
+        match write_data_plane_json(&plane) {
+            Ok(path) => println!("rewrote {} (with device_env section)", path.display()),
+            Err(e) => eprintln!("could not write BENCH_data_plane.json: {e}"),
         }
     }
 

@@ -65,6 +65,22 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, variant: Variant
     if vision && cfg.prioritized_replay {
         anyhow::bail!("prioritized replay supports state-based (symmetric) tasks only");
     }
+    if cfg.device_env {
+        if variant == Variant::Sac {
+            anyhow::bail!(
+                "--device-env supports the DDPG-family actor only (the fused \
+                 step_infer graph models deterministic π + additive noise, \
+                 not SAC's in-graph sampling)"
+            );
+        }
+        if !envs::device::device_supported(&cfg.task) {
+            anyhow::bail!(
+                "--device-env: task {:?} has host-only dynamics; device tasks: {:?}",
+                cfg.task,
+                envs::device::DEVICE_TASKS
+            );
+        }
+    }
 
     // One device resolution + one PJRT client for the whole run: the
     // actor, both learners, and the eval loop compile into the shared
@@ -101,9 +117,14 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, variant: Variant
             let cfg = cfg.clone();
             let mut rng = rng.split();
             scope.spawn(move || {
-                if let Err(e) = actor_loop(&cfg, manifest, runtime, shared.clone(), variant,
-                                           tx_v, tx_p, msg_pool, recycle_p_rx,
-                                           &mut rng) {
+                let r = if cfg.device_env {
+                    device_actor_loop(&cfg, manifest, runtime, shared.clone(),
+                                      tx_v, tx_p, msg_pool, recycle_p_rx, &mut rng)
+                } else {
+                    actor_loop(&cfg, manifest, runtime, shared.clone(), variant,
+                               tx_v, tx_p, msg_pool, recycle_p_rx, &mut rng)
+                };
+                if let Err(e) = r {
                     log::error!("actor thread failed: {e:#}");
                     shared.pace.stop();
                 }
@@ -366,6 +387,157 @@ fn actor_loop(
             break;
         }
     }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Actor process, accelerator-resident simulation plane (--device-env)
+// ---------------------------------------------------------------------------
+
+/// Algorithm 1 with the simulation stepped on-device (`envs::device`).
+///
+/// Warmup drives the `env_step` plane with random host actions; the
+/// steady loop runs the fused `step_infer` graph — env state and θ_a stay
+/// resident, so per-step host→device traffic is the pre-scaled noise
+/// batch plus the normalizer restage (θ_a restages only on actor-bus
+/// version bumps), and device→host traffic is the transition fields the
+/// replay feed needs. There is no per-step obs upload and no separate
+/// inference dispatch. Everything downstream of the env — replay
+/// shipping, the normalizer, pace control, the buses — is unchanged from
+/// [`actor_loop`], so the learners cannot tell which plane stepped.
+#[allow(clippy::too_many_arguments)]
+fn device_actor_loop(
+    cfg: &TrainConfig,
+    manifest: Arc<Manifest>,
+    runtime: Arc<Runtime>,
+    shared: Arc<Shared>,
+    tx_v: mpsc::SyncSender<StepMsg>,
+    tx_p: mpsc::SyncSender<Vec<f32>>,
+    mut msg_pool: MsgPool,
+    recycle_p: mpsc::Receiver<Vec<f32>>,
+    rng: &mut Rng,
+) -> Result<()> {
+    let tinfo = manifest.task(&cfg.task)?.clone();
+    let (od, ad, cd) = (tinfo.obs_dim, tinfo.act_dim, tinfo.critic_obs_dim);
+    let vision = cd != od;
+    let n = cfg.num_envs;
+    let mut engine = Engine::with_runtime(runtime, Arc::clone(&manifest));
+    let mut env = envs::DeviceEnv::new(&mut engine, &cfg.task, n, cfg.seed, true)?;
+    info!("actor: {n} envs on the device plane (fused step+infer)");
+
+    let mut obs = vec![0.0f32; n * od];
+    env.reset_all(&mut obs);
+    let mut cobs = vec![0.0f32; if vision { n * cd } else { 0 }];
+    let mut cobs2 = vec![0.0f32; if vision { n * cd } else { 0 }];
+    if vision {
+        env.fill_critic_obs(&mut cobs);
+    }
+    let p_row_dim = if vision { od + cd } else { od };
+    let mut p_spare: Option<Vec<f32>> = None;
+    let mut out = StepOut::new(n, od);
+    let mut acts = vec![0.0f32; n * ad];
+    let mut noise_buf = vec![0.0f32; n * ad];
+    let mut noise = Noise::new(cfg.exploration, n, ad, rng.split());
+    let mut norm = RunningNorm::new(od);
+    let mut tracker = ReturnTracker::new(n, 4 * n);
+    let mut theta_version = 0u64;
+    let mut theta: Arc<Vec<f32>> = shared.actor_bus.snapshot().1;
+    let mut steps: u64 = 0;
+
+    norm.update(&obs, od);
+    shared.norm_bus.publish(&norm.mean, &norm.var);
+    env.set_theta(&theta)?;
+
+    while !shared.pace.stopped() {
+        let warm = steps < cfg.warmup_steps as u64;
+        if !warm {
+            shared.pace.gate_actor();
+            if shared.pace.stopped() {
+                break;
+            }
+        }
+        // Sync π^a <- π^p if newer; a version bump restages θ_a directly
+        // into the fused plane's resident slot.
+        if let Some((v, t)) = shared.actor_bus.latest(theta_version) {
+            theta_version = v;
+            theta = t;
+            env.set_theta(&theta)?;
+        }
+
+        {
+            let _g = shared.devices.enter(cfg.placement[0]);
+            if warm {
+                // Warm-up steps use uniform random actions (Table B.1) on
+                // the explicit-action plane.
+                crate::coordinator::random_actions(rng, &mut acts);
+                env.step_actions(&acts, &mut out)?;
+            } else {
+                // The in-graph actor normalizes with the freshest
+                // statistics, exactly like the host loop's infer call.
+                env.set_norm(&norm.mean, &norm.var)?;
+                noise.fill_scaled(&mut noise_buf);
+                env.step_fused(&noise_buf, &mut out, &mut acts)?;
+            }
+        }
+
+        tracker.push_step(&out.reward, &out.done);
+        shared.set_train_return(tracker.mean());
+
+        if vision {
+            env.fill_critic_obs(&mut cobs2);
+        }
+
+        // Ship the batch exactly as the host loop does — the executed
+        // actions were fetched from the fused graph for this.
+        let compress = vision && cfg.compress_images;
+        let mut msg = msg_pool.acquire();
+        if compress {
+            msg.s = crate::coordinator::ObsPayload::compress(&obs, od)?;
+            msg.s2 = crate::coordinator::ObsPayload::compress(&out.obs, od)?;
+            msg.fill_pod(&acts, &out.reward, &out.done, &cobs, &cobs2);
+        } else {
+            msg.fill_raw(&obs, &acts, &out.reward, &out.obs, &out.done, &cobs, &cobs2);
+        }
+        if tx_v.send(msg).is_err() {
+            break; // V-learner exited
+        }
+        let mut p_states = p_spare
+            .take()
+            .or_else(|| recycle_p.try_recv().ok())
+            .unwrap_or_else(|| Vec::with_capacity(n * p_row_dim));
+        if vision {
+            concat_rows_into(&obs, od, &cobs, cd, &mut p_states);
+        } else {
+            crate::coordinator::refill(&mut p_states, &obs);
+        }
+        match tx_p.try_send(p_states) {
+            Ok(()) => {}
+            Err(mpsc::TrySendError::Full(v)) | Err(mpsc::TrySendError::Disconnected(v)) => {
+                p_spare = Some(v);
+            }
+        }
+
+        norm.update(&out.obs, od);
+        steps += 1;
+        if steps % NORM_SYNC_EVERY == 0 {
+            shared.norm_bus.publish(&norm.mean, &norm.var);
+        }
+        shared
+            .env_steps
+            .store(steps * n as u64, Ordering::Relaxed);
+        obs.copy_from_slice(&out.obs);
+        if vision {
+            cobs.copy_from_slice(&cobs2);
+        }
+        if steps * (n as u64) >= cfg.max_env_steps {
+            break;
+        }
+    }
+    debug!(
+        "device actor: staged {} fetched {} f32 elems over {steps} steps",
+        env.staged_elems(),
+        env.fetched_elems()
+    );
     Ok(())
 }
 

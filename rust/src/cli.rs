@@ -111,6 +111,12 @@ DEVICE SELECTION (train / eval / bench):
                               `train.device` > $PALLAS_DEVICE > cpu.
                               `auto` falls back to cpu when no GPU client
                               is available.
+  --device-env                Step the simulation on the device too: env
+                              state lives in a resident slot of the
+                              lowered env graphs and the actor loop fuses
+                              stepping with inference. Requires env_step/
+                              step_infer artifacts at N = --num-envs
+                              (tasks: ant, ballbalance_vision).
 
 Run `pql <COMMAND> --help` for per-command options.
 ";

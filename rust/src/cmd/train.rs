@@ -4,10 +4,15 @@
 //! pql train --task ant --algo pql --budget-secs 120 --run-dir runs/ant
 //! pql train --task ant --algo pql --prioritized-replay \
 //!           --per-alpha 0.6 --per-beta0 0.4   # §5 replay-ablation arm
+//! pql train --task ant --algo pql --device-env \
+//!           --num-envs 4096                   # accelerator-resident sim
 //! ```
 //! See `TrainConfig::from_args` for the full flag set (β ratios, σ
 //! schedule, placement, device speeds, batch, replay, prioritized
-//! replay, ...).
+//! replay, ...). `--device-env` steps the simulation on the PJRT device
+//! through the fused `step_infer` graphs; `num_envs` must be one of the
+//! N sizes `python -m compile.aot` emitted and the task must be lowered
+//! (`ant`, `ballbalance_vision`).
 
 use crate::cli::Args;
 use crate::config::TrainConfig;

@@ -134,6 +134,13 @@ pub struct TrainConfig {
     /// only scalars/td. On by default; `--no-resident` restores the staged
     /// host round trip (bit-identical — see tests/resident.rs).
     pub resident: bool,
+    /// Step the simulation on the accelerator too: env state lives in a
+    /// resident slot of the lowered `env_step`/`step_infer` graphs and the
+    /// actor loop fuses stepping with inference (one dispatch, no obs
+    /// upload). Off by default — host stepping is the reference path and
+    /// stays bit-identical; only `ant`/`ballbalance_vision` are lowered
+    /// (see `envs::device`).
+    pub device_env: bool,
     pub exploration: Exploration,
     pub warmup_steps: usize,
     /// Wall-clock budget; training stops at whichever of budget/steps hits.
@@ -178,6 +185,7 @@ impl Default for TrainConfig {
             beta_pv: Ratio::new(1, 2),
             pace_control: true,
             resident: true,
+            device_env: false,
             exploration: Exploration::Mixed { min: 0.05, max: 0.8 },
             warmup_steps: 32,
             budget_secs: 120.0,
@@ -259,6 +267,9 @@ impl TrainConfig {
                     self.pace_control = v.as_bool()?
                 }
                 ("resident" | "train.resident", v) => self.resident = v.as_bool()?,
+                ("device_env" | "train.device_env", v) => {
+                    self.device_env = v.as_bool()?
+                }
                 ("sigma" | "explore.sigma", v) => {
                     self.exploration = Exploration::Fixed(v.as_f64()? as f32)
                 }
@@ -311,6 +322,9 @@ impl TrainConfig {
         }
         if a.flag("no-resident") {
             self.resident = false;
+        }
+        if a.flag("device-env") {
+            self.device_env = true;
         }
         if let Some(v) = a.get("sigma") {
             self.exploration = Exploration::Fixed(v.parse()?);
@@ -469,6 +483,21 @@ mod tests {
         std::fs::write(&p, "[train]\nresident = false\n").unwrap();
         let c = TrainConfig::from_args(&args(&["--config", p.to_str().unwrap()])).unwrap();
         assert!(!c.resident);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn device_env_defaults_off_with_opt_ins() {
+        assert!(!TrainConfig::default().device_env, "host stepping is the default");
+        let c = TrainConfig::from_args(&args(&["--device-env"])).unwrap();
+        assert!(c.device_env);
+
+        let dir = std::env::temp_dir().join("pql_cfg_test_device_env");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.toml");
+        std::fs::write(&p, "[train]\ndevice_env = true\n").unwrap();
+        let c = TrainConfig::from_args(&args(&["--config", p.to_str().unwrap()])).unwrap();
+        assert!(c.device_env);
         std::fs::remove_dir_all(&dir).ok();
     }
 

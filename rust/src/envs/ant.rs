@@ -12,11 +12,40 @@ use crate::util::Rng;
 pub const OBS_DIM: usize = 12;
 pub const ACT_DIM: usize = 4;
 const DT: f32 = 0.05;
-const EP_LEN: u32 = 300;
+pub(crate) const EP_LEN: u32 = 300;
 const TRACK_HALF_WIDTH: f32 = 3.0;
 
 // Thruster mounting angles relative to the body frame.
 const MOUNT: [f32; 4] = [0.785, 2.356, -2.356, -0.785];
+
+/// Device-plane state row `[px, py, vx, vy, th, om, prev_act x4, steps]`.
+/// Must match the `state` slot layout python/compile/env_step.py lowers;
+/// `steps` rides as f32 (exact integer arithmetic far past EP_LEN).
+pub(crate) const STATE_DIM: usize = 11;
+
+/// Reset one device-plane state row, consuming the same draws in the same
+/// order as [`Ant::reset_env`] (py then th) — the property that keeps a
+/// host mirror RNG in lockstep with a host env stepped from the same seed.
+pub(crate) fn reset_state_row(row: &mut [f32], rng: &mut Rng) {
+    debug_assert_eq!(row.len(), STATE_DIM);
+    row.fill(0.0);
+    row[1] = rng.uniform_in(-0.5, 0.5);
+    row[4] = rng.uniform_in(-0.3, 0.3);
+}
+
+/// Observation from a device-plane state row — mirrors [`Ant::write_obs`].
+pub(crate) fn write_obs_from_row(row: &[f32], o: &mut [f32]) {
+    debug_assert_eq!(row.len(), STATE_DIM);
+    o[0] = row[2];
+    o[1] = row[3];
+    o[2] = row[4].sin();
+    o[3] = row[4].cos();
+    o[4] = row[5];
+    o[5] = row[1] / TRACK_HALF_WIDTH;
+    o[6..10].copy_from_slice(&row[6..10]);
+    o[10] = (row[10] / EP_LEN as f32) * 2.0 - 1.0;
+    o[11] = 1.0;
+}
 
 pub struct Ant {
     n: usize,
@@ -179,6 +208,41 @@ mod tests {
         assert!(out.reward[0] < 0.0);
         // Auto-reset happened.
         assert!(env.py[0].abs() < 1.0);
+    }
+
+    #[test]
+    fn device_row_helpers_match_env() {
+        // Same seed: the row reset must consume the same draws in the same
+        // order as the env reset, and the row obs writer must reproduce
+        // write_obs bit-for-bit — device.rs relies on both for host-side
+        // auto-reset of the resident state.
+        let mut env = Ant::new(2, Rng::new(42));
+        let mut rng = Rng::new(42);
+        let mut obs = vec![0.0; 2 * OBS_DIM];
+        env.reset_all(&mut obs);
+        let mut row = [0.0f32; STATE_DIM];
+        let mut o = [0.0f32; OBS_DIM];
+        for i in 0..2 {
+            reset_state_row(&mut row, &mut rng);
+            assert_eq!(row[1], env.py[i]);
+            assert_eq!(row[4], env.th[i]);
+            write_obs_from_row(&row, &mut o);
+            assert_eq!(&o[..], &obs[i * OBS_DIM..(i + 1) * OBS_DIM]);
+        }
+        // After a step, a row assembled from env fields reproduces the obs.
+        let mut out = StepOut::new(2, OBS_DIM);
+        let acts = [0.3, -0.2, 0.9, 0.5, -1.2, 0.4, 0.0, 1.5];
+        env.step(&acts, &mut out);
+        for i in 0..2 {
+            let row = [
+                env.px[i], env.py[i], env.vx[i], env.vy[i], env.th[i],
+                env.om[i], env.prev_act[i * 4], env.prev_act[i * 4 + 1],
+                env.prev_act[i * 4 + 2], env.prev_act[i * 4 + 3],
+                env.steps[i] as f32,
+            ];
+            write_obs_from_row(&row, &mut o);
+            assert_eq!(&o[..], &out.obs[i * OBS_DIM..(i + 1) * OBS_DIM]);
+        }
     }
 
     #[test]

@@ -13,8 +13,41 @@ pub const OBS_DIM: usize = IMG_PIXELS; // 576 pixels
 pub const CRITIC_OBS_DIM: usize = 8;
 pub const ACT_DIM: usize = 2;
 const DT: f32 = 0.05;
-const EP_LEN: u32 = 250;
+pub(crate) const EP_LEN: u32 = 250;
 const G: f32 = 6.0;
+
+/// Device-plane state row `[bx, by, vx, vy, tx, ty, steps]`. Must match
+/// the `state` slot layout python/compile/env_step.py lowers; `steps`
+/// rides as f32.
+pub(crate) const STATE_DIM: usize = 7;
+
+/// Reset one device-plane state row — same draws, same order as
+/// [`BallBalance::reset_env`] (bx, by, vx, vy).
+pub(crate) fn reset_state_row(row: &mut [f32], rng: &mut Rng) {
+    debug_assert_eq!(row.len(), STATE_DIM);
+    row[0] = rng.uniform_in(-0.5, 0.5);
+    row[1] = rng.uniform_in(-0.5, 0.5);
+    row[2] = rng.uniform_in(-0.2, 0.2);
+    row[3] = rng.uniform_in(-0.2, 0.2);
+    row[4] = 0.0;
+    row[5] = 0.0;
+    row[6] = 0.0;
+}
+
+/// Render a device-plane state row — mirrors [`BallBalance::write_obs`].
+pub(crate) fn write_obs_from_row(row: &[f32], o: &mut [f32]) {
+    debug_assert_eq!(row.len(), STATE_DIM);
+    render_ball(o, row[0], row[1], row[4], row[5], 0.12);
+}
+
+/// Critic obs from a device-plane state row — mirrors
+/// [`BallBalance::fill_critic_obs`] for one env.
+pub(crate) fn write_critic_obs_from_row(row: &[f32], o: &mut [f32]) {
+    debug_assert_eq!(row.len(), STATE_DIM);
+    o[0..6].copy_from_slice(&row[0..6]);
+    o[6] = (row[0] * row[0] + row[1] * row[1]).sqrt();
+    o[7] = 1.0;
+}
 
 pub struct BallBalance {
     n: usize,
@@ -162,6 +195,37 @@ mod tests {
         env.fill_critic_obs(&mut cobs);
         assert_eq!(cobs[0], env.bx[0]);
         assert_eq!(cobs[CRITIC_OBS_DIM], env.bx[1]);
+    }
+
+    #[test]
+    fn device_row_helpers_match_env() {
+        // The constructor itself consumes 4 draws per env before the
+        // trainer's reset_all consumes 4 more — a mirror RNG must replay
+        // both phases to stay in lockstep (device.rs depends on this).
+        let mut env = BallBalance::new(2, Rng::new(7));
+        let mut rng = Rng::new(7);
+        let mut rows = [[0.0f32; STATE_DIM]; 2];
+        for row in rows.iter_mut() {
+            reset_state_row(row, &mut rng); // constructor-phase draws
+        }
+        let mut obs = vec![0.0; 2 * OBS_DIM];
+        env.reset_all(&mut obs);
+        let mut o = vec![0.0f32; OBS_DIM];
+        let mut co = [0.0f32; CRITIC_OBS_DIM];
+        let mut cobs = vec![0.0; 2 * CRITIC_OBS_DIM];
+        env.fill_critic_obs(&mut cobs);
+        for (i, row) in rows.iter_mut().enumerate() {
+            reset_state_row(row, &mut rng); // reset_all-phase draws
+            assert_eq!(row[0], env.bx[i]);
+            assert_eq!(row[3], env.vy[i]);
+            write_obs_from_row(row, &mut o);
+            assert_eq!(&o[..], &obs[i * OBS_DIM..(i + 1) * OBS_DIM]);
+            write_critic_obs_from_row(row, &mut co);
+            assert_eq!(
+                &co[..],
+                &cobs[i * CRITIC_OBS_DIM..(i + 1) * CRITIC_OBS_DIM]
+            );
+        }
     }
 
     #[test]

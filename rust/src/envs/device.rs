@@ -1,0 +1,672 @@
+//! Accelerator-resident environments (DESIGN.md §3, PERF.md).
+//!
+//! The host envs step struct-of-arrays `f32` state on CPU cores and hand
+//! the actor loop an observation batch to upload every step. This module
+//! inverts that: the closed-form dynamics of the trig-free tasks are
+//! *also* lowered by `python/compile/env_step.py` as batched XLA graphs
+//! over exactly N envs, and the `[N, state_dim]` state matrix lives in a
+//! [`ResidentState`] slot — the `state` output feeds back into the
+//! `state` input between dispatches, so steady-state host↔device traffic
+//! for `env_step` is the `[N, act_dim]` action upload one way and the
+//! transition fields (`obs`, `reward`, `done`[, `cobs`]) the other.
+//!
+//! The fused `step_infer` graph goes further and folds the actor forward
+//! pass into the same dispatch: θ_a, μ and σ² are resident too, the host
+//! stages only pre-scaled exploration noise (`[N, act_dim]`), and the
+//! observation never crosses the bus on the upload path at all — the
+//! device steps, normalizes, infers and clamps in one program.
+//!
+//! Auto-reset stays host-side on purpose. Mirroring the integer `Rng`
+//! stream in-graph would change the draw order the host tasks define, so
+//! instead a host [`Mirror`] keeps the reset RNG in lockstep with an
+//! equivalent host env (the `reset_state_row` helpers in `ant.rs` /
+//! `ballbalance.rs` consume identical draws in identical order) and the
+//! full state matrix is pulled back and patched ONLY on steps where some
+//! episode ended — zero extra transfer on no-done steps, which is the
+//! common case away from the synchronized initial timeouts.
+//!
+//! Parity with the host envs is tolerance-banded, not bit-exact: XLA CPU
+//! contracts mul+add chains into FMAs (measured 1–2 ulp per step, more
+//! under cancellation), so `tests/env_parity.rs` pins `done` and the f32
+//! `steps` counter exactly and the continuous fields within bands.
+
+use super::{ant, ballbalance, StepOut, VecEnv};
+use crate::runtime::{Engine, Executable, ResidentSpec, ResidentState, TensorView};
+use crate::util::Rng;
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+/// Tasks with a device mirror lowered by `python/compile/env_step.py`.
+/// The rest of the suite (quaternion attitude, `Servo` stiction) stays
+/// host-only — see ROADMAP.md.
+pub const DEVICE_TASKS: [&str; 2] = ["ant", "ballbalance_vision"];
+
+/// Whether `task` has device env graphs at all.
+pub fn device_supported(task: &str) -> bool {
+    DEVICE_TASKS.contains(&task)
+}
+
+/// Artifact name of a per-N env graph: `env_step_n{N}` / `step_infer_n{N}`.
+/// The N grid is fixed at lowering time (`aot.py emit_env`), so `num_envs`
+/// must be one of the emitted sizes.
+pub fn env_artifact(base: &str, n: usize) -> String {
+    format!("{base}_n{n}")
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Kind {
+    Ant,
+    Ball,
+}
+
+/// Host-side mirror of the device env: the `[N, state_dim]` state matrix
+/// (authoritative only right after resets or a plane switch — otherwise
+/// the resident literal is), the reset RNG kept in lockstep with the
+/// equivalent host env, and the latest critic observation for the
+/// asymmetric task.
+struct Mirror {
+    kind: Kind,
+    n: usize,
+    sd: usize,
+    od: usize,
+    ad: usize,
+    cd: usize,
+    max_ep: u32,
+    sim_cost: f32,
+    rng: Rng,
+    state: Vec<f32>,
+    /// `[N * cd]`, vision task only (empty for symmetric tasks).
+    cobs: Vec<f32>,
+}
+
+impl Mirror {
+    fn new(task: &str, n: usize, seed: u64) -> Result<Mirror> {
+        // Same seed transform as `envs::make`, so a mirror and a host env
+        // built from the same (task, n, seed) produce identical episodes.
+        let rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
+        let mut m = match task {
+            "ant" => Mirror {
+                kind: Kind::Ant,
+                n,
+                sd: ant::STATE_DIM,
+                od: ant::OBS_DIM,
+                ad: ant::ACT_DIM,
+                cd: ant::OBS_DIM,
+                max_ep: ant::EP_LEN,
+                sim_cost: 1.0,
+                rng,
+                state: vec![0.0; n * ant::STATE_DIM],
+                cobs: Vec::new(),
+            },
+            "ballbalance_vision" => Mirror {
+                kind: Kind::Ball,
+                n,
+                sd: ballbalance::STATE_DIM,
+                od: ballbalance::OBS_DIM,
+                ad: ballbalance::ACT_DIM,
+                cd: ballbalance::CRITIC_OBS_DIM,
+                max_ep: ballbalance::EP_LEN,
+                sim_cost: 3.0,
+                rng,
+                state: vec![0.0; n * ballbalance::STATE_DIM],
+                cobs: vec![0.0; n * ballbalance::CRITIC_OBS_DIM],
+            },
+            other => bail!(
+                "task {other:?} has no device env mirror (host-only dynamics); \
+                 device tasks: {DEVICE_TASKS:?}"
+            ),
+        };
+        if m.kind == Kind::Ball {
+            // BallBalance::new itself resets every env (4 draws each)
+            // before the trainer's reset_all draws again — replay the
+            // constructor phase to stay in RNG lockstep.
+            for i in 0..n {
+                m.reset_row(i);
+            }
+        }
+        Ok(m)
+    }
+
+    fn reset_row(&mut self, i: usize) {
+        let row = &mut self.state[i * self.sd..(i + 1) * self.sd];
+        match self.kind {
+            Kind::Ant => ant::reset_state_row(row, &mut self.rng),
+            Kind::Ball => ballbalance::reset_state_row(row, &mut self.rng),
+        }
+    }
+
+    fn write_obs_row(&self, i: usize, obs: &mut [f32]) {
+        let row = &self.state[i * self.sd..(i + 1) * self.sd];
+        let o = &mut obs[i * self.od..(i + 1) * self.od];
+        match self.kind {
+            Kind::Ant => ant::write_obs_from_row(row, o),
+            Kind::Ball => ballbalance::write_obs_from_row(row, o),
+        }
+    }
+
+    fn refresh_cobs_row(&mut self, i: usize) {
+        if self.cobs.is_empty() {
+            return;
+        }
+        let row = &self.state[i * self.sd..(i + 1) * self.sd];
+        let o = &mut self.cobs[i * self.cd..(i + 1) * self.cd];
+        ballbalance::write_critic_obs_from_row(row, o);
+    }
+
+    fn reset_all(&mut self, obs: &mut [f32]) {
+        for i in 0..self.n {
+            self.reset_row(i);
+            self.write_obs_row(i, obs);
+            self.refresh_cobs_row(i);
+        }
+    }
+}
+
+fn input_slot(exe: &Executable, name: &str) -> Result<usize> {
+    exe.info
+        .inputs
+        .iter()
+        .position(|(n, _)| n == name)
+        .with_context(|| format!("env graph missing input `{name}`"))
+}
+
+/// One loaded env graph plus its device-resident call state and the
+/// name-resolved fetch positions.
+struct Plane {
+    exe: Arc<Executable>,
+    spec: ResidentSpec,
+    res: Option<ResidentState>,
+    state_slot: usize,
+    fetch_obs: usize,
+    fetch_reward: usize,
+    fetch_done: usize,
+    fetch_act: Option<usize>,
+    fetch_cobs: Option<usize>,
+    /// The resident `state` literal no longer matches the authoritative
+    /// `Mirror::state` (host resets happened, or the other plane stepped):
+    /// restage before the next run.
+    stale: bool,
+}
+
+impl Plane {
+    fn load(engine: &mut Engine, task: &str, base: &str, n: usize, sd: usize) -> Result<Plane> {
+        let name = env_artifact(base, n);
+        let exe = engine.load(task, &name).with_context(|| {
+            format!(
+                "device env graphs are lowered on a fixed N grid by \
+                 `python -m compile.aot`; no `{name}` for task {task} \
+                 (num_envs must be an emitted size)"
+            )
+        })?;
+        let spec = ResidentSpec::from_manifest(&exe.info)?;
+        let state_slot = input_slot(&exe, "state")?;
+        // env_step.py names the state output like the state input exactly
+        // so ResidentSpec derives this loop; anything else is malformed.
+        if spec.feedback != [(0, state_slot)] {
+            bail!("{name}: expected the state output to be the sole feedback loop");
+        }
+        if exe.info.inputs[state_slot].1 != [n, sd] {
+            bail!(
+                "{name}: state input shape {:?} != [{n}, {sd}]",
+                exe.info.inputs[state_slot].1
+            );
+        }
+        let pos = |nm: &str| {
+            spec.fetch_pos(nm)
+                .with_context(|| format!("{name}: no fetched output `{nm}`"))
+        };
+        Ok(Plane {
+            state_slot,
+            fetch_obs: pos("obs")?,
+            fetch_reward: pos("reward")?,
+            fetch_done: pos("done")?,
+            fetch_act: spec.fetch_pos("act"),
+            fetch_cobs: spec.fetch_pos("cobs"),
+            exe,
+            spec,
+            res: None,
+            stale: false,
+        })
+    }
+}
+
+/// Which plane's resident literal currently holds the authoritative env
+/// state. `Host` means `Mirror::state` does (after `reset_all`).
+#[derive(Clone, Copy, PartialEq)]
+enum Active {
+    Host,
+    Step,
+    Fused,
+}
+
+/// A device-resident environment batch: an `env_step` plane (explicit
+/// host actions — the [`VecEnv`] adapter and warmup path) plus an
+/// optional fused `step_infer` plane (policy actions computed in-graph).
+pub struct DeviceEnv {
+    mirror: Mirror,
+    step: Plane,
+    fused: Option<Plane>,
+    active: Active,
+    // Host copies of θ_a / μ / σ², held only until the fused resident
+    // state exists (they seed `make_resident`); afterwards publishes
+    // restage the device slots directly and these stay empty.
+    theta: Vec<f32>,
+    mu: Vec<f32>,
+    var: Vec<f32>,
+}
+
+impl DeviceEnv {
+    /// Load the `env_step_n{N}` plane for `task` at exactly `num_envs`
+    /// (and the `step_infer_n{N}` plane too when `with_fused`).
+    pub fn new(
+        engine: &mut Engine,
+        task: &str,
+        num_envs: usize,
+        seed: u64,
+        with_fused: bool,
+    ) -> Result<DeviceEnv> {
+        let mirror = Mirror::new(task, num_envs, seed)?;
+        let step = Plane::load(engine, task, "env_step", num_envs, mirror.sd)?;
+        let fused = if with_fused {
+            Some(Plane::load(engine, task, "step_infer", num_envs, mirror.sd)?)
+        } else {
+            None
+        };
+        Ok(DeviceEnv {
+            mirror,
+            step,
+            fused,
+            active: Active::Host,
+            theta: Vec::new(),
+            mu: Vec::new(),
+            var: Vec::new(),
+        })
+    }
+
+    pub fn num_envs(&self) -> usize {
+        self.mirror.n
+    }
+    pub fn obs_dim(&self) -> usize {
+        self.mirror.od
+    }
+    pub fn act_dim(&self) -> usize {
+        self.mirror.ad
+    }
+    pub fn critic_obs_dim(&self) -> usize {
+        self.mirror.cd
+    }
+    pub fn max_episode_len(&self) -> u32 {
+        self.mirror.max_ep
+    }
+    pub fn sim_cost(&self) -> f32 {
+        self.mirror.sim_cost
+    }
+    /// Whether the asymmetric critic observation is produced (vision task).
+    pub fn has_critic_obs(&self) -> bool {
+        !self.mirror.cobs.is_empty()
+    }
+
+    /// Total f32 elements staged host→device across both planes
+    /// (initial seeding + every restage). The steady-state fused budget —
+    /// noise only, plus μ/σ²/θ_a republish cadences — is what
+    /// `tests/env_parity.rs` pins against this counter.
+    pub fn staged_elems(&self) -> u64 {
+        let of = |p: &Plane| p.res.as_ref().map_or(0, |r| r.staged_elems());
+        of(&self.step) + self.fused.as_ref().map_or(0, of)
+    }
+
+    /// Total f32 elements fetched device→host (transition fields only in
+    /// steady state; feedback `state` moves literal-to-literal).
+    pub fn fetched_elems(&self) -> u64 {
+        let of = |p: &Plane| p.res.as_ref().map_or(0, |r| r.fetched_elems());
+        of(&self.step) + self.fused.as_ref().map_or(0, of)
+    }
+
+    /// Reset every environment host-side; fills `obs[N * obs_dim]`. The
+    /// state matrix restages lazily on the next step of whichever plane
+    /// runs.
+    pub fn reset_all(&mut self, obs: &mut [f32]) {
+        self.mirror.reset_all(obs);
+        self.active = Active::Host;
+        self.step.stale = true;
+        if let Some(f) = self.fused.as_mut() {
+            f.stale = true;
+        }
+    }
+
+    /// Copy the latest critic observation `[N * critic_obs_dim]`
+    /// (asymmetric task only).
+    pub fn fill_critic_obs(&self, out: &mut [f32]) {
+        assert!(
+            !self.mirror.cobs.is_empty(),
+            "symmetric task has no separate critic observation"
+        );
+        out.copy_from_slice(&self.mirror.cobs);
+    }
+
+    /// Pull the authoritative device state back into the host mirror and
+    /// mark both planes stale. Plane switches only — never the hot path.
+    fn sync_to_host(&mut self) -> Result<()> {
+        let plane = match self.active {
+            Active::Host => None,
+            Active::Step => Some(&self.step),
+            Active::Fused => Some(self.fused.as_ref().expect("active fused plane")),
+        };
+        if let Some(p) = plane {
+            let res = p.res.as_ref().expect("active plane has resident state");
+            self.mirror.state = res.to_host(p.state_slot)?;
+        }
+        self.active = Active::Host;
+        self.step.stale = true;
+        if let Some(f) = self.fused.as_mut() {
+            f.stale = true;
+        }
+        Ok(())
+    }
+
+    /// Step all envs via the `env_step` plane with host-provided
+    /// `actions[N * act_dim]` in [-1, 1].
+    pub fn step_actions(&mut self, actions: &[f32], out: &mut StepOut) -> Result<()> {
+        let (n, sd, ad) = (self.mirror.n, self.mirror.sd, self.mirror.ad);
+        debug_assert_eq!(actions.len(), n * ad);
+        if self.active == Active::Fused {
+            self.sync_to_host()?;
+        }
+        let act_view = TensorView::new(&[n, ad], actions);
+        let p = &mut self.step;
+        match p.res.as_mut() {
+            None => {
+                let state_view = TensorView::new(&[n, sd], &self.mirror.state);
+                let views = p
+                    .exe
+                    .info
+                    .inputs
+                    .iter()
+                    .map(|(nm, _)| match nm.as_str() {
+                        "state" => Ok(state_view),
+                        "action" => Ok(act_view),
+                        other => bail!("env_step: unexpected input `{other}`"),
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let prepared = p.exe.prepare(&views)?;
+                p.res =
+                    Some(p.exe.make_resident(prepared, &p.spec.feedback, &p.spec.fetch_indices())?);
+            }
+            Some(res) => {
+                if p.stale {
+                    let state_view = TensorView::new(&[n, sd], &self.mirror.state);
+                    p.exe.restage_resident(res, p.state_slot, state_view)?;
+                }
+                p.exe.restage_resident(res, input_slot(&p.exe, "action")?, act_view)?;
+            }
+        }
+        p.stale = false;
+        let fetched = p.exe.run_resident(p.res.as_mut().expect("just seeded"))?;
+        self.active = Active::Step;
+        if let Some(f) = self.fused.as_mut() {
+            f.stale = true;
+        }
+        self.finish(false, &fetched, out, None)
+    }
+
+    /// Step all envs via the fused `step_infer` plane: the device
+    /// normalizes the current obs, runs the actor forward pass, adds the
+    /// host-staged pre-scaled `noise[N * act_dim]`, clamps, and steps —
+    /// one dispatch, no obs upload. The executed actions land in
+    /// `actions_out` for the replay feed.
+    pub fn step_fused(
+        &mut self,
+        noise: &[f32],
+        out: &mut StepOut,
+        actions_out: &mut [f32],
+    ) -> Result<()> {
+        let (n, sd, ad) = (self.mirror.n, self.mirror.sd, self.mirror.ad);
+        debug_assert_eq!(noise.len(), n * ad);
+        if self.active == Active::Step {
+            self.sync_to_host()?;
+        }
+        let f = self
+            .fused
+            .as_mut()
+            .context("device env loaded without the fused plane")?;
+        let noise_view = TensorView::new(&[n, ad], noise);
+        match f.res.as_mut() {
+            None => {
+                if self.theta.is_empty() || self.mu.is_empty() {
+                    bail!("step_fused before set_theta/set_norm seeded the policy inputs");
+                }
+                let state_view = TensorView::new(&[n, sd], &self.mirror.state);
+                let views = f
+                    .exe
+                    .info
+                    .inputs
+                    .iter()
+                    .map(|(nm, _)| match nm.as_str() {
+                        "state" => Ok(state_view),
+                        "theta_a" => Ok(TensorView::vec(&self.theta)),
+                        "mu" => Ok(TensorView::vec(&self.mu)),
+                        "var" => Ok(TensorView::vec(&self.var)),
+                        "noise" => Ok(noise_view),
+                        other => bail!("step_infer: unexpected input `{other}`"),
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let prepared = f.exe.prepare(&views)?;
+                f.res =
+                    Some(f.exe.make_resident(prepared, &f.spec.feedback, &f.spec.fetch_indices())?);
+                // The device owns the policy inputs now; publishes restage
+                // the slots directly.
+                self.theta = Vec::new();
+                self.mu = Vec::new();
+                self.var = Vec::new();
+            }
+            Some(res) => {
+                if f.stale {
+                    let state_view = TensorView::new(&[n, sd], &self.mirror.state);
+                    f.exe.restage_resident(res, f.state_slot, state_view)?;
+                }
+                f.exe.restage_resident(res, input_slot(&f.exe, "noise")?, noise_view)?;
+            }
+        }
+        f.stale = false;
+        let fetched = f.exe.run_resident(f.res.as_mut().expect("just seeded"))?;
+        self.active = Active::Fused;
+        self.step.stale = true;
+        self.finish(true, &fetched, out, Some(actions_out))
+    }
+
+    /// Publish actor parameters to the fused plane. Held host-side until
+    /// the first fused step seeds the resident state; a direct restage of
+    /// the θ_a slot afterwards.
+    pub fn set_theta(&mut self, theta: &[f32]) -> Result<()> {
+        let f = self
+            .fused
+            .as_mut()
+            .context("device env loaded without the fused plane")?;
+        match f.res.as_mut() {
+            Some(res) => {
+                f.exe
+                    .restage_resident(res, input_slot(&f.exe, "theta_a")?, TensorView::vec(theta))
+            }
+            None => {
+                self.theta.clear();
+                self.theta.extend_from_slice(theta);
+                Ok(())
+            }
+        }
+    }
+
+    /// Publish obs-normalizer statistics (μ, σ²) to the fused plane.
+    pub fn set_norm(&mut self, mu: &[f32], var: &[f32]) -> Result<()> {
+        let f = self
+            .fused
+            .as_mut()
+            .context("device env loaded without the fused plane")?;
+        match f.res.as_mut() {
+            Some(res) => {
+                f.exe
+                    .restage_resident(res, input_slot(&f.exe, "mu")?, TensorView::vec(mu))?;
+                f.exe
+                    .restage_resident(res, input_slot(&f.exe, "var")?, TensorView::vec(var))
+            }
+            None => {
+                self.mu.clear();
+                self.mu.extend_from_slice(mu);
+                self.var.clear();
+                self.var.extend_from_slice(var);
+                Ok(())
+            }
+        }
+    }
+
+    /// Copy the fetched transition into `out`, then run the host-side
+    /// auto-reset protocol: only when some episode ended, pull the
+    /// post-step state matrix, redraw the finished rows with the lockstep
+    /// RNG, overwrite their obs (done is reported with the first obs of
+    /// the NEW episode, like the host envs), and restage the patched
+    /// matrix into the plane that just ran.
+    fn finish(
+        &mut self,
+        fused: bool,
+        fetched: &[Vec<f32>],
+        out: &mut StepOut,
+        actions_out: Option<&mut [f32]>,
+    ) -> Result<()> {
+        let p = if fused {
+            self.fused.as_ref().expect("fused plane")
+        } else {
+            &self.step
+        };
+        out.obs.copy_from_slice(&fetched[p.fetch_obs]);
+        out.reward.copy_from_slice(&fetched[p.fetch_reward]);
+        out.done.copy_from_slice(&fetched[p.fetch_done]);
+        if let Some(acts) = actions_out {
+            let ai = p.fetch_act.context("plane does not fetch actions")?;
+            acts.copy_from_slice(&fetched[ai]);
+        }
+        if let Some(ci) = p.fetch_cobs {
+            self.mirror.cobs.copy_from_slice(&fetched[ci]);
+        }
+        if out.done.iter().all(|&d| d == 0.0) {
+            return Ok(());
+        }
+        let res = p.res.as_ref().expect("plane just ran");
+        self.mirror.state = res.to_host(p.state_slot)?;
+        for i in 0..self.mirror.n {
+            if out.done[i] == 0.0 {
+                continue;
+            }
+            self.mirror.reset_row(i);
+            self.mirror.write_obs_row(i, &mut out.obs);
+            self.mirror.refresh_cobs_row(i);
+        }
+        let state_view = TensorView::new(&[self.mirror.n, self.mirror.sd], &self.mirror.state);
+        let pm = if fused {
+            self.fused.as_mut().expect("fused plane")
+        } else {
+            &mut self.step
+        };
+        pm.exe
+            .restage_resident(pm.res.as_mut().expect("plane just ran"), pm.state_slot, state_view)
+    }
+}
+
+/// [`VecEnv`] adapter over the explicit-action plane, so benches and the
+/// warmup path drive device stepping through the same trait as the host
+/// envs. The fused plane is not loaded — `DeviceEnv` is used directly
+/// where in-graph inference is wanted.
+pub struct DeviceVecEnv {
+    inner: DeviceEnv,
+}
+
+impl DeviceVecEnv {
+    pub fn new(engine: &mut Engine, task: &str, num_envs: usize, seed: u64) -> Result<DeviceVecEnv> {
+        Ok(DeviceVecEnv { inner: DeviceEnv::new(engine, task, num_envs, seed, false)? })
+    }
+
+    pub fn staged_elems(&self) -> u64 {
+        self.inner.staged_elems()
+    }
+    pub fn fetched_elems(&self) -> u64 {
+        self.inner.fetched_elems()
+    }
+}
+
+// SAFETY: `DeviceEnv` is !Send only because `ResidentState` holds
+// `xla::Literal`s. Literals are standalone host-memory objects with no
+// client reference (see the `Executable` SAFETY notes in
+// runtime/engine.rs), the executable itself is `Send + Sync` by the same
+// argument, and the adapter is moved into exactly one actor thread —
+// never shared.
+unsafe impl Send for DeviceVecEnv {}
+
+impl VecEnv for DeviceVecEnv {
+    fn num_envs(&self) -> usize {
+        self.inner.num_envs()
+    }
+    fn obs_dim(&self) -> usize {
+        self.inner.obs_dim()
+    }
+    fn act_dim(&self) -> usize {
+        self.inner.act_dim()
+    }
+    fn critic_obs_dim(&self) -> usize {
+        self.inner.critic_obs_dim()
+    }
+    fn max_episode_len(&self) -> u32 {
+        self.inner.max_episode_len()
+    }
+    fn sim_cost(&self) -> f32 {
+        self.inner.sim_cost()
+    }
+    fn reset_all(&mut self, obs: &mut [f32]) {
+        self.inner.reset_all(obs);
+    }
+    fn step(&mut self, actions: &[f32], out: &mut StepOut) {
+        self.inner.step_actions(actions, out).expect("device env step");
+    }
+    fn fill_critic_obs(&self, out: &mut [f32]) {
+        if !self.inner.has_critic_obs() {
+            unimplemented!("symmetric task has no separate critic observation");
+        }
+        self.inner.fill_critic_obs(out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_task_list() {
+        assert!(device_supported("ant"));
+        assert!(device_supported("ballbalance_vision"));
+        assert!(!device_supported("humanoid"));
+        assert_eq!(env_artifact("env_step", 4096), "env_step_n4096");
+    }
+
+    #[test]
+    fn mirror_tracks_host_env_resets() {
+        // The mirror's reset_all must reproduce the host env's reset_all
+        // exactly — same draws, same obs bytes — for both device tasks.
+        for task in DEVICE_TASKS {
+            let mut host = super::super::make(task, 3, 99).unwrap();
+            let (n, od, cd) = (3, host.obs_dim(), host.critic_obs_dim());
+            let mut m = Mirror::new(task, n, 99).unwrap();
+            let mut ho = vec![0.0; n * od];
+            let mut mo = vec![1.0; n * od];
+            host.reset_all(&mut ho);
+            m.reset_all(&mut mo);
+            assert_eq!(ho, mo, "{task}: reset obs");
+            if task == &"ballbalance_vision" {
+                let mut hc = vec![0.0; n * cd];
+                host.fill_critic_obs(&mut hc);
+                assert_eq!(hc, m.cobs, "{task}: critic obs");
+            }
+        }
+    }
+
+    #[test]
+    fn unsupported_task_rejected() {
+        assert!(Mirror::new("dclaw", 2, 0).is_err());
+    }
+}

@@ -2,11 +2,16 @@
 //! second-order actuators. Everything is f32 and allocation-free.
 
 /// Wrap an angle to (-pi, pi].
+///
+/// The `x <= 0.0` fixup (not `<`) is what makes the upper bound inclusive:
+/// both exact boundary inputs, `pi + 2*pi*k` and `-pi + 2*pi*k`, land the
+/// truncated remainder on 0 and must map to +pi, never -pi. The XLA env
+/// mirror (python/compile/env_step.py) replicates exactly this formula.
 #[inline]
 pub fn wrap_angle(a: f32) -> f32 {
     let two_pi = 2.0 * std::f32::consts::PI;
     let mut x = (a + std::f32::consts::PI) % two_pi;
-    if x < 0.0 {
+    if x <= 0.0 {
         x += two_pi;
     }
     x - std::f32::consts::PI
@@ -130,6 +135,23 @@ mod tests {
             // Same direction: sin/cos must match.
             assert!((w.sin() - a.sin()).abs() < 1e-4);
             assert!((w.cos() - a.cos()).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn wrap_angle_boundary() {
+        use std::f32::consts::PI;
+        // Contract is (-pi, pi]: both exact boundaries map to +pi.
+        assert_eq!(wrap_angle(PI), PI);
+        assert_eq!(wrap_angle(-PI), PI);
+        assert_eq!(wrap_angle(0.0), 0.0);
+        for k in -3..=3i32 {
+            let a = PI + 2.0 * PI * k as f32;
+            let w = wrap_angle(a);
+            assert!(w > -PI && w <= PI, "a={a} w={w}");
+            // Same direction modulo the f32 rounding of the 2*pi multiples.
+            assert!((w.sin() - a.sin()).abs() < 1e-4, "a={a}");
+            assert!((w.cos() - a.cos()).abs() < 1e-4, "a={a}");
         }
     }
 

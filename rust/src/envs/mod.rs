@@ -11,6 +11,7 @@
 //! of the new episode*, matching Isaac Gym's semantics (the transition
 //! `(s_T, a, r, s_0')` is marked done so bootstrap masks it out).
 
+pub mod device;
 pub mod dynamics;
 pub mod render;
 pub mod sharded;
@@ -24,6 +25,7 @@ mod franka_cube;
 mod humanoid;
 mod shadow_hand;
 
+pub use device::{DeviceEnv, DeviceVecEnv};
 pub use sharded::ShardedEnv;
 
 use crate::util::Rng;

@@ -57,6 +57,26 @@ impl Noise {
     pub fn fill_standard(&mut self, out: &mut [f32]) {
         self.rng.fill_normal(out);
     }
+
+    /// Fill `out[N * act_dim]` with per-env pre-scaled noise σ_i·N(0,1)
+    /// for the fused device step, which adds it to the in-graph policy
+    /// action and clamps. Mirrors [`Noise::apply`]'s draw discipline
+    /// exactly: a σ = 0 row is zeroed WITHOUT consuming draws, so a host
+    /// loop and a fused loop over the same ladder stay in RNG lockstep.
+    pub fn fill_scaled(&mut self, out: &mut [f32]) {
+        let ad = self.act_dim;
+        debug_assert_eq!(out.len() % ad, 0);
+        for (i, row) in out.chunks_exact_mut(ad).enumerate() {
+            let s = self.sigmas[i];
+            if s == 0.0 {
+                row.fill(0.0);
+                continue;
+            }
+            for v in row.iter_mut() {
+                *v = self.rng.normal() * s;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -115,6 +135,23 @@ mod tests {
         let last: f32 = a[28..32].iter().map(|v| v.abs()).sum();
         assert_eq!(first, 0.0);
         assert!(last > 0.0);
+    }
+
+    #[test]
+    fn fill_scaled_matches_apply_draws() {
+        // Same seed: applying noise to zero actions must equal the
+        // clamped pre-scaled buffer — including the σ=0 row consuming no
+        // draws on either path.
+        let mk = || {
+            Noise::new(Exploration::Mixed { min: 0.0, max: 0.9 }, 8, 3, Rng::new(5))
+        };
+        let mut acts = vec![0.0f32; 24];
+        mk().apply(&mut acts);
+        let mut scaled = vec![7.0f32; 24];
+        mk().fill_scaled(&mut scaled);
+        for (a, s) in acts.iter().zip(&scaled) {
+            assert_eq!(*a, s.clamp(-1.0, 1.0));
+        }
     }
 
     #[test]

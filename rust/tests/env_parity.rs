@@ -1,0 +1,367 @@
+//! Host/device parity for the accelerator-resident simulation plane.
+//!
+//! The XLA env graphs (`env_step_n{N}` / `step_infer_n{N}`, lowered by
+//! `python/compile/env_step.py`) mirror the host dynamics op-for-op, but
+//! XLA CPU contracts mul+add chains into FMAs — measured 1–2 ulp of
+//! drift per step on the continuous fields, more under cancellation — so
+//! parity is tolerance-banded, NOT bit-exact. What IS exact on both
+//! paths:
+//!
+//! - reset draws: host-side auto-reset on both paths consumes the same
+//!   RNG stream in the same order, so states re-converge to bit-equal at
+//!   every episode boundary (within-episode FMA drift never compounds
+//!   across episodes), and
+//! - the timeout component of `done`: the f32 step counter is exact
+//!   integer arithmetic on both paths.
+//!
+//! The failure component of `done` thresholds a *banded* quantity (ball
+//! distance, ant cross-track position), so when a crossing lands within
+//! the FMA band of the threshold the two paths may legitimately disagree
+//! for one env. The harness verifies any `done` mismatch IS such a
+//! boundary flip (the non-done side must sit within a small band of the
+//! threshold), then rebuilds both sides — the flipped side consumed
+//! extra reset draws, so the streams are offset and only a fresh
+//! construction realigns them — and keeps going. Any other disagreement
+//! is a real divergence and fails.
+//!
+//! Tests skip with a notice when the artifact set (or its env graphs) is
+//! absent; `python -m compile.aot --quick` emits the N=64 graphs used
+//! here.
+
+use pql::envs::{self, DeviceEnv, DeviceVecEnv, StepOut, VecEnv};
+use pql::runtime::{infer_chunked, Engine};
+use pql::util::Rng;
+use std::path::{Path, PathBuf};
+
+/// Env count of the graphs under test — the smallest size on the emitted
+/// N grid (`--quick` covers it).
+const N: usize = 64;
+
+fn art() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// Distance of env `i`'s failure quantity from its termination threshold,
+/// read from the side that did NOT report done (the done side's outputs
+/// already show the next episode's reset values). `cobs` is that side's
+/// freshly filled critic observation (vision task; unused for ant).
+fn boundary_gap(task: &str, i: usize, od: usize, cd: usize, out: &StepOut, cobs: &[f32]) -> f32 {
+    match task {
+        // off := dist > 0.95; critic-obs column 6 is the distance.
+        "ballbalance_vision" => (cobs[i * cd + 6] - 0.95).abs(),
+        // off := |py| > 3.0; obs column 5 is py / 3.0.
+        "ant" => ((out.obs[i * od + 5] * 3.0).abs() - 3.0).abs(),
+        other => panic!("no boundary predicate for {other}"),
+    }
+}
+
+/// Free-run `steps` lockstep steps on both paths with identical actions,
+/// asserting banded parity each step and exact `done` agreement up to
+/// verified boundary flips.
+fn run_parity(
+    eng: &mut Engine,
+    task: &str,
+    steps: usize,
+    band: f32,
+    flip_band: f32,
+    mut mk_actions: impl FnMut(&mut [f32]),
+) {
+    let mut seed = 11u64;
+    let mut dev = match DeviceVecEnv::new(eng, task, N, seed) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("skipping env parity for {task}: {e:#}");
+            return;
+        }
+    };
+    let mut host = envs::make(task, N, seed).unwrap();
+    let (od, ad, cd) = (host.obs_dim(), host.act_dim(), host.critic_obs_dim());
+    let vision = cd != od;
+
+    let mut ho = vec![0.0; N * od];
+    let mut do_ = vec![1.0; N * od];
+    host.reset_all(&mut ho);
+    dev.reset_all(&mut do_);
+    assert_eq!(ho, do_, "{task}: reset obs must be bit-equal (same draws)");
+
+    let mut h_out = StepOut::new(N, od);
+    let mut d_out = StepOut::new(N, od);
+    let mut acts = vec![0.0; N * ad];
+    let (mut hc, mut dc) = (vec![0.0; N * cd], vec![0.0; N * cd]);
+    let mut resyncs = 0;
+    for t in 0..steps {
+        mk_actions(&mut acts);
+        host.step(&acts, &mut h_out);
+        dev.step(&acts, &mut d_out);
+        if h_out.done != d_out.done {
+            if vision {
+                host.fill_critic_obs(&mut hc);
+                dev.fill_critic_obs(&mut dc);
+            }
+            for i in 0..N {
+                if h_out.done[i] != d_out.done[i] {
+                    let gap = if h_out.done[i] == 0.0 {
+                        boundary_gap(task, i, od, cd, &h_out, &hc)
+                    } else {
+                        boundary_gap(task, i, od, cd, &d_out, &dc)
+                    };
+                    assert!(
+                        gap < flip_band,
+                        "{task} step {t}: done mismatch at env {i} with boundary \
+                         gap {gap} — real divergence, not an FMA boundary flip"
+                    );
+                }
+            }
+            resyncs += 1;
+            assert!(
+                resyncs <= 5,
+                "{task}: {resyncs} boundary flips in {steps} steps — divergence?"
+            );
+            // The flipped side consumed extra reset draws; rebuild both
+            // sides so the RNG streams start aligned again.
+            seed += 1;
+            host = envs::make(task, N, seed).unwrap();
+            dev = DeviceVecEnv::new(eng, task, N, seed).unwrap();
+            host.reset_all(&mut ho);
+            dev.reset_all(&mut do_);
+            assert_eq!(ho, do_, "{task}: post-resync reset obs bit-equal");
+            continue;
+        }
+        let d = max_abs_diff(&h_out.obs, &d_out.obs);
+        assert!(d < band, "{task} step {t}: obs diff {d} > {band}");
+        let d = max_abs_diff(&h_out.reward, &d_out.reward);
+        assert!(d < band, "{task} step {t}: reward diff {d} > {band}");
+        if vision {
+            host.fill_critic_obs(&mut hc);
+            dev.fill_critic_obs(&mut dc);
+            let d = max_abs_diff(&hc, &dc);
+            assert!(d < band, "{task} step {t}: critic obs diff {d} > {band}");
+        }
+    }
+}
+
+/// ball: 260 steps crosses the EP_LEN=250 synchronized timeout (a `done`
+/// wave that must match exactly on both sides) plus plenty of fall-off
+/// resets along the way. The band is a generous ceiling over the
+/// measured ≲1e-5 within-episode drift.
+#[test]
+fn env_step_parity_ballbalance() {
+    let Some(root) = art() else { return };
+    let Ok(mut eng) = Engine::new(&root) else { return };
+    let mut arng = Rng::new(1234);
+    run_parity(&mut eng, "ballbalance_vision", 260, 1e-4, 1e-3, |a| {
+        arng.fill_uniform(a, -0.3, 0.3);
+    });
+}
+
+/// ant: 320 steps crosses the EP_LEN=300 timeout. Wider band — the state
+/// is unbounded (positions and velocities integrate) and episodes are
+/// longer, so drift accumulates further before resets re-converge it.
+#[test]
+fn env_step_parity_ant() {
+    let Some(root) = art() else { return };
+    let Ok(mut eng) = Engine::new(&root) else { return };
+    let mut arng = Rng::new(99);
+    run_parity(&mut eng, "ant", 320, 1e-3, 5e-3, |a| {
+        arng.fill_uniform(a, -1.0, 1.0);
+    });
+}
+
+/// Fused-plane fixture: engine + device env with the `step_infer` plane,
+/// policy inputs seeded (random θ_a, identity normalizer).
+struct Fused {
+    eng: Engine,
+    dev: DeviceEnv,
+    theta: Vec<f32>,
+    mu: Vec<f32>,
+    var: Vec<f32>,
+    chunk: usize,
+}
+
+fn fused_setup(task: &str, seed: u64) -> Option<Fused> {
+    let root = art()?;
+    let Ok(mut eng) = Engine::new(&root) else { return None };
+    let mut dev = match DeviceEnv::new(&mut eng, task, N, seed, true) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("skipping fused parity for {task}: {e:#}");
+            return None;
+        }
+    };
+    let m = std::sync::Arc::clone(&eng.manifest);
+    let info = m.task(task).unwrap();
+    let theta = info.layouts["actor"].init(&mut Rng::new(7));
+    let mu = vec![0.0; info.obs_dim];
+    let var = vec![1.0; info.obs_dim];
+    dev.set_theta(&theta).unwrap();
+    dev.set_norm(&mu, &var).unwrap();
+    Some(Fused { eng, dev, theta, mu, var, chunk: m.chunk })
+}
+
+/// Fused plane: the device computes actions in-graph. The check splits in
+/// two — (a) the fetched device action must band-match the host-side
+/// composition `clamp(actor_infer(norm(obs)) + noise)` over the same
+/// pre-step obs, and (b) a host env driven with the DEVICE's executed
+/// actions must band-match the device transition (identical action
+/// inputs make the explicit-plane env-math parity transfer here).
+fn fused_parity(task: &str, steps: usize, band: f32, flip_band: f32) {
+    let Some(mut fx) = fused_setup(task, 21) else { return };
+    let infer = fx.eng.load(task, "actor_infer").unwrap();
+    let mut host = envs::make(task, N, 21).unwrap();
+    let (od, ad, cd) = (host.obs_dim(), host.act_dim(), host.critic_obs_dim());
+    let vision = cd != od;
+
+    let mut ho = vec![0.0; N * od];
+    let mut obs = vec![1.0; N * od];
+    host.reset_all(&mut ho);
+    fx.dev.reset_all(&mut obs);
+    assert_eq!(ho, obs, "{task}: reset obs must be bit-equal (same draws)");
+
+    let mut h_out = StepOut::new(N, od);
+    let mut d_out = StepOut::new(N, od);
+    let mut d_acts = vec![0.0; N * ad];
+    let mut ref_acts = vec![0.0; N * ad];
+    let mut noise = vec![0.0; N * ad];
+    let mut nrng = Rng::new(4242);
+    let (mut hc, mut dc) = (vec![0.0; N * cd], vec![0.0; N * cd]);
+    for t in 0..steps {
+        nrng.fill_uniform(&mut noise, -0.1, 0.1);
+        fx.dev.step_fused(&noise, &mut d_out, &mut d_acts).unwrap();
+        // (a) action parity against the host composition over the same
+        // pre-step obs + noise.
+        infer_chunked(
+            &infer, &fx.theta, &obs, N, od, ad, &fx.mu, &fx.var, fx.chunk, None, &mut ref_acts,
+        )
+        .unwrap();
+        for (r, z) in ref_acts.iter_mut().zip(&noise) {
+            *r = (*r + z).clamp(-1.0, 1.0);
+        }
+        let d = max_abs_diff(&d_acts, &ref_acts);
+        assert!(d < band, "{task} step {t}: action diff {d} > {band}");
+        // (b) transition parity: drive the host env with the device's
+        // executed actions.
+        host.step(&d_acts, &mut h_out);
+        if h_out.done != d_out.done {
+            if vision {
+                host.fill_critic_obs(&mut hc);
+                fx.dev.fill_critic_obs(&mut dc);
+            }
+            for i in 0..N {
+                if h_out.done[i] != d_out.done[i] {
+                    let gap = if h_out.done[i] == 0.0 {
+                        boundary_gap(task, i, od, cd, &h_out, &hc)
+                    } else {
+                        boundary_gap(task, i, od, cd, &d_out, &dc)
+                    };
+                    assert!(
+                        gap < flip_band,
+                        "{task} step {t}: fused done mismatch at env {i}, \
+                         boundary gap {gap} — real divergence"
+                    );
+                }
+            }
+            // A verified boundary flip desynchronizes the reset streams;
+            // t steps of parity are already established, so stop here.
+            eprintln!("fused parity {task}: boundary flip at step {t}; ending early");
+            return;
+        }
+        let d = max_abs_diff(&h_out.obs, &d_out.obs);
+        assert!(d < band, "{task} step {t}: obs diff {d} > {band}");
+        let d = max_abs_diff(&h_out.reward, &d_out.reward);
+        assert!(d < band, "{task} step {t}: reward diff {d} > {band}");
+        if vision {
+            host.fill_critic_obs(&mut hc);
+            fx.dev.fill_critic_obs(&mut dc);
+            let d = max_abs_diff(&hc, &dc);
+            assert!(d < band, "{task} step {t}: critic obs diff {d} > {band}");
+        }
+        obs.copy_from_slice(&d_out.obs);
+    }
+}
+
+#[test]
+fn fused_step_infer_parity_ant() {
+    fused_parity("ant", 80, 1e-3, 5e-3);
+}
+
+#[test]
+fn fused_step_infer_parity_ballbalance() {
+    fused_parity("ballbalance_vision", 80, 1e-3, 1e-3);
+}
+
+/// The explicit-action plane's steady-state traffic contract: a no-done
+/// step stages exactly the action batch and fetches exactly the
+/// transition fields — no state re-upload, no obs upload.
+#[test]
+fn env_step_steady_state_accounting() {
+    let Some(root) = art() else { return };
+    let Ok(mut eng) = Engine::new(&root) else { return };
+    let mut dev = match DeviceVecEnv::new(&mut eng, "ant", N, 5) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("skipping env_step accounting: {e:#}");
+            return;
+        }
+    };
+    let (od, ad) = (dev.obs_dim(), dev.act_dim());
+    let mut obs = vec![0.0; N * od];
+    dev.reset_all(&mut obs);
+    let mut out = StepOut::new(N, od);
+    let acts = vec![0.25; N * ad];
+    // First step seeds the resident state (full state matrix staged) —
+    // measure the step after it. Two steps from reset cannot terminate
+    // (ant starts at |py| <= 0.5 against a 3.0 threshold), so the fetch
+    // set is exactly the transition fields.
+    dev.step(&acts, &mut out);
+    assert!(out.done.iter().all(|&d| d == 0.0), "unexpected done after 1 step");
+    let (s0, f0) = (dev.staged_elems(), dev.fetched_elems());
+    dev.step(&acts, &mut out);
+    assert!(out.done.iter().all(|&d| d == 0.0), "unexpected done after 2 steps");
+    assert_eq!(
+        dev.staged_elems() - s0,
+        (N * ad) as u64,
+        "steady env_step must stage the action batch only"
+    );
+    assert_eq!(
+        dev.fetched_elems() - f0,
+        (N * od + 2 * N) as u64,
+        "steady env_step must fetch obs/reward/done only"
+    );
+}
+
+/// The fused plane's steady-state traffic contract on the vision task:
+/// noise up; obs/reward/done/act/cobs down. In particular zero per-step
+/// observation upload and no θ_a/μ/σ² re-staging.
+#[test]
+fn fused_steady_state_accounting() {
+    let Some(mut fx) = fused_setup("ballbalance_vision", 31) else { return };
+    let (od, ad, cd) = (fx.dev.obs_dim(), fx.dev.act_dim(), fx.dev.critic_obs_dim());
+    let mut obs = vec![0.0; N * od];
+    fx.dev.reset_all(&mut obs);
+    let mut out = StepOut::new(N, od);
+    let mut acts = vec![0.0; N * ad];
+    let noise = vec![0.01; N * ad];
+    // Seeding step (stages state + θ_a + μ + σ² + noise), then the
+    // steady-state step under measurement. Two steps from reset cannot
+    // terminate (initial ball distance <= ~0.71 against 0.95).
+    fx.dev.step_fused(&noise, &mut out, &mut acts).unwrap();
+    assert!(out.done.iter().all(|&d| d == 0.0), "unexpected done after 1 step");
+    let (s0, f0) = (fx.dev.staged_elems(), fx.dev.fetched_elems());
+    fx.dev.step_fused(&noise, &mut out, &mut acts).unwrap();
+    assert!(out.done.iter().all(|&d| d == 0.0), "unexpected done after 2 steps");
+    assert_eq!(
+        fx.dev.staged_elems() - s0,
+        (N * ad) as u64,
+        "steady fused step must stage the noise batch only"
+    );
+    assert_eq!(
+        fx.dev.fetched_elems() - f0,
+        (N * (od + ad + cd) + 2 * N) as u64,
+        "steady fused step must fetch obs/reward/done/act/cobs only"
+    );
+}
