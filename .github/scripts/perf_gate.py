@@ -32,8 +32,11 @@ ratio against the baseline's — never on absolute dispatch rates, which
 are machine-bound. PR 7 adds the `device_env` section of
 BENCH_data_plane.json: its `fused_over_host` ratio (fused step_infer
 dispatch vs host step + chunked inference) is floored like the feed
-speedups. When $GITHUB_STEP_SUMMARY is set, a per-group delta table is
-appended to the job summary.
+speedups. PR 8 adds the `serving` section of BENCH_learner_feed.json:
+each (n, workers) row is gated on a p50 latency CEILING and a
+saturation-throughput floor against the baseline (cross-run tolerance;
+skip-with-notice on stub baselines). When $GITHUB_STEP_SUMMARY is set, a
+per-group delta table is appended to the job summary.
 
 Tolerance: --tolerance or $PERF_GATE_TOLERANCE, default 0.35 (shared CI
 runners are noisy; tighten locally with PERF_GATE_TOLERANCE=0.1).
@@ -85,6 +88,8 @@ ARTIFACT_DEPENDENT_GROUPS = {
     "host_step_infer",
     "env_step_device",
     "step_infer_fused",
+    # PR-8 policy-serving rows: the serve front drives actor_infer.
+    "serve_saturation",
 }
 
 # Groups tracked for the perf trajectory but NOT gated: one-shot
@@ -211,6 +216,62 @@ def gate_device_env_speedups(fresh, floor, report):
     return fails
 
 
+def gate_serving(baseline, fresh, tol, report):
+    """Latency/throughput gate for the policy-serving section (PR 8).
+
+    Two rules per (n, workers) row, both fresh-vs-baseline with the
+    cross-run tolerance (latency and saturation throughput are absolute
+    machine-bound numbers, unlike the same-run A/B floors):
+
+      * p50_us ceiling: fresh p50 <= baseline p50 * (1 + tol) — the
+        deadline micro-batcher must not quietly add queue time;
+      * requests_per_sec floor: fresh >= baseline * (1 - tol) — the
+        closed-loop saturation throughput must not regress.
+
+    (`serve_saturation` per_sec rows are also gated by the generic
+    per-row rule; this adds the latency side, which a rate row can't
+    carry.) Skip-with-notice when either side lacks the section.
+    """
+    fails = 0
+    f_rows = {(s.get("n"), s.get("workers")): s for s in fresh.get("serving", [])}
+    b_rows = {(s.get("n"), s.get("workers")): s for s in baseline.get("serving", [])}
+    if not f_rows:
+        report.append("SKIP  serving: fresh run has no serving section "
+                      "(artifacts not present on this runner)")
+        return 0
+    if not b_rows:
+        report.append("SKIP  serving: baseline has no serving section "
+                      "(stub not yet populated by a bench run)")
+        return 0
+    for key in sorted(b_rows):
+        b, f = b_rows[key], f_rows.get(key)
+        n, workers = key
+        if f is None:
+            report.append(f"SKIP  serving: row n={n} W={workers} absent "
+                          "from fresh run")
+            continue
+        b_p50, f_p50 = b.get("p50_us", 0.0), f.get("p50_us", 0.0)
+        if b_p50 > 0.0:
+            verdict = "ok  " if f_p50 <= b_p50 * (1.0 + tol) else "FAIL"
+            if verdict == "FAIL":
+                fails += 1
+            report.append(
+                f"{verdict}  serving: p50 @ n={n} W={workers} = {f_p50:.1f}us "
+                f"vs baseline {b_p50:.1f}us (ceiling {b_p50 * (1.0 + tol):.1f}us)"
+            )
+        b_rps, f_rps = b.get("requests_per_sec", 0.0), f.get("requests_per_sec", 0.0)
+        if b_rps > 0.0:
+            verdict = "ok  " if f_rps >= b_rps * (1.0 - tol) else "FAIL"
+            if verdict == "FAIL":
+                fails += 1
+            report.append(
+                f"{verdict}  serving: saturation @ n={n} W={workers} = "
+                f"{f_rps:.0f} req/s vs baseline {b_rps:.0f} "
+                f"(floor {b_rps * (1.0 - tol):.0f})"
+            )
+    return fails
+
+
 def gate_dispatch_scaling(baseline, fresh, tol, report):
     """Concurrency-scaling gate for the dispatch-contention section.
 
@@ -334,6 +395,7 @@ def main():
             fails += gate_feed_speedups(fresh, args.feed_floor, report)
             fails += gate_dispatch_scaling(baseline, fresh, args.tolerance,
                                            report)
+            fails += gate_serving(baseline, fresh, args.tolerance, report)
 
     summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
     if summary_path and deltas:

@@ -1,15 +1,23 @@
-//! Vision pathway demo (Appendix B.3 / Fig. B.1): asymmetric actor-critic
-//! on the image-based Ball Balancing task, with the DEFLATE-compressed
-//! observation channel, reporting the achieved compression ratio.
+//! Vision pathway demo (Appendix B.3 / Fig. B.1), end to end: train
+//! asymmetric actor-critic on the image-based Ball Balancing task (with
+//! the DEFLATE-compressed observation channel), then SERVE the trained
+//! policy through the deadline-batched inference front and report the
+//! per-request latency summary — the example finally matches its name.
 //!
 //! ```text
-//! cargo run --release --example vision_serving [budget_secs]
+//! cargo run --release --example vision_serving [budget_secs] [serve_secs]
 //! ```
 
 use pql::config::{Algo, TrainConfig};
 use pql::envs::render::IMG_PIXELS;
 use pql::replay::image::compress;
+use pql::runtime::Engine;
+use pql::serve::{InferBackend, PjrtBackend, ServeFront};
 use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const TASK: &str = "ballbalance_vision";
 
 fn main() -> anyhow::Result<()> {
     pql::util::logging::init();
@@ -17,9 +25,13 @@ fn main() -> anyhow::Result<()> {
         .nth(1)
         .and_then(|s| s.parse::<f64>().ok())
         .unwrap_or(45.0);
+    let serve_secs = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(5.0);
 
     // Measure the channel compression on real rendered frames first.
-    let mut env = pql::envs::make("ballbalance_vision", 32, 0)?;
+    let mut env = pql::envs::make(TASK, 32, 0)?;
     let mut obs = vec![0.0f32; 32 * IMG_PIXELS];
     env.reset_all(&mut obs);
     let mut raw = 0usize;
@@ -33,14 +45,17 @@ fn main() -> anyhow::Result<()> {
         raw, stored, raw as f64 / stored as f64
     );
 
+    // --- phase 1: a short training run, checkpointed ------------------
+    let run_dir = std::env::temp_dir().join("pql_vision_serving_example");
     let cfg = TrainConfig {
-        task: "ballbalance_vision".into(),
+        task: TASK.into(),
         algo: Algo::Pql,
         num_envs: 64,
         budget_secs: budget,
         eval_interval_secs: (budget / 6.0).max(3.0),
         compress_images: true,
         seed: 2,
+        run_dir: Some(run_dir.to_string_lossy().into_owned()),
         ..TrainConfig::default()
     };
     println!("training asymmetric PQL from 24x24 pixels for {budget:.0}s ...");
@@ -49,5 +64,76 @@ fn main() -> anyhow::Result<()> {
         println!("  t={:6.1}s  return {:8.2}", r.wall_secs, r.eval_return);
     }
     println!("best return: {:.2} (ball stays on the plate)", log.best_return());
+
+    // --- phase 2: serve the checkpoint under synthetic traffic --------
+    let sections = pql::util::binfmt::load(&run_dir.join("checkpoint.pql"))?;
+    let theta = &sections["actor"];
+    let mu = &sections["norm_mean"];
+    let var = &sections["norm_var"];
+
+    // Same shared runtime/cache as training: `actor_infer` was already
+    // compiled above, so the serving workers start without a compile.
+    let mut engine = Engine::new(Path::new("artifacts"))?;
+    let m = Arc::clone(&engine.manifest);
+    let t = m.task(TASK)?;
+    let (od, ad, chunk) = (t.obs_dim, t.act_dim, m.chunk);
+    let exe = engine.load(TASK, "actor_infer")?;
+    let workers = 2;
+    let backends: Vec<Box<dyn InferBackend>> = (0..workers)
+        .map(|_| {
+            PjrtBackend::new(Arc::clone(&exe), chunk, od, ad)
+                .map(|b| Box::new(b) as Box<dyn InferBackend>)
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let front = ServeFront::start(
+        backends,
+        theta,
+        mu,
+        var,
+        chunk,
+        Duration::from_micros(200),
+    )?;
+    println!(
+        "\nserving the trained policy: {workers} workers, max batch {chunk}, \
+         deadline 200us, {serve_secs:.0}s of synthetic traffic ..."
+    );
+    let stop = Instant::now() + Duration::from_secs_f64(serve_secs);
+    std::thread::scope(|sc| -> anyhow::Result<()> {
+        let mut clients = Vec::new();
+        for c in 0..4usize {
+            let h = front.handle();
+            clients.push(sc.spawn(move || -> anyhow::Result<u64> {
+                // Each client renders frames from its own envs — real
+                // image observations, closed loop.
+                let n = 16;
+                let mut env = pql::envs::make(TASK, n, 10 + c as u64)?;
+                anyhow::ensure!(env.obs_dim() == od && env.act_dim() == ad);
+                let mut obs = vec![0.0f32; n * od];
+                env.reset_all(&mut obs);
+                let mut out = pql::envs::StepOut::new(n, env.obs_dim());
+                let mut actions = vec![0.0f32; n * env.act_dim()];
+                let mut served = 0u64;
+                while Instant::now() < stop {
+                    let pending = (0..n)
+                        .map(|i| h.submit(&obs[i * od..(i + 1) * od]))
+                        .collect::<anyhow::Result<Vec<_>>>()?;
+                    for (i, p) in pending.into_iter().enumerate() {
+                        actions[i * ad..(i + 1) * ad].copy_from_slice(&p.wait()?);
+                    }
+                    served += n as u64;
+                    env.step(&actions, &mut out);
+                    obs.copy_from_slice(&out.obs);
+                }
+                Ok(served)
+            }));
+        }
+        for c in clients {
+            c.join().expect("serve client panicked")?;
+        }
+        Ok(())
+    })?;
+    let summary = front.shutdown()?;
+    println!("{}", summary.render());
+    std::fs::remove_dir_all(&run_dir).ok();
     Ok(())
 }

@@ -10,6 +10,10 @@
 //!   the repository root so the perf trajectory is tracked across PRs.
 //! - L2/L1 (through PJRT): actor inference per row, critic/actor update
 //!   latency per batch — the numbers behind EXPERIMENTS.md §Perf.
+//! - Serving plane (through PJRT): the deadline-batched `serve` front
+//!   under closed-loop load — p50/p99 latency and saturation throughput
+//!   per worker-pool size, emitted as the `serving` section of
+//!   `BENCH_learner_feed.json`.
 
 use pql::config::{Exploration, Ratio};
 use pql::coordinator::PaceController;
@@ -410,10 +414,13 @@ fn bench_learner_feed() -> Vec<PlaneRecord> {
 }
 
 /// Serialize the learner-feed records to `BENCH_learner_feed.json` at the
-/// repository root. Called once after the host-side section and again
-/// (overwriting, now including `run_owned`/`run_ref`) when PJRT artifacts
-/// are available.
-fn write_learner_feed_json(records: &[PlaneRecord]) -> std::io::Result<std::path::PathBuf> {
+/// repository root. Called once after the host-side section (no serving
+/// rows yet) and again (overwriting, now including `run_owned`/`run_ref`
+/// and the `serving` section) when PJRT artifacts are available.
+fn write_learner_feed_json(
+    records: &[PlaneRecord],
+    serving_rows: &[String],
+) -> std::io::Result<std::path::PathBuf> {
     let mut speedups = Vec::new();
     for &n in &[512usize, 4096, 16384] {
         let assemble =
@@ -465,12 +472,21 @@ fn write_learner_feed_json(records: &[PlaneRecord]) -> std::io::Result<std::path
     } else {
         String::new()
     };
+    // Policy-serving section: the deadline-batched front's latency
+    // quantiles and closed-loop saturation throughput (rows are formatted
+    // by the serving bench — they carry quantiles a PlaneRecord doesn't).
+    let serving_section = if serving_rows.is_empty() {
+        String::new()
+    } else {
+        format!(",\n  \"serving\": [\n{}\n  ]", serving_rows.join(",\n"))
+    };
     let json = format!(
-        "{{\n  \"schema\": \"pql.bench.learner_feed/v1\",\n  \"source\": \"cargo bench --bench throughput\",\n  \"task\": \"ant\",\n  \"results\": [\n{}\n  ],\n  \"speedups\": [\n{}\n  ]{}{}\n}}\n",
+        "{{\n  \"schema\": \"pql.bench.learner_feed/v1\",\n  \"source\": \"cargo bench --bench throughput\",\n  \"task\": \"ant\",\n  \"results\": [\n{}\n  ],\n  \"speedups\": [\n{}\n  ]{}{}{}\n}}\n",
         rows_json(records),
         speedups.join(",\n"),
         resident_section,
-        dispatch_section
+        dispatch_section,
+        serving_section
     );
     let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_learner_feed.json");
     std::fs::write(&path, json)?;
@@ -626,7 +642,7 @@ fn main() {
 
     println!("\n== learner feed plane (B = 512 / 4096 / 16384) ==");
     let mut feed = bench_learner_feed();
-    match write_learner_feed_json(&feed) {
+    match write_learner_feed_json(&feed, &[]) {
         Ok(path) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("could not write BENCH_learner_feed.json: {e}"),
     }
@@ -1101,6 +1117,93 @@ fn main() {
             }
         }
 
+        // --- policy-serving plane: deadline-batched front (PR 8) --------
+        // Closed-loop saturation: each client thread owns a slab of envs'
+        // worth of synthetic observations and blocks on its actions every
+        // step, so offered load self-regulates at the front's capacity.
+        // Rates land in `serve_saturation` records (gated as a floor) and
+        // the latency quantiles in the JSON `serving` section (p50 gated
+        // as a ceiling).
+        let mut serving_rows: Vec<String> = Vec::new();
+        {
+            use pql::serve::{InferBackend, PjrtBackend, ServeFront};
+            let infer = engine.load("ant", "actor_infer").unwrap();
+            let theta = t.layouts["actor"].init(&mut r);
+            let (od, ad, chunk) = (t.obs_dim, t.act_dim, m.chunk);
+            let mu = vec![0.0f32; od];
+            let var = vec![1.0f32; od];
+            for &(workers, clients, per_client) in
+                &[(1usize, 2usize, 64usize), (2, 4, 64), (4, 8, 64)]
+            {
+                let backends: Vec<Box<dyn InferBackend>> = (0..workers)
+                    .map(|_| {
+                        Box::new(
+                            PjrtBackend::new(std::sync::Arc::clone(&infer), chunk, od, ad)
+                                .unwrap(),
+                        ) as Box<dyn InferBackend>
+                    })
+                    .collect();
+                let front = ServeFront::start(
+                    backends,
+                    &theta,
+                    &mu,
+                    &var,
+                    chunk,
+                    std::time::Duration::from_micros(200),
+                )
+                .unwrap();
+                let stop = Instant::now() + std::time::Duration::from_millis(1200);
+                std::thread::scope(|sc| {
+                    for c in 0..clients {
+                        let h = front.handle();
+                        sc.spawn(move || {
+                            let mut rng = Rng::new(900 + c as u64);
+                            let mut obs = vec![0.0f32; per_client * od];
+                            rng.fill_normal(&mut obs);
+                            while Instant::now() < stop {
+                                let pending: Vec<_> = (0..per_client)
+                                    .map(|i| h.submit(&obs[i * od..(i + 1) * od]).unwrap())
+                                    .collect();
+                                for p in pending {
+                                    std::hint::black_box(p.wait().unwrap());
+                                }
+                            }
+                        });
+                    }
+                });
+                let sum = front.shutdown().unwrap();
+                let n = clients * per_client;
+                println!(
+                    "serve W={workers} load={clients}x{per_client:<3} {:>10.3} ms p50 \
+                     {:>14.0} requests/s (p99 {:.0}us, mean batch {:.1})",
+                    sum.p50_us / 1e3,
+                    sum.requests_per_sec,
+                    sum.p99_us,
+                    sum.mean_batch
+                );
+                feed.push(PlaneRecord {
+                    group: "serve_saturation",
+                    name: format!("serve saturation W={workers} (n={n})"),
+                    n,
+                    ms_per_iter: 1e3 / sum.requests_per_sec.max(1e-9),
+                    per_sec: sum.requests_per_sec,
+                    unit: "requests",
+                });
+                serving_rows.push(format!(
+                    "    {{\"n\": {n}, \"workers\": {workers}, \"requests_per_sec\": {:.1}, \
+                     \"p50_us\": {:.1}, \"p99_us\": {:.1}, \"max_us\": {:.1}, \
+                     \"mean_batch\": {:.2}, \"queue_depth_peak\": {}, \"param_restages\": {}}}",
+                    sum.requests_per_sec,
+                    sum.p50_us,
+                    sum.p99_us,
+                    sum.max_us,
+                    sum.mean_batch,
+                    sum.queue_depth_peak,
+                    sum.param_restages
+                ));
+            }
+        }
+
         // Compile timings from the process-wide executable cache: one
         // record per artifact this process actually compiled (cache hits
         // are free — that's the point). `per_sec` is compiles/s so the
@@ -1147,8 +1250,8 @@ fn main() {
             unit: "loads",
         });
 
-        match write_learner_feed_json(&feed) {
-            Ok(path) => println!("rewrote {} (with PJRT run + compile groups)", path.display()),
+        match write_learner_feed_json(&feed, &serving_rows) {
+            Ok(path) => println!("rewrote {} (with PJRT run + compile + serving groups)", path.display()),
             Err(e) => eprintln!("could not write BENCH_learner_feed.json: {e}"),
         }
     }

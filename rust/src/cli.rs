@@ -100,12 +100,15 @@ USAGE:
 COMMANDS:
   train       Train an agent (PQL / PQL-D / DDPG / SAC / PPO) on a task
   eval        Evaluate a saved policy checkpoint
+  serve       Serve a policy: deadline-batched multi-threaded inference
+              front (--serve-max-batch / --serve-deadline-us flush dials,
+              --serve-workers pool size, --serve-clients synthetic load)
   bench       Run a paper figure/table harness (see --fig / --table)
   envinfo     Print the environment suite and per-task dimensions
   artifacts   Verify the AOT artifact set against the manifest
   help        Show this message
 
-DEVICE SELECTION (train / eval / bench):
+DEVICE SELECTION (train / eval / serve / bench):
   --device cpu|gpu[:N]|auto   PJRT device for compiling + running the HLO
                               artifacts. Resolution: --device > config
                               `train.device` > $PALLAS_DEVICE > cpu.
@@ -132,6 +135,7 @@ pub fn run_cli(argv: Vec<String>) -> Result<()> {
     match cmd {
         "train" => crate::cmd::train::run(&tail),
         "eval" => crate::cmd::eval::run(&tail),
+        "serve" => crate::cmd::serve::run(&tail),
         "bench" => crate::cmd::bench::run(&tail),
         "envinfo" => crate::cmd::envinfo::run(&tail),
         "artifacts" => crate::cmd::artifacts::run(&tail),

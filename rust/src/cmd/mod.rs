@@ -4,4 +4,5 @@ pub mod artifacts;
 pub mod bench;
 pub mod envinfo;
 pub mod eval;
+pub mod serve;
 pub mod train;

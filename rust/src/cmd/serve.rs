@@ -1,0 +1,141 @@
+//! `pql serve` — the deadline-batched policy-serving front.
+//!
+//! ```text
+//! pql serve --task ant --checkpoint runs/ant/checkpoint.pql \
+//!     --serve-workers 4 --serve-max-batch 256 --serve-deadline-us 200 \
+//!     --serve-clients 8 --serve-client-envs 64 --serve-secs 10
+//! ```
+//!
+//! Loads a policy (checkpoint, or fresh layout-init for smoke runs),
+//! spawns the worker pool over the ONE cached `actor_infer` executable,
+//! then drives it with synthetic closed-loop traffic: each client thread
+//! owns a batch of environments, submits one request per env per step,
+//! waits for the scattered actions, and steps. The final printout is the
+//! serving summary: p50/p99/max latency, saturation throughput, realized
+//! batch sizes, queue depth, and parameter restage count.
+
+use crate::cli::Args;
+use crate::config::ServeConfig;
+use crate::envs::{self, StepOut};
+use crate::runtime::Engine;
+use crate::serve::{InferBackend, PjrtBackend, ServeFront};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+pub fn run(args: &Args) -> Result<()> {
+    let cfg = ServeConfig::from_args(args)?;
+    let mut engine = Engine::for_device(&super::train::artifact_dir(args), cfg.device)?;
+    log::info!("pjrt device: {} (requested {})", engine.runtime().device_key(), cfg.device);
+    let manifest = Arc::clone(&engine.manifest);
+    let t = manifest.task(&cfg.task)?;
+    let (od, ad, chunk) = (t.obs_dim, t.act_dim, manifest.chunk);
+    let exe = engine.load(&cfg.task, "actor_infer")?;
+    let max_batch = if cfg.max_batch == 0 { chunk } else { cfg.max_batch };
+
+    // Parameters: a trained checkpoint, or fresh layout init (identical
+    // distribution to a new training run) for latency smoke tests.
+    let (theta, mu, var) = match &cfg.checkpoint {
+        Some(p) => {
+            let sections = crate::util::binfmt::load(Path::new(p))?;
+            let theta =
+                sections.get("actor").context("checkpoint missing 'actor'")?.clone();
+            let mu = sections.get("norm_mean").context("missing norm_mean")?.clone();
+            let var = sections.get("norm_var").context("missing norm_var")?.clone();
+            (theta, mu, var)
+        }
+        None => {
+            let mut rng = crate::util::Rng::new(cfg.seed);
+            (t.layouts["actor"].init(&mut rng), vec![0.0; od], vec![1.0; od])
+        }
+    };
+
+    let backends: Vec<Box<dyn InferBackend>> = (0..cfg.workers)
+        .map(|_| {
+            PjrtBackend::new(Arc::clone(&exe), chunk, od, ad)
+                .map(|b| Box::new(b) as Box<dyn InferBackend>)
+        })
+        .collect::<Result<_>>()?;
+    let front = ServeFront::start(
+        backends,
+        &theta,
+        &mu,
+        &var,
+        max_batch,
+        Duration::from_micros(cfg.deadline_us),
+    )?;
+    println!(
+        "serving {} on {}: {} workers, max batch {}, deadline {}us",
+        cfg.task,
+        engine.runtime().device_key(),
+        cfg.workers,
+        max_batch,
+        cfg.deadline_us
+    );
+
+    // Closed-loop synthetic traffic: clients block on their actions each
+    // step, so offered load self-regulates at the front's capacity — the
+    // steady-state requests/sec below is the saturation throughput.
+    let stop = Instant::now() + Duration::from_secs_f64(cfg.secs);
+    let mut clients = Vec::new();
+    for c in 0..cfg.clients {
+        let h = front.handle();
+        let task = cfg.task.clone();
+        let n = cfg.client_envs;
+        let seed = cfg.seed.wrapping_add(1 + c as u64);
+        clients.push(
+            std::thread::Builder::new()
+                .name(format!("serve-client-{c}"))
+                .spawn(move || client_loop(&task, n, seed, h, stop))
+                .expect("spawn serve client"),
+        );
+    }
+    let mut total = 0u64;
+    for c in clients {
+        total += c.join().map_err(|_| anyhow::anyhow!("serve client panicked"))??;
+    }
+    let summary = front.shutdown()?;
+    debug_assert_eq!(summary.requests, total);
+    println!("{}", summary.render());
+    Ok(())
+}
+
+/// One client: a batch of envs submitting per-env requests each step.
+fn client_loop(
+    task: &str,
+    n: usize,
+    seed: u64,
+    h: crate::serve::ServeHandle,
+    stop: Instant,
+) -> Result<u64> {
+    let mut env = envs::make(task, n, seed)?;
+    let od = env.obs_dim();
+    let ad = env.act_dim();
+    if od != h.obs_dim() || ad != h.act_dim() {
+        bail!(
+            "env dims {}x{} disagree with the served policy {}x{}",
+            od,
+            ad,
+            h.obs_dim(),
+            h.act_dim()
+        );
+    }
+    let mut obs = vec![0.0f32; n * od];
+    env.reset_all(&mut obs);
+    let mut out = StepOut::new(n, od);
+    let mut actions = vec![0.0f32; n * ad];
+    let mut served = 0u64;
+    while Instant::now() < stop {
+        let pending = (0..n)
+            .map(|i| h.submit(&obs[i * od..(i + 1) * od]))
+            .collect::<Result<Vec<_>>>()?;
+        for (i, p) in pending.into_iter().enumerate() {
+            actions[i * ad..(i + 1) * ad].copy_from_slice(&p.wait()?);
+        }
+        served += n as u64;
+        env.step(&actions, &mut out);
+        obs.copy_from_slice(&out.obs);
+    }
+    Ok(served)
+}

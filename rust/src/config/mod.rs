@@ -422,6 +422,90 @@ impl TrainConfig {
     }
 }
 
+/// Configuration for the policy-serving front (`pql serve`). Kept
+/// separate from [`TrainConfig`]: serving has no learner knobs, and the
+/// latency/throughput dials (`--serve-max-batch`, `--serve-deadline-us`)
+/// are meaningless to training.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub task: String,
+    /// PJRT device, same resolution order as train/eval.
+    pub device: DeviceSpec,
+    /// Checkpoint to serve; `None` = fresh layout-initialized parameters
+    /// (latency/throughput smoke runs need no trained policy).
+    pub checkpoint: Option<String>,
+    /// Inference worker threads. All share ONE compiled executable via
+    /// the process-wide cache; more workers overlap host-side batch
+    /// assembly/scatter with device dispatch.
+    pub workers: usize,
+    /// Flush a batch at this many requests (0 = the compiled chunk size
+    /// from the artifact manifest, the natural full batch).
+    pub max_batch: usize,
+    /// ... or when the oldest queued request has waited this long,
+    /// whichever comes first.
+    pub deadline_us: u64,
+    /// Synthetic client threads driving closed-loop traffic.
+    pub clients: usize,
+    /// Environments (one request per env per step) per client thread.
+    pub client_envs: usize,
+    /// Traffic duration, seconds.
+    pub secs: f64,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            task: "ant".to_string(),
+            device: DeviceSpec::Cpu,
+            checkpoint: None,
+            workers: 2,
+            max_batch: 0,
+            deadline_us: 200,
+            clients: 4,
+            client_envs: 64,
+            secs: 5.0,
+            seed: 1,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_args(args: &Args) -> Result<ServeConfig> {
+        let mut c = ServeConfig::default();
+        if let Some(v) = args.get("task") {
+            c.task = v.to_string();
+        }
+        c.checkpoint = args.get("checkpoint").map(str::to_string);
+        c.workers = args.get_parse("serve-workers", c.workers)?;
+        c.max_batch = args.get_parse("serve-max-batch", c.max_batch)?;
+        c.deadline_us = args.get_parse("serve-deadline-us", c.deadline_us)?;
+        c.clients = args.get_parse("serve-clients", c.clients)?;
+        c.client_envs = args.get_parse("serve-client-envs", c.client_envs)?;
+        c.secs = args.get_parse("serve-secs", c.secs)?;
+        c.seed = args.get_parse("seed", c.seed)?;
+        c.device = crate::runtime::resolve_spec(args.get("device"), None)?;
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            bail!("serve-workers must be > 0");
+        }
+        if self.clients == 0 || self.client_envs == 0 {
+            bail!("serve-clients and serve-client-envs must be > 0");
+        }
+        if self.deadline_us == 0 {
+            bail!("serve-deadline-us must be > 0 (a zero deadline degenerates to unbatched serving)");
+        }
+        if self.secs <= 0.0 {
+            bail!("serve-secs must be > 0");
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -580,6 +664,35 @@ mod tests {
         .unwrap();
         assert_eq!(c.device, DeviceSpec::Cpu);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn serve_config_defaults_and_cli() {
+        let c = ServeConfig::from_args(&args(&[])).unwrap();
+        assert_eq!(c.workers, 2);
+        assert_eq!(c.max_batch, 0, "0 = manifest chunk");
+        assert_eq!(c.deadline_us, 200);
+        assert!(c.checkpoint.is_none());
+
+        let c = ServeConfig::from_args(&args(&[
+            "--task", "anymal", "--serve-workers", "4", "--serve-max-batch", "128",
+            "--serve-deadline-us", "500", "--serve-clients", "8",
+            "--serve-client-envs", "32", "--serve-secs", "2.5",
+            "--checkpoint", "runs/x/checkpoint.pql",
+        ]))
+        .unwrap();
+        assert_eq!(c.task, "anymal");
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.max_batch, 128);
+        assert_eq!(c.deadline_us, 500);
+        assert_eq!(c.clients, 8);
+        assert_eq!(c.client_envs, 32);
+        assert_eq!(c.secs, 2.5);
+        assert_eq!(c.checkpoint.as_deref(), Some("runs/x/checkpoint.pql"));
+
+        assert!(ServeConfig::from_args(&args(&["--serve-workers", "0"])).is_err());
+        assert!(ServeConfig::from_args(&args(&["--serve-deadline-us", "0"])).is_err());
+        assert!(ServeConfig::from_args(&args(&["--serve-secs", "0"])).is_err());
     }
 
     #[test]

@@ -89,9 +89,13 @@ impl PaceController {
         if !self.enabled {
             return;
         }
-        let start = std::time::Instant::now();
         let mut guard = self.lock.lock().unwrap();
+        // Clock starts on first loop entry, so a gate that passes straight
+        // through accrues exactly zero — mutex acquisition under dispatch
+        // contention must not inflate the §Perf pace-wait metrics.
+        let mut start: Option<std::time::Instant> = None;
         while ahead() && !self.stopped() {
+            start.get_or_insert_with(std::time::Instant::now);
             // Timed wait: robust against missed notifies during shutdown.
             let (g, _timeout) = self
                 .cv
@@ -100,7 +104,9 @@ impl PaceController {
             guard = g;
         }
         drop(guard);
-        waited.fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        if let Some(t0) = start {
+            waited.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
     }
 
     /// Actor: block while rollout steps outpace β_a:v (one step of slack),
@@ -129,14 +135,29 @@ impl PaceController {
 
     /// V-learner: block while updates outpace the data ratio *and* the
     /// policy ratio consumer (V must not starve P's ratio), then count.
+    ///
+    /// The β_p:v side is inert until the P-learner has counted its first
+    /// update: P starts late by construction (it waits for its state
+    /// buffer to fill), and V waiting on a process that has not started
+    /// yet would recreate the startup deadlock class the `starved`
+    /// exemption solves on the actor side.
     pub fn gate_v(&self) {
         let Ratio { num: an, den: ad } = self.beta_av;
+        let Ratio { num: pn, den: pd } = self.beta_pv;
         self.wait_while(
             || {
                 let a = self.a.load(Ordering::SeqCst);
                 let v = self.v.load(Ordering::SeqCst);
                 // v/a > den/num (slack one update)
-                v.saturating_mul(an) > (a.saturating_mul(ad)).saturating_add(ad)
+                if v.saturating_mul(an) > (a.saturating_mul(ad)).saturating_add(ad) {
+                    return true;
+                }
+                // v/p > den/num of β_p:v (same one-unit slack, scaled by
+                // the denominator like the a-side above): when P is the
+                // slow side the faster V waits, so realized p/v still
+                // converges to the target instead of V free-running.
+                let p = self.p.load(Ordering::SeqCst);
+                p > 0 && v.saturating_mul(pn) > (p.saturating_mul(pd)).saturating_add(pd)
             },
             &self.wait_v_ns,
         );
@@ -273,14 +294,16 @@ mod tests {
     }
 
     /// `wait_*_ns` accounting: a blocked gate accrues its blocked time; a
-    /// gate that passes straight through accrues (essentially) none.
+    /// gate that passes straight through accrues exactly zero — the clock
+    /// starts on loop entry, so mutex-acquisition time (which dispatch
+    /// contention can stretch) never leaks into the §Perf wait metrics.
     #[test]
     fn wait_ns_accounts_blocked_time() {
         let ctl = Arc::new(PaceController::new(Ratio::new(1, 8), Ratio::new(1, 2), true));
         ctl.set_starved(false);
         ctl.gate_actor(); // passes: slack
         let fast = ctl.wait_a_ns.load(Ordering::Relaxed);
-        assert!(fast < 50_000_000, "unblocked gate accrued {fast}ns");
+        assert_eq!(fast, 0, "unblocked gate accrued {fast}ns");
         let c = Arc::clone(&ctl);
         let started = Arc::new(AtomicBool::new(false));
         let started_t = Arc::clone(&started);
@@ -305,9 +328,66 @@ mod tests {
             waited >= 50_000_000,
             "blocked actor must accrue wait time, got {waited}ns"
         );
-        // The V-learner never blocked in this schedule.
+        // The V-learner never blocked in this schedule (a-side slack holds
+        // and the β_p:v side is inert at p = 0) — exactly zero accrued.
         let v_wait = ctl.wait_v_ns.load(Ordering::Relaxed);
-        assert!(v_wait < 50_000_000, "v accrued {v_wait}ns without blocking");
+        assert_eq!(v_wait, 0, "v accrued {v_wait}ns without blocking");
+    }
+
+    /// Regression for the β_p:v side of `gate_v`: with an artificially
+    /// slow P-learner the faster V must wait, so the realized p/v ratio
+    /// converges to the target. Before the fix the wait predicate only
+    /// checked β_a:v and V free-ran to its budget while p/v collapsed
+    /// toward zero.
+    #[test]
+    fn slow_p_throttles_v_to_ratio() {
+        let ctl = Arc::new(PaceController::new(Ratio::new(1, 8), Ratio::new(1, 2), true));
+        ctl.set_starved(false);
+        // Arm the p > 0 side deterministically before V starts (at v = 0
+        // the first P update passes on slack), so the test never races the
+        // P thread's spawn against a fast V.
+        ctl.gate_p();
+        let mut handles = Vec::new();
+        {
+            // Artificially slow P: ~2ms between updates.
+            let c = Arc::clone(&ctl);
+            handles.push(std::thread::spawn(move || {
+                while !c.stopped() {
+                    std::thread::sleep(Duration::from_millis(2));
+                    c.gate_p();
+                }
+            }));
+        }
+        {
+            // Free-running actor so V's β_a:v side never binds.
+            let c = Arc::clone(&ctl);
+            handles.push(std::thread::spawn(move || {
+                while !c.stopped() {
+                    c.gate_actor();
+                }
+            }));
+        }
+        {
+            let c = Arc::clone(&ctl);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..100 {
+                    c.gate_v();
+                }
+                c.stop();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let (_a, v, p) = ctl.counts();
+        assert!(v >= 100);
+        let pv = p as f64 / v as f64;
+        assert!((pv - 0.5).abs() < 0.1, "p={p} v={v} pv={pv} (target 0.5)");
+        // V demonstrably blocked on the slow P (the whole point of the fix).
+        assert!(
+            ctl.wait_v_ns.load(Ordering::Relaxed) > 0,
+            "V never waited despite a slow P-learner"
+        );
     }
 
     #[test]

@@ -27,6 +27,7 @@ pub mod exploration;
 pub mod metrics;
 pub mod replay;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 pub use cli::run_cli;

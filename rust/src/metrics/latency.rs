@@ -1,0 +1,163 @@
+//! Lock-free latency accounting for the policy-serving plane.
+//!
+//! A geometric histogram over nanosecond samples: bucket `i >= 1` covers
+//! `[BASE * GROWTH^(i-1), BASE * GROWTH^i)` with BASE = 1µs and
+//! GROWTH = 1.25, bucket 0 covers everything below 1µs. 96 buckets span
+//! sub-microsecond dispatch up to ~20 minutes, with ≤ 25% relative
+//! quantile error — latency SLOs care about orders of magnitude, not
+//! nanoseconds, and a fixed atomic array keeps `record` wait-free on the
+//! serving hot path (no mutex, no allocation, no sorting at read time).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const BASE_NS: f64 = 1_000.0;
+const GROWTH: f64 = 1.25;
+const BUCKETS: usize = 96;
+
+/// Concurrent latency histogram; `record` is wait-free, quantiles are
+/// computed on demand from a snapshot of the bucket counts.
+pub struct LatencyHistogram {
+    counts: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(ns: u64) -> usize {
+        if (ns as f64) < BASE_NS {
+            return 0;
+        }
+        let i = 1 + ((ns as f64 / BASE_NS).ln() / GROWTH.ln()).floor() as usize;
+        i.min(BUCKETS - 1)
+    }
+
+    /// Representative value for a bucket: the geometric midpoint of its
+    /// range (lower bound for bucket 0 is taken as BASE/GROWTH).
+    fn bucket_mid_ns(i: usize) -> f64 {
+        if i == 0 {
+            return BASE_NS / 2.0;
+        }
+        BASE_NS * GROWTH.powi(i as i32 - 1) * GROWTH.sqrt()
+    }
+
+    /// Record one sample (nanoseconds).
+    pub fn record(&self, ns: u64) {
+        self.counts[Self::bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact maximum recorded sample, in nanoseconds.
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns.load(Ordering::Relaxed)
+    }
+
+    /// Mean of all samples, in nanoseconds (0 when empty).
+    pub fn mean_ns(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate quantile `q` in [0, 1], in nanoseconds (0 when empty).
+    /// Resolution is one bucket (≤ 25% relative); the result is clamped to
+    /// the exact observed maximum so tails never over-report.
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::bucket_mid_ns(i).min(self.max_ns() as f64);
+            }
+        }
+        self.max_ns() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_ns(0.5), 0.0);
+        assert_eq!(h.mean_ns(), 0.0);
+        assert_eq!(h.max_ns(), 0);
+    }
+
+    #[test]
+    fn quantiles_within_bucket_resolution() {
+        let h = LatencyHistogram::new();
+        // Uniform 1µs..=1000µs in 1µs steps.
+        for us in 1..=1000u64 {
+            h.record(us * 1_000);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile_ns(0.5);
+        assert!((p50 - 500_000.0).abs() < 500_000.0 * 0.30, "p50={p50}");
+        let p99 = h.quantile_ns(0.99);
+        assert!((p99 - 990_000.0).abs() < 990_000.0 * 0.30, "p99={p99}");
+        assert_eq!(h.max_ns(), 1_000_000);
+        // Tail quantiles clamp to the exact observed max.
+        assert!(h.quantile_ns(1.0) <= 1_000_000.0);
+    }
+
+    #[test]
+    fn sub_microsecond_and_huge_samples_stay_in_range() {
+        let h = LatencyHistogram::new();
+        h.record(10); // < 1µs → bucket 0
+        h.record(u64::MAX / 2); // far past the last bucket bound
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile_ns(0.01) < 1_000.0);
+        assert!(h.quantile_ns(0.99) <= (u64::MAX / 2) as f64);
+    }
+
+    #[test]
+    fn concurrent_records_sum_up() {
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let h = std::sync::Arc::clone(&h);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    h.record((t * 1000 + i) * 100);
+                }
+            }));
+        }
+        for hd in handles {
+            hd.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+        assert_eq!(h.max_ns(), (3 * 1000 + 999) * 100);
+    }
+}

@@ -1,8 +1,14 @@
-//! Metrics: CSV series logging and evaluation.
+//! Metrics: CSV series logging, evaluation, and latency accounting.
 //!
 //! Every training run emits a `metrics.csv` with wall-clock, env steps,
 //! update counts and eval returns — the raw series behind every figure in
-//! EXPERIMENTS.md. The bench harnesses aggregate these files.
+//! EXPERIMENTS.md. The bench harnesses aggregate these files. The
+//! [`latency`] submodule holds the wait-free histogram behind the
+//! policy-serving plane's p50/p99 numbers.
+
+pub mod latency;
+
+pub use latency::LatencyHistogram;
 
 use anyhow::{Context, Result};
 use std::io::Write;

@@ -1,0 +1,232 @@
+//! Deadline-based micro-batching: the queue between request producers and
+//! the inference worker pool.
+//!
+//! Producers `push` single-observation requests; workers block in
+//! `next_batch` until a batch is ready. A batch flushes when EITHER
+//!
+//! - `max_batch` requests are queued (full-batch flush, no waiting), OR
+//! - the OLDEST queued request has waited `deadline` (deadline flush,
+//!   whatever is queued ships — dynamically-sized batches),
+//!
+//! whichever comes first. The deadline is measured from each request's
+//! enqueue instant, so under a trickle of traffic no request waits in the
+//! queue longer than the deadline (plus scheduler jitter), and under a
+//! flood the batch size — not the deadline — does the pacing. This is the
+//! standard latency/throughput dial of batched inference serving
+//! (Stooke & Abbeel's accelerated-RL analysis; PAPERS.md).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::SyncSender;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One in-flight inference request: a single observation row and the
+/// channel its action row is scattered back on.
+pub struct Request {
+    /// Observation row, `[obs_dim]`.
+    pub obs: Vec<f32>,
+    /// When the request entered the queue (latency accounting + deadline).
+    pub enqueued: Instant,
+    /// Exactly one action row `[act_dim]` is sent here; dropping the
+    /// sender without sending signals a failed request to the waiter.
+    pub reply: SyncSender<Vec<f32>>,
+}
+
+/// The micro-batch queue. Shared (`Arc`) between every producer handle
+/// and every worker.
+pub struct Batcher {
+    q: Mutex<VecDeque<Request>>,
+    cv: Condvar,
+    max_batch: usize,
+    deadline: Duration,
+    closed: AtomicBool,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, deadline: Duration) -> Batcher {
+        assert!(max_batch > 0, "max_batch must be >= 1");
+        Batcher {
+            q: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            max_batch,
+            deadline,
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    pub fn deadline(&self) -> Duration {
+        self.deadline
+    }
+
+    /// Enqueue a request; returns the queue depth after the push (the
+    /// stats plane samples it). Fails when the batcher is closed — the
+    /// request is handed back so the caller can surface the error.
+    pub fn push(&self, req: Request) -> Result<usize, Request> {
+        if self.closed.load(Ordering::SeqCst) {
+            return Err(req);
+        }
+        let depth = {
+            let mut q = self.q.lock().unwrap();
+            // Re-check under the lock: `close` drains under the same lock,
+            // so a request observed here is either drained by `close` or
+            // handed to a worker — never stranded.
+            if self.closed.load(Ordering::SeqCst) {
+                return Err(req);
+            }
+            q.push_back(req);
+            q.len()
+        };
+        // Wake a worker: one waiter suffices for a deadline flush; a full
+        // batch wakes whoever gets there first.
+        self.cv.notify_one();
+        Ok(depth)
+    }
+
+    /// Block until a batch is ready per the flush policy and move it into
+    /// `out` (cleared first). Returns `false` — with `out` left empty —
+    /// only when the batcher is closed and fully drained, which is the
+    /// worker-loop exit signal.
+    pub fn next_batch(&self, out: &mut Vec<Request>) -> bool {
+        out.clear();
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if q.len() >= self.max_batch {
+                out.extend(q.drain(..self.max_batch));
+                return true;
+            }
+            match q.front() {
+                Some(front) => {
+                    let age = front.enqueued.elapsed();
+                    if age >= self.deadline || self.closed.load(Ordering::SeqCst) {
+                        // Deadline flush (or shutdown drain): ship what we
+                        // have, capped at max_batch by the branch above.
+                        let take = q.len().min(self.max_batch);
+                        out.extend(q.drain(..take));
+                        return true;
+                    }
+                    // Sleep at most until the oldest request's deadline;
+                    // a push that completes the batch wakes us earlier.
+                    let (g, _t) = self.cv.wait_timeout(q, self.deadline - age).unwrap();
+                    q = g;
+                }
+                None => {
+                    if self.closed.load(Ordering::SeqCst) {
+                        return false;
+                    }
+                    // Idle: timed wait so close() can never strand a
+                    // worker on a missed notify.
+                    let (g, _t) = self.cv.wait_timeout(q, Duration::from_millis(20)).unwrap();
+                    q = g;
+                }
+            }
+        }
+    }
+
+    /// Stop accepting requests and wake all workers. Requests already
+    /// queued are still served (workers drain before exiting).
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        // Take the queue lock so `close` serializes against in-flight
+        // `push` calls (see the re-check there).
+        drop(self.q.lock().unwrap());
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
+    }
+
+    /// Current queue depth (diagnostics; racy by nature).
+    pub fn depth(&self) -> usize {
+        self.q.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+    use std::sync::Arc;
+
+    fn req(tag: f32) -> (Request, std::sync::mpsc::Receiver<Vec<f32>>) {
+        let (tx, rx) = sync_channel(1);
+        (Request { obs: vec![tag], enqueued: Instant::now(), reply: tx }, rx)
+    }
+
+    #[test]
+    fn full_batch_flushes_without_waiting_for_deadline() {
+        // Deadline far in the future: only the max-batch path can flush.
+        let b = Batcher::new(4, Duration::from_secs(3600));
+        for i in 0..4 {
+            let (r, _rx) = req(i as f32);
+            b.push(r).map_err(|_| ()).unwrap();
+        }
+        let t0 = Instant::now();
+        let mut out = Vec::new();
+        assert!(b.next_batch(&mut out));
+        assert_eq!(out.len(), 4);
+        assert!(t0.elapsed() < Duration::from_secs(10), "flush must not wait");
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let b = Batcher::new(1024, Duration::from_millis(5));
+        let (r, _rx) = req(1.0);
+        b.push(r).map_err(|_| ()).unwrap();
+        let mut out = Vec::new();
+        assert!(b.next_batch(&mut out));
+        assert_eq!(out.len(), 1, "deadline flush ships a partial batch");
+    }
+
+    #[test]
+    fn batches_are_fifo_and_capped() {
+        let b = Batcher::new(3, Duration::from_millis(1));
+        let mut rxs = Vec::new();
+        for i in 0..7 {
+            let (r, rx) = req(i as f32);
+            b.push(r).map_err(|_| ()).unwrap();
+            rxs.push(rx);
+        }
+        let mut seen = Vec::new();
+        let mut out = Vec::new();
+        while seen.len() < 7 {
+            assert!(b.next_batch(&mut out));
+            assert!(out.len() <= 3, "batch exceeded max size: {}", out.len());
+            seen.extend(out.drain(..).map(|r| r.obs[0]));
+        }
+        assert_eq!(seen, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0], "FIFO order");
+    }
+
+    #[test]
+    fn close_drains_then_signals_exit() {
+        let b = Arc::new(Batcher::new(8, Duration::from_secs(3600)));
+        let (r, _rx) = req(1.0);
+        b.push(r).map_err(|_| ()).unwrap();
+        b.close();
+        let (r2, _rx2) = req(2.0);
+        assert!(b.push(r2).is_err(), "closed batcher rejects new requests");
+        let mut out = Vec::new();
+        assert!(b.next_batch(&mut out), "queued request is still served");
+        assert_eq!(out.len(), 1);
+        assert!(!b.next_batch(&mut out), "drained + closed → exit signal");
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn close_wakes_idle_worker() {
+        let b = Arc::new(Batcher::new(8, Duration::from_secs(3600)));
+        let b2 = Arc::clone(&b);
+        let h = std::thread::spawn(move || {
+            let mut out = Vec::new();
+            b2.next_batch(&mut out)
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        b.close();
+        assert!(!h.join().unwrap(), "idle worker exits on close");
+    }
+}

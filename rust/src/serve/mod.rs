@@ -1,0 +1,499 @@
+//! Policy-serving plane: a deadline-batched inference front over the
+//! cached PJRT executables (ROADMAP "millions of users" direction).
+//!
+//! The shape mirrors the training coordinator: N worker threads share ONE
+//! compiled `actor_infer` executable through `Runtime::shared`'s
+//! process-wide [`ExecutableCache`], parameters arrive over a versioned
+//! [`ParamBus`] (θ ++ μ ++ σ² in one atomically-published blob), and the
+//! staged-literal path does the device traffic — θ/μ/σ² are staged once
+//! per parameter VERSION, only the observation slot is restaged per batch
+//! (the same `prepare`/`restage` protocol `infer_chunked` uses).
+//!
+//! Request flow:
+//!
+//! 1. A producer calls [`ServeHandle::submit`] with one observation row;
+//!    the request lands in the shared [`Batcher`].
+//! 2. The batcher coalesces requests into dynamically-sized batches:
+//!    flush at `max_batch` rows or when the oldest request has waited
+//!    `deadline`, whichever first (see `batcher.rs`).
+//! 3. A worker packs the batch row-major, runs the backend once, and
+//!    scatters action rows back over per-request channels, recording
+//!    enqueue→delivery latency into the wait-free histogram.
+//!
+//! [`InferBackend`] abstracts the execution so the batching/scatter/param
+//! machinery is testable without compiled artifacts (the property tests in
+//! `tests/serve.rs` drive a deterministic mock); [`PjrtBackend`] is the
+//! real implementation.
+//!
+//! [`ExecutableCache`]: crate::runtime::exec_cache::ExecutableCache
+
+pub mod batcher;
+pub mod stats;
+
+pub use batcher::{Batcher, Request};
+pub use stats::{ServeStats, ServeSummary};
+
+use crate::coordinator::bus::ParamBus;
+use crate::runtime::engine::{Executable, PreparedInputs, TensorView};
+use anyhow::{bail, Context, Result};
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Executes one packed observation batch. Implementations are moved into
+/// a worker thread; `set_params` is called on version bumps only, `infer`
+/// once per micro-batch.
+pub trait InferBackend: Send {
+    fn obs_dim(&self) -> usize;
+    fn act_dim(&self) -> usize;
+    /// Stage a new parameter set (θ, normalizer μ, normalizer σ²).
+    fn set_params(&mut self, theta: &[f32], mu: &[f32], var: &[f32]) -> Result<()>;
+    /// Run `n` rows: `obs` is `[n * obs_dim]` row-major, `actions` is
+    /// `[n * act_dim]` and fully written on success. Called only after at
+    /// least one `set_params`.
+    fn infer(&mut self, obs: &[f32], n: usize, actions: &mut [f32]) -> Result<()>;
+}
+
+/// The real backend: a cached `actor_infer` executable driven over the
+/// staged-literal path. θ/μ/σ² live in staged slots 0/2/3 and are
+/// refreshed only by `set_params`; `infer` restages the obs slot (1) per
+/// chunk, padding the tail chunk with zeros exactly like `infer_chunked`.
+pub struct PjrtBackend {
+    exe: Arc<Executable>,
+    chunk: usize,
+    obs_dim: usize,
+    act_dim: usize,
+    prepared: Option<PreparedInputs>,
+    /// `[chunk * obs_dim]` staging buffer (tail chunks are zero-padded).
+    obs_scratch: Vec<f32>,
+}
+
+impl PjrtBackend {
+    /// `exe` must be a DDPG-family `actor_infer` artifact: inputs
+    /// θ / obs `[chunk, obs_dim]` / μ / σ², one `actions` output.
+    pub fn new(exe: Arc<Executable>, chunk: usize, obs_dim: usize, act_dim: usize) -> Result<Self> {
+        if exe.info.inputs.len() != 4 {
+            bail!(
+                "serve backend expects the 4-input actor_infer signature, got {} inputs",
+                exe.info.inputs.len()
+            );
+        }
+        Ok(PjrtBackend {
+            exe,
+            chunk,
+            obs_dim,
+            act_dim,
+            prepared: None,
+            obs_scratch: vec![0.0; chunk * obs_dim],
+        })
+    }
+
+    /// Total f32 elements staged host→device so far (test/bench hook; the
+    /// steady-state assertion is: one θ/μ/σ² stage per param version plus
+    /// one obs chunk per executed chunk).
+    pub fn staged_elems(&self) -> u64 {
+        self.prepared.as_ref().map(|p| p.staged_elems()).unwrap_or(0)
+    }
+}
+
+impl InferBackend for PjrtBackend {
+    fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    fn act_dim(&self) -> usize {
+        self.act_dim
+    }
+
+    fn set_params(&mut self, theta: &[f32], mu: &[f32], var: &[f32]) -> Result<()> {
+        match &mut self.prepared {
+            None => {
+                // First version: stage everything once, obs slot starts
+                // zeroed and is overwritten by the first batch.
+                let obs_shape = [self.chunk, self.obs_dim];
+                self.prepared = Some(self.exe.prepare(&[
+                    TensorView::vec(theta),
+                    TensorView::new(&obs_shape, &self.obs_scratch),
+                    TensorView::vec(mu),
+                    TensorView::vec(var),
+                ])?);
+            }
+            Some(p) => {
+                // Later versions: refresh the parameter slots only; the
+                // staged obs literal is untouched.
+                self.exe.restage(p, 0, TensorView::vec(theta))?;
+                self.exe.restage(p, 2, TensorView::vec(mu))?;
+                self.exe.restage(p, 3, TensorView::vec(var))?;
+            }
+        }
+        Ok(())
+    }
+
+    fn infer(&mut self, obs: &[f32], n: usize, actions: &mut [f32]) -> Result<()> {
+        let (od, ad, chunk) = (self.obs_dim, self.act_dim, self.chunk);
+        debug_assert_eq!(obs.len(), n * od);
+        debug_assert_eq!(actions.len(), n * ad);
+        let p = self
+            .prepared
+            .as_mut()
+            .context("PjrtBackend::infer before set_params")?;
+        let obs_shape = [chunk, od];
+        let mut done = 0;
+        while done < n {
+            let rows = (n - done).min(chunk);
+            self.obs_scratch[..rows * od].copy_from_slice(&obs[done * od..(done + rows) * od]);
+            self.obs_scratch[rows * od..].fill(0.0);
+            self.exe.restage(p, 1, TensorView::new(&obs_shape, &self.obs_scratch))?;
+            let out = self.exe.run_prepared(p)?;
+            actions[done * ad..(done + rows) * ad].copy_from_slice(&out[0][..rows * ad]);
+            done += rows;
+        }
+        Ok(())
+    }
+}
+
+/// Producer-side handle: cheap to clone, one per client thread.
+#[derive(Clone)]
+pub struct ServeHandle {
+    batcher: Arc<Batcher>,
+    stats: Arc<ServeStats>,
+    obs_dim: usize,
+    act_dim: usize,
+}
+
+impl ServeHandle {
+    pub fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    pub fn act_dim(&self) -> usize {
+        self.act_dim
+    }
+
+    /// Enqueue one observation row; returns a future-like pending action.
+    pub fn submit(&self, obs: &[f32]) -> Result<PendingAction> {
+        if obs.len() != self.obs_dim {
+            bail!("submit: obs len {} != obs_dim {}", obs.len(), self.obs_dim);
+        }
+        let (tx, rx) = sync_channel(1);
+        let req = Request { obs: obs.to_vec(), enqueued: Instant::now(), reply: tx };
+        match self.batcher.push(req) {
+            Ok(depth) => {
+                self.stats.note_queue_depth(depth);
+                Ok(PendingAction { rx })
+            }
+            Err(_) => bail!("serve front is shut down"),
+        }
+    }
+}
+
+/// One in-flight request from the producer's side.
+pub struct PendingAction {
+    rx: Receiver<Vec<f32>>,
+}
+
+impl PendingAction {
+    /// Block until the action row arrives. Errors if the serving worker
+    /// failed or the front shut down before this request was served.
+    pub fn wait(self) -> Result<Vec<f32>> {
+        self.rx.recv().context("serve request dropped (worker error or shutdown)")
+    }
+
+    /// `wait` with an upper bound (tests and latency-sensitive callers).
+    pub fn wait_timeout(self, d: Duration) -> Result<Vec<f32>> {
+        self.rx
+            .recv_timeout(d)
+            .context("serve request not answered in time")
+    }
+}
+
+/// The serving front: shared batcher + stats + param bus, plus the worker
+/// pool. Dropping the front without `shutdown` closes the batcher and
+/// detaches the workers; prefer [`ServeFront::shutdown`] for the summary.
+pub struct ServeFront {
+    batcher: Arc<Batcher>,
+    stats: Arc<ServeStats>,
+    params: ParamBus,
+    theta_len: usize,
+    obs_dim: usize,
+    act_dim: usize,
+    workers: Vec<std::thread::JoinHandle<Result<()>>>,
+}
+
+impl ServeFront {
+    /// Spawn one worker per backend over a shared batcher. All backends
+    /// must agree on dimensions (they normally wrap the SAME cached
+    /// executable). `theta`/`mu`/`var` seed parameter version 1.
+    pub fn start(
+        backends: Vec<Box<dyn InferBackend>>,
+        theta: &[f32],
+        mu: &[f32],
+        var: &[f32],
+        max_batch: usize,
+        deadline: Duration,
+    ) -> Result<ServeFront> {
+        if backends.is_empty() {
+            bail!("serve front needs at least one worker backend");
+        }
+        let obs_dim = backends[0].obs_dim();
+        let act_dim = backends[0].act_dim();
+        for b in &backends {
+            if b.obs_dim() != obs_dim || b.act_dim() != act_dim {
+                bail!("serve backends disagree on obs/act dims");
+            }
+        }
+        if mu.len() != obs_dim || var.len() != obs_dim {
+            bail!("normalizer dims {}/{} != obs_dim {}", mu.len(), var.len(), obs_dim);
+        }
+        let theta_len = theta.len();
+        let params = ParamBus::new(pack_params(theta, mu, var));
+        let batcher = Arc::new(Batcher::new(max_batch, deadline));
+        let stats = Arc::new(ServeStats::new());
+        let workers = backends
+            .into_iter()
+            .enumerate()
+            .map(|(i, backend)| {
+                let b = Arc::clone(&batcher);
+                let s = Arc::clone(&stats);
+                let p = params.clone();
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{i}"))
+                    .spawn(move || worker_loop(backend, b, s, p, theta_len, obs_dim, act_dim))
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        Ok(ServeFront { batcher, stats, params, theta_len, obs_dim, act_dim, workers })
+    }
+
+    /// A producer handle (clone freely across client threads).
+    pub fn handle(&self) -> ServeHandle {
+        ServeHandle {
+            batcher: Arc::clone(&self.batcher),
+            stats: Arc::clone(&self.stats),
+            obs_dim: self.obs_dim,
+            act_dim: self.act_dim,
+        }
+    }
+
+    /// Publish a new parameter version; workers restage θ/μ/σ² exactly
+    /// once each before their next batch. Returns the new version.
+    pub fn publish_params(&self, theta: &[f32], mu: &[f32], var: &[f32]) -> Result<u64> {
+        if theta.len() != self.theta_len || mu.len() != self.obs_dim || var.len() != self.obs_dim {
+            bail!("publish_params: dimension mismatch");
+        }
+        Ok(self.params.publish(pack_params(theta, mu, var)))
+    }
+
+    /// Current parameter version on the bus.
+    pub fn params_version(&self) -> u64 {
+        self.params.version()
+    }
+
+    /// Live stats (the bench harness snapshots mid-run).
+    pub fn stats(&self) -> &Arc<ServeStats> {
+        &self.stats
+    }
+
+    /// Stop accepting requests, drain the queue, join the workers, and
+    /// return the final accounting. Worker errors surface here.
+    pub fn shutdown(mut self) -> Result<ServeSummary> {
+        self.batcher.close();
+        let mut first_err = None;
+        for w in self.workers.drain(..) {
+            match w.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    first_err.get_or_insert(anyhow::anyhow!("serve worker panicked"));
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(self.stats.summary()),
+        }
+    }
+}
+
+impl Drop for ServeFront {
+    fn drop(&mut self) {
+        // `shutdown` drains `workers`; a raw drop still unblocks them.
+        self.batcher.close();
+    }
+}
+
+/// One atomically-published blob: θ ++ μ ++ σ². Versioned as a unit so a
+/// worker can never pair a new θ with an old normalizer.
+fn pack_params(theta: &[f32], mu: &[f32], var: &[f32]) -> Vec<f32> {
+    let mut blob = Vec::with_capacity(theta.len() + mu.len() + var.len());
+    blob.extend_from_slice(theta);
+    blob.extend_from_slice(mu);
+    blob.extend_from_slice(var);
+    blob
+}
+
+/// Worker: pull batches until the batcher drains closed; on each batch,
+/// catch up on the param version (at most one restage per version per
+/// worker), run the backend once, scatter the action rows.
+fn worker_loop(
+    mut backend: Box<dyn InferBackend>,
+    batcher: Arc<Batcher>,
+    stats: Arc<ServeStats>,
+    params: ParamBus,
+    theta_len: usize,
+    obs_dim: usize,
+    act_dim: usize,
+) -> Result<()> {
+    let mut seen_version = 0u64;
+    let mut batch: Vec<Request> = Vec::new();
+    let mut obs_buf: Vec<f32> = Vec::new();
+    let mut act_buf: Vec<f32> = Vec::new();
+    while batcher.next_batch(&mut batch) {
+        if let Some((v, blob)) = params.latest(seen_version) {
+            seen_version = v;
+            let (theta, rest) = blob.split_at(theta_len);
+            let (mu, var) = rest.split_at(obs_dim);
+            if let Err(e) = backend.set_params(theta, mu, var) {
+                batcher.close();
+                return Err(e.context("serve worker: staging parameters"));
+            }
+            stats.note_param_restage();
+        }
+        let n = batch.len();
+        obs_buf.clear();
+        for r in &batch {
+            debug_assert_eq!(r.obs.len(), obs_dim, "submit() validates row length");
+            obs_buf.extend_from_slice(&r.obs);
+        }
+        act_buf.resize(n * act_dim, 0.0);
+        if let Err(e) = backend.infer(&obs_buf, n, &mut act_buf) {
+            // Dropping the batch drops the reply senders → every waiter in
+            // this batch sees an error rather than a hang; closing the
+            // batcher fails the rest of the front fast.
+            batch.clear();
+            batcher.close();
+            return Err(e.context("serve worker: batch inference"));
+        }
+        stats.note_batch(n);
+        for (i, r) in batch.drain(..).enumerate() {
+            stats.latency.record(r.enqueued.elapsed().as_nanos() as u64);
+            // A producer that gave up (dropped the receiver) is fine.
+            let _ = r.reply.send(act_buf[i * act_dim..(i + 1) * act_dim].to_vec());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic mock: action row = obs row scaled by the staged θ[0],
+    /// so scatter routing and param versions are both observable.
+    struct EchoBackend {
+        od: usize,
+        ad: usize,
+        scale: f32,
+        set_params_calls: Arc<std::sync::atomic::AtomicU64>,
+    }
+
+    impl InferBackend for EchoBackend {
+        fn obs_dim(&self) -> usize {
+            self.od
+        }
+        fn act_dim(&self) -> usize {
+            self.ad
+        }
+        fn set_params(&mut self, theta: &[f32], _mu: &[f32], _var: &[f32]) -> Result<()> {
+            self.scale = theta[0];
+            self.set_params_calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            Ok(())
+        }
+        fn infer(&mut self, obs: &[f32], n: usize, actions: &mut [f32]) -> Result<()> {
+            for i in 0..n {
+                for j in 0..self.ad {
+                    actions[i * self.ad + j] = obs[i * self.od + j % self.od] * self.scale;
+                }
+            }
+            Ok(())
+        }
+    }
+
+    fn front(workers: usize, max_batch: usize, deadline_us: u64) -> (ServeFront, Arc<std::sync::atomic::AtomicU64>) {
+        let calls = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let backends: Vec<Box<dyn InferBackend>> = (0..workers)
+            .map(|_| {
+                Box::new(EchoBackend {
+                    od: 3,
+                    ad: 2,
+                    scale: 0.0,
+                    set_params_calls: Arc::clone(&calls),
+                }) as Box<dyn InferBackend>
+            })
+            .collect();
+        let f = ServeFront::start(
+            backends,
+            &[2.0, 0.0],
+            &[0.0; 3],
+            &[1.0; 3],
+            max_batch,
+            Duration::from_micros(deadline_us),
+        )
+        .unwrap();
+        (f, calls)
+    }
+
+    #[test]
+    fn round_trip_scatters_correct_rows() {
+        let (f, _) = front(2, 4, 200);
+        let h = f.handle();
+        let pending: Vec<_> = (0..10)
+            .map(|i| h.submit(&[i as f32, 10.0 + i as f32, 20.0 + i as f32]).unwrap())
+            .collect();
+        for (i, p) in pending.into_iter().enumerate() {
+            let a = p.wait_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(a, vec![2.0 * i as f32, 2.0 * (10 + i) as f32]);
+        }
+        let sum = f.shutdown().unwrap();
+        assert_eq!(sum.requests, 10);
+        assert!(sum.batches >= 3, "max_batch 4 → at least ceil(10/4) batches");
+    }
+
+    #[test]
+    fn submit_validates_row_length() {
+        let (f, _) = front(1, 4, 200);
+        assert!(f.handle().submit(&[1.0]).is_err());
+        f.shutdown().unwrap();
+    }
+
+    #[test]
+    fn publish_changes_actions_and_counts_one_restage_per_worker() {
+        let (f, calls) = front(1, 64, 100);
+        let h = f.handle();
+        let a = h.submit(&[1.0, 0.0, 0.0]).unwrap().wait_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(a[0], 2.0);
+        assert_eq!(calls.load(std::sync::atomic::Ordering::SeqCst), 1, "v1 staged once");
+        f.publish_params(&[5.0, 0.0], &[0.0; 3], &[1.0; 3]).unwrap();
+        // Give the single worker several batches; params must restage once.
+        for _ in 0..5 {
+            let a = h.submit(&[1.0, 0.0, 0.0]).unwrap().wait_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(a[0], 5.0, "new version visible");
+        }
+        assert_eq!(
+            calls.load(std::sync::atomic::Ordering::SeqCst),
+            2,
+            "exactly one restage for the published version"
+        );
+        f.shutdown().unwrap();
+    }
+
+    #[test]
+    fn shutdown_rejects_new_requests() {
+        let (f, _) = front(1, 4, 100);
+        let h = f.handle();
+        f.shutdown().unwrap();
+        assert!(h.submit(&[0.0; 3]).is_err());
+    }
+}

@@ -1,0 +1,189 @@
+//! Serving-plane accounting: per-request latency, batch-size shape,
+//! queue depth, and parameter-staging counters.
+//!
+//! Everything here is wait-free on the hot path (atomics only); the
+//! worker pool and producer handles hammer these counters concurrently.
+//! `summary()` takes a point-in-time snapshot used by the CLI printout,
+//! the serving bench rows in `BENCH_learner_feed.json`, and the perf
+//! gate's p50-ceiling / saturation-floor checks.
+
+use crate::metrics::LatencyHistogram;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Batch sizes are histogrammed in power-of-two buckets: bucket `i`
+/// covers sizes in `[2^i, 2^(i+1))` (bucket 0 is exactly size 1).
+const BATCH_BUCKETS: usize = 16;
+
+/// Shared, concurrently-updated counters for one serve front.
+pub struct ServeStats {
+    /// Enqueue → action-delivered latency per request.
+    pub latency: LatencyHistogram,
+    batch_counts: [AtomicU64; BATCH_BUCKETS],
+    requests: AtomicU64,
+    batches: AtomicU64,
+    batch_rows_sum: AtomicU64,
+    queue_depth_peak: AtomicU64,
+    param_restages: AtomicU64,
+    started: Instant,
+}
+
+impl Default for ServeStats {
+    fn default() -> Self {
+        ServeStats::new()
+    }
+}
+
+impl ServeStats {
+    pub fn new() -> ServeStats {
+        ServeStats {
+            latency: LatencyHistogram::new(),
+            batch_counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_rows_sum: AtomicU64::new(0),
+            queue_depth_peak: AtomicU64::new(0),
+            param_restages: AtomicU64::new(0),
+            started: Instant::now(),
+        }
+    }
+
+    /// A producer observed this queue depth right after its push.
+    pub fn note_queue_depth(&self, depth: usize) {
+        self.queue_depth_peak.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+
+    /// A worker shipped a batch of `rows` requests.
+    pub fn note_batch(&self, rows: usize) {
+        debug_assert!(rows > 0);
+        let bucket = (usize::BITS - 1 - rows.leading_zeros()) as usize;
+        self.batch_counts[bucket.min(BATCH_BUCKETS - 1)].fetch_add(1, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_rows_sum.fetch_add(rows as u64, Ordering::Relaxed);
+        self.requests.fetch_add(rows as u64, Ordering::Relaxed);
+    }
+
+    /// A worker restaged θ/μ/σ² for a new parameter version.
+    pub fn note_param_restage(&self) {
+        self.param_restages.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn param_restages(&self) -> u64 {
+        self.param_restages.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time snapshot of every serving metric.
+    pub fn summary(&self) -> ServeSummary {
+        let requests = self.requests.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let rows = self.batch_rows_sum.load(Ordering::Relaxed);
+        let elapsed = self.started.elapsed().as_secs_f64().max(1e-9);
+        ServeSummary {
+            requests,
+            batches,
+            mean_batch: if batches == 0 { 0.0 } else { rows as f64 / batches as f64 },
+            batch_histogram: std::array::from_fn(|i| {
+                self.batch_counts[i].load(Ordering::Relaxed)
+            }),
+            queue_depth_peak: self.queue_depth_peak.load(Ordering::Relaxed),
+            param_restages: self.param_restages.load(Ordering::Relaxed),
+            p50_us: self.latency.quantile_ns(0.50) / 1_000.0,
+            p99_us: self.latency.quantile_ns(0.99) / 1_000.0,
+            max_us: self.latency.max_ns() as f64 / 1_000.0,
+            mean_us: self.latency.mean_ns() / 1_000.0,
+            requests_per_sec: requests as f64 / elapsed,
+        }
+    }
+}
+
+/// Snapshot of the serving metrics (see [`ServeStats::summary`]).
+#[derive(Debug, Clone)]
+pub struct ServeSummary {
+    pub requests: u64,
+    pub batches: u64,
+    /// Mean realized batch size — the deadline/traffic equilibrium point.
+    pub mean_batch: f64,
+    /// Power-of-two batch-size histogram; bucket `i` counts batches with
+    /// `2^i ..= 2^(i+1)-1` rows.
+    pub batch_histogram: [u64; BATCH_BUCKETS],
+    pub queue_depth_peak: u64,
+    pub param_restages: u64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+    pub mean_us: f64,
+    pub requests_per_sec: f64,
+}
+
+impl ServeSummary {
+    /// Multi-line human-readable report (CLI + example output).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "requests {}  batches {}  mean batch {:.1}  peak queue {}\n",
+            self.requests, self.batches, self.mean_batch, self.queue_depth_peak
+        ));
+        s.push_str(&format!(
+            "latency p50 {:.1}us  p99 {:.1}us  max {:.1}us  mean {:.1}us\n",
+            self.p50_us, self.p99_us, self.max_us, self.mean_us
+        ));
+        s.push_str(&format!(
+            "throughput {:.0} req/s  param restages {}\n",
+            self.requests_per_sec, self.param_restages
+        ));
+        let hist: Vec<String> = self
+            .batch_histogram
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| **c > 0)
+            .map(|(i, c)| format!("{}+:{}", 1u64 << i, c))
+            .collect();
+        s.push_str(&format!("batch sizes {{{}}}", hist.join(" ")));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_histogram_buckets_by_power_of_two() {
+        let s = ServeStats::new();
+        s.note_batch(1); // bucket 0
+        s.note_batch(2); // bucket 1
+        s.note_batch(3); // bucket 1
+        s.note_batch(8); // bucket 3
+        let sum = s.summary();
+        assert_eq!(sum.batches, 4);
+        assert_eq!(sum.requests, 14);
+        assert_eq!(sum.batch_histogram[0], 1);
+        assert_eq!(sum.batch_histogram[1], 2);
+        assert_eq!(sum.batch_histogram[3], 1);
+        assert!((sum.mean_batch - 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queue_depth_tracks_peak() {
+        let s = ServeStats::new();
+        s.note_queue_depth(3);
+        s.note_queue_depth(11);
+        s.note_queue_depth(5);
+        assert_eq!(s.summary().queue_depth_peak, 11);
+    }
+
+    #[test]
+    fn render_mentions_key_numbers() {
+        let s = ServeStats::new();
+        s.note_batch(4);
+        s.latency.record(2_000_000); // 2ms
+        let text = s.summary().render();
+        assert!(text.contains("requests 4"));
+        assert!(text.contains("p50"));
+        assert!(text.contains("req/s"));
+    }
+}

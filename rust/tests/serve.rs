@@ -1,0 +1,357 @@
+//! Serving-plane property tests.
+//!
+//! The batching/scatter/param machinery is exercised through a
+//! deterministic mock backend (no artifacts needed — these run
+//! everywhere, including the artifact-less container). The PJRT-specific
+//! contracts — one compile shared by N workers, staged-element accounting
+//! on the real backend — self-skip when `artifacts/` is absent, like the
+//! engine tests.
+
+use pql::serve::{InferBackend, PjrtBackend, ServeFront, ServeHandle};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Deterministic mock: `action[j] = θ[0] * obs[j]`, so each reply proves
+/// which request row it was computed from and which param version was
+/// staged. Batch sizes are journaled for the max-size property.
+struct EchoBackend {
+    od: usize,
+    ad: usize,
+    scale: f32,
+    set_params_calls: Arc<AtomicU64>,
+    batch_sizes: Arc<Mutex<Vec<usize>>>,
+}
+
+impl EchoBackend {
+    fn boxed(
+        od: usize,
+        ad: usize,
+        set_params_calls: &Arc<AtomicU64>,
+        batch_sizes: &Arc<Mutex<Vec<usize>>>,
+    ) -> Box<dyn InferBackend> {
+        Box::new(EchoBackend {
+            od,
+            ad,
+            scale: 0.0,
+            set_params_calls: Arc::clone(set_params_calls),
+            batch_sizes: Arc::clone(batch_sizes),
+        })
+    }
+}
+
+impl InferBackend for EchoBackend {
+    fn obs_dim(&self) -> usize {
+        self.od
+    }
+    fn act_dim(&self) -> usize {
+        self.ad
+    }
+    fn set_params(&mut self, theta: &[f32], _mu: &[f32], _var: &[f32]) -> anyhow::Result<()> {
+        self.scale = theta[0];
+        self.set_params_calls.fetch_add(1, Ordering::SeqCst);
+        Ok(())
+    }
+    fn infer(&mut self, obs: &[f32], n: usize, actions: &mut [f32]) -> anyhow::Result<()> {
+        self.batch_sizes.lock().unwrap().push(n);
+        for i in 0..n {
+            for j in 0..self.ad {
+                actions[i * self.ad + j] = self.scale * obs[i * self.od + j];
+            }
+        }
+        Ok(())
+    }
+}
+
+const OD: usize = 4;
+const AD: usize = 2;
+
+fn mock_front(
+    workers: usize,
+    max_batch: usize,
+    deadline: Duration,
+) -> (ServeFront, Arc<AtomicU64>, Arc<Mutex<Vec<usize>>>) {
+    let calls = Arc::new(AtomicU64::new(0));
+    let sizes = Arc::new(Mutex::new(Vec::new()));
+    let backends = (0..workers)
+        .map(|_| EchoBackend::boxed(OD, AD, &calls, &sizes))
+        .collect();
+    let front = ServeFront::start(
+        backends,
+        &[1.0],
+        &[0.0; OD],
+        &[1.0; OD],
+        max_batch,
+        deadline,
+    )
+    .unwrap();
+    (front, calls, sizes)
+}
+
+fn obs_row(tag: f32) -> [f32; OD] {
+    [tag, tag + 0.25, tag + 0.5, tag + 0.75]
+}
+
+/// Lone requests against a huge max-batch MUST be flushed by the
+/// deadline: nothing else can trigger a flush, so completing at all (and
+/// promptly) is exactly the deadline-flush property. The generous bound
+/// absorbs CI scheduler jitter; without the deadline path the request
+/// would sit until shutdown and the wait below would time out.
+#[test]
+fn lone_requests_flush_by_deadline_not_shutdown() {
+    let deadline = Duration::from_millis(10);
+    let (front, _, _) = mock_front(1, 1024, deadline);
+    let h = front.handle();
+    for k in 0..5 {
+        let t0 = Instant::now();
+        let a = h
+            .submit(&obs_row(k as f32))
+            .unwrap()
+            .wait_timeout(Duration::from_secs(5))
+            .expect("deadline flush must serve a lone request");
+        assert!(
+            t0.elapsed() < deadline + Duration::from_millis(500),
+            "request {k} waited {:?}, far past the {deadline:?} deadline",
+            t0.elapsed()
+        );
+        assert_eq!(a[0], k as f32);
+    }
+    let sum = front.shutdown().unwrap();
+    assert_eq!(sum.requests, 5);
+    assert_eq!(sum.batches, 5, "lone requests → size-1 deadline batches");
+}
+
+/// Under a flood from many producers, no executed batch may exceed
+/// `max_batch`, and a full batch must not wait for the deadline.
+#[test]
+fn batches_never_exceed_max_size_under_flood() {
+    let max_batch = 8;
+    // Deadline long enough that flushes under flood are size-triggered.
+    let (front, _, sizes) = mock_front(2, max_batch, Duration::from_millis(50));
+    let producers: Vec<_> = (0..4)
+        .map(|p| {
+            let h = front.handle();
+            std::thread::spawn(move || {
+                let mut pending = Vec::new();
+                for k in 0..200 {
+                    pending.push(h.submit(&obs_row((p * 1000 + k) as f32)).unwrap());
+                }
+                for a in pending {
+                    a.wait_timeout(Duration::from_secs(10)).unwrap();
+                }
+            })
+        })
+        .collect();
+    for p in producers {
+        p.join().unwrap();
+    }
+    let sum = front.shutdown().unwrap();
+    assert_eq!(sum.requests, 800);
+    let sizes = sizes.lock().unwrap();
+    assert_eq!(sizes.iter().sum::<usize>(), 800);
+    assert!(
+        sizes.iter().all(|n| *n <= max_batch),
+        "batch over max size: {:?}",
+        sizes.iter().max()
+    );
+    // A flood against a 50ms deadline must coalesce: strictly fewer
+    // batches than requests (most flushes are full-batch flushes).
+    assert!(
+        sum.batches < 800,
+        "no coalescing happened ({} batches for 800 requests)",
+        sum.batches
+    );
+}
+
+/// Exactly-one-action routing: N producers submit tagged rows
+/// concurrently; every reply must be the action computed from that
+/// producer's own row (scatter never crosses requests), and every
+/// request gets exactly one reply.
+#[test]
+fn every_request_gets_its_own_action_under_n_producers() {
+    let (front, _, _) = mock_front(3, 16, Duration::from_micros(200));
+    let producers: Vec<_> = (0..6)
+        .map(|p| {
+            let h: ServeHandle = front.handle();
+            std::thread::spawn(move || {
+                for k in 0..150 {
+                    let tag = (p * 10_000 + k) as f32;
+                    let obs = obs_row(tag);
+                    let a = h
+                        .submit(&obs)
+                        .unwrap()
+                        .wait_timeout(Duration::from_secs(10))
+                        .unwrap();
+                    assert_eq!(a.len(), AD);
+                    assert_eq!(a[0], obs[0], "reply routed to the wrong request");
+                    assert_eq!(a[1], obs[1]);
+                }
+            })
+        })
+        .collect();
+    for p in producers {
+        p.join().unwrap();
+    }
+    let sum = front.shutdown().unwrap();
+    assert_eq!(sum.requests, 6 * 150, "exactly one action per enqueued request");
+}
+
+/// A `ParamBus` version bump restages parameters exactly once per worker
+/// per version — never once per batch.
+#[test]
+fn version_bump_restages_exactly_once_per_worker() {
+    let workers = 3;
+    let (front, calls, _) = mock_front(workers, 4, Duration::from_micros(200));
+    let h = front.handle();
+    let drive = |h: &ServeHandle, scale: f32| {
+        // Keep traffic flowing until every returned action reflects
+        // `scale` (all workers have caught up on the version).
+        let t0 = Instant::now();
+        loop {
+            let mut all = true;
+            for k in 0..32 {
+                let obs = obs_row(k as f32 + 1.0);
+                let a = h
+                    .submit(&obs)
+                    .unwrap()
+                    .wait_timeout(Duration::from_secs(10))
+                    .unwrap();
+                all &= a[0] == scale * obs[0];
+            }
+            if all {
+                break;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(30), "version never converged");
+        }
+    };
+    drive(&h, 1.0);
+    let v1_calls = calls.load(Ordering::SeqCst);
+    assert!(
+        v1_calls as usize <= workers,
+        "version 1 staged more than once per worker: {v1_calls}"
+    );
+    front.publish_params(&[7.0], &[0.0; OD], &[1.0; OD]).unwrap();
+    drive(&h, 7.0);
+    drive(&h, 7.0); // many more batches, zero more restages
+    let total = calls.load(Ordering::SeqCst);
+    assert!(
+        total as usize <= 2 * workers,
+        "a version was staged more than once on some worker: {total} calls, {workers} workers x 2 versions"
+    );
+    let sum = front.shutdown().unwrap();
+    assert_eq!(sum.param_restages, total);
+}
+
+// ---------------------------------------------------------------------------
+// PJRT-backed contracts (self-skip without artifacts).
+
+fn artifact_root() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// N serving workers share ONE compile through the executable cache: load
+/// the artifact once per worker through an isolated runtime and count.
+#[test]
+fn n_workers_share_one_compile() {
+    use pql::runtime::{DeviceSpec, Manifest, Runtime};
+    let Ok(manifest) = Manifest::load(&artifact_root()) else { return };
+    let Ok(rt) = Runtime::isolated(DeviceSpec::Cpu) else { return };
+    let t = manifest.task("ant").unwrap();
+    let info = t.artifacts.get("actor_infer").unwrap();
+    let workers = 4;
+    // Each worker path does its own cache lookup, as N engines would.
+    let backends: Vec<Box<dyn InferBackend>> = (0..workers)
+        .map(|_| {
+            let exe = rt.load("ant", "actor_infer", info).unwrap();
+            Box::new(
+                PjrtBackend::new(exe, manifest.chunk, t.obs_dim, t.act_dim).unwrap(),
+            ) as Box<dyn InferBackend>
+        })
+        .collect();
+    assert_eq!(rt.cache().compiles(), 1, "N workers must share one compile");
+    assert_eq!(rt.cache().hits(), workers as u64 - 1);
+
+    let mut rng = pql::util::Rng::new(11);
+    let theta = t.layouts["actor"].init(&mut rng);
+    let front = ServeFront::start(
+        backends,
+        &theta,
+        &vec![0.0; t.obs_dim],
+        &vec![1.0; t.obs_dim],
+        32,
+        Duration::from_micros(200),
+    )
+    .unwrap();
+    let producers: Vec<_> = (0..4)
+        .map(|p| {
+            let h = front.handle();
+            let od = t.obs_dim;
+            std::thread::spawn(move || {
+                let mut rng = pql::util::Rng::new(100 + p);
+                let mut obs = vec![0.0f32; od];
+                for _ in 0..40 {
+                    rng.fill_normal(&mut obs);
+                    let a = h
+                        .submit(&obs)
+                        .unwrap()
+                        .wait_timeout(Duration::from_secs(30))
+                        .unwrap();
+                    assert!(a.iter().all(|v| v.is_finite() && v.abs() <= 1.0), "tanh bound");
+                }
+            })
+        })
+        .collect();
+    for p in producers {
+        p.join().unwrap();
+    }
+    let sum = front.shutdown().unwrap();
+    assert_eq!(sum.requests, 4 * 40);
+    assert_eq!(rt.cache().compiles(), 1, "serving traffic must not recompile");
+}
+
+/// The staged-literal protocol on the real backend: θ/μ/σ² staged once
+/// per `set_params`, only the obs chunk restaged per executed chunk.
+#[test]
+fn pjrt_backend_stages_params_once_per_version() {
+    use pql::runtime::{DeviceSpec, Manifest, Runtime};
+    let Ok(manifest) = Manifest::load(&artifact_root()) else { return };
+    let Ok(rt) = Runtime::isolated(DeviceSpec::Cpu) else { return };
+    let t = manifest.task("ant").unwrap();
+    let info = t.artifacts.get("actor_infer").unwrap();
+    let exe = rt.load("ant", "actor_infer", info).unwrap();
+    let (od, ad, chunk) = (t.obs_dim, t.act_dim, manifest.chunk);
+    let mut backend = PjrtBackend::new(exe, chunk, od, ad).unwrap();
+    assert_eq!(backend.staged_elems(), 0);
+
+    let mut rng = pql::util::Rng::new(5);
+    let theta = t.layouts["actor"].init(&mut rng);
+    let (mu, var) = (vec![0.0f32; od], vec![1.0f32; od]);
+    let params = (theta.len() + 2 * od) as u64;
+    let obs_chunk = (chunk * od) as u64;
+
+    // First version: everything staged once (obs slot seeded with zeros).
+    backend.set_params(&theta, &mu, &var).unwrap();
+    assert_eq!(backend.staged_elems(), params + obs_chunk);
+
+    // A batch restages exactly one obs chunk, nothing else.
+    let n = chunk / 2 + 1;
+    let mut obs = vec![0.0f32; n * od];
+    rng.fill_normal(&mut obs);
+    let mut actions = vec![0.0f32; n * ad];
+    backend.infer(&obs, n, &mut actions).unwrap();
+    assert_eq!(backend.staged_elems(), params + 2 * obs_chunk);
+    assert!(actions.iter().all(|v| v.is_finite() && v.abs() <= 1.0));
+
+    // A version bump restages the parameter slots only.
+    backend.set_params(&theta, &mu, &var).unwrap();
+    assert_eq!(backend.staged_elems(), 2 * params + 2 * obs_chunk);
+
+    // A multi-chunk batch restages one obs chunk per executed chunk.
+    let big = chunk + 3;
+    let mut obs = vec![0.0f32; big * od];
+    rng.fill_normal(&mut obs);
+    let mut actions = vec![0.0f32; big * ad];
+    backend.infer(&obs, big, &mut actions).unwrap();
+    assert_eq!(backend.staged_elems(), 2 * params + 4 * obs_chunk);
+}
