@@ -35,8 +35,11 @@ dispatch vs host step + chunked inference) is floored like the feed
 speedups. PR 8 adds the `serving` section of BENCH_learner_feed.json:
 each (n, workers) row is gated on a p50 latency CEILING and a
 saturation-throughput floor against the baseline (cross-run tolerance;
-skip-with-notice on stub baselines). When $GITHUB_STEP_SUMMARY is set, a
-per-group delta table is appended to the job summary.
+skip-with-notice on stub baselines). PR 9 adds the `cross_device_bus`
+section: the cross-runtime-over-same-runtime sync ratio is gated against
+the baseline's (the `pull` → `restage` transport must not quietly get
+more expensive), never on absolute sync rates. When $GITHUB_STEP_SUMMARY
+is set, a per-group delta table is appended to the job summary.
 
 Tolerance: --tolerance or $PERF_GATE_TOLERANCE, default 0.35 (shared CI
 runners are noisy; tighten locally with PERF_GATE_TOLERANCE=0.1).
@@ -90,6 +93,9 @@ ARTIFACT_DEPENDENT_GROUPS = {
     "step_infer_fused",
     # PR-8 policy-serving rows: the serve front drives actor_infer.
     "serve_saturation",
+    # PR-9 topology rows: bus transport into a resident actor_update.
+    "bus_same_rt",
+    "bus_cross_rt",
 }
 
 # Groups tracked for the perf trajectory but NOT gated: one-shot
@@ -272,6 +278,44 @@ def gate_serving(baseline, fresh, tol, report):
     return fails
 
 
+def gate_cross_device_bus(baseline, fresh, tol, report):
+    """Transport-overhead gate for the cross-device bus section (PR 9).
+
+    The per-row `bus_same_rt`/`bus_cross_rt` rates are machine-bound (the
+    update step dominates); the invariant worth defending is the
+    cross/same ratio — how much the explicit `pull` → `restage` transport
+    into a *second* runtime costs relative to a same-runtime subscriber
+    doing identical work. Gated fresh-vs-baseline with the cross-run
+    tolerance; skip-with-notice when either side lacks the section
+    (stub baselines, runners without artifacts).
+    """
+    fails = 0
+    f_sc = fresh.get("cross_device_bus")
+    b_sc = baseline.get("cross_device_bus")
+    if not f_sc:
+        report.append("SKIP  cross-device bus: fresh run has no "
+                      "cross_device_bus section (artifacts not present "
+                      "on this runner)")
+        return 0
+    if not b_sc:
+        report.append("SKIP  cross-device bus: baseline has no "
+                      "cross_device_bus section (stub not yet populated)")
+        return 0
+    b_v, f_v = b_sc.get("cross_over_same", 0.0), f_sc.get("cross_over_same", 0.0)
+    if b_v <= 0.0:
+        report.append("SKIP  cross-device bus: baseline cross_over_same is 0")
+        return 0
+    verdict = "ok  " if f_v >= b_v * (1.0 - tol) else "FAIL"
+    if verdict == "FAIL":
+        fails += 1
+    report.append(
+        f"{verdict}  cross-device bus: cross_over_same = {f_v:.3f} vs "
+        f"baseline {b_v:.3f} (gated on the transport-overhead ratio, not "
+        "absolute sync rates)"
+    )
+    return fails
+
+
 def gate_dispatch_scaling(baseline, fresh, tol, report):
     """Concurrency-scaling gate for the dispatch-contention section.
 
@@ -394,6 +438,8 @@ def main():
         if plane == "BENCH_learner_feed.json":
             fails += gate_feed_speedups(fresh, args.feed_floor, report)
             fails += gate_dispatch_scaling(baseline, fresh, args.tolerance,
+                                           report)
+            fails += gate_cross_device_bus(baseline, fresh, args.tolerance,
                                            report)
             fails += gate_serving(baseline, fresh, args.tolerance, report)
 

@@ -14,6 +14,9 @@
 //!   under closed-loop load — p50/p99 latency and saturation throughput
 //!   per worker-pool size, emitted as the `serving` section of
 //!   `BENCH_learner_feed.json`.
+//! - Topology plane (through PJRT): the versioned-bus parameter transport
+//!   (`publish` → `pull` → `restage`) into a subscriber on the same vs a
+//!   second isolated runtime — the `cross_device_bus` section.
 
 use pql::config::{Exploration, Ratio};
 use pql::coordinator::PaceController;
@@ -472,6 +475,24 @@ fn write_learner_feed_json(
     } else {
         String::new()
     };
+    // Cross-device bus section: one θ_c publish → pull → restage → step
+    // roundtrip with the subscriber sharing the publisher's runtime vs on
+    // a second isolated runtime. Same work either side, so the ratio is
+    // machine-neutral — that's the number the perf gate guards.
+    let bus_same = records.iter().find(|r| r.group == "bus_same_rt");
+    let bus_cross = records.iter().find(|r| r.group == "bus_cross_rt");
+    let bus_section = match (bus_same, bus_cross) {
+        (Some(same), Some(cross)) => format!(
+            ",\n  \"cross_device_bus\": {{\"theta_elems\": {}, \
+             \"same_rt_syncs_per_sec\": {:.1}, \"cross_rt_syncs_per_sec\": {:.1}, \
+             \"cross_over_same\": {:.3}}}",
+            same.n,
+            same.per_sec,
+            cross.per_sec,
+            cross.per_sec / same.per_sec.max(1e-9)
+        ),
+        _ => String::new(),
+    };
     // Policy-serving section: the deadline-batched front's latency
     // quantiles and closed-loop saturation throughput (rows are formatted
     // by the serving bench — they carry quantiles a PlaneRecord doesn't).
@@ -481,11 +502,12 @@ fn write_learner_feed_json(
         format!(",\n  \"serving\": [\n{}\n  ]", serving_rows.join(",\n"))
     };
     let json = format!(
-        "{{\n  \"schema\": \"pql.bench.learner_feed/v1\",\n  \"source\": \"cargo bench --bench throughput\",\n  \"task\": \"ant\",\n  \"results\": [\n{}\n  ],\n  \"speedups\": [\n{}\n  ]{}{}{}\n}}\n",
+        "{{\n  \"schema\": \"pql.bench.learner_feed/v1\",\n  \"source\": \"cargo bench --bench throughput\",\n  \"task\": \"ant\",\n  \"results\": [\n{}\n  ],\n  \"speedups\": [\n{}\n  ]{}{}{}{}\n}}\n",
         rows_json(records),
         speedups.join(",\n"),
         resident_section,
         dispatch_section,
+        bus_section,
         serving_section
     );
     let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_learner_feed.json");
@@ -1114,6 +1136,95 @@ fn main() {
                 }
             } else {
                 println!("dispatch contention: missing artifacts, skipping");
+            }
+        }
+
+        // --- cross-device bus transport (PR 9 topology plane) -----------
+        // One θ_c sync-update per iteration: publish → `Bus::pull` →
+        // `restage("theta_c")` → resident step, with the subscriber on the
+        // publisher's runtime vs on a second isolated CPU runtime (two
+        // PJRT clients standing in for a two-device placement). The work
+        // is identical either way, so the cross/same ratio isolates what
+        // the explicit transport adds; the perf gate tracks that ratio —
+        // absolute rates are machine-bound and ride along informationally.
+        {
+            use pql::coordinator::ParamBus;
+            use pql::runtime::{DeviceSpec, Runtime};
+            let b = 512usize;
+            let dims = FeedDims {
+                batch: b,
+                obs_dim: t.obs_dim,
+                act_dim: t.act_dim,
+                critic_obs_dim: t.critic_obs_dim,
+                actor_params: t.layouts["actor"].size,
+                critic_params: t.layouts["critic"].size,
+            };
+            let actor_init = t.layouts["actor"].init(&mut r);
+            let mut theta_c = t.layouts["critic"].init(&mut r);
+            let mu = vec![0.0f32; t.obs_dim];
+            let var = vec![1.0f32; t.obs_dim];
+            let mut s = vec![0.0f32; b * t.obs_dim];
+            r.fill_normal(&mut s);
+            for (group, rt) in [
+                ("bus_same_rt", Some(std::sync::Arc::clone(engine.runtime()))),
+                ("bus_cross_rt", Runtime::isolated(DeviceSpec::Cpu).ok()),
+            ] {
+                let Some(rt) = rt else {
+                    println!("cross-device bus: isolated runtime unavailable, skipping");
+                    continue;
+                };
+                let mut eng = Engine::with_runtime(rt, std::sync::Arc::clone(&m));
+                let Ok(exe) = eng.load("ant", "actor_update") else {
+                    println!("cross-device bus: actor_update artifact missing, skipping");
+                    continue;
+                };
+                let actor = OptState::new(actor_init.clone());
+                let mut res = ResidentUpdate::new(
+                    std::sync::Arc::clone(&exe),
+                    FeedPlan::actor_update(Variant::Ddpg, &dims, 5e-4),
+                    0.0,
+                    |f| {
+                        f.bind_adam(&actor)?;
+                        f.bind("theta_c", &theta_c)?;
+                        f.bind("s", &s)?;
+                        f.bind("mu", &mu)?;
+                        f.bind("var", &var)?;
+                        Ok(())
+                    },
+                )
+                .unwrap();
+                let bus = ParamBus::new(theta_c.clone());
+                let mut version = 0u64;
+                let mut tick = 0.0f32;
+                let pc = theta_c.len();
+                let name = format!("bus publish->pull->restage ({group})");
+                let (ms, rate) = bench(&name, 1.0, "sync-updates", 120, || {
+                    // Perturb θ_c so every publish is a genuinely new
+                    // version — `pull` must stage, never short-circuit.
+                    tick += 1e-6;
+                    theta_c[0] = tick;
+                    bus.publish(theta_c.clone());
+                    let res = &mut res;
+                    if let Some(v) =
+                        bus.pull(version, |th| res.restage("theta_c", th)).unwrap()
+                    {
+                        version = v;
+                    }
+                    std::hint::black_box(res.step().unwrap());
+                });
+                let c = bus.counters();
+                println!(
+                    "  {group}: {} publishes, {} deliveries, {} lagged",
+                    c.publishes, c.deliveries, c.lagged_versions
+                );
+                feed.push(PlaneRecord {
+                    group,
+                    name,
+                    n: pc,
+                    ms_per_iter: ms,
+                    per_sec: rate,
+                    unit: "sync-updates",
+                });
             }
         }
 

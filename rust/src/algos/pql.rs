@@ -1,9 +1,14 @@
 //! Parallel Q-Learning — the paper's scheme (Fig. 1, Algorithms 1–3).
 //!
-//! Three OS threads:
-//! - **Actor**: rolls out N envs with mixed exploration, streams transition
-//!   batches to the V-learner and state batches to the P-learner, and
-//!   maintains/publishes the observation normalizer.
+//! OS-thread topology:
+//! - **Actor** (1 or `--actor-shards K` threads): rolls out N envs with
+//!   mixed exploration, streams transition batches to the V-learner and
+//!   state batches to the P-learner, and maintains/publishes the
+//!   observation normalizer. At K > 1 each thread owns a contiguous range
+//!   of the global env shards; every per-shard stream (dynamics, σ-ladder
+//!   noise, warm-up actions, normalizer) derives from the *global* shard
+//!   index alone, so trajectories — and the replay ring, via the
+//!   V-learner's `(round, origin)`-ordered ingest — are invariant in K.
 //! - **V-learner**: owns the replay buffer and the n-step assembler, runs
 //!   `critic_update` artifacts (double-Q + n-step + polyak target inside
 //!   the AOT graph), publishes Q^v.
@@ -11,26 +16,31 @@
 //!   local Q^p copy, publishes π^p (hard policy-target semantics, §3.2).
 //!
 //! The main thread evaluates periodically and enforces the wall-clock
-//! budget. All cross-thread parameter traffic is flat `Vec<f32>` via the
-//! [`ParamBus`] — the paper's network-transfer arrows.
+//! budget. All cross-thread parameter traffic flows over the unified
+//! versioned [`Bus<T>`](crate::coordinator::bus::Bus) channels (the
+//! paper's network-transfer arrows); when publisher and subscriber roles
+//! sit on different devices — each role resolves its own PJRT runtime via
+//! [`Placement`] — a bus value crosses as a staged-literal copy into the
+//! subscriber's resident slots (`Bus::pull` → `ResidentUpdate::restage`).
 
 use crate::config::TrainConfig;
-use crate::coordinator::{evaluate, MsgPool, ReturnTracker, Shared, StepMsg};
-use crate::envs::{self, StepOut};
+use crate::coordinator::{evaluate, MsgPool, OrderedIngest, ReturnTracker, Shared, StepMsg};
+use crate::envs::{self, StepOut, VecEnv};
 use crate::exploration::Noise;
 use crate::metrics::{Record, RunLog};
 use crate::replay::{
     NStepAssembler, ReadyBatch, SampleBatch, StateBuffer, SumTree, TransitionBuffer,
 };
 use crate::runtime::{
-    infer_chunked, Engine, FeedDims, FeedPlan, Manifest, OptState, ResidentUpdate, Runtime,
+    infer_chunked, Engine, FeedDims, FeedPlan, Manifest, OptState, Placement, ResidentUpdate,
+    Role, Runtime,
 };
-use crate::util::{Rng, RunningNorm};
+use crate::util::{merge_moments, Rng, RunningNorm};
 use anyhow::{Context, Result};
 use log::{debug, info};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 
 // The learner-family enum lives with the feed plane (it names artifacts
 // and layouts); re-exported here so `pql::Variant` keeps working.
@@ -53,6 +63,10 @@ fn feed_dims(tinfo: &crate::runtime::TaskInfo, variant: Variant, batch: usize) -
 const CRITIC_SYNC_EVERY: u64 = 4;
 /// How often (in steps) the Actor re-publishes the normalizer.
 const NORM_SYNC_EVERY: u64 = 16;
+/// Max rounds any actor shard thread may run ahead of the slowest one.
+/// Bounds the V-learner's reorder buffer to `K * (skew + channel depth)`
+/// messages while leaving the threads free-running within the window.
+const ACTOR_ROUND_SKEW: u64 = 8;
 
 pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, variant: Variant) -> Result<RunLog> {
     let manifest = Arc::new(Manifest::load(artifact_dir)?);
@@ -82,40 +96,87 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, variant: Variant
         }
     }
 
-    // One device resolution + one PJRT client for the whole run: the
-    // actor, both learners, and the eval loop compile into the shared
-    // executable cache, so each artifact file compiles exactly once per
-    // process instead of once per thread (ROADMAP "engine sharing").
-    let runtime = Runtime::shared(cfg.device)?;
-    info!("pjrt device: {} (requested {})", runtime.device_key(), cfg.device);
+    // Per-role device placement (`--device-actor/-v/-p/-eval`, config
+    // `[topology]`). Roles that resolve to the same spec share one
+    // `Runtime::shared` — one PJRT client, one executable cache — so the
+    // uniform default keeps the "each artifact compiles exactly once per
+    // process" property (ROADMAP "engine sharing") bit-for-bit, while a
+    // split placement gets one runtime per distinct device.
+    // Programmatic configs that set `device` without touching `topology`
+    // fall back to a uniform placement on that device.
+    let topology = if cfg.topology.is_uniform() && cfg.topology.default_spec() != cfg.device {
+        Placement::uniform(cfg.device)
+    } else {
+        cfg.topology.clone()
+    };
+    let env_shards = envs::auto_shards(cfg.env_shards, cfg.num_envs);
+    // An actor thread with no env shard would produce empty batches:
+    // shards partition env shards, so K is capped by the shard count.
+    let actor_shards = cfg.actor_shards.clamp(1, env_shards);
+    if actor_shards != cfg.actor_shards {
+        info!(
+            "actor shards capped at {actor_shards} (env shards: {env_shards}); \
+             raise --env-shards to use more actor threads"
+        );
+    }
+    if cfg.device_env && actor_shards > 1 {
+        anyhow::bail!(
+            "--device-env runs the fused single-stream rollout plane; \
+             it does not compose with --actor-shards > 1"
+        );
+    }
+    let rt_v = topology.runtime(Role::VLearner)?;
+    let rt_p = topology.runtime(Role::PLearner)?;
+    let rt_eval = topology.runtime(Role::Eval)?;
+    let rt_actor0 = topology.actor_runtime(0)?;
+    info!(
+        "pjrt device: {} (requested {})",
+        rt_actor0.device_key(),
+        topology.default_spec()
+    );
+    if !topology.is_uniform() {
+        info!(
+            "topology: {topology} -> actor {} | v {} | p {} | eval {}",
+            rt_actor0.device_key(),
+            rt_v.device_key(),
+            rt_p.device_key(),
+            rt_eval.device_key()
+        );
+    }
 
     let mut rng = Rng::new(cfg.seed);
     let actor_init = tinfo.layouts[variant.actor_layout()].init(&mut rng);
     let critic_init = tinfo.layouts[variant.critic_layout()].init(&mut rng);
     let shared = Shared::new(cfg, actor_init.clone(), critic_init.clone(), od);
 
-    let (tx_v, rx_v) = mpsc::sync_channel::<StepMsg>(4);
+    let (tx_v, rx_v) = mpsc::sync_channel::<StepMsg>(4 * actor_shards);
     let (tx_p, rx_p) = mpsc::sync_channel::<Vec<f32>>(4);
     // Recycle channels: drained buffers flow back to the Actor so the
     // steady-state rollout loop allocates nothing (§Perf data plane).
-    let (recycle_v_tx, msg_pool) = MsgPool::new(
-        cfg.num_envs,
-        od,
-        ad,
-        if vision { tinfo.critic_obs_dim } else { 0 },
-    );
+    // One message pool per actor shard; the V-learner routes each drained
+    // message back to its origin's pool.
+    let origin_rows = actor_row_partitions(cfg.num_envs, env_shards, actor_shards);
+    let cd_msg = if vision { tinfo.critic_obs_dim } else { 0 };
+    let mut recycle_v_txs = Vec::with_capacity(actor_shards);
+    let mut msg_pools = Vec::with_capacity(actor_shards);
+    for rows in &origin_rows {
+        let (tx, pool) = MsgPool::new(*rows, od, ad, cd_msg);
+        recycle_v_txs.push(tx);
+        msg_pools.push(pool);
+    }
     let (recycle_p_tx, recycle_p_rx) = mpsc::channel::<Vec<f32>>();
 
     let mut log = RunLog::new(cfg.run_dir.as_deref())?;
 
     std::thread::scope(|scope| -> Result<()> {
-        // ----- Actor ------------------------------------------------------
-        {
+        // ----- Actor(s) ----------------------------------------------------
+        if actor_shards == 1 {
             let shared = Arc::clone(&shared);
             let manifest = Arc::clone(&manifest);
-            let runtime = Arc::clone(&runtime);
+            let runtime = Arc::clone(&rt_actor0);
             let cfg = cfg.clone();
             let mut rng = rng.split();
+            let msg_pool = msg_pools.pop().expect("one pool per origin");
             scope.spawn(move || {
                 let r = if cfg.device_env {
                     device_actor_loop(&cfg, manifest, runtime, shared.clone(),
@@ -129,18 +190,64 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, variant: Variant
                     shared.pace.stop();
                 }
             });
+        } else {
+            // Sharded rollout plane (Ape-X-style multi-actor): K threads
+            // over disjoint env-shard ranges, a round gate bounding their
+            // skew, per-global-shard normalizer slots merged and published
+            // by shard 0, and one shared P-state recycle receiver. Each
+            // shard resolves its own placement (`--device-actor a,b,..`).
+            let _ = rng.split(); // keep the V/P rng chain aligned with K = 1
+            shared.pace.set_actor_scale(actor_shards as u64);
+            let gate = Arc::new(RoundGate::new(actor_shards, ACTOR_ROUND_SKEW));
+            let norm_slots: Arc<Vec<Mutex<NormSnap>>> = Arc::new(
+                (0..env_shards).map(|_| Mutex::new(NormSnap::default())).collect(),
+            );
+            let p_recycle = Arc::new(Mutex::new(recycle_p_rx));
+            let mut pools = msg_pools.drain(..);
+            for (origin, part) in partition_ranges(env_shards, actor_shards)
+                .into_iter()
+                .enumerate()
+            {
+                let shared = Arc::clone(&shared);
+                let manifest = Arc::clone(&manifest);
+                let runtime = topology.actor_runtime(origin)?;
+                let cfg = cfg.clone();
+                let tx_v = tx_v.clone();
+                let tx_p = tx_p.clone();
+                let msg_pool = pools.next().expect("one pool per origin");
+                let gate = Arc::clone(&gate);
+                let norm_slots = Arc::clone(&norm_slots);
+                let p_recycle = Arc::clone(&p_recycle);
+                scope.spawn(move || {
+                    let r = actor_shard_loop(
+                        &cfg, manifest, runtime, shared.clone(), variant, origin, part,
+                        env_shards, tx_v, tx_p, msg_pool, p_recycle, gate, norm_slots,
+                    );
+                    if let Err(e) = r {
+                        log::error!("actor shard {origin} failed: {e:#}");
+                        shared.pace.stop();
+                    }
+                });
+            }
+            drop(pools);
+            // Only the per-thread clones stay alive: the V-learner sees a
+            // disconnect when the last shard exits, exactly like K = 1.
+            drop(tx_v);
+            drop(tx_p);
         }
         // ----- V-learner ---------------------------------------------------
         {
             let shared = Arc::clone(&shared);
             let manifest = Arc::clone(&manifest);
-            let runtime = Arc::clone(&runtime);
+            let runtime = Arc::clone(&rt_v);
             let cfg = cfg.clone();
             let mut rng = rng.split();
             let critic_init = critic_init.clone();
+            let origin_rows = origin_rows.clone();
             scope.spawn(move || {
                 if let Err(e) = v_loop(&cfg, manifest, runtime, shared.clone(), variant,
-                                       rx_v, recycle_v_tx, critic_init, &mut rng) {
+                                       rx_v, recycle_v_txs, origin_rows, critic_init,
+                                       &mut rng) {
                     log::error!("v-learner thread failed: {e:#}");
                     shared.pace.stop();
                 }
@@ -150,7 +257,7 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, variant: Variant
         {
             let shared = Arc::clone(&shared);
             let manifest = Arc::clone(&manifest);
-            let runtime = Arc::clone(&runtime);
+            let runtime = Arc::clone(&rt_p);
             let cfg = cfg.clone();
             let mut rng = rng.split();
             let actor_init = actor_init.clone();
@@ -164,7 +271,7 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, variant: Variant
         }
 
         // ----- Main thread: evaluation + budget -----------------------------
-        let mut eval_engine = Engine::with_runtime(Arc::clone(&runtime), Arc::clone(&manifest));
+        let mut eval_engine = Engine::with_runtime(Arc::clone(&rt_eval), Arc::clone(&manifest));
         let infer = eval_engine.load(&cfg.task, variant.infer_artifact())?;
         let mut eval_seed = cfg.seed ^ 0xEEAA;
         loop {
@@ -179,11 +286,11 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, variant: Variant
                 cfg.eval_interval_secs.min(remaining.max(0.05)),
             ));
             let (_, theta) = shared.actor_bus.snapshot();
-            let (mu, var) = shared.norm_bus.get();
+            let nview = shared.norm_bus.view();
             eval_seed = eval_seed.wrapping_add(1);
             let noise_dim = if variant == Variant::Sac { Some(ad) } else { None };
             let (ret, succ) = evaluate(
-                &infer, &manifest, &cfg.task, &theta, &mu, &var,
+                &infer, &manifest, &cfg.task, &theta, nview.mean(), nview.var(),
                 cfg.eval_episodes, eval_seed, noise_dim,
             )?;
             let (a, v, p) = shared.pace.counts();
@@ -216,10 +323,10 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, variant: Variant
     // Save a checkpoint when a run dir is configured.
     if let Some(dir) = &cfg.run_dir {
         let (_, theta) = shared.actor_bus.snapshot();
-        let (mu, var) = shared.norm_bus.get();
+        let nview = shared.norm_bus.view();
         crate::util::binfmt::save(
             &std::path::Path::new(dir).join("checkpoint.pql"),
-            &[("actor", &theta[..]), ("norm_mean", &mu[..]), ("norm_var", &var[..])],
+            &[("actor", &theta[..]), ("norm_mean", nview.mean()), ("norm_var", nview.var())],
         )?;
     }
     let (aw, vw, pw) = (
@@ -347,6 +454,8 @@ fn actor_loop(
         } else {
             msg.fill_raw(&obs, &acts, &out.reward, &out.obs, &out.done, &cobs, &cobs2);
         }
+        msg.round = steps;
+        msg.origin = 0;
         if tx_v.send(msg).is_err() {
             break; // V-learner exited
         }
@@ -498,6 +607,8 @@ fn device_actor_loop(
         } else {
             msg.fill_raw(&obs, &acts, &out.reward, &out.obs, &out.done, &cobs, &cobs2);
         }
+        msg.round = steps;
+        msg.origin = 0;
         if tx_v.send(msg).is_err() {
             break; // V-learner exited
         }
@@ -542,6 +653,344 @@ fn device_actor_loop(
 }
 
 // ---------------------------------------------------------------------------
+// Actor process, sharded rollout plane (--actor-shards K > 1)
+// ---------------------------------------------------------------------------
+
+/// Salts decorrelating the per-shard noise / warm-up streams from the
+/// dynamics stream; all three derive from the *global* env-shard index.
+const NOISE_STREAM_SALT: u64 = 0x6E6F_6973_655F_5051;
+const WARMUP_STREAM_SALT: u64 = 0x7761_726D_7570_5F71;
+
+/// Balanced sizes of `total` items over `parts` — the exact split
+/// [`envs::ShardedEnv`] uses, so the sharded actor plane reproduces the
+/// single-actor env-shard layout env for env.
+fn shard_sizes(total: usize, parts: usize) -> Vec<usize> {
+    let base = total / parts;
+    let rem = total % parts;
+    (0..parts).map(|i| base + usize::from(i < rem)).collect()
+}
+
+/// Balanced contiguous ranges partitioning `total` items over `parts`.
+fn partition_ranges(total: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0;
+    for s in shard_sizes(total, parts) {
+        out.push(lo..lo + s);
+        lo += s;
+    }
+    out
+}
+
+/// Env rows owned by each actor shard (origin) when `n` envs in
+/// `env_shards` env shards are split across `actor_shards` threads. The
+/// V-learner sizes its per-origin n-step assemblers from this.
+fn actor_row_partitions(n: usize, env_shards: usize, actor_shards: usize) -> Vec<usize> {
+    let sizes = shard_sizes(n, env_shards);
+    partition_ranges(env_shards, actor_shards)
+        .into_iter()
+        .map(|r| sizes[r].iter().sum())
+        .collect()
+}
+
+/// Bounds how far actor shard threads drift apart, so the V-learner's
+/// [`OrderedIngest`] buffers at most ~`skew` rounds per origin. Each
+/// thread declares its round before rolling it out and waits while it
+/// would run more than `skew` rounds ahead of the slowest live thread; a
+/// finished thread deregisters so peers never wait on it.
+struct RoundGate {
+    rounds: Mutex<Vec<u64>>,
+    cv: Condvar,
+    skew: u64,
+}
+
+impl RoundGate {
+    fn new(k: usize, skew: u64) -> RoundGate {
+        RoundGate { rounds: Mutex::new(vec![0; k]), cv: Condvar::new(), skew }
+    }
+
+    /// Enter `round` as thread `who`; blocks while ahead of the window.
+    fn advance(&self, who: usize, round: u64, stopped: impl Fn() -> bool) {
+        let mut g = self.rounds.lock().unwrap();
+        g[who] = round;
+        self.cv.notify_all();
+        loop {
+            let min = g.iter().copied().min().unwrap_or(round);
+            if round <= min.saturating_add(self.skew) || stopped() {
+                return;
+            }
+            let (ng, _) = self
+                .cv
+                .wait_timeout(g, std::time::Duration::from_millis(20))
+                .unwrap();
+            g = ng;
+        }
+    }
+
+    /// Thread `who` exits: stop counting it toward the minimum.
+    fn finish(&self, who: usize) {
+        let mut g = self.rounds.lock().unwrap();
+        g[who] = u64::MAX;
+        self.cv.notify_all();
+    }
+}
+
+/// One global env shard's normalizer snapshot — written by its owner
+/// thread at the publish cadence, moment-merged by shard 0 for the bus.
+#[derive(Default)]
+struct NormSnap {
+    count: f64,
+    mean: Vec<f32>,
+    var: Vec<f32>,
+}
+
+/// Merge every shard slot's statistics and publish to the norm bus. The
+/// *published* normalizer serves the learners and eval; each actor shard
+/// normalizes its own rows with its local per-shard statistics (that is
+/// what keeps trajectories invariant in the thread count).
+fn publish_merged_norm(slots: &[Mutex<NormSnap>], od: usize, shared: &Shared) {
+    let guards: Vec<_> = slots.iter().map(|m| m.lock().unwrap()).collect();
+    let parts: Vec<(f64, &[f32], &[f32])> = guards
+        .iter()
+        .filter(|s| s.count >= 2.0)
+        .map(|s| (s.count, &s.mean[..], &s.var[..]))
+        .collect();
+    let (mean, var) = merge_moments(&parts, od);
+    shared.norm_bus.publish(&mean, &var);
+}
+
+/// One thread of the sharded rollout plane (Algorithm 1 over an env-shard
+/// range). Every stochastic stream — dynamics, σ-ladder noise, warm-up
+/// actions — is keyed by *global* env-shard index, the σ ladder is
+/// windowed over global env rows, and the round budget is a pure function
+/// of the config, so the produced transition stream depends only on
+/// `(seed, env_shards)`, never on how many threads the shards were split
+/// across (pinned by `sharded_plane_invariant_in_thread_count`).
+#[allow(clippy::too_many_arguments)]
+fn actor_shard_loop(
+    cfg: &TrainConfig,
+    manifest: Arc<Manifest>,
+    runtime: Arc<Runtime>,
+    shared: Arc<Shared>,
+    variant: Variant,
+    origin: usize,
+    part: std::ops::Range<usize>,
+    env_shards: usize,
+    tx_v: mpsc::SyncSender<StepMsg>,
+    tx_p: mpsc::SyncSender<Vec<f32>>,
+    mut msg_pool: MsgPool,
+    p_recycle: Arc<Mutex<mpsc::Receiver<Vec<f32>>>>,
+    gate: Arc<RoundGate>,
+    norm_slots: Arc<Vec<Mutex<NormSnap>>>,
+) -> Result<()> {
+    /// One env shard owned by this thread, with its private streams.
+    struct Plane {
+        env: Box<dyn VecEnv>,
+        gshard: usize,
+        rows: usize,
+        /// Row offset inside this thread's flat buffers.
+        off: usize,
+        out: StepOut,
+        noise: Noise,
+        warm_rng: Rng,
+        norm: RunningNorm,
+    }
+
+    let tinfo = manifest.task(&cfg.task)?.clone();
+    let (od, ad, cd) = (tinfo.obs_dim, tinfo.act_dim, tinfo.critic_obs_dim);
+    let vision = cd != od;
+    let n_total = cfg.num_envs;
+    let sizes = shard_sizes(n_total, env_shards);
+    let mut engine = Engine::with_runtime(Arc::clone(&runtime), Arc::clone(&manifest));
+    let infer = engine.load(&cfg.task, variant.infer_artifact())?;
+
+    let mut planes = Vec::with_capacity(part.len());
+    let mut off = 0usize;
+    for s in part.clone() {
+        let rows = sizes[s];
+        // Global row offset of shard s anchors its σ-ladder window.
+        let glo: usize = sizes[..s].iter().sum();
+        planes.push(Plane {
+            env: envs::make(&cfg.task, rows, envs::shard_seed(cfg.seed, s))?,
+            gshard: s,
+            rows,
+            off,
+            out: StepOut::new(rows, od),
+            noise: Noise::for_window(
+                cfg.exploration,
+                n_total,
+                glo,
+                rows,
+                ad,
+                Rng::new(envs::shard_seed(cfg.seed ^ NOISE_STREAM_SALT, s)),
+            ),
+            warm_rng: Rng::new(envs::shard_seed(cfg.seed ^ WARMUP_STREAM_SALT, s)),
+            norm: RunningNorm::new(od),
+        });
+        off += rows;
+    }
+    let rows = off;
+    info!(
+        "actor shard {origin}: env shards {}..{} ({rows} envs) on {}",
+        part.start,
+        part.end,
+        runtime.device_key()
+    );
+
+    let mut obs = vec![0.0f32; rows * od];
+    let mut next_obs = vec![0.0f32; rows * od];
+    let mut reward = vec![0.0f32; rows];
+    let mut done = vec![0.0f32; rows];
+    let mut cobs = vec![0.0f32; if vision { rows * cd } else { 0 }];
+    let mut cobs2 = vec![0.0f32; if vision { rows * cd } else { 0 }];
+    let mut acts = vec![0.0f32; rows * ad];
+    let mut sac_noise = vec![0.0f32; rows * ad];
+    let p_row_dim = if vision { od + cd } else { od };
+    let mut p_spare: Option<Vec<f32>> = None;
+    let mut tracker = ReturnTracker::new(rows, 4 * rows);
+    let mut theta_version = 0u64;
+    let mut theta: Arc<Vec<f32>> = shared.actor_bus.snapshot().1;
+
+    let sync_norm_slots = |planes: &[Plane]| {
+        for p in planes {
+            let mut slot = norm_slots[p.gshard].lock().unwrap();
+            slot.count = p.norm.count;
+            slot.mean.clone_from(&p.norm.mean);
+            slot.var.clone_from(&p.norm.var);
+        }
+    };
+
+    for p in planes.iter_mut() {
+        p.env.reset_all(&mut obs[p.off * od..(p.off + p.rows) * od]);
+        p.norm.update(&obs[p.off * od..(p.off + p.rows) * od], od);
+        if vision {
+            p.env.fill_critic_obs(&mut cobs[p.off * cd..(p.off + p.rows) * cd]);
+        }
+    }
+    sync_norm_slots(&planes);
+    if origin == 0 {
+        publish_merged_norm(&norm_slots, od, &shared);
+    }
+
+    // Deterministic round budget: exactly the rounds the K = 1 loop runs.
+    let rounds_max = cfg.max_env_steps.div_ceil(n_total as u64);
+    let mut round = 0u64;
+    while round < rounds_max && !shared.pace.stopped() {
+        let warm = round < cfg.warmup_steps as u64;
+        if !warm {
+            shared.pace.gate_actor();
+            if shared.pace.stopped() {
+                break;
+            }
+        }
+        gate.advance(origin, round, || shared.pace.stopped());
+        // Sync π^a <- π^p if newer (Fig. 1 network transfer).
+        if let Some((v, t)) = shared.actor_bus.latest(theta_version) {
+            theta_version = v;
+            theta = t;
+        }
+
+        {
+            let _g = shared.devices.enter(cfg.placement[0]);
+            for p in planes.iter_mut() {
+                let (olo, ohi) = (p.off * od, (p.off + p.rows) * od);
+                let (alo, ahi) = (p.off * ad, (p.off + p.rows) * ad);
+                if warm {
+                    crate::coordinator::random_actions(&mut p.warm_rng, &mut acts[alo..ahi]);
+                } else {
+                    let noise_in = if variant == Variant::Sac {
+                        p.noise.fill_standard(&mut sac_noise[alo..ahi]);
+                        Some((&sac_noise[alo..ahi], ad))
+                    } else {
+                        None
+                    };
+                    infer_chunked(
+                        &infer, &theta, &obs[olo..ohi], p.rows, od, ad,
+                        &p.norm.mean, &p.norm.var, manifest.chunk, noise_in,
+                        &mut acts[alo..ahi],
+                    )?;
+                    if variant != Variant::Sac {
+                        p.noise.apply(&mut acts[alo..ahi]);
+                    }
+                }
+                p.env.step(&acts[alo..ahi], &mut p.out);
+                next_obs[olo..ohi].copy_from_slice(&p.out.obs);
+                reward[p.off..p.off + p.rows].copy_from_slice(&p.out.reward);
+                done[p.off..p.off + p.rows].copy_from_slice(&p.out.done);
+            }
+        }
+
+        tracker.push_step(&reward, &done);
+        shared.set_train_return(tracker.mean());
+        {
+            let mut acc = 0.0f32;
+            let mut weight = 0usize;
+            for p in planes.iter() {
+                if let Some(s) = p.env.success_rate() {
+                    acc += s * p.rows as f32;
+                    weight += p.rows;
+                }
+            }
+            if weight > 0 {
+                shared.set_success(acc / weight as f32);
+            }
+        }
+        if vision {
+            for p in planes.iter() {
+                p.env.fill_critic_obs(&mut cobs2[p.off * cd..(p.off + p.rows) * cd]);
+            }
+        }
+
+        let compress = vision && cfg.compress_images;
+        let mut msg = msg_pool.acquire();
+        if compress {
+            msg.s = crate::coordinator::ObsPayload::compress(&obs, od)?;
+            msg.s2 = crate::coordinator::ObsPayload::compress(&next_obs, od)?;
+            msg.fill_pod(&acts, &reward, &done, &cobs, &cobs2);
+        } else {
+            msg.fill_raw(&obs, &acts, &reward, &next_obs, &done, &cobs, &cobs2);
+        }
+        msg.round = round;
+        msg.origin = origin as u32;
+        if tx_v.send(msg).is_err() {
+            break; // V-learner exited
+        }
+        let mut p_states = p_spare
+            .take()
+            .or_else(|| p_recycle.lock().unwrap().try_recv().ok())
+            .unwrap_or_else(|| Vec::with_capacity(rows * p_row_dim));
+        if vision {
+            concat_rows_into(&obs, od, &cobs, cd, &mut p_states);
+        } else {
+            crate::coordinator::refill(&mut p_states, &obs);
+        }
+        match tx_p.try_send(p_states) {
+            Ok(()) => {}
+            Err(mpsc::TrySendError::Full(v)) | Err(mpsc::TrySendError::Disconnected(v)) => {
+                p_spare = Some(v);
+            }
+        }
+
+        for p in planes.iter_mut() {
+            p.norm.update(&next_obs[p.off * od..(p.off + p.rows) * od], od);
+        }
+        round += 1;
+        shared.env_steps.fetch_add(rows as u64, Ordering::Relaxed);
+        if round % NORM_SYNC_EVERY == 0 {
+            sync_norm_slots(&planes);
+            if origin == 0 {
+                publish_merged_norm(&norm_slots, od, &shared);
+            }
+        }
+        obs.copy_from_slice(&next_obs);
+        if vision {
+            cobs.copy_from_slice(&cobs2);
+        }
+    }
+    gate.finish(origin);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // V-learner process (Algorithm 3)
 // ---------------------------------------------------------------------------
 
@@ -553,7 +1002,8 @@ fn v_loop(
     shared: Arc<Shared>,
     variant: Variant,
     rx: mpsc::Receiver<StepMsg>,
-    recycle: mpsc::Sender<StepMsg>,
+    recycle: Vec<mpsc::Sender<StepMsg>>,
+    origin_rows: Vec<usize>,
     critic_init: Vec<f32>,
     rng: &mut Rng,
 ) -> Result<()> {
@@ -595,14 +1045,24 @@ fn v_loop(
         ad,
         if vision { cd } else { 0 },
     );
-    let mut asm = NStepAssembler::with_critic_obs(
-        cfg.num_envs,
-        cfg.nstep,
-        cfg.gamma,
-        od,
-        ad,
-        if vision { cd } else { 0 },
-    );
+    // One n-step assembler per producing actor shard (origin): each holds
+    // that origin's env rows. Ingest is strictly ordered by (round,
+    // origin) so the replay stream is invariant in the actor thread
+    // count; with one origin the reorder buffer is pass-through.
+    let mut asms: Vec<NStepAssembler> = origin_rows
+        .iter()
+        .map(|rows| {
+            NStepAssembler::with_critic_obs(
+                *rows,
+                cfg.nstep,
+                cfg.gamma,
+                od,
+                ad,
+                if vision { cd } else { 0 },
+            )
+        })
+        .collect();
+    let mut ing = OrderedIngest::new(origin_rows.len() as u32);
     // Sum-tree priority layer, kept in lockstep with the ring: fresh rows
     // get max priority at ingest, sampled rows are refreshed from the
     // artifact's per-sample |td| output (Schaul et al. / Ape-X).
@@ -636,24 +1096,28 @@ fn v_loop(
         // ingested, then recycled back to the Actor's pool.
         loop {
             match rx.try_recv() {
-                Ok(mut msg) => {
-                    for r in msg.r.iter_mut() {
-                        *r *= scale; // in-place; the buffer is recycled anyway
+                Ok(msg) => {
+                    ing.push(msg);
+                    while let Some(mut msg) = ing.pop_ready() {
+                        for r in msg.r.iter_mut() {
+                            *r *= scale; // in-place; the buffer is recycled anyway
+                        }
+                        msg.s.to_flat(&mut s_flat)?;
+                        msg.s2.to_flat(&mut s2_flat)?;
+                        asms[msg.origin as usize].push_step_into(
+                            &s_flat, &msg.a, &msg.r, &s2_flat, &msg.done, &msg.cs,
+                            &msg.cs2, &mut ready,
+                        );
+                        replay.push_batch(
+                            ready.len, &ready.s, &ready.a, &ready.rn, &ready.s2,
+                            &ready.gmask, &ready.cs, &ready.cs2,
+                        );
+                        if let Some(tree) = pri.as_mut() {
+                            tree.push_batch(ready.len); // lockstep with the ring
+                        }
+                        // Route the buffer back to its producer's pool.
+                        let _ = recycle[msg.origin as usize].send(msg);
                     }
-                    msg.s.to_flat(&mut s_flat)?;
-                    msg.s2.to_flat(&mut s2_flat)?;
-                    asm.push_step_into(
-                        &s_flat, &msg.a, &msg.r, &s2_flat, &msg.done, &msg.cs,
-                        &msg.cs2, &mut ready,
-                    );
-                    replay.push_batch(
-                        ready.len, &ready.s, &ready.a, &ready.rn, &ready.s2,
-                        &ready.gmask, &ready.cs, &ready.cs2,
-                    );
-                    if let Some(tree) = pri.as_mut() {
-                        tree.push_batch(ready.len); // lockstep with the ring
-                    }
-                    let _ = recycle.send(msg); // Actor may already be gone
                 }
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => return Ok(()),
@@ -739,9 +1203,14 @@ fn v_loop(
                         r.restage("theta_a", &theta_a[..])?;
                     }
                     if r.plan().has("alpha") {
-                        if let Some((v, a)) = shared.alpha_bus.latest(alpha_version) {
+                        // Explicit cross-device transport: pull stages the
+                        // newest published α straight into the subscriber's
+                        // resident slot on *this* role's runtime.
+                        if let Some(v) = shared
+                            .alpha_bus
+                            .pull(alpha_version, |a| r.restage("alpha", a))?
+                        {
                             alpha_version = v;
-                            r.restage("alpha", &a[..])?;
                         }
                     }
                     if let Some((v, nview)) = shared.norm_bus.latest_view(norm_version) {
@@ -1075,5 +1544,167 @@ mod tests {
     fn variant_reexport_is_the_feed_enum() {
         let v: crate::runtime::feed::Variant = Variant::Sac;
         assert_eq!(v.critic_update_artifact(), "sac_critic_update");
+    }
+
+    /// The sharded plane's env split must reproduce `ShardedEnv::new`'s
+    /// base+remainder layout exactly — that is what makes per-shard
+    /// dynamics streams line up with the K = 1 env-sharded actor.
+    #[test]
+    fn shard_sizes_match_sharded_env_split() {
+        for (n, s) in [(24, 4), (25, 4), (7, 3), (64, 1), (5, 5)] {
+            let sizes = shard_sizes(n, s);
+            assert_eq!(sizes.len(), s);
+            assert_eq!(sizes.iter().sum::<usize>(), n);
+            let (base, rem) = (n / s, n % s);
+            for (i, sz) in sizes.iter().enumerate() {
+                assert_eq!(*sz, base + usize::from(i < rem), "n={n} s={s} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn partition_ranges_are_contiguous_and_balanced() {
+        for (total, parts) in [(4, 2), (5, 2), (7, 3), (3, 3), (8, 1)] {
+            let ranges = partition_ranges(total, parts);
+            assert_eq!(ranges.len(), parts);
+            assert_eq!(ranges[0].start, 0);
+            assert_eq!(ranges[parts - 1].end, total);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "contiguous");
+                assert!(w[0].len() >= w[1].len(), "larger parts first");
+                assert!(w[0].len() - w[1].len() <= 1, "balanced");
+            }
+        }
+    }
+
+    /// Per-origin env-row counts (the V-learner's assembler sizes) always
+    /// cover every env exactly once, and collapse to `[n]` at K = 1.
+    #[test]
+    fn actor_row_partitions_cover_all_envs() {
+        assert_eq!(actor_row_partitions(24, 4, 1), vec![24]);
+        assert_eq!(actor_row_partitions(24, 4, 2), vec![12, 12]);
+        assert_eq!(actor_row_partitions(25, 4, 2), vec![13, 12]);
+        for (n, es, k) in [(100, 8, 3), (17, 5, 5), (64, 4, 4)] {
+            let rows = actor_row_partitions(n, es, k);
+            assert_eq!(rows.len(), k);
+            assert_eq!(rows.iter().sum::<usize>(), n);
+        }
+    }
+
+    /// Run the sharded rollout plane with `k` actor threads and return the
+    /// replay-bound stream exactly as the V-learner ingests it: messages
+    /// in `(round, origin)` order, fields concatenated per round. Skips
+    /// (returns `None`) without compiled artifacts.
+    fn sharded_plane_stream(k: usize) -> Option<Vec<f32>> {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let manifest = Arc::new(Manifest::load(&root).ok()?);
+        let variant = Variant::Ddpg;
+        let mut cfg = TrainConfig::default();
+        cfg.task = "ant".into();
+        cfg.num_envs = 24;
+        cfg.env_shards = 4;
+        cfg.warmup_steps = 2; // exercise both the random and the infer path
+        cfg.max_env_steps = 24 * 5; // 5 rounds
+        cfg.pace_control = false;
+        cfg.seed = 7;
+        let tinfo = manifest.task(&cfg.task).ok()?.clone();
+        let od = tinfo.obs_dim;
+        let runtime = Runtime::shared(cfg.device).ok()?;
+        // Pre-flight the artifact load on the main thread so a missing
+        // infer graph skips the test instead of failing inside a thread.
+        Engine::with_runtime(Arc::clone(&runtime), Arc::clone(&manifest))
+            .load(&cfg.task, variant.infer_artifact())
+            .ok()?;
+
+        let mut rng = Rng::new(cfg.seed);
+        let actor_init = tinfo.layouts[variant.actor_layout()].init(&mut rng);
+        let critic_init = tinfo.layouts[variant.critic_layout()].init(&mut rng);
+        let shared = Shared::new(&cfg, actor_init, critic_init, od);
+        let env_shards = cfg.env_shards;
+        let origin_rows = actor_row_partitions(cfg.num_envs, env_shards, k);
+        let (tx_v, rx_v) = mpsc::sync_channel::<StepMsg>(4 * k);
+        let (tx_p, _rx_p) = mpsc::sync_channel::<Vec<f32>>(4);
+        let (_ptx, prx) = mpsc::channel::<Vec<f32>>();
+        let gate = Arc::new(RoundGate::new(k, ACTOR_ROUND_SKEW));
+        let norm_slots: Arc<Vec<Mutex<NormSnap>>> = Arc::new(
+            (0..env_shards).map(|_| Mutex::new(NormSnap::default())).collect(),
+        );
+        let p_recycle = Arc::new(Mutex::new(prx));
+        let mut pools: Vec<MsgPool> = origin_rows
+            .iter()
+            .map(|rows| MsgPool::new(*rows, od, tinfo.act_dim, 0).1)
+            .collect();
+
+        let mut stream = Vec::new();
+        std::thread::scope(|scope| {
+            for (origin, part) in partition_ranges(env_shards, k).into_iter().enumerate() {
+                let cfg = cfg.clone();
+                let manifest = Arc::clone(&manifest);
+                let runtime = Arc::clone(&runtime);
+                let shared = Arc::clone(&shared);
+                let tx_v = tx_v.clone();
+                let tx_p = tx_p.clone();
+                let pool = pools.remove(0);
+                let gate = Arc::clone(&gate);
+                let norm_slots = Arc::clone(&norm_slots);
+                let p_recycle = Arc::clone(&p_recycle);
+                scope.spawn(move || {
+                    actor_shard_loop(
+                        &cfg, manifest, runtime, shared, variant, origin, part,
+                        env_shards, tx_v, tx_p, pool, p_recycle, gate, norm_slots,
+                    )
+                    .expect("shard thread");
+                });
+            }
+            drop(tx_v);
+            drop(tx_p);
+            let mut ing = OrderedIngest::new(k as u32);
+            let mut s = Vec::new();
+            let mut s2 = Vec::new();
+            // Per-round accumulators: origins own contiguous global env
+            // ranges in order, so concatenating each field across the
+            // round's k messages reconstructs the global-row layout the
+            // K = 1 message carries directly.
+            let (mut gs, mut ga, mut gr, mut gs2, mut gd) =
+                (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new());
+            while let Ok(msg) = rx_v.recv() {
+                ing.push(msg);
+                while let Some(msg) = ing.pop_ready() {
+                    msg.s.to_flat(&mut s).unwrap();
+                    msg.s2.to_flat(&mut s2).unwrap();
+                    gs.extend_from_slice(&s);
+                    ga.extend_from_slice(&msg.a);
+                    gr.extend_from_slice(&msg.r);
+                    gs2.extend_from_slice(&s2);
+                    gd.extend_from_slice(&msg.done);
+                    if msg.origin as usize == k - 1 {
+                        for buf in [&mut gs, &mut ga, &mut gr, &mut gs2, &mut gd] {
+                            stream.append(buf);
+                        }
+                    }
+                }
+            }
+            assert_eq!(ing.pending(), 0, "no gap left behind");
+            assert!(gs.is_empty(), "incomplete final round");
+        });
+        Some(stream)
+    }
+
+    /// Tentpole invariant: the replay-bound transition stream of the
+    /// sharded rollout plane is **bit-identical** whether the env shards
+    /// are rolled out by one thread or split across two — ordering via
+    /// `OrderedIngest`, randomness via global-shard-keyed streams.
+    #[test]
+    fn sharded_plane_invariant_in_thread_count() {
+        let Some(one) = sharded_plane_stream(1) else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let two = sharded_plane_stream(2).expect("artifacts present");
+        assert_eq!(one.len(), two.len(), "stream lengths diverge");
+        assert!(
+            one.iter().zip(&two).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "replay stream differs between 1 and 2 actor shards"
+        );
     }
 }

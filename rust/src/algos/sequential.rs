@@ -15,8 +15,8 @@ use crate::exploration::Noise;
 use crate::metrics::{Record, RunLog};
 use crate::replay::{NStepAssembler, ReadyBatch, SampleBatch, SumTree, TransitionBuffer};
 use crate::runtime::{
-    infer_chunked, Engine, FeedDims, FeedPlan, Manifest, OptState, ResidentUpdate, Runtime,
-    Variant,
+    infer_chunked, Engine, FeedDims, FeedPlan, Manifest, OptState, Placement, ResidentUpdate,
+    Role, Variant,
 };
 use crate::util::{Rng, RunningNorm};
 use anyhow::{Context, Result};
@@ -37,11 +37,25 @@ pub fn train(cfg: &TrainConfig, artifact_dir: &std::path::Path, sac: bool) -> Re
 
     let per = cfg.prioritized_replay;
     let mut rng = Rng::new(cfg.seed);
-    // Device-resolved engine on the shared per-process runtime: sweep
-    // harness runs (fig 3/8, table b3) that train many configs in one
-    // process compile each artifact file once, not once per run.
-    let runtime = Runtime::shared(cfg.device)?;
-    info!("pjrt device: {} (requested {})", runtime.device_key(), cfg.device);
+    // Device resolution goes through the same Placement path as PQL —
+    // but this baseline is one interleaved loop on one thread, so a
+    // per-role split has nothing to pin: reject it instead of silently
+    // running every phase on one of the requested devices.
+    let topology = if cfg.topology.is_uniform() && cfg.topology.default_spec() != cfg.device {
+        Placement::uniform(cfg.device)
+    } else {
+        cfg.topology.clone()
+    };
+    anyhow::ensure!(
+        topology.is_uniform(),
+        "sequential baselines run every phase on one device; drop the \
+         per-role --device-* / [topology] overrides (got: {topology})"
+    );
+    // Shared per-process runtime: sweep harness runs (fig 3/8, table b3)
+    // that train many configs in one process compile each artifact file
+    // once, not once per run.
+    let runtime = topology.runtime(Role::VLearner)?;
+    info!("pjrt device: {} (requested {})", runtime.device_key(), topology.default_spec());
     let mut engine = Engine::with_runtime(runtime, Arc::clone(&manifest));
     let infer = engine.load(&cfg.task, variant.infer_artifact())?;
     let cu_base = if per {

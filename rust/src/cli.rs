@@ -121,6 +121,20 @@ DEVICE SELECTION (train / eval / serve / bench):
                               step_infer artifacts at N = --num-envs
                               (tasks: ant, ballbalance_vision).
 
+MULTI-DEVICE TOPOLOGY (train / eval / serve):
+  --device-actor DEV[,DEV..]  Pin a trainer role to its own device
+  --device-v DEV              (actor shards / V-learner / P-learner /
+  --device-p DEV              eval loop / serve workers). Per role:
+  --device-eval DEV           --device-<role> > config `topology.<role>`
+  --device-serve DEV          > the --device default above. The actor
+                              value may be a comma list, cycled across
+                              --actor-shards. Roles resolving to the same
+                              device share one runtime + compile cache.
+  --actor-shards K            Actor rollout threads over disjoint env
+                              partitions feeding one replay ring
+                              (default 1). Trajectories are invariant
+                              in K per seed on the host path.
+
 Run `pql <COMMAND> --help` for per-command options.
 ";
 

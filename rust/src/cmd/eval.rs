@@ -24,8 +24,10 @@ pub fn run(args: &Args) -> Result<()> {
     // Same device-resolution order and shared executable cache as
     // training, so eval of a fresh checkpoint in the same process (or a
     // sweep evaluating many checkpoints) never recompiles `actor_infer`
-    // and never disagrees with the trainer about device selection.
-    let spec = resolve_spec(args.get("device"), None)?;
+    // and never disagrees with the trainer about device selection. The
+    // eval role's topology flag outranks the bare `--device`, matching
+    // the trainer's placement of its own eval loop.
+    let spec = resolve_spec(args.get("device-eval").or_else(|| args.get("device")), None)?;
     let mut engine = Engine::for_device(&super::train::artifact_dir(args), spec)?;
     log::info!("pjrt device: {} (requested {spec})", engine.runtime().device_key());
     let manifest = std::sync::Arc::clone(&engine.manifest);

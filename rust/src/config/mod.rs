@@ -7,7 +7,7 @@
 pub mod toml;
 
 use crate::cli::Args;
-use crate::runtime::DeviceSpec;
+use crate::runtime::{DeviceSpec, Placement, Role, RoleOverrides};
 use anyhow::{bail, Context, Result};
 
 /// Which algorithm drives training.
@@ -103,6 +103,15 @@ pub struct TrainConfig {
     /// (`cpu` | `gpu[:N]` | `auto`). Resolution order:
     /// `--device` > `train.device` > `$PALLAS_DEVICE` > `cpu`.
     pub device: DeviceSpec,
+    /// Per-role physical device topology: each trainer role (actor
+    /// shards, V-learner, P-learner, eval, serve) can resolve to its own
+    /// device via `--device-<role>` / the `[topology]` config table, all
+    /// defaulting to [`TrainConfig::device`]. Uniform (no overrides) runs
+    /// are bit-identical to the single-runtime build.
+    pub topology: Placement,
+    /// Actor rollout threads — Ape-X-style shards over disjoint env
+    /// partitions feeding one replay ring (1 = the single-actor plane).
+    pub actor_shards: usize,
     pub seed: u64,
     pub num_envs: usize,
     /// Environment shards stepped on worker threads (0 = one per
@@ -169,6 +178,8 @@ impl Default for TrainConfig {
             task: "ant".to_string(),
             algo: Algo::Pql,
             device: DeviceSpec::Cpu,
+            topology: Placement::default(),
+            actor_shards: 1,
             seed: 1,
             num_envs: 256,
             env_shards: 0,
@@ -208,6 +219,7 @@ impl TrainConfig {
     pub fn from_args(args: &Args) -> Result<TrainConfig> {
         let mut cfg = TrainConfig::default();
         let mut file_device: Option<String> = None;
+        let mut file_topology = RoleOverrides::default();
         if let Some(path) = args.get("config") {
             let text = std::fs::read_to_string(path)
                 .with_context(|| format!("reading config {path:?}"))?;
@@ -217,6 +229,13 @@ impl TrainConfig {
                 .or_else(|| table.get("device"))
                 .map(|v| v.as_str().map(str::to_string))
                 .transpose()?;
+            // Capture `[topology]` role overrides before apply_table (which
+            // only accepts the keys); bad role names fail fast here.
+            for (k, v) in &table {
+                if let Some(role) = k.strip_prefix("topology.") {
+                    file_topology.set(Role::from_name(role)?, v.as_str()?);
+                }
+            }
             cfg.apply_table(&table)?;
         }
         cfg.apply_cli(args)?;
@@ -225,6 +244,15 @@ impl TrainConfig {
         // and a losing layer is never parsed (a stale env value cannot
         // fail a run that overrides it).
         cfg.device = crate::runtime::resolve_spec(args.get("device"), file_device.as_deref())?;
+        // Per-role placement layers on top of the resolved default:
+        // `--device-<role>` > `topology.<role>` > `device` (above).
+        let mut cli_topology = RoleOverrides::default();
+        for role in Role::ALL {
+            if let Some(v) = args.get(&format!("device-{}", role.name())) {
+                cli_topology.set(role, v);
+            }
+        }
+        cfg.topology = Placement::resolve(cfg.device, &cli_topology, &file_topology)?;
         cfg.validate()?;
         Ok(cfg)
     }
@@ -239,6 +267,12 @@ impl TrainConfig {
                 // is consumed by `from_args`'s resolve_spec call (the one
                 // implementation of the resolution order).
                 ("device" | "train.device", _) => {}
+                // `[topology]` role overrides: captured (and role-name
+                // validated) by `from_args` before this runs.
+                (k, _) if k.starts_with("topology.") => {}
+                ("actor_shards" | "train.actor_shards", v) => {
+                    self.actor_shards = v.as_usize()?
+                }
                 ("seed" | "train.seed", v) => self.seed = v.as_usize()? as u64,
                 ("num_envs" | "train.num_envs", v) => self.num_envs = v.as_usize()?,
                 ("env_shards" | "train.env_shards", v) => {
@@ -300,6 +334,7 @@ impl TrainConfig {
         self.seed = a.get_parse("seed", self.seed)?;
         self.num_envs = a.get_parse("num-envs", self.num_envs)?;
         self.env_shards = a.get_parse("env-shards", self.env_shards)?;
+        self.actor_shards = a.get_parse("actor-shards", self.actor_shards)?;
         self.batch_size = a.get_parse("batch-size", self.batch_size)?;
         self.replay_capacity = a.get_parse("replay-capacity", self.replay_capacity)?;
         if a.flag("prioritized-replay") {
@@ -407,6 +442,17 @@ impl TrainConfig {
         if self.replay_capacity < self.batch_size {
             bail!("replay_capacity must be >= batch_size");
         }
+        if self.actor_shards == 0 {
+            bail!("actor_shards must be >= 1");
+        }
+        if self.actor_shards > self.num_envs {
+            bail!(
+                "actor_shards={} exceeds num_envs={} (each actor shard needs \
+                 at least one env)",
+                self.actor_shards,
+                self.num_envs
+            );
+        }
         if self.prioritized_replay {
             if self.algo == Algo::Ppo {
                 bail!("prioritized replay applies to off-policy algos only");
@@ -484,7 +530,12 @@ impl ServeConfig {
         c.client_envs = args.get_parse("serve-client-envs", c.client_envs)?;
         c.secs = args.get_parse("serve-secs", c.secs)?;
         c.seed = args.get_parse("seed", c.seed)?;
-        c.device = crate::runtime::resolve_spec(args.get("device"), None)?;
+        // The serve role's topology flag outranks the bare `--device`,
+        // both funneling through the one resolve_spec implementation.
+        c.device = crate::runtime::resolve_spec(
+            args.get("device-serve").or_else(|| args.get("device")),
+            None,
+        )?;
         c.validate()?;
         Ok(c)
     }
@@ -693,6 +744,83 @@ mod tests {
         assert!(ServeConfig::from_args(&args(&["--serve-workers", "0"])).is_err());
         assert!(ServeConfig::from_args(&args(&["--serve-deadline-us", "0"])).is_err());
         assert!(ServeConfig::from_args(&args(&["--serve-secs", "0"])).is_err());
+    }
+
+    #[test]
+    fn topology_defaults_uniform_and_layers_per_role() {
+        // No topology flags → uniform over the resolved default device.
+        let c = TrainConfig::from_args(&args(&["--device", "cpu"])).unwrap();
+        assert!(c.topology.is_uniform());
+        assert_eq!(c.topology.spec(Role::VLearner), DeviceSpec::Cpu);
+
+        // CLI role flags layer over the default without touching others.
+        let c = TrainConfig::from_args(&args(&[
+            "--device", "cpu", "--device-v", "gpu:1", "--device-actor", "cpu,gpu:0",
+        ]))
+        .unwrap();
+        assert_eq!(c.topology.spec(Role::VLearner), DeviceSpec::Gpu { ordinal: 1 });
+        assert_eq!(c.topology.spec(Role::PLearner), DeviceSpec::Cpu);
+        assert_eq!(c.topology.actor_spec(1), DeviceSpec::Gpu { ordinal: 0 });
+        assert!(!c.topology.is_uniform());
+
+        // `[topology]` file table resolves too, and CLI outranks it.
+        let dir = std::env::temp_dir().join("pql_cfg_test_topology");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.toml");
+        std::fs::write(&p, "[topology]\nv = \"gpu:0\"\np = \"gpu:1\"\n").unwrap();
+        let c = TrainConfig::from_args(&args(&[
+            "--config", p.to_str().unwrap(), "--device-v", "cpu",
+        ]))
+        .unwrap();
+        assert_eq!(c.topology.spec(Role::VLearner), DeviceSpec::Cpu);
+        assert_eq!(c.topology.spec(Role::PLearner), DeviceSpec::Gpu { ordinal: 1 });
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn topology_bad_role_or_device_rejected() {
+        let dir = std::env::temp_dir().join("pql_cfg_test_topology_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.toml");
+        std::fs::write(&p, "[topology]\nq_learner = \"cpu\"\n").unwrap();
+        let err = TrainConfig::from_args(&args(&["--config", p.to_str().unwrap()]))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown topology role"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+
+        assert!(TrainConfig::from_args(&args(&["--device-p", "tpu"])).is_err());
+    }
+
+    #[test]
+    fn actor_shards_wire_through_and_validate() {
+        assert_eq!(TrainConfig::default().actor_shards, 1);
+        let c = TrainConfig::from_args(&args(&["--actor-shards", "4"])).unwrap();
+        assert_eq!(c.actor_shards, 4);
+
+        let dir = std::env::temp_dir().join("pql_cfg_test_actor_shards");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.toml");
+        std::fs::write(&p, "[train]\nactor_shards = 2\n").unwrap();
+        let c = TrainConfig::from_args(&args(&["--config", p.to_str().unwrap()])).unwrap();
+        assert_eq!(c.actor_shards, 2);
+        std::fs::remove_dir_all(&dir).ok();
+
+        assert!(TrainConfig::from_args(&args(&["--actor-shards", "0"])).is_err());
+        assert!(TrainConfig::from_args(&args(&[
+            "--actor-shards", "8", "--num-envs", "4",
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn serve_device_role_flag_outranks_bare_device() {
+        let c = ServeConfig::from_args(&args(&[
+            "--device", "cpu", "--device-serve", "auto",
+        ]))
+        .unwrap();
+        assert_eq!(c.device, DeviceSpec::Auto);
+        let c = ServeConfig::from_args(&args(&["--device", "auto"])).unwrap();
+        assert_eq!(c.device, DeviceSpec::Auto);
     }
 
     #[test]

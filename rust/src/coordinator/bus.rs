@@ -1,52 +1,107 @@
-//! Versioned parameter bus — the paper's network-transfer arrows.
+//! Versioned broadcast bus — the paper's network-transfer arrows.
 //!
 //! P-learner publishes π^p to the Actor and V-learner; V-learner publishes
-//! Q^v to the P-learner. Readers poll `latest(since)` and only pay the
-//! copy when a newer version exists — both transfers are concurrent with
-//! compute, as in Fig. 1.
+//! Q^v to the P-learner; the serving front publishes whole policy
+//! snapshots to its worker pool. All of those channels are now ONE generic
+//! [`Bus<T>`]: a single versioned slot, readers poll [`latest`] and only
+//! pay the copy when a newer version exists — both transfers stay
+//! concurrent with compute, as in Fig. 1.
+//!
+//! Cross-device transport is explicit: when publisher and subscriber roles
+//! resolve to different runtimes (see `runtime::topology`), the snapshot
+//! travels through [`Bus::pull`] as a staged-literal copy into the
+//! subscriber's `ResidentState` slots (`ResidentUpdate::restage`) —
+//! collectives later. Every channel carries relaxed traffic counters
+//! ([`BusCounters`]: publishes, deliveries, stale polls, lagged versions)
+//! so staleness is observable per channel instead of inferred.
+//!
+//! [`latest`]: Bus::latest
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-/// A published flat vector with a monotone version.
-struct Slot {
+/// A published snapshot with a monotone version.
+struct Slot<T> {
     version: u64,
-    data: Arc<Vec<f32>>,
+    data: Arc<T>,
 }
 
-/// Multi-producer (usually single), multi-consumer parameter channel.
-#[derive(Clone)]
-pub struct ParamBus {
-    slot: Arc<Mutex<Slot>>,
+/// Per-channel traffic counters. Relaxed atomics: these are monitoring
+/// signals, not synchronization — the slot mutex orders the data itself.
+#[derive(Debug, Default)]
+pub struct BusStats {
+    publishes: AtomicU64,
+    deliveries: AtomicU64,
+    stale_polls: AtomicU64,
+    lagged_versions: AtomicU64,
 }
 
-impl ParamBus {
+/// Plain-value snapshot of one channel's [`BusStats`], for metrics rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct BusCounters {
+    /// Successful `publish` calls (the initial value is not counted).
+    pub publishes: u64,
+    /// `latest`/`pull` polls that delivered a new version.
+    pub deliveries: u64,
+    /// `latest`/`pull` polls that found nothing newer than `since`.
+    pub stale_polls: u64,
+    /// Versions skipped over across all deliveries: a reader that syncs
+    /// v3 → v7 never observed v4..v6, contributing 3. Zero means every
+    /// subscriber saw every published version.
+    pub lagged_versions: u64,
+}
+
+/// Multi-producer (usually single), multi-consumer versioned channel.
+pub struct Bus<T> {
+    slot: Arc<Mutex<Slot<T>>>,
+    stats: Arc<BusStats>,
+}
+
+// Manual impl: `Bus<T>` is a pair of shared handles and clones regardless
+// of whether `T` itself is `Clone`.
+impl<T> Clone for Bus<T> {
+    fn clone(&self) -> Self {
+        Bus { slot: Arc::clone(&self.slot), stats: Arc::clone(&self.stats) }
+    }
+}
+
+impl<T> Bus<T> {
     /// Create with an initial value (version 1).
-    pub fn new(initial: Vec<f32>) -> ParamBus {
-        ParamBus {
+    pub fn new(initial: T) -> Bus<T> {
+        Bus {
             slot: Arc::new(Mutex::new(Slot { version: 1, data: Arc::new(initial) })),
+            stats: Arc::new(BusStats::default()),
         }
     }
 
     /// Publish a new value; returns the new version.
-    pub fn publish(&self, data: Vec<f32>) -> u64 {
+    pub fn publish(&self, data: T) -> u64 {
         let mut s = self.slot.lock().unwrap();
         s.version += 1;
         s.data = Arc::new(data);
+        self.stats.publishes.fetch_add(1, Ordering::Relaxed);
         s.version
     }
 
     /// Fetch the newest value if its version exceeds `since`.
-    pub fn latest(&self, since: u64) -> Option<(u64, Arc<Vec<f32>>)> {
+    pub fn latest(&self, since: u64) -> Option<(u64, Arc<T>)> {
         let s = self.slot.lock().unwrap();
         if s.version > since {
+            self.stats.deliveries.fetch_add(1, Ordering::Relaxed);
+            // A reader syncing v_since → v never saw the versions between.
+            self.stats
+                .lagged_versions
+                .fetch_add(s.version - since - 1, Ordering::Relaxed);
             Some((s.version, Arc::clone(&s.data)))
         } else {
+            self.stats.stale_polls.fetch_add(1, Ordering::Relaxed);
             None
         }
     }
 
-    /// Unconditional snapshot.
-    pub fn snapshot(&self) -> (u64, Arc<Vec<f32>>) {
+    /// Unconditional snapshot (not counted as a delivery: used for
+    /// initial seeding and diagnostics, not the sync loop).
+    pub fn snapshot(&self) -> (u64, Arc<T>) {
         let s = self.slot.lock().unwrap();
         (s.version, Arc::clone(&s.data))
     }
@@ -54,12 +109,49 @@ impl ParamBus {
     pub fn version(&self) -> u64 {
         self.slot.lock().unwrap().version
     }
+
+    /// The explicit cross-runtime transport step. When a version newer
+    /// than `since` exists, `stage` receives the snapshot — for a
+    /// subscriber on a different runtime that closure is a
+    /// `ResidentUpdate::restage` staged-literal copy into its resident
+    /// slots; same-runtime subscribers use the identical path (the copy
+    /// is the publish contract either way, so delivery is bit-identical
+    /// across runtimes). Returns the delivered version, or `None` when
+    /// the subscriber is already current.
+    pub fn pull(
+        &self,
+        since: u64,
+        stage: impl FnOnce(&T) -> anyhow::Result<()>,
+    ) -> anyhow::Result<Option<u64>> {
+        match self.latest(since) {
+            Some((v, d)) => {
+                stage(&d)?;
+                Ok(Some(v))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Current traffic counters for this channel.
+    pub fn counters(&self) -> BusCounters {
+        BusCounters {
+            publishes: self.stats.publishes.load(Ordering::Relaxed),
+            deliveries: self.stats.deliveries.load(Ordering::Relaxed),
+            stale_polls: self.stats.stale_polls.load(Ordering::Relaxed),
+            lagged_versions: self.stats.lagged_versions.load(Ordering::Relaxed),
+        }
+    }
 }
+
+/// Flat-`f32` parameter channel — the θ blobs the trainer broadcasts.
+/// The one and only ParamBus in the tree; `serve` shares it via its typed
+/// sibling `Bus<PolicyParams>`.
+pub type ParamBus = Bus<Vec<f32>>;
 
 /// Snapshot of the observation normalizer published by the Actor.
 #[derive(Clone)]
 pub struct NormBus {
-    inner: ParamBus,
+    inner: Bus<Vec<f32>>,
     dim: usize,
 }
 
@@ -68,7 +160,7 @@ impl NormBus {
         // mean zeros ++ var ones, concatenated.
         let mut init = vec![0.0; dim];
         init.extend(vec![1.0; dim]);
-        NormBus { inner: ParamBus::new(init), dim }
+        NormBus { inner: Bus::new(init), dim }
     }
 
     pub fn publish(&self, mean: &[f32], var: &[f32]) {
@@ -79,24 +171,12 @@ impl NormBus {
         self.inner.publish(data);
     }
 
-    /// (mean, var) copy of the newest snapshot.
-    pub fn get(&self) -> (Vec<f32>, Vec<f32>) {
-        let (_, data) = self.inner.snapshot();
-        (data[..self.dim].to_vec(), data[self.dim..].to_vec())
-    }
-
     /// Zero-copy snapshot: holds the published `mean ++ var` buffer by
-    /// `Arc` and exposes borrowed halves — the feed-plane path, which
-    /// replaces the per-update `get()` clones in the learners.
+    /// `Arc` and exposes borrowed halves — THE read path (the allocating
+    /// `get()` is retired; every consumer borrows).
     pub fn view(&self) -> NormView {
         let (_, data) = self.inner.snapshot();
         NormView { data, dim: self.dim }
-    }
-
-    pub fn latest(&self, since: u64) -> Option<(u64, Vec<f32>, Vec<f32>)> {
-        self.inner
-            .latest(since)
-            .map(|(v, d)| (v, d[..self.dim].to_vec(), d[self.dim..].to_vec()))
     }
 
     /// Version-gated zero-copy snapshot: `Some` only when a version newer
@@ -107,6 +187,11 @@ impl NormBus {
         self.inner
             .latest(since)
             .map(|(v, data)| (v, NormView { data, dim: self.dim }))
+    }
+
+    /// Traffic counters for the normalizer channel.
+    pub fn counters(&self) -> BusCounters {
+        self.inner.counters()
     }
 }
 
@@ -144,6 +229,68 @@ mod tests {
     }
 
     #[test]
+    fn generic_bus_carries_non_vec_payloads() {
+        #[derive(PartialEq, Debug)]
+        struct P {
+            theta: Vec<f32>,
+            tag: u32,
+        }
+        let bus: Bus<P> = Bus::new(P { theta: vec![0.0], tag: 0 });
+        bus.publish(P { theta: vec![1.0, 2.0], tag: 7 });
+        let (v, p) = bus.latest(1).unwrap();
+        assert_eq!(v, 2);
+        assert_eq!(*p, P { theta: vec![1.0, 2.0], tag: 7 });
+    }
+
+    #[test]
+    fn counters_track_publishes_deliveries_and_lag() {
+        let bus = ParamBus::new(vec![0.0]);
+        assert_eq!(bus.counters(), BusCounters::default());
+        bus.publish(vec![1.0]); // v2
+        bus.publish(vec![2.0]); // v3
+        bus.publish(vec![3.0]); // v4
+        // Reader at v1 syncs straight to v4: skipped v2 and v3.
+        let (v, _) = bus.latest(1).unwrap();
+        assert_eq!(v, 4);
+        assert!(bus.latest(v).is_none());
+        let c = bus.counters();
+        assert_eq!(c.publishes, 3);
+        assert_eq!(c.deliveries, 1);
+        assert_eq!(c.stale_polls, 1);
+        assert_eq!(c.lagged_versions, 2);
+        // snapshot() is not a delivery.
+        let _ = bus.snapshot();
+        assert_eq!(bus.counters().deliveries, 1);
+    }
+
+    #[test]
+    fn pull_stages_exactly_on_new_versions() {
+        let bus = ParamBus::new(vec![1.0, 2.0]);
+        let mut staged: Vec<Vec<f32>> = Vec::new();
+        // Already current: the stage closure must not run.
+        let r = bus
+            .pull(1, |d| {
+                staged.push(d.clone());
+                Ok(())
+            })
+            .unwrap();
+        assert!(r.is_none());
+        assert!(staged.is_empty());
+        bus.publish(vec![3.0, 4.0]);
+        let v = bus
+            .pull(1, |d| {
+                staged.push(d.clone());
+                Ok(())
+            })
+            .unwrap()
+            .unwrap();
+        assert_eq!(v, 2);
+        assert_eq!(staged, vec![vec![3.0, 4.0]]);
+        let c = bus.counters();
+        assert_eq!((c.deliveries, c.stale_polls), (1, 1));
+    }
+
+    #[test]
     fn no_torn_reads_under_concurrency() {
         // Writers publish vectors where all elements equal the version tag;
         // readers must never observe a mixed vector.
@@ -168,17 +315,18 @@ mod tests {
     #[test]
     fn norm_bus_roundtrip() {
         let nb = NormBus::new(3);
-        let (m, v) = nb.get();
-        assert_eq!(m, vec![0.0; 3]);
-        assert_eq!(v, vec![1.0; 3]);
+        let view = nb.view();
+        assert_eq!(view.mean(), &[0.0; 3]);
+        assert_eq!(view.var(), &[1.0; 3]);
         nb.publish(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]);
-        let (m, v) = nb.get();
-        assert_eq!(m, vec![1.0, 2.0, 3.0]);
-        assert_eq!(v, vec![4.0, 5.0, 6.0]);
+        let view = nb.view();
+        assert_eq!(view.mean(), &[1.0, 2.0, 3.0]);
+        assert_eq!(view.var(), &[4.0, 5.0, 6.0]);
+        assert_eq!(nb.counters().publishes, 1);
     }
 
     #[test]
-    fn norm_view_matches_get_without_copying() {
+    fn norm_view_pins_its_snapshot() {
         let nb = NormBus::new(2);
         nb.publish(&[1.0, 2.0], &[3.0, 4.0]);
         let view = nb.view();

@@ -6,7 +6,7 @@ pub mod bus;
 pub mod pace;
 pub mod pool;
 
-pub use bus::{NormBus, NormView, ParamBus};
+pub use bus::{Bus, BusCounters, NormBus, NormView, ParamBus};
 pub use pace::PaceController;
 pub use pool::MsgPool;
 
@@ -80,6 +80,13 @@ pub struct StepMsg {
     /// Critic observations (asymmetric tasks only; empty otherwise).
     pub cs: Vec<f32>,
     pub cs2: Vec<f32>,
+    /// Rollout round, monotone per producer. Together with `origin` this
+    /// keys the V-learner's [`OrderedIngest`], which makes replay contents
+    /// independent of how many actor shard threads produced the stream.
+    pub round: u64,
+    /// Index of the producing actor shard thread (0 for the single-actor
+    /// planes).
+    pub origin: u32,
 }
 
 /// Clear-and-refill inside retained capacity (no allocation once the
@@ -103,6 +110,8 @@ impl StepMsg {
             done: Vec::with_capacity(n),
             cs: Vec::with_capacity(n * cd),
             cs2: Vec::with_capacity(n * cd),
+            round: 0,
+            origin: 0,
         }
     }
 
@@ -140,6 +149,50 @@ impl StepMsg {
         refill(&mut self.done, done);
         refill(&mut self.cs, cs);
         refill(&mut self.cs2, cs2);
+    }
+}
+
+/// Deterministic-order ingest of [`StepMsg`] streams from `origins` actor
+/// shard threads. Messages are consumed strictly in `(round, origin)`
+/// order — round 0 of every origin, then round 1, and so on — so the
+/// replay ring receives the same rows in the same order no matter how the
+/// producer threads interleave. With one origin this is a pass-through
+/// (a single FIFO sender already delivers in round order).
+///
+/// Producers bound the reorder window (see the actor plane's round gate),
+/// so `pending` stays small; a producer that exits early strands at most
+/// its final in-flight rounds, exactly like the pre-shard pipeline drop.
+pub struct OrderedIngest {
+    pending: std::collections::BTreeMap<(u64, u32), StepMsg>,
+    origins: u32,
+    next: (u64, u32),
+}
+
+impl OrderedIngest {
+    pub fn new(origins: u32) -> OrderedIngest {
+        assert!(origins > 0, "ingest needs at least one producer");
+        OrderedIngest { pending: Default::default(), origins, next: (0, 0) }
+    }
+
+    /// Accept an arriving message (any order across origins).
+    pub fn push(&mut self, msg: StepMsg) {
+        self.pending.insert((msg.round, msg.origin), msg);
+    }
+
+    /// Next message in global `(round, origin)` order, if it has arrived.
+    pub fn pop_ready(&mut self) -> Option<StepMsg> {
+        let msg = self.pending.remove(&self.next)?;
+        self.next = if self.next.1 + 1 == self.origins {
+            (self.next.0 + 1, 0)
+        } else {
+            (self.next.0, self.next.1 + 1)
+        };
+        Some(msg)
+    }
+
+    /// Messages buffered out of order.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
     }
 }
 
@@ -313,6 +366,51 @@ mod tests {
         rt.push_step(&[5.0, 0.0], &[1.0, 0.0]);
         rt.push_step(&[7.0, 0.0], &[1.0, 0.0]);
         assert_eq!(rt.completed.len(), 3);
+    }
+
+    fn tagged(round: u64, origin: u32) -> StepMsg {
+        let mut m = StepMsg::with_capacity(1, 1, 1, 0);
+        m.round = round;
+        m.origin = origin;
+        m.r = vec![(round * 10 + origin as u64) as f32];
+        m
+    }
+
+    #[test]
+    fn ordered_ingest_restores_global_round_order() {
+        let mut ing = OrderedIngest::new(2);
+        // Arrivals interleaved badly: origin 1 runs two rounds ahead.
+        for (r, o) in [(0, 1), (1, 1), (0, 0), (2, 1), (1, 0), (2, 0)] {
+            ing.push(tagged(r, o));
+        }
+        let mut seen = Vec::new();
+        while let Some(m) = ing.pop_ready() {
+            seen.push((m.round, m.origin));
+        }
+        assert_eq!(seen, vec![(0, 0), (0, 1), (1, 0), (1, 1), (2, 0), (2, 1)]);
+        assert_eq!(ing.pending(), 0);
+    }
+
+    #[test]
+    fn ordered_ingest_holds_gaps_until_filled() {
+        let mut ing = OrderedIngest::new(2);
+        ing.push(tagged(0, 1));
+        assert!(ing.pop_ready().is_none(), "(0,0) missing: nothing ready");
+        assert_eq!(ing.pending(), 1);
+        ing.push(tagged(0, 0));
+        assert_eq!(ing.pop_ready().unwrap().origin, 0);
+        assert_eq!(ing.pop_ready().unwrap().origin, 1);
+    }
+
+    #[test]
+    fn ordered_ingest_single_origin_is_pass_through() {
+        let mut ing = OrderedIngest::new(1);
+        for r in 0..5 {
+            ing.push(tagged(r, 0));
+            let m = ing.pop_ready().unwrap();
+            assert_eq!(m.round, r);
+            assert_eq!(ing.pending(), 0);
+        }
     }
 
     #[test]

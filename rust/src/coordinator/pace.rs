@@ -27,6 +27,12 @@ pub struct PaceController {
     a: AtomicU64,
     v: AtomicU64,
     p: AtomicU64,
+    /// Actor gate calls per *global* rollout step. The sharded actor
+    /// plane runs K threads that each gate once per round over 1/K of the
+    /// envs, so `a` counts K thread-rounds per step; the β_a:v predicates
+    /// divide by this scale so the configured ratio keeps its meaning
+    /// (rollout steps per critic update) at any K. Default 1.
+    actor_scale: AtomicU64,
     stop: AtomicBool,
     /// Set by the V-learner while its replay buffer cannot fill a batch;
     /// exempts the Actor from throttling so the buffer can fill (small-N
@@ -50,6 +56,7 @@ impl PaceController {
             a: AtomicU64::new(0),
             v: AtomicU64::new(0),
             p: AtomicU64::new(0),
+            actor_scale: AtomicU64::new(1),
             stop: AtomicBool::new(false),
             starved: AtomicBool::new(true),
             lock: Mutex::new(()),
@@ -75,6 +82,14 @@ impl PaceController {
 
     pub fn stopped(&self) -> bool {
         self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Declare how many actor gate calls make up one global rollout step
+    /// (= the actor shard count; see the `actor_scale` field). Set once
+    /// before the rollout threads start.
+    pub fn set_actor_scale(&self, k: u64) {
+        self.actor_scale.store(k.max(1), Ordering::SeqCst);
+        self.cv.notify_all();
     }
 
     /// V-learner data-availability signal (see `starved` field).
@@ -124,8 +139,11 @@ impl PaceController {
                 }
                 let a = self.a.load(Ordering::SeqCst);
                 let v = self.v.load(Ordering::SeqCst);
-                // a/v > num/den  (with one unit of slack on a)
-                a.saturating_mul(den) > (v.saturating_mul(num)).saturating_add(num)
+                let k = self.actor_scale.load(Ordering::SeqCst);
+                // (a/k)/v > num/den (one *global* step of slack — scale
+                // both the target and the slack by k).
+                a.saturating_mul(den)
+                    > (v.saturating_mul(num)).saturating_add(num).saturating_mul(k)
             },
             &self.wait_a_ns,
         );
@@ -148,8 +166,12 @@ impl PaceController {
             || {
                 let a = self.a.load(Ordering::SeqCst);
                 let v = self.v.load(Ordering::SeqCst);
-                // v/a > den/num (slack one update)
-                if v.saturating_mul(an) > (a.saturating_mul(ad)).saturating_add(ad) {
+                let k = self.actor_scale.load(Ordering::SeqCst);
+                // v/(a/k) > den/num (slack one update); `a` counts
+                // thread-rounds, so the a-side is divided by the scale.
+                if v.saturating_mul(an).saturating_mul(k)
+                    > (a.saturating_mul(ad)).saturating_add(ad.saturating_mul(k))
+                {
                     return true;
                 }
                 // v/p > den/num of β_p:v (same one-unit slack, scaled by
@@ -180,11 +202,13 @@ impl PaceController {
         self.cv.notify_all();
     }
 
-    /// Realized ratios (a/v, p/v) so far.
+    /// Realized ratios (a/v, p/v) so far, with the a-side reported in
+    /// *global* rollout steps (thread-rounds / actor scale).
     pub fn realized(&self) -> (f64, f64) {
         let (a, v, p) = self.counts();
+        let k = self.actor_scale.load(Ordering::SeqCst).max(1) as f64;
         let v = v.max(1) as f64;
-        (a as f64 / v, p as f64 / v)
+        (a as f64 / k / v, p as f64 / v)
     }
 }
 
@@ -239,6 +263,46 @@ mod tests {
         assert!((av - 0.125).abs() < 0.05, "a={a} v={v} av={av}");
         let pv = p as f64 / v as f64;
         assert!((pv - 0.5).abs() < 0.1, "p={p} v={v} pv={pv}");
+    }
+
+    /// With `actor_scale = K`, K free-running actor threads must be
+    /// throttled so that thread-rounds / K (global rollout steps) tracks
+    /// the configured β_a:v — the sharded-plane ratio contract.
+    #[test]
+    fn actor_scale_preserves_ratio_semantics_across_threads() {
+        let ctl = Arc::new(PaceController::new(Ratio::new(1, 4), Ratio::new(1, 2), true));
+        ctl.set_actor_scale(2);
+        ctl.set_starved(false);
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let c = Arc::clone(&ctl);
+            handles.push(std::thread::spawn(move || {
+                while !c.stopped() {
+                    c.gate_actor();
+                }
+            }));
+        }
+        {
+            let c = Arc::clone(&ctl);
+            handles.push(std::thread::spawn(move || {
+                while !c.stopped() {
+                    c.gate_p();
+                }
+            }));
+        }
+        for _ in 0..400 {
+            ctl.gate_v();
+        }
+        ctl.stop();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let (ra, _) = ctl.realized();
+        assert!((ra - 0.25).abs() < 0.05, "realized a:v {ra} (target 0.25)");
+        let (a, v, _) = ctl.counts();
+        // Raw counter confirms the scale: ~2 thread-rounds per step.
+        let raw = a as f64 / v as f64;
+        assert!((raw - 0.5).abs() < 0.1, "raw a/v {raw} (target 0.5)");
     }
 
     #[test]

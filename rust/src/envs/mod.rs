@@ -26,7 +26,7 @@ mod humanoid;
 mod shadow_hand;
 
 pub use device::{DeviceEnv, DeviceVecEnv};
-pub use sharded::ShardedEnv;
+pub use sharded::{shard_seed, ShardedEnv};
 
 use crate::util::Rng;
 use anyhow::{bail, Result};

@@ -37,8 +37,11 @@ pub struct ShardedEnv {
 }
 
 /// Derive shard k's seed from the run seed (SplitMix64 finalizer so
-/// adjacent shards get decorrelated streams).
-fn shard_seed(seed: u64, k: usize) -> u64 {
+/// adjacent shards get decorrelated streams). Public because the
+/// actor-shard plane re-derives per-shard env/noise/warmup streams from
+/// *global* shard indices — that is what makes its trajectories invariant
+/// in the number of actor threads (see `algos::pql`).
+pub fn shard_seed(seed: u64, k: usize) -> u64 {
     let mut z = seed ^ 0xD1B5_4A32_D192_ED03u64.wrapping_mul(k as u64 + 1);
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);

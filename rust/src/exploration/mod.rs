@@ -17,14 +17,30 @@ pub struct Noise {
 
 impl Noise {
     pub fn new(scheme: Exploration, num_envs: usize, act_dim: usize, rng: Rng) -> Self {
+        Noise::for_window(scheme, num_envs, 0, num_envs, act_dim, rng)
+    }
+
+    /// Noise for the env window `[lo, lo + n)` of a *global* `total`-env
+    /// ladder: σ is assigned by global env index, so a run partitioned
+    /// into actor shards reproduces exactly the σ schedule of the
+    /// unpartitioned run. `for_window(s, n, 0, n, ..)` is [`Noise::new`].
+    pub fn for_window(
+        scheme: Exploration,
+        total: usize,
+        lo: usize,
+        n: usize,
+        act_dim: usize,
+        rng: Rng,
+    ) -> Self {
+        debug_assert!(lo + n <= total);
         let sigmas = match scheme {
-            Exploration::Fixed(s) => vec![s; num_envs],
-            Exploration::Mixed { min, max } => (0..num_envs)
+            Exploration::Fixed(s) => vec![s; n],
+            Exploration::Mixed { min, max } => (lo..lo + n)
                 .map(|i| {
-                    if num_envs == 1 {
+                    if total == 1 {
                         0.5 * (min + max)
                     } else {
-                        min + (i as f32) / (num_envs as f32 - 1.0) * (max - min)
+                        min + (i as f32) / (total as f32 - 1.0) * (max - min)
                     }
                 })
                 .collect(),
@@ -151,6 +167,24 @@ mod tests {
         mk().fill_scaled(&mut scaled);
         for (a, s) in acts.iter().zip(&scaled) {
             assert_eq!(*a, s.clamp(-1.0, 1.0));
+        }
+    }
+
+    #[test]
+    fn window_ladder_matches_global_slice() {
+        // A window over [lo, lo+n) must carry exactly the σ values the
+        // full ladder assigns to those global indices — the actor-shard
+        // invariance contract.
+        let scheme = Exploration::Mixed { min: 0.05, max: 0.8 };
+        let full = Noise::new(scheme, 64, 2, Rng::new(0));
+        let win = Noise::for_window(scheme, 64, 24, 16, 2, Rng::new(0));
+        for i in 0..16 {
+            assert_eq!(win.sigma(i), full.sigma(24 + i));
+        }
+        // Fixed σ is position-independent.
+        let fw = Noise::for_window(Exploration::Fixed(0.3), 64, 10, 4, 2, Rng::new(1));
+        for i in 0..4 {
+            assert_eq!(fw.sigma(i), 0.3);
         }
     }
 

@@ -163,7 +163,18 @@ fn gpu_client(ordinal: usize) -> Result<xla::PjRtClient> {
 }
 
 #[cfg(not(feature = "gpu"))]
-fn gpu_client(_ordinal: usize) -> Result<xla::PjRtClient> {
+fn gpu_client(ordinal: usize) -> Result<xla::PjRtClient> {
+    // Keep the nonzero-ordinal recipe in the no-feature message too: a
+    // per-role `gpu:N` placement should fail fast with the full fix
+    // (rebuild + visibility), not reveal it one rebuild later.
+    if ordinal != 0 {
+        bail!(
+            "gpu:{ordinal}: this build has no GPU PJRT client (rebuild with \
+             `--features gpu` and a CUDA xla_extension); the GPU client binds \
+             the first visible device, so launch with \
+             CUDA_VISIBLE_DEVICES={ordinal} and use --device gpu"
+        );
+    }
     bail!(
         "this build has no GPU PJRT client (rebuild with `--features gpu` \
          and a CUDA xla_extension); use `cpu` or `auto`"

@@ -10,6 +10,7 @@ pub mod exec_cache;
 pub mod feed;
 pub mod manifest;
 pub mod resident;
+pub mod topology;
 
 pub use device::{resolve_spec, DeviceKind, DeviceSpec, DEVICE_ENV};
 pub use engine::{
@@ -20,6 +21,7 @@ pub use exec_cache::{artifact_file_hash, CacheKey, CompileTiming, ExecutableCach
 pub use feed::{FeedDims, FeedFrame, FeedPlan, Variant};
 pub use manifest::{Layout, Manifest, TaskInfo};
 pub use resident::{ResidentSpec, ResidentUpdate};
+pub use topology::{Placement, Role, RoleOverrides};
 
 use anyhow::Result;
 

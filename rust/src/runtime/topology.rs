@@ -1,0 +1,341 @@
+//! Per-role device placement — the multi-device trainer topology.
+//!
+//! PQL's three concurrent roles (Actor, V-learner, P-learner) plus the
+//! eval loop and the serving workers each resolve to their own
+//! [`DeviceSpec`] through one [`Placement`]. The paper's Fig. 9c/d
+//! measures exactly this split (actor and learners pinned to different
+//! GPUs); on one device everything collapses to the bare `--device`
+//! default and stays bit-identical to the single-runtime build.
+//!
+//! Resolution order per role (first present wins):
+//!
+//! 1. `--device-<role>` on the command line,
+//! 2. `<role>` in the `[topology]` config-file table,
+//! 3. the already-resolved all-roles default (`--device` /
+//!    `train.device` / `$PALLAS_DEVICE` / `cpu`).
+//!
+//! Every layer funnels through the same [`resolve_spec_from`] core as the
+//! bare `--device` flag, so the spellings, error messages, and fail-fast
+//! behavior (explicit `gpu[:N]` that cannot be satisfied is an error,
+//! with the `CUDA_VISIBLE_DEVICES` recipe for nonzero ordinals) are
+//! identical everywhere. The actor role accepts a comma-separated list —
+//! one entry per actor shard, cycled when `--actor-shards` exceeds the
+//! list (Ape-X-style K actors × M devices).
+//!
+//! A role's runtime comes from [`Runtime::shared`], so two roles that
+//! resolve to the same device key share one client and one compile cache
+//! by construction.
+
+use super::device::{resolve_spec_from, DeviceSpec};
+use super::engine::Runtime;
+use anyhow::{bail, Context, Result};
+use std::fmt;
+use std::sync::Arc;
+
+/// A trainer role that can be pinned to its own device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Rollout thread(s): policy inference + env stepping.
+    Actor,
+    /// Critic (Q^v) update loop.
+    VLearner,
+    /// Policy (π^p) update loop.
+    PLearner,
+    /// Periodic evaluation on the main thread.
+    Eval,
+    /// Policy-serving worker pool (`serve` subcommand).
+    Serve,
+}
+
+impl Role {
+    pub const ALL: [Role; 5] =
+        [Role::Actor, Role::VLearner, Role::PLearner, Role::Eval, Role::Serve];
+
+    /// The role's short name — the `[topology]` key and the
+    /// `--device-<name>` flag suffix.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Role::Actor => "actor",
+            Role::VLearner => "v",
+            Role::PLearner => "p",
+            Role::Eval => "eval",
+            Role::Serve => "serve",
+        }
+    }
+
+    /// Parse a role name; bad names fail fast listing the valid set.
+    pub fn from_name(s: &str) -> Result<Role> {
+        for r in Role::ALL {
+            if r.name() == s {
+                return Ok(r);
+            }
+        }
+        bail!("unknown topology role {s:?} (expected actor | v | p | eval | serve)")
+    }
+
+    fn idx(&self) -> usize {
+        match self {
+            Role::Actor => 0,
+            Role::VLearner => 1,
+            Role::PLearner => 2,
+            Role::Eval => 3,
+            Role::Serve => 4,
+        }
+    }
+}
+
+/// One layer of per-role device requests — the raw strings captured from
+/// either the CLI flags or the `[topology]` config table, before
+/// resolution.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RoleOverrides {
+    slots: [Option<String>; 5],
+}
+
+impl RoleOverrides {
+    pub fn set(&mut self, role: Role, value: &str) {
+        self.slots[role.idx()] = Some(value.to_string());
+    }
+
+    pub fn get(&self, role: Role) -> Option<&str> {
+        self.slots[role.idx()].as_deref()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.iter().all(|s| s.is_none())
+    }
+}
+
+/// The resolved per-role device topology for one run.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Placement {
+    /// The all-roles default (the bare `--device` resolution).
+    default: DeviceSpec,
+    /// Per-actor-shard devices; empty = every shard inherits the default.
+    actor: Vec<DeviceSpec>,
+    v: Option<DeviceSpec>,
+    p: Option<DeviceSpec>,
+    eval: Option<DeviceSpec>,
+    serve: Option<DeviceSpec>,
+}
+
+impl Placement {
+    /// Everything on one device — the no-topology-flags configuration.
+    pub fn uniform(default: DeviceSpec) -> Placement {
+        Placement { default, ..Placement::default() }
+    }
+
+    /// Resolve the topology from the two override layers on top of the
+    /// already-resolved all-roles default. `cli` wins over `file` per
+    /// role; each value goes through the same [`resolve_spec_from`] core
+    /// as `--device` itself.
+    pub fn resolve(
+        default: DeviceSpec,
+        cli: &RoleOverrides,
+        file: &RoleOverrides,
+    ) -> Result<Placement> {
+        let mut p = Placement::uniform(default);
+        for role in Role::ALL {
+            let (c, f) = (cli.get(role), file.get(role));
+            if c.is_none() && f.is_none() {
+                continue;
+            }
+            if role == Role::Actor {
+                // The actor accepts a comma list (one device per shard).
+                // The winning layer is chosen first so a CLI list fully
+                // shadows a file list rather than merging with it.
+                let winner = c.or(f).unwrap();
+                for part in winner.split(',') {
+                    let spec = resolve_spec_from(Some(part.trim()), None, None)
+                        .with_context(|| format!("--device-actor entry {part:?}"))?;
+                    p.actor.push(spec);
+                }
+            } else {
+                let spec = resolve_spec_from(c, f, None)
+                    .with_context(|| format!("--device-{}", role.name()))?;
+                match role {
+                    Role::VLearner => p.v = Some(spec),
+                    Role::PLearner => p.p = Some(spec),
+                    Role::Eval => p.eval = Some(spec),
+                    Role::Serve => p.serve = Some(spec),
+                    Role::Actor => unreachable!(),
+                }
+            }
+        }
+        Ok(p)
+    }
+
+    /// The all-roles default device.
+    pub fn default_spec(&self) -> DeviceSpec {
+        self.default
+    }
+
+    /// The device a role resolves to (actor shard 0 for `Role::Actor`).
+    pub fn spec(&self, role: Role) -> DeviceSpec {
+        match role {
+            Role::Actor => self.actor_spec(0),
+            Role::VLearner => self.v.unwrap_or(self.default),
+            Role::PLearner => self.p.unwrap_or(self.default),
+            Role::Eval => self.eval.unwrap_or(self.default),
+            Role::Serve => self.serve.unwrap_or(self.default),
+        }
+    }
+
+    /// The device for actor shard `shard`: the per-shard list cycled, or
+    /// the default when no actor override was given.
+    pub fn actor_spec(&self, shard: usize) -> DeviceSpec {
+        if self.actor.is_empty() {
+            self.default
+        } else {
+            self.actor[shard % self.actor.len()]
+        }
+    }
+
+    /// The shared runtime for a role — [`Runtime::shared`] keyed by the
+    /// resolved device, so equal specs share one client + compile cache.
+    pub fn runtime(&self, role: Role) -> Result<Arc<Runtime>> {
+        Runtime::shared(self.spec(role))
+            .with_context(|| format!("constructing runtime for role {}", role.name()))
+    }
+
+    /// The shared runtime for actor shard `shard`.
+    pub fn actor_runtime(&self, shard: usize) -> Result<Arc<Runtime>> {
+        Runtime::shared(self.actor_spec(shard))
+            .with_context(|| format!("constructing runtime for actor shard {shard}"))
+    }
+
+    /// True when every role resolves to the default device — the
+    /// single-runtime fast path (and the bit-identity contract with
+    /// no-topology-flags runs).
+    pub fn is_uniform(&self) -> bool {
+        Role::ALL.iter().all(|&r| self.spec(r) == self.default)
+            && self.actor.iter().all(|&s| s == self.default)
+    }
+}
+
+impl fmt::Display for Placement {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_uniform() {
+            return write!(f, "uniform {}", self.default);
+        }
+        let actors = if self.actor.is_empty() {
+            self.default.to_string()
+        } else {
+            self.actor.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(",")
+        };
+        write!(
+            f,
+            "actor={} v={} p={} eval={} serve={}",
+            actors,
+            self.spec(Role::VLearner),
+            self.spec(Role::PLearner),
+            self.spec(Role::Eval),
+            self.spec(Role::Serve),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn role_names_roundtrip_and_bad_names_fail() {
+        for r in Role::ALL {
+            assert_eq!(Role::from_name(r.name()).unwrap(), r);
+        }
+        let err = Role::from_name("q").unwrap_err().to_string();
+        assert!(err.contains("unknown topology role"), "{err}");
+        assert!(err.contains("actor | v | p | eval | serve"), "{err}");
+    }
+
+    #[test]
+    fn uniform_placement_inherits_default_everywhere() {
+        let p = Placement::uniform(DeviceSpec::Auto);
+        assert!(p.is_uniform());
+        for r in Role::ALL {
+            assert_eq!(p.spec(r), DeviceSpec::Auto);
+        }
+        assert_eq!(p.actor_spec(7), DeviceSpec::Auto);
+        assert_eq!(p.to_string(), "uniform auto");
+    }
+
+    #[test]
+    fn cli_beats_file_beats_default_per_role() {
+        let mut cli = RoleOverrides::default();
+        let mut file = RoleOverrides::default();
+        cli.set(Role::VLearner, "gpu:1");
+        file.set(Role::VLearner, "gpu:0");
+        file.set(Role::PLearner, "gpu:0");
+        let p = Placement::resolve(DeviceSpec::Cpu, &cli, &file).unwrap();
+        assert_eq!(p.spec(Role::VLearner), DeviceSpec::Gpu { ordinal: 1 });
+        assert_eq!(p.spec(Role::PLearner), DeviceSpec::Gpu { ordinal: 0 });
+        assert_eq!(p.spec(Role::Eval), DeviceSpec::Cpu);
+        assert_eq!(p.spec(Role::Serve), DeviceSpec::Cpu);
+        assert!(!p.is_uniform());
+    }
+
+    #[test]
+    fn actor_list_cycles_across_shards() {
+        let mut cli = RoleOverrides::default();
+        cli.set(Role::Actor, "gpu:0, gpu:1");
+        let p = Placement::resolve(DeviceSpec::Cpu, &cli, &RoleOverrides::default()).unwrap();
+        assert_eq!(p.actor_spec(0), DeviceSpec::Gpu { ordinal: 0 });
+        assert_eq!(p.actor_spec(1), DeviceSpec::Gpu { ordinal: 1 });
+        assert_eq!(p.actor_spec(2), DeviceSpec::Gpu { ordinal: 0 });
+        assert_eq!(p.spec(Role::Actor), DeviceSpec::Gpu { ordinal: 0 });
+        // Learners untouched by the actor list.
+        assert_eq!(p.spec(Role::VLearner), DeviceSpec::Cpu);
+    }
+
+    #[test]
+    fn cli_actor_list_shadows_file_list() {
+        let mut cli = RoleOverrides::default();
+        let mut file = RoleOverrides::default();
+        cli.set(Role::Actor, "cpu");
+        file.set(Role::Actor, "gpu:0,gpu:1");
+        let p = Placement::resolve(DeviceSpec::Cpu, &cli, &file).unwrap();
+        assert_eq!(p.actor_spec(0), DeviceSpec::Cpu);
+        assert_eq!(p.actor_spec(1), DeviceSpec::Cpu);
+    }
+
+    #[test]
+    fn bad_device_values_fail_with_role_context() {
+        let mut cli = RoleOverrides::default();
+        cli.set(Role::PLearner, "tpu");
+        let err = Placement::resolve(DeviceSpec::Cpu, &cli, &RoleOverrides::default())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("--device-p"), "{err:#}");
+        let mut cli = RoleOverrides::default();
+        cli.set(Role::Actor, "cpu,bogus");
+        let err = Placement::resolve(DeviceSpec::Cpu, &cli, &RoleOverrides::default())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("--device-actor entry"), "{err:#}");
+    }
+
+    #[test]
+    fn same_spec_roles_share_one_runtime() {
+        // Two roles resolving to the same device key must get the SAME
+        // shared runtime (one client, one compile cache).
+        let mut cli = RoleOverrides::default();
+        cli.set(Role::VLearner, "cpu");
+        let p = Placement::resolve(DeviceSpec::Cpu, &cli, &RoleOverrides::default()).unwrap();
+        let a = p.runtime(Role::Actor).unwrap();
+        let b = p.runtime(Role::VLearner).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.device_key(), "cpu");
+    }
+
+    #[cfg(not(feature = "gpu"))]
+    #[test]
+    fn gpu_role_without_feature_fails_fast_with_recipe() {
+        let mut cli = RoleOverrides::default();
+        cli.set(Role::VLearner, "gpu:1");
+        let p = Placement::resolve(DeviceSpec::Cpu, &cli, &RoleOverrides::default()).unwrap();
+        // Parsing succeeds; constructing the runtime is where an
+        // unsatisfiable explicit GPU request fails fast.
+        let err = format!("{:#}", p.runtime(Role::VLearner).unwrap_err());
+        assert!(err.contains("CUDA_VISIBLE_DEVICES=1"), "{err}");
+        assert!(err.contains("--features gpu"), "{err}");
+    }
+}

@@ -1,13 +1,15 @@
 //! Policy-serving plane: a deadline-batched inference front over the
 //! cached PJRT executables (ROADMAP "millions of users" direction).
 //!
-//! The shape mirrors the training coordinator: N worker threads share ONE
-//! compiled `actor_infer` executable through `Runtime::shared`'s
-//! process-wide [`ExecutableCache`], parameters arrive over a versioned
-//! [`ParamBus`] (θ ++ μ ++ σ² in one atomically-published blob), and the
-//! staged-literal path does the device traffic — θ/μ/σ² are staged once
-//! per parameter VERSION, only the observation slot is restaged per batch
-//! (the same `prepare`/`restage` protocol `infer_chunked` uses).
+//! The shape mirrors the training coordinator exactly: N worker threads
+//! share ONE compiled `actor_infer` executable through `Runtime::shared`'s
+//! process-wide [`ExecutableCache`], and parameters arrive over the SAME
+//! unified `coordinator::bus::Bus<T>` the trainer roles use — here typed
+//! as [`PolicyParams`] (θ, μ, σ² versioned as one snapshot, so a worker
+//! can never pair a new θ with an old normalizer). The staged-literal
+//! path does the device traffic — θ/μ/σ² are staged once per parameter
+//! VERSION, only the observation slot is restaged per batch (the same
+//! `prepare`/`restage` protocol `infer_chunked` uses).
 //!
 //! Request flow:
 //!
@@ -33,12 +35,21 @@ pub mod stats;
 pub use batcher::{Batcher, Request};
 pub use stats::{ServeStats, ServeSummary};
 
-use crate::coordinator::bus::ParamBus;
+use crate::coordinator::bus::{Bus, BusCounters};
 use crate::runtime::engine::{Executable, PreparedInputs, TensorView};
 use anyhow::{bail, Context, Result};
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// One atomically-versioned policy snapshot — the typed payload the
+/// serving channel carries over the unified [`Bus`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyParams {
+    pub theta: Vec<f32>,
+    pub mu: Vec<f32>,
+    pub var: Vec<f32>,
+}
 
 /// Executes one packed observation batch. Implementations are moved into
 /// a worker thread; `set_params` is called on version bumps only, `infer`
@@ -213,7 +224,7 @@ impl PendingAction {
 pub struct ServeFront {
     batcher: Arc<Batcher>,
     stats: Arc<ServeStats>,
-    params: ParamBus,
+    params: Bus<PolicyParams>,
     theta_len: usize,
     obs_dim: usize,
     act_dim: usize,
@@ -246,7 +257,11 @@ impl ServeFront {
             bail!("normalizer dims {}/{} != obs_dim {}", mu.len(), var.len(), obs_dim);
         }
         let theta_len = theta.len();
-        let params = ParamBus::new(pack_params(theta, mu, var));
+        let params = Bus::new(PolicyParams {
+            theta: theta.to_vec(),
+            mu: mu.to_vec(),
+            var: var.to_vec(),
+        });
         let batcher = Arc::new(Batcher::new(max_batch, deadline));
         let stats = Arc::new(ServeStats::new());
         let workers = backends
@@ -258,7 +273,7 @@ impl ServeFront {
                 let p = params.clone();
                 std::thread::Builder::new()
                     .name(format!("serve-worker-{i}"))
-                    .spawn(move || worker_loop(backend, b, s, p, theta_len, obs_dim, act_dim))
+                    .spawn(move || worker_loop(backend, b, s, p, act_dim))
                     .expect("spawn serve worker")
             })
             .collect();
@@ -276,17 +291,29 @@ impl ServeFront {
     }
 
     /// Publish a new parameter version; workers restage θ/μ/σ² exactly
-    /// once each before their next batch. Returns the new version.
+    /// once each before their next batch. Returns the new version. This is
+    /// a thin adapter over the unified bus — validation here, versioning
+    /// and delivery accounting in `coordinator::bus`.
     pub fn publish_params(&self, theta: &[f32], mu: &[f32], var: &[f32]) -> Result<u64> {
         if theta.len() != self.theta_len || mu.len() != self.obs_dim || var.len() != self.obs_dim {
             bail!("publish_params: dimension mismatch");
         }
-        Ok(self.params.publish(pack_params(theta, mu, var)))
+        Ok(self.params.publish(PolicyParams {
+            theta: theta.to_vec(),
+            mu: mu.to_vec(),
+            var: var.to_vec(),
+        }))
     }
 
     /// Current parameter version on the bus.
     pub fn params_version(&self) -> u64 {
         self.params.version()
+    }
+
+    /// Traffic counters for the parameter channel (staleness accounting:
+    /// one delivery per worker per published version in steady state).
+    pub fn params_counters(&self) -> BusCounters {
+        self.params.counters()
     }
 
     /// Live stats (the bench harness snapshots mid-run).
@@ -324,16 +351,6 @@ impl Drop for ServeFront {
     }
 }
 
-/// One atomically-published blob: θ ++ μ ++ σ². Versioned as a unit so a
-/// worker can never pair a new θ with an old normalizer.
-fn pack_params(theta: &[f32], mu: &[f32], var: &[f32]) -> Vec<f32> {
-    let mut blob = Vec::with_capacity(theta.len() + mu.len() + var.len());
-    blob.extend_from_slice(theta);
-    blob.extend_from_slice(mu);
-    blob.extend_from_slice(var);
-    blob
-}
-
 /// Worker: pull batches until the batcher drains closed; on each batch,
 /// catch up on the param version (at most one restage per version per
 /// worker), run the backend once, scatter the action rows.
@@ -341,9 +358,7 @@ fn worker_loop(
     mut backend: Box<dyn InferBackend>,
     batcher: Arc<Batcher>,
     stats: Arc<ServeStats>,
-    params: ParamBus,
-    theta_len: usize,
-    obs_dim: usize,
+    params: Bus<PolicyParams>,
     act_dim: usize,
 ) -> Result<()> {
     let mut seen_version = 0u64;
@@ -351,11 +366,9 @@ fn worker_loop(
     let mut obs_buf: Vec<f32> = Vec::new();
     let mut act_buf: Vec<f32> = Vec::new();
     while batcher.next_batch(&mut batch) {
-        if let Some((v, blob)) = params.latest(seen_version) {
+        if let Some((v, p)) = params.latest(seen_version) {
             seen_version = v;
-            let (theta, rest) = blob.split_at(theta_len);
-            let (mu, var) = rest.split_at(obs_dim);
-            if let Err(e) = backend.set_params(theta, mu, var) {
+            if let Err(e) = backend.set_params(&p.theta, &p.mu, &p.var) {
                 batcher.close();
                 return Err(e.context("serve worker: staging parameters"));
             }
@@ -364,7 +377,7 @@ fn worker_loop(
         let n = batch.len();
         obs_buf.clear();
         for r in &batch {
-            debug_assert_eq!(r.obs.len(), obs_dim, "submit() validates row length");
+            debug_assert_eq!(r.obs.len(), backend.obs_dim(), "submit() validates row length");
             obs_buf.extend_from_slice(&r.obs);
         }
         act_buf.resize(n * act_dim, 0.0);
@@ -486,6 +499,12 @@ mod tests {
             2,
             "exactly one restage for the published version"
         );
+        // Unified-bus staleness accounting: one publish, and exactly one
+        // delivery per version to the single worker (v1 seed + v2).
+        let c = f.params_counters();
+        assert_eq!(c.publishes, 1);
+        assert_eq!(c.deliveries, 2);
+        assert!(c.stale_polls >= 4, "later batches found no newer version");
         f.shutdown().unwrap();
     }
 

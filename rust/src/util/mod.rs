@@ -8,4 +8,4 @@ pub mod stats;
 
 pub use json::Json;
 pub use rng::Rng;
-pub use stats::RunningNorm;
+pub use stats::{merge_moments, RunningNorm};

@@ -59,6 +59,44 @@ impl RunningNorm {
     }
 }
 
+/// Moment-matched merge of per-shard normalizer statistics into one
+/// `(mean, var)` pair: `parts` is `(count, mean, var)` per shard. Parts
+/// with fewer than two samples still carry their `new()` defaults and are
+/// skipped; with no informative part the defaults `(0, 1)` come back.
+/// The actor-shard plane publishes this merge to the norm bus while each
+/// shard normalizes its own rows with its local statistics.
+pub fn merge_moments(parts: &[(f64, &[f32], &[f32])], dim: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut total = 0.0f64;
+    for (c, _, _) in parts {
+        if *c >= 2.0 {
+            total += c;
+        }
+    }
+    if total < 2.0 {
+        return (vec![0.0; dim], vec![1.0; dim]);
+    }
+    let mut mean = vec![0.0f64; dim];
+    let mut ex2 = vec![0.0f64; dim]; // E[x^2] accumulator, count-weighted
+    for (c, m, v) in parts {
+        if *c < 2.0 {
+            continue;
+        }
+        debug_assert_eq!(m.len(), dim);
+        debug_assert_eq!(v.len(), dim);
+        let w = *c / total;
+        for d in 0..dim {
+            let mu = m[d] as f64;
+            mean[d] += w * mu;
+            ex2[d] += w * (v[d] as f64 + mu * mu);
+        }
+    }
+    let mean32: Vec<f32> = mean.iter().map(|m| *m as f32).collect();
+    let var32: Vec<f32> = (0..dim)
+        .map(|d| ((ex2[d] - mean[d] * mean[d]) as f32).max(1e-6))
+        .collect();
+    (mean32, var32)
+}
+
 /// Summary of a sample (used by bench reporting).
 #[derive(Debug, Clone, Copy)]
 pub struct Summary {
@@ -91,6 +129,39 @@ pub fn summarize(xs: &[f64]) -> Summary {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn merge_moments_recovers_pooled_statistics() {
+        // Two shards over disjoint halves of one data set: the merge must
+        // land near the pooled mean and within sampling error of the
+        // pooled variance (per-shard var is the n-1 estimate).
+        let data: Vec<f32> = (0..400).map(|i| ((i * 13) % 29) as f32).collect();
+        let (a, b) = data.split_at(200);
+        let mut na = RunningNorm::new(1);
+        let mut nb = RunningNorm::new(1);
+        let mut all = RunningNorm::new(1);
+        na.update(a, 1);
+        nb.update(b, 1);
+        all.update(&data, 1);
+        let (m, v) = merge_moments(
+            &[(na.count, &na.mean, &na.var), (nb.count, &nb.mean, &nb.var)],
+            1,
+        );
+        assert!((m[0] - all.mean[0]).abs() < 1e-3, "{} vs {}", m[0], all.mean[0]);
+        assert!((v[0] - all.var[0]).abs() / all.var[0] < 0.02, "{} vs {}", v[0], all.var[0]);
+    }
+
+    #[test]
+    fn merge_moments_defaults_without_informative_parts() {
+        let empty = RunningNorm::new(3);
+        let (m, v) =
+            merge_moments(&[(empty.count, &empty.mean, &empty.var)], 3);
+        assert_eq!(m, vec![0.0; 3]);
+        assert_eq!(v, vec![1.0; 3]);
+        let (m, v) = merge_moments(&[], 2);
+        assert_eq!(m, vec![0.0; 2]);
+        assert_eq!(v, vec![1.0; 2]);
+    }
 
     #[test]
     fn running_norm_matches_batch_stats() {

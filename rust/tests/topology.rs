@@ -1,0 +1,241 @@
+//! Multi-device trainer topology integration tests.
+//!
+//! Pins the two contracts of the per-role placement plane:
+//!
+//! 1. **Cross-runtime bus transport is bit-identical.** A `Bus<T>`
+//!    snapshot delivered into a subscriber on a *different* PJRT runtime
+//!    (the `pull` → `ResidentUpdate::restage` staged-literal copy) must
+//!    produce bit-identical downstream compute to a subscriber sharing
+//!    the publisher's runtime. Two `Runtime::isolated(Cpu)` instances
+//!    stand in for two devices — separate clients, separate caches,
+//!    no shared state but the bus itself.
+//! 2. **Compile-once per runtime under mixed placement.** Roles pinned to
+//!    the same device share one runtime and compile each artifact once;
+//!    roles on different runtimes compile their own copy and neither
+//!    cache leaks into the other.
+//!
+//! Artifact-dependent cases skip (early `return`) when `make artifacts`
+//! hasn't run, like the other integration suites.
+
+use pql::coordinator::bus::ParamBus;
+use pql::runtime::{
+    DeviceSpec, Engine, FeedDims, FeedPlan, Manifest, OptState, Placement, ResidentUpdate,
+    Role, RoleOverrides, Runtime, Variant,
+};
+use pql::util::Rng;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn art() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+fn dims_for(t: &pql::runtime::TaskInfo, b: usize) -> FeedDims {
+    FeedDims {
+        batch: b,
+        obs_dim: t.obs_dim,
+        act_dim: t.act_dim,
+        critic_obs_dim: t.critic_obs_dim,
+        actor_params: t.layouts["actor"].size,
+        critic_params: t.layouts["critic"].size,
+    }
+}
+
+/// A P-learner-shaped subscriber: an `actor_update` resident stream on
+/// `rt` whose θ_c cross-feed arrives exclusively over `bus.pull`.
+struct Subscriber {
+    res: ResidentUpdate,
+    version: u64,
+}
+
+impl Subscriber {
+    fn new(
+        rt: Arc<Runtime>,
+        manifest: &Arc<Manifest>,
+        dims: &FeedDims,
+        actor_init: &[f32],
+        theta_c0: &[f32],
+        s: &[f32],
+        mu: &[f32],
+        var: &[f32],
+    ) -> Subscriber {
+        let mut eng = Engine::with_runtime(rt, Arc::clone(manifest));
+        let exe = eng.load("ant", "actor_update").unwrap();
+        let actor = OptState::new(actor_init.to_vec());
+        let res = ResidentUpdate::new(
+            Arc::clone(&exe),
+            FeedPlan::actor_update(Variant::Ddpg, dims, 5e-4),
+            0.0,
+            |f| {
+                f.bind_adam(&actor)?;
+                f.bind("theta_c", theta_c0)?;
+                f.bind("s", s)?;
+                f.bind("mu", mu)?;
+                f.bind("var", var)?;
+                Ok(())
+            },
+        )
+        .unwrap();
+        Subscriber { res, version: 0 }
+    }
+
+    /// One sync-and-update round: pull the newest θ_c (staging it into
+    /// this runtime's resident slot if newer), then step.
+    fn round(&mut self, bus: &ParamBus, s: &[f32]) -> Vec<Vec<f32>> {
+        let res = &mut self.res;
+        if let Some(v) = bus
+            .pull(self.version, |theta_c| res.restage("theta_c", theta_c))
+            .unwrap()
+        {
+            self.version = v;
+        }
+        res.restage("s", s).unwrap();
+        res.step().unwrap()
+    }
+}
+
+/// The paper's Fig. 9c/d split, minus the GPUs: a V-learner publishing θ_c
+/// on one runtime, P-learner-shaped subscribers on the same runtime and on
+/// a second isolated runtime. Every delivered version, every per-step
+/// diagnostic, and the final policy must agree bitwise — the bus transport
+/// adds nothing and loses nothing when it crosses runtimes.
+#[test]
+fn cross_runtime_bus_delivery_matches_same_runtime_bitwise() {
+    const STEPS: usize = 24;
+    let Some(art) = art() else { return };
+    let rt_pub = Runtime::isolated(DeviceSpec::Cpu).unwrap();
+    let rt_far = Runtime::isolated(DeviceSpec::Cpu).unwrap();
+    let manifest = Arc::new(Manifest::load(&art).unwrap());
+    let t = manifest.task("ant").unwrap().clone();
+    let b = manifest.batch_default;
+    let dims = dims_for(&t, b);
+
+    let mut rng = Rng::new(33);
+    let critic_init = t.layouts["critic"].init(&mut rng);
+    let actor_init = t.layouts["actor"].init(&mut rng);
+    let mu = vec![0.0f32; t.obs_dim];
+    let var = vec![1.0f32; t.obs_dim];
+    let mut s = vec![0.0f32; b * t.obs_dim];
+    let mut a = vec![0.0f32; b * t.act_dim];
+    let mut rn = vec![0.0f32; b];
+    let mut s2 = vec![0.0f32; b * t.obs_dim];
+    rng.fill_normal(&mut s);
+    rng.fill_normal(&mut a);
+    rng.fill_normal(&mut rn);
+    rng.fill_normal(&mut s2);
+    let gm = vec![0.97f32; b];
+
+    // Publisher: a critic resident stream on rt_pub feeding the bus.
+    let mut pub_eng = Engine::with_runtime(Arc::clone(&rt_pub), Arc::clone(&manifest));
+    let cu = pub_eng.load("ant", "critic_update").unwrap();
+    let critic = OptState::new(critic_init.clone());
+    let target = critic_init.clone();
+    let mut publisher = ResidentUpdate::new(
+        Arc::clone(&cu),
+        FeedPlan::critic_update(Variant::Ddpg, &dims, 5e-4),
+        0.0,
+        |f| {
+            f.bind_adam(&critic)?;
+            f.bind("target", &target)?;
+            f.bind("theta_a", &actor_init)?;
+            f.bind("s", &s)?;
+            f.bind("a", &a)?;
+            f.bind("rn", &rn)?;
+            f.bind("s2", &s2)?;
+            f.bind("gmask", &gm)?;
+            f.bind("mu", &mu)?;
+            f.bind("var", &var)?;
+            Ok(())
+        },
+    )
+    .unwrap();
+
+    let bus = ParamBus::new(critic_init.clone());
+    let (v0, theta_c0) = bus.snapshot();
+    let mut near = Subscriber::new(
+        Arc::clone(&rt_pub), &manifest, &dims, &actor_init, &theta_c0, &s, &mu, &var,
+    );
+    let mut far = Subscriber::new(
+        Arc::clone(&rt_far), &manifest, &dims, &actor_init, &theta_c0, &s, &mu, &var,
+    );
+    // Both subscribers were seeded with the version-v0 snapshot, so their
+    // cursors start there — the lag counter then measures only versions
+    // published after seeding.
+    near.version = v0;
+    far.version = v0;
+
+    for k in 0..STEPS {
+        publisher.step().unwrap();
+        bus.publish(publisher.to_host("theta").unwrap());
+        let out_near = near.round(&bus, &s);
+        let out_far = far.round(&bus, &s);
+        assert_eq!(near.version, far.version, "version drift at step {k}");
+        assert_eq!(out_near, out_far, "subscriber outputs diverged at step {k}");
+    }
+    // The materialized policies — what each role would publish onward —
+    // agree bitwise across runtimes.
+    assert_eq!(
+        near.res.to_host("theta").unwrap(),
+        far.res.to_host("theta").unwrap()
+    );
+    let c = bus.counters();
+    assert_eq!(c.publishes, STEPS as u64);
+    assert_eq!(c.deliveries, 2 * STEPS as u64, "one delivery per subscriber per version");
+    assert_eq!(c.lagged_versions, 0, "lockstep subscribers skip nothing");
+}
+
+/// Mixed placement compile accounting: same-device roles share one
+/// runtime and compile an artifact exactly once across their engines;
+/// a role on its own runtime compiles its own copy without touching the
+/// first cache.
+#[test]
+fn mixed_placement_compiles_once_per_runtime() {
+    let Some(art) = art() else { return };
+    let manifest = Arc::new(Manifest::load(&art).unwrap());
+
+    // Two roles, one device: one compile total across both engines.
+    let rt = Runtime::isolated(DeviceSpec::Cpu).unwrap();
+    let mut actor_eng = Engine::with_runtime(Arc::clone(&rt), Arc::clone(&manifest));
+    let mut eval_eng = Engine::with_runtime(Arc::clone(&rt), Arc::clone(&manifest));
+    actor_eng.load("ant", "actor_infer").unwrap();
+    eval_eng.load("ant", "actor_infer").unwrap();
+    assert_eq!(rt.cache().compiles(), 1, "same-device roles share the compile");
+
+    // A role split onto a second runtime compiles its own copy; neither
+    // cache sees the other's entry.
+    let rt_b = Runtime::isolated(DeviceSpec::Cpu).unwrap();
+    let mut v_eng = Engine::with_runtime(Arc::clone(&rt_b), Arc::clone(&manifest));
+    v_eng.load("ant", "actor_infer").unwrap();
+    v_eng.load("ant", "actor_infer").unwrap();
+    assert_eq!(rt_b.cache().compiles(), 1, "split role compiles once on its runtime");
+    assert_eq!(rt.cache().compiles(), 1, "first cache untouched by the split role");
+}
+
+/// Placement resolution sanity at the integration seam: equal specs share
+/// one process-wide runtime across roles (`Runtime::shared` keying), and
+/// an explicit per-role GPU request without the `gpu` feature fails fast
+/// with the actionable recipe instead of silently landing on CPU.
+#[test]
+fn placement_runtime_sharing_and_fail_fast() {
+    let mut cli = RoleOverrides::default();
+    cli.set(Role::VLearner, "cpu");
+    cli.set(Role::Eval, "cpu");
+    let p = Placement::resolve(DeviceSpec::Cpu, &cli, &RoleOverrides::default()).unwrap();
+    assert!(p.is_uniform(), "explicit cpu overrides collapse to uniform");
+    let rt_v = p.runtime(Role::VLearner).unwrap();
+    let rt_e = p.runtime(Role::Eval).unwrap();
+    let rt_a = p.actor_runtime(3).unwrap();
+    assert!(Arc::ptr_eq(&rt_v, &rt_e));
+    assert!(Arc::ptr_eq(&rt_v, &rt_a));
+
+    #[cfg(not(feature = "gpu"))]
+    {
+        let mut cli = RoleOverrides::default();
+        cli.set(Role::PLearner, "gpu:2");
+        let p = Placement::resolve(DeviceSpec::Cpu, &cli, &RoleOverrides::default()).unwrap();
+        let err = format!("{:#}", p.runtime(Role::PLearner).unwrap_err());
+        assert!(err.contains("CUDA_VISIBLE_DEVICES=2"), "{err}");
+        assert!(err.contains("p"), "role context in {err}");
+    }
+}
