@@ -38,8 +38,13 @@ saturation-throughput floor against the baseline (cross-run tolerance;
 skip-with-notice on stub baselines). PR 9 adds the `cross_device_bus`
 section: the cross-runtime-over-same-runtime sync ratio is gated against
 the baseline's (the `pull` → `restage` transport must not quietly get
-more expensive), never on absolute sync rates. When $GITHUB_STEP_SUMMARY
-is set, a per-group delta table is appended to the job summary.
+more expensive), never on absolute sync rates. PR 10 adds the
+`graph_build`/`graph_run` rows and `native_graph` section of
+BENCH_learner_feed.json (native graph builder): INFO-only — lowering is
+a one-shot cost and the built executable is bit-identical to the AOT
+one, so correctness tests, not this gate, defend it. When
+$GITHUB_STEP_SUMMARY is set, a per-group delta table is appended to the
+job summary.
 
 Tolerance: --tolerance or $PERF_GATE_TOLERANCE, default 0.35 (shared CI
 runners are noisy; tighten locally with PERF_GATE_TOLERANCE=0.1).
@@ -96,6 +101,9 @@ ARTIFACT_DEPENDENT_GROUPS = {
     # PR-9 topology rows: bus transport into a resident actor_update.
     "bus_same_rt",
     "bus_cross_rt",
+    # PR-10 native graph plane: the built-executable run row needs PJRT
+    # plus AOT artifacts for the manifest the builder derives dims from.
+    "graph_run",
 }
 
 # Groups tracked for the perf trajectory but NOT gated: one-shot
@@ -107,7 +115,18 @@ ARTIFACT_DEPENDENT_GROUPS = {
 # the plane's `dispatch_contention` summary object — same total work at
 # every T, so the ratio is a genuine concurrency speedup and survives
 # runner changes (see gate_dispatch_scaling).
-INFORMATIONAL_GROUPS = {"compile", "first_stage", "cached_load", "dispatch_contention"}
+# `graph_build`/`graph_run` (PR 10, native graph builder) are INFO-only:
+# lowering HLO text is a one-shot cost per new shape, and the built
+# executable's run rate duplicates `run_ref` (same module bytes through
+# XLA) — the bit-identity tests, not the perf gate, are the guardrail.
+INFORMATIONAL_GROUPS = {
+    "compile",
+    "first_stage",
+    "cached_load",
+    "dispatch_contention",
+    "graph_build",
+    "graph_run",
+}
 
 # Scaling keys gated fresh-vs-baseline (relative, with the cross-run
 # tolerance — they compare two runs, unlike the same-run feed floors).

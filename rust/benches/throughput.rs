@@ -24,8 +24,8 @@ use pql::envs::{self, StepOut};
 use pql::exploration::Noise;
 use pql::replay::{NStepAssembler, SampleBatch, SumTree, TransitionBuffer};
 use pql::runtime::{
-    infer_chunked, Engine, FeedDims, FeedPlan, HostTensor, OptState, ResidentUpdate, TensorView,
-    Variant,
+    infer_chunked, Engine, FeedDims, FeedPlan, GraphSpec, HostTensor, OptState, ResidentUpdate,
+    TensorView, Variant,
 };
 use pql::util::Rng;
 use std::path::Path;
@@ -493,6 +493,33 @@ fn write_learner_feed_json(
         ),
         _ => String::new(),
     };
+    // Native graph plane: the builder's host-only lowering cost per
+    // shape, and (when PJRT ran) the built-vs-AOT steady-state run ratio
+    // at the same batch — machine-neutral, expected ~1.0.
+    let build_rows: Vec<String> = records
+        .iter()
+        .filter(|r| r.group == "graph_build")
+        .map(|r| format!("    {{\"name\": \"{}\", \"build_ms\": {:.3}}}", r.name, r.ms_per_iter))
+        .collect();
+    let graph_section = if build_rows.is_empty() {
+        String::new()
+    } else {
+        let ratio = records
+            .iter()
+            .find(|r| r.group == "graph_run")
+            .map(|g| {
+                format!(
+                    ",\n  \"built_over_aot\": {:.3}",
+                    g.per_sec / rate_of(records, "run_ref", g.n).max(1e-9)
+                )
+            })
+            .unwrap_or_default();
+        format!(
+            ",\n  \"native_graph\": {{\"builds\": [\n{}\n  ]{}}}",
+            build_rows.join(",\n"),
+            ratio
+        )
+    };
     // Policy-serving section: the deadline-batched front's latency
     // quantiles and closed-loop saturation throughput (rows are formatted
     // by the serving bench — they carry quantiles a PlaneRecord doesn't).
@@ -502,12 +529,13 @@ fn write_learner_feed_json(
         format!(",\n  \"serving\": [\n{}\n  ]", serving_rows.join(",\n"))
     };
     let json = format!(
-        "{{\n  \"schema\": \"pql.bench.learner_feed/v1\",\n  \"source\": \"cargo bench --bench throughput\",\n  \"task\": \"ant\",\n  \"results\": [\n{}\n  ],\n  \"speedups\": [\n{}\n  ]{}{}{}{}\n}}\n",
+        "{{\n  \"schema\": \"pql.bench.learner_feed/v1\",\n  \"source\": \"cargo bench --bench throughput\",\n  \"task\": \"ant\",\n  \"results\": [\n{}\n  ],\n  \"speedups\": [\n{}\n  ]{}{}{}{}{}\n}}\n",
         rows_json(records),
         speedups.join(",\n"),
         resident_section,
         dispatch_section,
         bus_section,
+        graph_section,
         serving_section
     );
     let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_learner_feed.json");
@@ -664,6 +692,31 @@ fn main() {
 
     println!("\n== learner feed plane (B = 512 / 4096 / 16384) ==");
     let mut feed = bench_learner_feed();
+
+    // Native graph builder (host-only: construct + fold + lower to HLO
+    // text, no PJRT). This is the one-time cost the fallback and serve
+    // paths pay per new shape, before the compile; it needs no
+    // artifacts, so it lands in the JSON even on artifact-less runs.
+    println!("\n== native graph builder (host-only, ant dims) ==");
+    for spec in [
+        GraphSpec::ddpg_critic(512, 12, 4, vec![128, 128], 0.05, false),
+        GraphSpec::ddpg_critic(512, 12, 4, vec![128, 128], 0.05, true),
+        GraphSpec::ddpg_actor(256, 12, 4, vec![128, 128]),
+    ] {
+        let name = format!("graph build {}", spec.artifact_name());
+        let (ms, rate) = bench(&name, 1.0, "builds", 40, || {
+            std::hint::black_box(spec.build_text());
+        });
+        feed.push(PlaneRecord {
+            group: "graph_build",
+            name,
+            n: spec.batch,
+            ms_per_iter: ms,
+            per_sec: rate,
+            unit: "builds",
+        });
+    }
+
     match write_learner_feed_json(&feed, &[]) {
         Ok(path) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("could not write BENCH_learner_feed.json: {e}"),
@@ -1051,6 +1104,66 @@ fn main() {
                 per_sec: 1e3 / stage_ms.max(1e-9),
                 unit: "stages",
             });
+        }
+
+        // --- native graph plane: built critic_update vs AOT ------------
+        // The same staged FeedPlan loop as `run_ref`, through the
+        // executable the in-process builder lowered (bit-identical graph,
+        // content-keyed compile). The ratio against `run_ref` at the same
+        // batch is the steady-state cost of running on a built graph —
+        // expected ~1.0, since XLA sees the same module either way.
+        {
+            let b = m.batch_default;
+            match engine.build_critic_update("ant", b, false) {
+                Ok(built) => {
+                    let critic = OptState::new(t.layouts["critic"].init(&mut r));
+                    let target = critic.theta.clone();
+                    let theta_a = t.layouts["actor"].init(&mut r);
+                    let mu = vec![0.0f32; t.obs_dim];
+                    let var = vec![1.0f32; t.obs_dim];
+                    let mut s = vec![0.0f32; b * t.obs_dim];
+                    let mut a = vec![0.0f32; b * t.act_dim];
+                    r.fill_normal(&mut s);
+                    r.fill_uniform(&mut a, -1.0, 1.0);
+                    let rn = vec![0.5f32; b];
+                    let gmask = vec![0.97f32; b];
+                    let dims = FeedDims {
+                        batch: b,
+                        obs_dim: t.obs_dim,
+                        act_dim: t.act_dim,
+                        critic_obs_dim: t.critic_obs_dim,
+                        actor_params: t.layouts["actor"].size,
+                        critic_params: t.layouts["critic"].size,
+                    };
+                    let plan = FeedPlan::critic_update(Variant::Ddpg, &dims, 5e-4);
+                    plan.validate(&built.info).unwrap();
+                    let bname = format!("critic_update run built graph (B={b})");
+                    let (ms, rate) = bench(&bname, b as f64, "rows", (51_200 / b).max(4), || {
+                        let mut f = plan.frame();
+                        f.bind_adam(&critic).unwrap();
+                        f.bind("target", &target).unwrap();
+                        f.bind("theta_a", &theta_a).unwrap();
+                        f.bind("s", &s).unwrap();
+                        f.bind("a", &a).unwrap();
+                        f.bind("rn", &rn).unwrap();
+                        f.bind("s2", &s).unwrap();
+                        f.bind("gmask", &gmask).unwrap();
+                        f.bind("mu", &mu).unwrap();
+                        f.bind("var", &var).unwrap();
+                        let outs = f.run(&built).unwrap();
+                        std::hint::black_box(&outs);
+                    });
+                    feed.push(PlaneRecord {
+                        group: "graph_run",
+                        name: bname,
+                        n: b,
+                        ms_per_iter: ms,
+                        per_sec: rate,
+                        unit: "rows",
+                    });
+                }
+                Err(e) => println!("native graph build skipped: {e:#}"),
+            }
         }
 
         // --- concurrent dispatch: per-executable locks (PR 6) ----------

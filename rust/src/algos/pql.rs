@@ -1019,9 +1019,24 @@ fn v_loop(
         variant.critic_update_artifact()
     };
     let artifact = manifest.batch_artifact(base, b);
-    let update = engine
-        .load(&cfg.task, &artifact)
-        .with_context(|| format!("batch size {b} needs artifact {artifact}"))?;
+    let update = match engine.load(&cfg.task, &artifact) {
+        Ok(exe) => exe,
+        // No AOT graph for this (variant, batch) shape — for the
+        // symmetric DDPG family, build it natively (`runtime::graph`)
+        // instead of erroring. Vision critics and SAC stay AOT-only.
+        Err(load_err) if variant == Variant::Ddpg && !vision => {
+            log::info!(
+                "artifact {artifact} unavailable ({load_err:#}); \
+                 building critic_update natively (b={b}, per={per})"
+            );
+            engine.build_critic_update(&cfg.task, b, per).with_context(|| {
+                format!("batch size {b}: no AOT artifact {artifact} and the native build failed")
+            })?
+        }
+        Err(load_err) => {
+            return Err(load_err.context(format!("batch size {b} needs artifact {artifact}")));
+        }
+    };
 
     // Input signature resolved once; per-iteration assembly is pure
     // slice binding (zero heap clones — see tests/alloc_free.rs).

@@ -102,18 +102,23 @@ COMMANDS:
   eval        Evaluate a saved policy checkpoint
   serve       Serve a policy: deadline-batched multi-threaded inference
               front (--serve-max-batch / --serve-deadline-us flush dials,
-              --serve-workers pool size, --serve-clients synthetic load)
+              --serve-workers pool size, --serve-clients synthetic load).
+              A non-default flush size gets its own actor_infer graph
+              built natively at exactly that batch
   bench       Run a paper figure/table harness (see --fig / --table)
   envinfo     Print the environment suite and per-task dimensions
-  artifacts   Verify the AOT artifact set against the manifest
+  artifacts   Verify the AOT artifact set against the manifest and list
+              runtime-built graphs (artifacts/built/) with provenance
   help        Show this message
 
 DEVICE SELECTION (train / eval / serve / bench):
-  --device cpu|gpu[:N]|auto   PJRT device for compiling + running the HLO
-                              artifacts. Resolution: --device > config
-                              `train.device` > $PALLAS_DEVICE > cpu.
-                              `auto` falls back to cpu when no GPU client
-                              is available.
+  --device cpu|gpu[:N]|auto   The all-roles default PJRT device for
+                              compiling + running the HLO artifacts.
+                              Default resolution: --device > config
+                              `train.device` > $PALLAS_DEVICE > cpu;
+                              any --device-<role> flag below overrides
+                              it for that role only. `auto` falls back
+                              to cpu when no GPU client is available.
   --device-env                Step the simulation on the device too: env
                               state lives in a resident slot of the
                               lowered env graphs and the actor loop fuses

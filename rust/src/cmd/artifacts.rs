@@ -1,6 +1,8 @@
 //! `pql artifacts` — verify the AOT artifact set: every manifest entry
 //! exists on disk, and env dimensions match the manifest (the python/rust
-//! contract check).
+//! contract check). Also lists runtime-built artifacts (`runtime::graph`
+//! output under `<artifacts>/built/`) so provenance — loaded from the
+//! AOT set vs. built in-process — is visible at a glance.
 
 use crate::cli::Args;
 use crate::envs;
@@ -33,5 +35,40 @@ pub fn run(args: &Args) -> Result<()> {
         );
     }
     println!("env/manifest dimension contract verified");
+
+    // Built artifacts are not manifest entries: they are lowered on
+    // demand, cached by content hash, and rewritten whenever the builder
+    // changes — listed here as provenance, never verified as required.
+    let built = built_artifacts(&dir);
+    if built.is_empty() {
+        println!("built artifacts (runtime::graph): none");
+    } else {
+        println!("built artifacts (runtime::graph): {} — rebuilt on demand", built.len());
+        for (task, file) in built {
+            println!("  built:{task}/{file}");
+        }
+    }
     Ok(())
+}
+
+/// `(task, file name)` of every `built/<task>/*.hlo.txt` under `dir`.
+fn built_artifacts(dir: &std::path::Path) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    let Ok(tasks) = std::fs::read_dir(dir.join("built")) else {
+        return out;
+    };
+    for task in tasks.flatten() {
+        let tname = task.file_name().to_string_lossy().into_owned();
+        let Ok(files) = std::fs::read_dir(task.path()) else {
+            continue;
+        };
+        for f in files.flatten() {
+            let fname = f.file_name().to_string_lossy().into_owned();
+            if fname.ends_with(".hlo.txt") {
+                out.push((tname.clone(), fname));
+            }
+        }
+    }
+    out.sort();
+    out
 }

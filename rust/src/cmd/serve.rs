@@ -7,8 +7,11 @@
 //! ```
 //!
 //! Loads a policy (checkpoint, or fresh layout-init for smoke runs),
-//! spawns the worker pool over the ONE cached `actor_infer` executable,
-//! then drives it with synthetic closed-loop traffic: each client thread
+//! spawns the worker pool over ONE cached `actor_infer` executable —
+//! built natively at the flush size via `runtime::graph` when
+//! `--serve-max-batch` differs from the AOT chunk, so a full flush is a
+//! single dispatch — then drives it with synthetic closed-loop traffic:
+//! each client thread
 //! owns a batch of environments, submits one request per env per step,
 //! waits for the scattered actions, and steps. The final printout is the
 //! serving summary: p50/p99/max latency, saturation throughput, realized
@@ -31,8 +34,29 @@ pub fn run(args: &Args) -> Result<()> {
     let manifest = Arc::clone(&engine.manifest);
     let t = manifest.task(&cfg.task)?;
     let (od, ad, chunk) = (t.obs_dim, t.act_dim, manifest.chunk);
-    let exe = engine.load(&cfg.task, "actor_infer")?;
     let max_batch = if cfg.max_batch == 0 { chunk } else { cfg.max_batch };
+    // Online recompilation (`runtime::graph`): when the flush bound
+    // differs from the AOT chunk, build `actor_infer` at exactly
+    // `max_batch` so one full flush is one dispatch instead of
+    // `ceil(max_batch/chunk)` chunked calls. Falls back to the chunked
+    // AOT executable when the task's family isn't natively buildable.
+    let (exe, worker_batch) = if max_batch == chunk {
+        (engine.load(&cfg.task, "actor_infer")?, chunk)
+    } else {
+        match engine.build_actor_infer(&cfg.task, max_batch) {
+            Ok(built) => {
+                log::info!("built actor_infer_n{max_batch} natively for the serve flush size");
+                (built, max_batch)
+            }
+            Err(err) => {
+                log::warn!(
+                    "native actor_infer build at n={max_batch} failed ({err:#}); \
+                     serving chunked at {chunk}"
+                );
+                (engine.load(&cfg.task, "actor_infer")?, chunk)
+            }
+        }
+    };
 
     // Parameters: a trained checkpoint, or fresh layout init (identical
     // distribution to a new training run) for latency smoke tests.
@@ -53,7 +77,7 @@ pub fn run(args: &Args) -> Result<()> {
 
     let backends: Vec<Box<dyn InferBackend>> = (0..cfg.workers)
         .map(|_| {
-            PjrtBackend::new(Arc::clone(&exe), chunk, od, ad)
+            PjrtBackend::new(Arc::clone(&exe), worker_batch, od, ad)
                 .map(|b| Box::new(b) as Box<dyn InferBackend>)
         })
         .collect::<Result<_>>()?;

@@ -52,6 +52,27 @@ pub struct BusCounters {
 }
 
 /// Multi-producer (usually single), multi-consumer versioned channel.
+///
+/// # Example
+///
+/// Readers keep a version cursor and only pay the copy when something
+/// newer exists — the idiom every θ subscriber in the trainer uses:
+///
+/// ```
+/// use pql::coordinator::Bus;
+///
+/// let bus: Bus<Vec<f32>> = Bus::new(vec![0.0; 4]); // version 1
+/// let mut seen = bus.version();
+///
+/// bus.publish(vec![1.0; 4]);
+/// let (v, theta) = bus.latest(seen).expect("newer version exists");
+/// assert_eq!(*theta, vec![1.0; 4]);
+/// seen = v;
+///
+/// // Already current: no delivery, no clone — just a stale-poll count.
+/// assert!(bus.latest(seen).is_none());
+/// assert_eq!(bus.counters().stale_polls, 1);
+/// ```
 pub struct Bus<T> {
     slot: Arc<Mutex<Slot<T>>>,
     stats: Arc<BusStats>,

@@ -655,6 +655,27 @@ impl Runtime {
             info,
         )
     }
+
+    /// Fetch-or-compile a runtime-built artifact (`runtime::graph`),
+    /// keyed on the lowered `text` content rather than file bytes — the
+    /// file was (re)written moments ago by the builder, and hashing the
+    /// in-memory text avoids a read-back while keeping the same
+    /// share-by-content semantics as AOT loads.
+    pub fn load_built(
+        &self,
+        task: &str,
+        artifact: &str,
+        info: &ArtifactInfo,
+        text: &str,
+    ) -> Result<Arc<Executable>> {
+        self.cache().load_with_key(
+            &self.client,
+            &self.client_lock,
+            crate::runtime::exec_cache::CacheKey::for_text(&self.key, text),
+            &format!("{task}/built:{artifact}"),
+            info,
+        )
+    }
 }
 
 /// Per-call-site engine handle: shared runtime + manifest + a local memo
@@ -709,6 +730,57 @@ impl Engine {
             .get(artifact)
             .with_context(|| format!("artifact {task}/{artifact} not in manifest"))?;
         let exe = self.runtime.load(task, artifact, info)?;
+        self.local.insert(key, Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Build + compile the critic update natively (`runtime::graph`)
+    /// for `task` at batch size `batch` — the fallback when the
+    /// manifest carries no AOT artifact for this shape. Only the
+    /// symmetric double-MLP DDPG family builds; anything else errors
+    /// with the builder's explanation.
+    pub fn build_critic_update(
+        &mut self,
+        task: &str,
+        batch: usize,
+        per: bool,
+    ) -> Result<Arc<Executable>> {
+        let spec = crate::runtime::graph::GraphSpec::critic_update(
+            self.manifest.task(task)?,
+            self.manifest.tau,
+            batch,
+            per,
+        )?;
+        self.build_graph(task, &spec)
+    }
+
+    /// Build + compile `actor_infer` natively at flush size `n` — the
+    /// serve plane's online-recompilation hook for batch shapes the AOT
+    /// set doesn't carry.
+    pub fn build_actor_infer(&mut self, task: &str, n: usize) -> Result<Arc<Executable>> {
+        let spec =
+            crate::runtime::graph::GraphSpec::actor_infer(self.manifest.task(task)?, n)?;
+        self.build_graph(task, &spec)
+    }
+
+    /// Lower `spec`, persist it under `<artifacts>/built/<task>/`, and
+    /// compile it through the content-keyed cache path. Memoized in the
+    /// local table under a `built:`-prefixed name so hot call sites skip
+    /// the lowering too.
+    fn build_graph(
+        &mut self,
+        task: &str,
+        spec: &crate::runtime::graph::GraphSpec,
+    ) -> Result<Arc<Executable>> {
+        let artifact = spec.artifact_name();
+        let key = (task.to_string(), format!("built:{artifact}"));
+        if let Some(e) = self.local.get(&key) {
+            return Ok(Arc::clone(e));
+        }
+        let (info, text) =
+            crate::runtime::graph::write_artifact(&self.manifest.root, task, spec)
+                .with_context(|| format!("building {task}/{artifact}"))?;
+        let exe = self.runtime.load_built(task, &artifact, &info, &text)?;
         self.local.insert(key, Arc::clone(&exe));
         Ok(exe)
     }

@@ -46,20 +46,47 @@ impl CacheKey {
         };
         Ok(CacheKey { device: device.to_string(), file_hash })
     }
+
+    /// Key for runtime-built HLO text on `device`. Built artifacts
+    /// (`runtime::graph`) hash the lowered text they are about to write
+    /// instead of re-reading the file: the text *is* the content, so
+    /// rebuilding the same [`GraphSpec`](crate::runtime::graph::GraphSpec)
+    /// — deterministic lowering — lands on the same key and shares the
+    /// compile, while any builder change re-keys automatically.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use pql::runtime::exec_cache::CacheKey;
+    /// // Two loads of byte-identical HLO — whether lowered in process
+    /// // or read from an AOT file — map to one entry per device.
+    /// let a = CacheKey::for_text("cpu", "HloModule m");
+    /// let b = CacheKey::for_text("cpu", "HloModule m");
+    /// assert_eq!(a, b);
+    /// assert_ne!(a, CacheKey::for_text("gpu:0", "HloModule m"));
+    /// ```
+    pub fn for_text(device: &str, text: &str) -> CacheKey {
+        CacheKey { device: device.to_string(), file_hash: content_hash(text.as_bytes()) }
+    }
 }
 
-/// Content hash of an artifact file: FNV-1a 64 over the bytes, prefixed
-/// with the length so the key is readable in logs and collisions need
-/// both a length and a hash match.
-pub fn artifact_file_hash(path: &Path) -> Result<String> {
-    let bytes = std::fs::read(path)
-        .with_context(|| format!("hashing artifact {path:?}"))?;
+/// Content hash of a byte string: FNV-1a 64, prefixed with the length so
+/// the key is readable in logs and collisions need both a length and a
+/// hash match.
+pub fn content_hash(bytes: &[u8]) -> String {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in &bytes {
+    for b in bytes {
         h ^= *b as u64;
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
     }
-    Ok(format!("fnv1a:{}:{h:016x}", bytes.len()))
+    format!("fnv1a:{}:{h:016x}", bytes.len())
+}
+
+/// Content hash of an artifact file ([`content_hash`] over its bytes).
+pub fn artifact_file_hash(path: &Path) -> Result<String> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("hashing artifact {path:?}"))?;
+    Ok(content_hash(&bytes))
 }
 
 /// Timing record of one compile — the numbers the bench plane folds into
@@ -76,6 +103,24 @@ pub struct CompileTiming {
 }
 
 /// The process-wide executable cache. See the module docs.
+///
+/// # Example
+///
+/// Keys pair a device with a content hash, so "same artifact, same
+/// device" always lands on one compiled executable — whether the text
+/// came from an AOT file ([`CacheKey::for_artifact`]) or the native
+/// graph builder ([`CacheKey::for_text`]):
+///
+/// ```
+/// use pql::runtime::{CacheKey, ExecutableCache};
+///
+/// let cache = ExecutableCache::new(); // private; production shares global()
+/// assert_eq!((cache.compiles(), cache.hits()), (0, 0));
+///
+/// let text = "HloModule pql_actor_infer_n33";
+/// assert_eq!(CacheKey::for_text("cpu", text), CacheKey::for_text("cpu", text));
+/// assert_ne!(CacheKey::for_text("cpu", text), CacheKey::for_text("gpu:0", text));
+/// ```
 #[derive(Default)]
 pub struct ExecutableCache {
     entries: Mutex<HashMap<CacheKey, Arc<Executable>>>,
@@ -117,6 +162,21 @@ impl ExecutableCache {
         info: &ArtifactInfo,
     ) -> Result<Arc<Executable>> {
         let key = CacheKey::for_artifact(device, info)?;
+        self.load_with_key(client, client_lock, key, name, info)
+    }
+
+    /// [`ExecutableCache::load`] with an explicitly computed key — the
+    /// path runtime-built artifacts take, keying on lowered-text content
+    /// ([`CacheKey::for_text`]) rather than file bytes.
+    pub fn load_with_key(
+        &self,
+        client: &xla::PjRtClient,
+        client_lock: &Arc<Mutex<()>>,
+        key: CacheKey,
+        name: &str,
+        info: &ArtifactInfo,
+    ) -> Result<Arc<Executable>> {
+        let device = key.device.clone();
         let mut entries = self.entries.lock().unwrap();
         if let Some(e) = entries.get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);

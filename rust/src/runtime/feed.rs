@@ -132,6 +132,32 @@ impl FeedDims {
 }
 
 /// A resolved input signature for one update artifact.
+///
+/// # Example
+///
+/// Resolve the DDPG critic-update signature for a toy task, then bind a
+/// frame by name — the plan owns the slot order, the loop never does
+/// (running the frame additionally needs a compiled [`Executable`]):
+///
+/// ```
+/// use pql::runtime::{FeedDims, FeedPlan, OptState, Variant};
+///
+/// let dims = FeedDims {
+///     batch: 8, obs_dim: 5, act_dim: 3, critic_obs_dim: 5,
+///     actor_params: 40, critic_params: 60,
+/// };
+/// let plan = FeedPlan::critic_update(Variant::Ddpg, &dims, 5e-4);
+/// // Adam block (theta/m/v/t) first, then target and the lagged policy.
+/// assert_eq!(plan.index("theta_a"), Some(5));
+/// assert!(plan.has("gmask") && !plan.has("isw")); // isw is PER-only
+///
+/// let critic = OptState::new(vec![0.0; 60]);
+/// let s = vec![0.0; 8 * 5];
+/// let mut f = plan.frame();
+/// f.bind_adam(&critic).unwrap();
+/// f.bind("s", &s).unwrap();
+/// // ... bind the remaining variable slots, then `f.run(&exe)`.
+/// ```
 pub struct FeedPlan {
     label: &'static str,
     slots: Vec<Slot>,

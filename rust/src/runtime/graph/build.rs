@@ -1,0 +1,436 @@
+//! Graph builders for the DDPG update/infer family.
+//!
+//! Each builder reconstructs, node for node, the computation the python
+//! AOT path (`python/compile/model.py`) traces through JAX — same
+//! forward layout (flat θ sliced per layer, q1 then q2), same backward
+//! order (q2's chain first, last layer to first, bias pad before weight
+//! pad), same Adam + global-norm-clip arithmetic, same polyak blend.
+//! That discipline is what buys bit-identical outputs against the AOT
+//! artifacts; see `rust/tests/graph.rs` for the differential proof.
+//!
+//! Derived coefficients (`1 − τ`, `1 − β₁`, `1 − β₂`, `1/B`) are built
+//! *symbolically* as constant expressions and left for the
+//! [consteval pass](super::consteval) to fold — in f64, because JAX
+//! folded them in python floats and f32 folding lands one ulp away on
+//! `1 − 0.9`.
+
+use super::op::{Graph, NodeId, OpKind};
+use super::{GraphKind, GraphSpec};
+
+/// Adam first-moment decay, fixed by the python compile layer.
+pub const BETA1: f64 = 0.9;
+/// Adam second-moment decay.
+pub const BETA2: f64 = 0.999;
+/// Adam denominator epsilon.
+pub const EPS: f64 = 1e-8;
+/// Global-norm gradient clip threshold.
+pub const CLIP: f64 = 0.5;
+/// Observation-normalization variance epsilon.
+pub const NORM_EPS: f64 = 1e-5;
+/// Normalized-observation clamp bound.
+pub const OBS_CLIP: f64 = 5.0;
+
+/// One `(offset, shape)` entry in a flat parameter layout.
+pub type Entry = (usize, Vec<usize>);
+
+#[derive(Clone, Copy)]
+enum Act {
+    Relu,
+    Tanh,
+    None,
+}
+
+/// Forward-pass taps one layer keeps for the backward chain.
+struct Tap {
+    x_in: NodeId,
+    w: NodeId,
+    pre: NodeId,
+    post: NodeId,
+}
+
+/// `(offset, shape)` entries and total size of the double-Q critic
+/// layout: `[obs+act, hidden.., 1]` twice, weight then bias per layer.
+pub fn critic_layout(obs_dim: usize, act_dim: usize, hidden: &[usize]) -> (Vec<Entry>, usize) {
+    let mut dims = vec![obs_dim + act_dim];
+    dims.extend_from_slice(hidden);
+    dims.push(1);
+    let mut entries = Vec::new();
+    let mut off = 0;
+    for _q in 0..2 {
+        for i in 0..dims.len() - 1 {
+            for shape in [vec![dims[i], dims[i + 1]], vec![dims[i + 1]]] {
+                let size: usize = shape.iter().product();
+                entries.push((off, shape));
+                off += size;
+            }
+        }
+    }
+    (entries, off)
+}
+
+/// `(offset, shape)` entries and total size of the actor layout:
+/// `[obs, hidden.., act]`, weight then bias per layer.
+pub fn actor_layout(obs_dim: usize, act_dim: usize, hidden: &[usize]) -> (Vec<Entry>, usize) {
+    let mut dims = vec![obs_dim];
+    dims.extend_from_slice(hidden);
+    dims.push(act_dim);
+    let mut entries = Vec::new();
+    let mut off = 0;
+    for i in 0..dims.len() - 1 {
+        for shape in [vec![dims[i], dims[i + 1]], vec![dims[i + 1]]] {
+            let size: usize = shape.iter().product();
+            entries.push((off, shape));
+            off += size;
+        }
+    }
+    (entries, off)
+}
+
+/// Slice + reshape every layout entry out of the flat parameter vector.
+fn mlp_slices(g: &mut Graph, theta: NodeId, entries: &[Entry]) -> Vec<NodeId> {
+    entries
+        .iter()
+        .map(|(off, shape)| {
+            let size: usize = shape.iter().product();
+            let s = g.slice1(theta, *off, *off + size);
+            g.reshape(s, shape.clone())
+        })
+        .collect()
+}
+
+/// One dense layer: `act(x·w + b)`. Returns `(pre, post)` activations.
+fn layer_fwd(g: &mut Graph, x: NodeId, w: NodeId, b: NodeId, act: Act, batch: usize) -> (NodeId, NodeId) {
+    let dout = g.shape(w)[1];
+    let xw = g.dot(x, w, 1, 0);
+    let br = g.broadcast_row(b, vec![batch, dout]);
+    let pre = g.add_(xw, br);
+    let post = match act {
+        Act::Relu => {
+            let z = g.splat(0.0, vec![batch, dout]);
+            g.max_(pre, z)
+        }
+        Act::Tanh => g.unary(OpKind::Tanh, pre),
+        Act::None => pre,
+    };
+    (pre, post)
+}
+
+/// `clamp((obs − μ) · rsqrt(σ² + ε), ±5)` — the running-stat whitening
+/// every graph applies before its first layer.
+fn normalize_obs(g: &mut Graph, obs: NodeId, mu: NodeId, var: NodeId, b: usize, d: usize) -> NodeId {
+    let eps = g.splat(NORM_EPS, vec![d]);
+    let ve = g.add_(var, eps);
+    let inv = g.unary(OpKind::Rsqrt, ve);
+    let mu_b = g.broadcast_row(mu, vec![b, d]);
+    let inv_b = g.broadcast_row(inv, vec![b, d]);
+    let centered = g.sub(obs, mu_b);
+    let x = g.mul(centered, inv_b);
+    let lo = g.splat(-OBS_CLIP, vec![b, d]);
+    let hi = g.splat(OBS_CLIP, vec![b, d]);
+    let clipped_lo = g.max_(lo, x);
+    g.min_(hi, clipped_lo)
+}
+
+/// The JAX `maximum` VJP subgradient: 1 where `pre == post`, halved
+/// where the tie is against the zero branch.
+fn relu_mask(g: &mut Graph, pre: NodeId, post: NodeId, b: usize, d: usize) -> NodeId {
+    let ones = g.splat(1.0, vec![b, d]);
+    let zeros = g.splat(0.0, vec![b, d]);
+    let twos = g.splat(2.0, vec![b, d]);
+    let eq_pre = g.compare_eq(pre, post);
+    let num = g.select(eq_pre, ones, zeros);
+    let eq_zero = g.compare_eq(zeros, post);
+    let den = g.select(eq_zero, twos, ones);
+    g.div(num, den)
+}
+
+/// Double-Q forward over the concatenated `[obs, act]` input. Returns
+/// `(q1, q2, taps)` with per-layer activations for the backward chain.
+fn critic_fwd(
+    g: &mut Graph,
+    theta: NodeId,
+    x: NodeId,
+    entries: &[Entry],
+    batch: usize,
+    n_layer: usize,
+) -> (NodeId, NodeId, Vec<Vec<Tap>>) {
+    let ents = mlp_slices(g, theta, entries);
+    let mut qs = Vec::new();
+    let mut taps = Vec::new();
+    for qi in 0..2 {
+        let mut h = x;
+        let mut net = Vec::new();
+        for li in 0..n_layer {
+            let w = ents[qi * 2 * n_layer + 2 * li];
+            let b = ents[qi * 2 * n_layer + 2 * li + 1];
+            let act = if li < n_layer - 1 { Act::Relu } else { Act::None };
+            let (pre, post) = layer_fwd(g, h, w, b, act, batch);
+            net.push(Tap { x_in: h, w, pre, post });
+            h = post;
+        }
+        qs.push(g.reshape(h, vec![batch]));
+        taps.push(net);
+    }
+    (qs[0], qs[1], taps)
+}
+
+/// Backprop one critic net, padding each layer's gradients into the
+/// flat layout and chaining onto `acc` (bias pad before weight pad,
+/// last layer first — the JAX emission order).
+fn critic_backward_chain(
+    g: &mut Graph,
+    dy: NodeId,
+    net: &[Tap],
+    entries: &[Entry],
+    qi: usize,
+    total: usize,
+    batch: usize,
+    n_layer: usize,
+    acc: Option<NodeId>,
+) -> NodeId {
+    let mut acc = acc;
+    let mut d = g.reshape(dy, vec![batch, 1]);
+    for li in (0..n_layer).rev() {
+        let tap = &net[li];
+        let (x_in, w) = (tap.x_in, tap.w);
+        let ei = qi * 2 * n_layer + 2 * li;
+        let (w_off, w_shape) = (entries[ei].0, entries[ei].1.clone());
+        let b_off = entries[ei + 1].0;
+        let dout = w_shape[1];
+        let db = g.reduce_add(d, vec![0], vec![dout]);
+        let pb = g.pad1(db, b_off, total);
+        acc = Some(match acc {
+            Some(a) => g.add_(a, pb),
+            None => pb,
+        });
+        let w_size: usize = w_shape.iter().product();
+        let dxw = g.dot(d, x_in, 0, 0);
+        let dw_flat = if dout == 1 {
+            g.reshape(dxw, vec![w_size])
+        } else {
+            let t = g.transpose10(dxw);
+            g.reshape(t, vec![w_size])
+        };
+        let pw = g.pad1(dw_flat, w_off, total);
+        let a = acc.unwrap();
+        acc = Some(g.add_(a, pw));
+        if li > 0 {
+            let dx = g.dot(d, w, 1, 1);
+            let prev = &net[li - 1];
+            let (ppre, ppost) = (prev.pre, prev.post);
+            let pd = g.shape(ppost)[1];
+            let mask = relu_mask(g, ppre, ppost, batch, pd);
+            d = g.mul(dx, mask);
+        }
+    }
+    acc.expect("at least one layer")
+}
+
+/// Global-norm-clipped Adam step on the flat parameter vector. Returns
+/// `(θ', m', v')`. The `1 − β` coefficients stay symbolic for consteval.
+fn adam_step(
+    g: &mut Graph,
+    theta: NodeId,
+    grad: NodeId,
+    m: NodeId,
+    v: NodeId,
+    t_scalar: NodeId,
+    lr_scalar: NodeId,
+    p: usize,
+) -> (NodeId, NodeId, NodeId) {
+    let gg = g.mul(grad, grad);
+    let ss = g.reduce_add(gg, vec![0], vec![]);
+    let c_tiny = g.constant(1e-12);
+    let ss_e = g.add_(ss, c_tiny);
+    let gnorm = g.unary(OpKind::Sqrt, ss_e);
+    let c_clip = g.constant(CLIP);
+    let ratio = g.div(c_clip, gnorm);
+    let c_one = g.constant(1.0);
+    let scale = g.min_(ratio, c_one);
+    let scale_b = g.broadcast_scalar(scale, vec![p]);
+    let gc = g.mul(grad, scale_b);
+
+    let c_b1 = g.constant(BETA1);
+    let c_b2 = g.constant(BETA2);
+    let one_m_b1 = g.sub(c_one, c_b1);
+    let one_m_b2 = g.sub(c_one, c_b2);
+    let b1_b = g.broadcast_scalar(c_b1, vec![p]);
+    let omb1_b = g.broadcast_scalar(one_m_b1, vec![p]);
+    let m_decay = g.mul(m, b1_b);
+    let m_inc = g.mul(gc, omb1_b);
+    let m2 = g.add_(m_decay, m_inc);
+    let b2_b = g.broadcast_scalar(c_b2, vec![p]);
+    let omb2_b = g.broadcast_scalar(one_m_b2, vec![p]);
+    let v_decay = g.mul(v, b2_b);
+    let gc_scaled = g.mul(gc, omb2_b);
+    let v_inc = g.mul(gc_scaled, gc);
+    let v2 = g.add_(v_decay, v_inc);
+
+    let b1t = g.pow(c_b1, t_scalar);
+    let bc1 = g.sub(c_one, b1t);
+    let b2t = g.pow(c_b2, t_scalar);
+    let bc2 = g.sub(c_one, b2t);
+    let bc1_b = g.broadcast_scalar(bc1, vec![p]);
+    let bc2_b = g.broadcast_scalar(bc2, vec![p]);
+    let mhat = g.div(m2, bc1_b);
+    let vhat = g.div(v2, bc2_b);
+    let lr_b = g.broadcast_scalar(lr_scalar, vec![p]);
+    let num = g.mul(lr_b, mhat);
+    let sv = g.unary(OpKind::Sqrt, vhat);
+    let eps_b = g.splat(EPS, vec![p]);
+    let den = g.add_(sv, eps_b);
+    let step = g.div(num, den);
+    let theta2 = g.sub(theta, step);
+    (theta2, m2, v2)
+}
+
+/// Build the critic-update graph (DDPG double-Q, optional PER weights).
+pub(super) fn build_critic_update(spec: &GraphSpec) -> Graph {
+    let per = matches!(spec.kind, GraphKind::CriticUpdate { per: true });
+    let (b, od, ad) = (spec.batch, spec.obs_dim, spec.act_dim);
+    let hidden = &spec.hidden;
+    let n_layer = hidden.len() + 1;
+    let (centries, pc) = critic_layout(od, ad, hidden);
+    let (aentries, pa) = actor_layout(od, ad, hidden);
+    let mut g = Graph::new(spec.module_name());
+
+    let theta_c = g.parameter(0, vec![pc]);
+    let m = g.parameter(1, vec![pc]);
+    let v = g.parameter(2, vec![pc]);
+    let t = g.parameter(3, vec![1]);
+    let theta_ct = g.parameter(4, vec![pc]);
+    let theta_a = g.parameter(5, vec![pa]);
+    let s = g.parameter(6, vec![b, od]);
+    let a = g.parameter(7, vec![b, ad]);
+    let rn = g.parameter(8, vec![b]);
+    let s2 = g.parameter(9, vec![b, od]);
+    let gmask = g.parameter(10, vec![b]);
+    let mut idx = 11;
+    let isw = if per {
+        let n = g.parameter(idx, vec![b]);
+        idx += 1;
+        Some(n)
+    } else {
+        None
+    };
+    let mu = g.parameter(idx, vec![od]);
+    let var = g.parameter(idx + 1, vec![od]);
+    let lr = g.parameter(idx + 2, vec![1]);
+
+    let s_n = normalize_obs(&mut g, s, mu, var, b, od);
+    let s2_n = normalize_obs(&mut g, s2, mu, var, b, od);
+
+    // Target action: actor forward on the normalized next observation.
+    let aents = mlp_slices(&mut g, theta_a, &aentries);
+    let mut h = s2_n;
+    for li in 0..n_layer {
+        let act = if li < n_layer - 1 { Act::Relu } else { Act::Tanh };
+        let (_, post) = layer_fwd(&mut g, h, aents[2 * li], aents[2 * li + 1], act, b);
+        h = post;
+    }
+    let a2 = h;
+
+    // Target value: min of the twin target critics, masked and discounted
+    // upstream into `rn`/`gmask` by the feed plane.
+    let x_t = g.concat(s2_n, a2, 1);
+    let (q1t, q2t, _) = critic_fwd(&mut g, theta_ct, x_t, &centries, b, n_layer);
+    let qmin = g.min_(q1t, q2t);
+    let disc = g.mul(gmask, qmin);
+    let y = g.add_(rn, disc);
+
+    // Online value on the taken action.
+    let x = g.concat(s_n, a, 1);
+    let (q1, q2, taps) = critic_fwd(&mut g, theta_c, x, &centries, b, n_layer);
+
+    let d1 = g.sub(q1, y);
+    let d2 = g.sub(q2, y);
+    let two = g.splat(2.0, vec![b]);
+    let c_one = g.constant(1.0);
+    let c_bf = g.constant(b as f64);
+    let inv_b_s = g.div(c_one, c_bf);
+    let invb = g.broadcast_scalar(inv_b_s, vec![b]);
+    let (dy1, dy2) = if let Some(isw) = isw {
+        // d/dq of mean(isw · ((q1−y)² + (q2−y)²)): 2·isw·(q−y)/B.
+        let a1 = g.mul(d1, two);
+        let a1w = g.mul(a1, isw);
+        let a2_ = g.mul(d2, two);
+        let a2w = g.mul(a2_, isw);
+        (g.mul(a1w, invb), g.mul(a2w, invb))
+    } else {
+        let a1 = g.mul(d1, two);
+        let a2_ = g.mul(d2, two);
+        (g.mul(a1, invb), g.mul(a2_, invb))
+    };
+
+    // Gradient accumulation: q2's chain first (JAX order), then q1's.
+    let g2 = critic_backward_chain(&mut g, dy2, &taps[1], &centries, 1, pc, b, n_layer, None);
+    let grad =
+        critic_backward_chain(&mut g, dy1, &taps[0], &centries, 0, pc, b, n_layer, Some(g2));
+
+    let t_s = g.reshape(t, vec![]);
+    let lr_s = g.reshape(lr, vec![]);
+    let (theta_c2, m2, v2) = adam_step(&mut g, theta_c, grad, m, v, t_s, lr_s, pc);
+
+    let c_tau = g.constant(spec.tau as f64);
+    let one_m_tau = g.sub(c_one, c_tau);
+    let omt_b = g.broadcast_scalar(one_m_tau, vec![pc]);
+    let tau_b = g.broadcast_scalar(c_tau, vec![pc]);
+    let keep = g.mul(theta_ct, omt_b);
+    let blend = g.mul(theta_c2, tau_b);
+    let theta_ct2 = g.add_(keep, blend);
+
+    let loss = if let Some(isw) = isw {
+        let sq1 = g.mul(d1, d1);
+        let sq2 = g.mul(d2, d2);
+        let ssum = g.add_(sq1, sq2);
+        let ww = g.mul(isw, ssum);
+        let red = g.reduce_add(ww, vec![0], vec![]);
+        g.div(red, c_bf)
+    } else {
+        let sq1 = g.mul(d1, d1);
+        let r1 = g.reduce_add(sq1, vec![0], vec![]);
+        let l1 = g.div(r1, c_bf);
+        let sq2 = g.mul(d2, d2);
+        let r2 = g.reduce_add(sq2, vec![0], vec![]);
+        let l2 = g.div(r2, c_bf);
+        g.add_(l1, l2)
+    };
+    let qsum = g.reduce_add(q1, vec![0], vec![]);
+    let qmean = g.div(qsum, c_bf);
+
+    let loss1 = g.reshape(loss, vec![1]);
+    let qmean1 = g.reshape(qmean, vec![1]);
+    let mut outs = vec![theta_c2, m2, v2, theta_ct2, loss1, qmean1];
+    if let Some(isw) = isw {
+        let _ = isw;
+        let half = g.splat(0.5, vec![b]);
+        let a1 = g.unary(OpKind::Abs, d1);
+        let a2_ = g.unary(OpKind::Abs, d2);
+        let asum = g.add_(a1, a2_);
+        outs.push(g.mul(half, asum));
+    }
+    g.tuple(outs);
+    g
+}
+
+/// Build the actor-infer graph: normalize, tanh-MLP forward.
+pub(super) fn build_actor_infer(spec: &GraphSpec) -> Graph {
+    let (n, od, ad) = (spec.batch, spec.obs_dim, spec.act_dim);
+    let hidden = &spec.hidden;
+    let n_layer = hidden.len() + 1;
+    let (aentries, pa) = actor_layout(od, ad, hidden);
+    let mut g = Graph::new(spec.module_name());
+    let theta_a = g.parameter(0, vec![pa]);
+    let obs = g.parameter(1, vec![n, od]);
+    let mu = g.parameter(2, vec![od]);
+    let var = g.parameter(3, vec![od]);
+    let mut x = normalize_obs(&mut g, obs, mu, var, n, od);
+    let aents = mlp_slices(&mut g, theta_a, &aentries);
+    for li in 0..n_layer {
+        let act = if li < n_layer - 1 { Act::Relu } else { Act::Tanh };
+        let (_, post) = layer_fwd(&mut g, x, aents[2 * li], aents[2 * li + 1], act, n);
+        x = post;
+    }
+    g.tuple(vec![x]);
+    g
+}

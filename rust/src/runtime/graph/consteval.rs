@@ -1,0 +1,178 @@
+//! Constant-evaluation pass: fold scalar constant subexpressions.
+//!
+//! The builders leave derived coefficients — `1 − τ`, the Adam
+//! `1 − β` terms, `1/B` — as symbolic constant expressions. This pass
+//! rewrites the graph, replacing every scalar op whose operands are all
+//! constants with a single folded constant node, and re-runs CSE over
+//! the whole module (rebuilding through [`Graph::add`] deduplicates any
+//! nodes the fold made structurally identical).
+//!
+//! Folding happens in **f64** and is cast to f32 only at emission. This
+//! is load-bearing for bit-parity with the AOT artifacts: JAX folded
+//! these same coefficients in python floats, and e.g. `1.0 − 0.9`
+//! differs in the last mantissa bit between f32 and f64-then-cast
+//! arithmetic.
+
+use super::op::{Graph, OpKind, Payload};
+
+/// f64 value of `id` in `g` if it is a constant node.
+fn const_val(g: &Graph, id: usize) -> Option<f64> {
+    let n = &g.nodes[id];
+    match (n.kind, &n.payload) {
+        (OpKind::Constant, Payload::Const(bits)) => Some(f64::from_bits(*bits)),
+        _ => None,
+    }
+}
+
+/// Evaluate a foldable op over constant operands, or `None` if the op
+/// kind has no fold rule.
+fn eval(kind: OpKind, vals: &[f64]) -> Option<f64> {
+    Some(match (kind, vals) {
+        (OpKind::Add, [a, b]) => a + b,
+        (OpKind::Subtract, [a, b]) => a - b,
+        (OpKind::Multiply, [a, b]) => a * b,
+        (OpKind::Divide, [a, b]) => a / b,
+        (OpKind::Minimum, [a, b]) => a.min(*b),
+        (OpKind::Maximum, [a, b]) => a.max(*b),
+        (OpKind::Power, [a, b]) => a.powf(*b),
+        (OpKind::Sqrt, [a]) => a.sqrt(),
+        (OpKind::Rsqrt, [a]) => a.sqrt().recip(),
+        (OpKind::Abs, [a]) => a.abs(),
+        (OpKind::Tanh, [a]) => a.tanh(),
+        _ => return None,
+    })
+}
+
+/// Fold `g` into a new graph. Scalar-shaped ops whose operands all
+/// resolve to constants become constant nodes; everything else is
+/// re-added with remapped operands (which re-runs CSE globally). Node
+/// IDs are reassigned; parameters and the root tuple are preserved.
+pub fn fold(g: &Graph) -> Graph {
+    let mut out = Graph::new(g.name.clone());
+    let mut map: Vec<usize> = Vec::with_capacity(g.nodes.len());
+    for node in &g.nodes {
+        let new_id = match (node.kind, &node.payload) {
+            (OpKind::Parameter, Payload::Param(i)) => out.parameter(*i, node.shape.clone()),
+            (OpKind::Constant, Payload::Const(bits)) => out.constant(f64::from_bits(*bits)),
+            _ => {
+                let operands: Vec<usize> = node.operands.iter().map(|&o| map[o]).collect();
+                let folded = if node.shape.is_empty() {
+                    let vals: Option<Vec<f64>> =
+                        operands.iter().map(|&o| const_val(&out, o)).collect();
+                    vals.and_then(|vs| eval(node.kind, &vs))
+                } else {
+                    None
+                };
+                match folded {
+                    Some(v) => out.constant(v),
+                    None => out.add(node.kind, node.shape.clone(), operands, node.payload.clone()),
+                }
+            }
+        };
+        map.push(new_id);
+    }
+    out.root = g.root.map(|r| map[r]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lower::lower;
+    use super::super::op::Graph;
+    use super::*;
+
+    /// Lowered text of a one-output graph: `broadcast(coeff) * param`.
+    fn scaled_param(coeff: impl FnOnce(&mut Graph) -> usize) -> String {
+        let mut g = Graph::new("t");
+        let p = g.parameter(0, vec![4]);
+        let c = coeff(&mut g);
+        let cb = g.broadcast_scalar(c, vec![4]);
+        let y = g.mul(p, cb);
+        g.tuple(vec![y]);
+        lower(&fold(&g))
+    }
+
+    #[test]
+    fn folds_scalar_const_expressions_to_one_constant() {
+        let mut g = Graph::new("t");
+        let a = g.constant(2.0);
+        let b = g.constant(3.0);
+        let s = g.add_(a, b);
+        let p = g.parameter(0, vec![]);
+        let y = g.add_(s, p);
+        g.tuple(vec![y]);
+        let f = fold(&g);
+        let text = lower(&f);
+        assert!(text.contains("constant(5)"), "folded 2+3: {text}");
+        // The folded graph no longer references the original literals.
+        assert!(!text.contains("constant(2)"), "{text}");
+        assert!(!text.contains("constant(3)"), "{text}");
+    }
+
+    #[test]
+    fn folds_in_f64_matching_the_python_compile_layer() {
+        // np.float32(1.0 - 0.9) == 0.1f32; folding in f32 would give
+        // 0.10000002. The fold must land on the f64-then-cast value.
+        let text = scaled_param(|g| {
+            let one = g.constant(1.0);
+            let b1 = g.constant(0.9);
+            g.sub(one, b1)
+        });
+        assert!(text.contains("constant(0.1)"), "{text}");
+        assert!(!text.contains("0.10000002"), "{text}");
+    }
+
+    #[test]
+    fn folded_symbolic_graph_lowers_identically_to_eager_constants() {
+        let sym = scaled_param(|g| {
+            let one = g.constant(1.0);
+            let tau = g.constant(0.05);
+            g.sub(one, tau)
+        });
+        let eager = scaled_param(|g| g.constant(1.0 - 0.05));
+        assert_eq!(sym, eager);
+    }
+
+    #[test]
+    fn runtime_dependent_scalars_are_left_alone() {
+        let mut g = Graph::new("t");
+        let t = g.parameter(0, vec![]);
+        let b1 = g.constant(0.9);
+        let p = g.pow(b1, t); // runtime exponent: not foldable
+        let one = g.constant(1.0);
+        let bc = g.sub(one, p);
+        g.tuple(vec![bc]);
+        let text = lower(&fold(&g));
+        assert!(text.contains("power("), "{text}");
+        assert!(text.contains("subtract("), "{text}");
+    }
+
+    #[test]
+    fn fold_re_runs_cse_across_the_module() {
+        let mut g = Graph::new("t");
+        let p = g.parameter(0, vec![2]);
+        // Two coefficient spellings that fold to the same value.
+        let a = {
+            let one = g.constant(1.0);
+            let h = g.constant(0.5);
+            g.sub(one, h)
+        };
+        let b = {
+            let q = g.constant(0.25);
+            let two = g.constant(2.0);
+            g.mul(q, two)
+        };
+        let ab = g.broadcast_scalar(a, vec![2]);
+        let bb = g.broadcast_scalar(b, vec![2]);
+        let x = g.mul(p, ab);
+        let y = g.mul(p, bb);
+        let s = g.add_(x, y);
+        g.tuple(vec![s]);
+        let f = fold(&g);
+        // After folding, both branches are broadcast(constant(0.5)) and
+        // CSE collapses them: the add's operands coincide.
+        let root = f.root.unwrap();
+        let add = &f.nodes[f.nodes[root].operands[0]];
+        assert_eq!(add.operands[0], add.operands[1]);
+    }
+}

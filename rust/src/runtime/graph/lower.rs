@@ -1,0 +1,188 @@
+//! Lowering: graph → HLO text in the exact dialect the AOT pipeline
+//! ships and `xla::HloModuleProto::from_text_file` parses.
+//!
+//! Emission is deterministic: nodes print in arena order under stable
+//! `kind.id` names, so the same build sequence always produces
+//! byte-identical text — which is what lets the executable cache key
+//! built artifacts by content hash. Dead nodes (e.g. constant operands
+//! consumed by the consteval fold) are dropped; entry parameters are
+//! always kept because the `entry_computation_layout` header names
+//! every argument.
+
+use super::op::{Graph, NodeId, OpKind, Payload};
+
+/// Shortest decimal that round-trips to the same f32 — the literal
+/// format used for `constant(...)` operands.
+fn fmt_f32(v: f64) -> String {
+    format!("{}", v as f32)
+}
+
+/// Shape string with layout annotation, e.g. `f32[512,16]{1,0}`.
+fn shape_str(g: &Graph, id: NodeId) -> String {
+    let n = &g.nodes[id];
+    if n.kind == OpKind::Tuple {
+        let parts: Vec<String> = n.operands.iter().map(|&o| shape_str(g, o)).collect();
+        return format!("({})", parts.join(", "));
+    }
+    let ty = if n.kind == OpKind::CompareEq { "pred" } else { "f32" };
+    if n.shape.is_empty() {
+        return format!("{ty}[]");
+    }
+    let dims: Vec<String> = n.shape.iter().map(|d| d.to_string()).collect();
+    // Transposes carry the permuted {0,1} layout; everything else uses
+    // the default descending minor-to-major order.
+    let layout: Vec<String> = if n.kind == OpKind::Transpose {
+        (0..n.shape.len()).map(|i| i.to_string()).collect()
+    } else {
+        (0..n.shape.len()).rev().map(|i| i.to_string()).collect()
+    };
+    format!("{ty}[{}]{{{}}}", dims.join(","), layout.join(","))
+}
+
+fn dims_attr(dims: &[usize]) -> String {
+    let parts: Vec<String> = dims.iter().map(|d| d.to_string()).collect();
+    format!("{{{}}}", parts.join(","))
+}
+
+/// Render `g` as a parseable HLO module.
+pub fn lower(g: &Graph) -> String {
+    // Liveness: reachable from the root, plus every entry parameter.
+    let mut live = vec![false; g.nodes.len()];
+    let mut stack: Vec<NodeId> = match g.root {
+        Some(r) => vec![r],
+        None => (0..g.nodes.len()).collect(),
+    };
+    while let Some(id) = stack.pop() {
+        if std::mem::replace(&mut live[id], true) {
+            continue;
+        }
+        stack.extend(g.nodes[id].operands.iter().copied());
+    }
+    for &(_, n) in &g.params {
+        live[n] = true;
+    }
+
+    let mut names: Vec<String> = vec![String::new(); g.nodes.len()];
+    let mut lines = Vec::new();
+    let mut any_reduce = false;
+    for (id, n) in g.nodes.iter().enumerate() {
+        if !live[id] {
+            continue;
+        }
+        let name = match &n.payload {
+            Payload::Param(i) => format!("Arg_{i}.{id}"),
+            _ => format!("{}.{id}", n.kind.hlo()),
+        };
+        names[id] = name.clone();
+        let mut args: Vec<String> = n.operands.iter().map(|&o| names[o].clone()).collect();
+        let mut extra = String::new();
+        match &n.payload {
+            Payload::Param(i) => {
+                args = vec![i.to_string()];
+            }
+            Payload::Const(bits) => {
+                args = vec![fmt_f32(f64::from_bits(*bits))];
+            }
+            Payload::Dims(d) => {
+                extra = format!(", dimensions={}", dims_attr(d));
+            }
+            Payload::Dot(lc, rc) => {
+                extra = format!(
+                    ", lhs_contracting_dims={{{lc}}}, rhs_contracting_dims={{{rc}}}"
+                );
+            }
+            Payload::Slice(lo, hi) => {
+                extra = format!(", slice={{[{lo}:{hi}]}}");
+            }
+            Payload::Pad(lo, hi) => {
+                extra = format!(", padding={lo}_{hi}");
+            }
+            Payload::None => {}
+        }
+        match n.kind {
+            OpKind::Transpose => extra = ", dimensions={1,0}".to_string(),
+            OpKind::CompareEq => extra = ", direction=EQ".to_string(),
+            OpKind::Reduce => {
+                any_reduce = true;
+                extra.push_str(", to_apply=add_f32");
+            }
+            _ => {}
+        }
+        let root = if Some(id) == g.root { "ROOT " } else { "" };
+        lines.push(format!(
+            "  {root}{name} = {} {}({}){extra}",
+            shape_str(g, id),
+            n.kind.hlo(),
+            args.join(", ")
+        ));
+    }
+
+    let mut ins = g.params.clone();
+    ins.sort();
+    let in_str: Vec<String> = ins.iter().map(|&(_, n)| shape_str(g, n)).collect();
+    let root = g.root.expect("graph has a root tuple");
+    let out_str: Vec<String> =
+        g.nodes[root].operands.iter().map(|&o| shape_str(g, o)).collect();
+    let head = format!(
+        "HloModule {}, entry_computation_layout={{({})->({})}}\n\n",
+        g.name,
+        in_str.join(", "),
+        out_str.join(", ")
+    );
+    let reducer = if any_reduce {
+        "add_f32 {\n  lhs.0 = f32[] parameter(0)\n  rhs.1 = f32[] parameter(1)\n  ROOT add.2 = f32[] add(lhs.0, rhs.1)\n}\n\n"
+    } else {
+        ""
+    };
+    format!("{head}{reducer}ENTRY main {{\n{}\n}}\n", lines.join("\n"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::graph::op::Graph;
+
+    fn tiny() -> Graph {
+        let mut g = Graph::new("tiny");
+        let x = g.parameter(0, vec![4, 2]);
+        let w = g.parameter(1, vec![2, 3]);
+        let d = g.dot(x, w, 1, 0);
+        let r = g.reduce_add(d, vec![0], vec![3]);
+        let dead = g.constant(42.0);
+        let _ = dead; // unreferenced: must not be emitted
+        g.tuple(vec![r]);
+        g
+    }
+
+    #[test]
+    fn emits_parseable_structure() {
+        let text = lower(&tiny());
+        assert!(text.starts_with(
+            "HloModule tiny, entry_computation_layout={(f32[4,2]{1,0}, f32[2,3]{1,0})->(f32[3]{0})}"
+        ));
+        assert!(text.contains("add_f32 {"), "reducer present: {text}");
+        assert!(text.contains("Arg_0.0 = f32[4,2]{1,0} parameter(0)"));
+        assert!(text.contains(
+            "dot(Arg_0.0, Arg_1.1), lhs_contracting_dims={1}, rhs_contracting_dims={0}"
+        ));
+        assert!(text.contains(", to_apply=add_f32"));
+        assert!(text.contains("ROOT tuple."));
+        assert!(!text.contains("42"), "dead constant dropped: {text}");
+    }
+
+    #[test]
+    fn constants_use_shortest_f32_round_trip() {
+        let mut g = Graph::new("c");
+        let p = g.parameter(0, vec![]);
+        let c = g.constant(0.05000000074505806); // f64(0.05f32)
+        let y = g.mul(p, c);
+        g.tuple(vec![y]);
+        let text = lower(&g);
+        assert!(text.contains("constant(0.05)"), "{text}");
+    }
+
+    #[test]
+    fn lowering_is_deterministic() {
+        assert_eq!(lower(&tiny()), lower(&tiny()));
+    }
+}

@@ -1,0 +1,474 @@
+//! Native HLO graph builder for the update/infer executable family.
+//!
+//! The AOT pipeline (`python/compile/aot.py`) traces the update and
+//! inference functions through JAX and ships them as HLO text that the
+//! runtime parses and compiles (PERF.md §Device & compilation plane).
+//! This module is the in-process counterpart: it rebuilds the same
+//! computations directly in Rust — no python, no JAX — and lowers them
+//! to the same HLO-text dialect, so a graph the manifest doesn't carry
+//! (a sweep batch size, a serve flush size, a deleted artifact) can be
+//! constructed at runtime instead of erroring.
+//!
+//! The pipeline has three stages, one submodule each:
+//!
+//! 1. **[`op`]** — a typed op arena with hash-consing (CSE). Builders
+//!    append nodes; structurally identical subexpressions collapse.
+//! 2. **[`consteval`]** — constant folding over scalar subexpressions.
+//!    Builders leave derived coefficients (`1 − τ`, `1 − β₁`, `1/B`)
+//!    symbolic; the fold evaluates them in f64 exactly as the python
+//!    compile layer did.
+//! 3. **[`lower`]** — deterministic emission to HLO text plus an
+//!    [`ArtifactInfo`] signature matching the manifest conventions, so
+//!    [`FeedPlan::validate`](super::feed::FeedPlan::validate) and
+//!    [`ResidentSpec`](super::resident::ResidentSpec) treat a built
+//!    artifact exactly like a loaded one.
+//!
+//! Built graphs are **bit-identical** to their AOT counterparts — same
+//! forward/backward structure, same constant values — which
+//! `rust/tests/graph.rs` proves by running both over a hundred update
+//! steps and comparing raw output bytes. See ARCHITECTURE.md ("where
+//! does a new graph variant live") for how to add the next graph.
+//!
+//! # Example
+//!
+//! Build a tiny critic update and lower it:
+//!
+//! ```
+//! use pql::runtime::graph::GraphSpec;
+//!
+//! let spec = GraphSpec::ddpg_critic(8, 3, 2, vec![16], 0.05, false);
+//! let text = spec.build_text();
+//! assert!(text.starts_with("HloModule pql_critic_update_b8"));
+//! // Same spec, same bytes — content-hash cache keys are stable.
+//! assert_eq!(spec.build_text(), text);
+//! ```
+#![deny(missing_docs)]
+
+pub mod build;
+pub mod consteval;
+pub mod lower;
+pub mod op;
+
+pub use op::{Graph, Node, NodeId, OpKind, Payload};
+
+use crate::runtime::manifest::{ArtifactInfo, Layout, TaskInfo};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Which member of the update/infer family a [`GraphSpec`] describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphKind {
+    /// Double-Q DDPG critic update (Adam + polyak), optionally with
+    /// PER importance weights and TD-error output.
+    CriticUpdate {
+        /// Include the `isw` input and `td` output (prioritized replay).
+        per: bool,
+    },
+    /// Actor forward pass: normalize observations, tanh-MLP.
+    ActorInfer,
+}
+
+/// A buildable graph: kind + dimensions. Mirrors the slot ordering of
+/// [`FeedPlan`](super::feed::FeedPlan) for updates and of the serving
+/// plane's `actor_infer` signature for inference.
+///
+/// Construct via [`GraphSpec::critic_update`] / [`GraphSpec::actor_infer`]
+/// to derive and validate dimensions from a manifest [`TaskInfo`], or
+/// via the unchecked [`GraphSpec::ddpg_critic`] / [`GraphSpec::ddpg_actor`]
+/// when the dimensions are already known (tests, benches).
+#[derive(Debug, Clone)]
+pub struct GraphSpec {
+    /// Which graph to build.
+    pub kind: GraphKind,
+    /// Batch size (update) or flush size (infer).
+    pub batch: usize,
+    /// Observation dimension.
+    pub obs_dim: usize,
+    /// Action dimension.
+    pub act_dim: usize,
+    /// Hidden layer widths of the MLPs (actor and critic share them).
+    pub hidden: Vec<usize>,
+    /// Polyak averaging coefficient (critic update only).
+    pub tau: f32,
+}
+
+impl GraphSpec {
+    /// Unchecked critic-update spec from explicit dimensions.
+    pub fn ddpg_critic(
+        batch: usize,
+        obs_dim: usize,
+        act_dim: usize,
+        hidden: Vec<usize>,
+        tau: f32,
+        per: bool,
+    ) -> GraphSpec {
+        GraphSpec { kind: GraphKind::CriticUpdate { per }, batch, obs_dim, act_dim, hidden, tau }
+    }
+
+    /// Unchecked actor-infer spec from explicit dimensions.
+    pub fn ddpg_actor(batch: usize, obs_dim: usize, act_dim: usize, hidden: Vec<usize>) -> GraphSpec {
+        GraphSpec { kind: GraphKind::ActorInfer, batch, obs_dim, act_dim, hidden, tau: 0.0 }
+    }
+
+    /// Critic-update spec for `task` at batch size `batch`, validating
+    /// that the task is one the builder can reproduce exactly: a
+    /// symmetric (non-vision) observation space and the canonical
+    /// double-MLP critic / MLP actor layouts. Anything else — vision
+    /// critics, SAC heads, distributional atoms — is AOT-only and
+    /// fails here with a descriptive error.
+    pub fn critic_update(task: &TaskInfo, tau: f32, batch: usize, per: bool) -> Result<GraphSpec> {
+        if task.critic_obs_dim != task.obs_dim {
+            bail!(
+                "native graph builder supports symmetric observations only \
+                 (critic_obs_dim {} != obs_dim {}; vision critics are AOT-only)",
+                task.critic_obs_dim,
+                task.obs_dim
+            );
+        }
+        let hidden = actor_hidden(task)?;
+        let clay = task
+            .layouts
+            .get("critic")
+            .context("task has no `critic` layout")?;
+        let (expected, total) = build::critic_layout(task.obs_dim, task.act_dim, &hidden);
+        if clay.size != total
+            || clay.entries.len() != expected.len()
+            || clay
+                .entries
+                .iter()
+                .zip(&expected)
+                .any(|(e, (off, shape))| e.offset != *off || &e.shape != shape)
+        {
+            bail!(
+                "critic layout is not the canonical double-MLP the native \
+                 builder reproduces (hidden {:?}); this family is AOT-only",
+                hidden
+            );
+        }
+        Ok(GraphSpec::ddpg_critic(batch, task.obs_dim, task.act_dim, hidden, tau, per))
+    }
+
+    /// Actor-infer spec for `task` at flush size `n`, deriving hidden
+    /// widths from the manifest actor layout.
+    pub fn actor_infer(task: &TaskInfo, n: usize) -> Result<GraphSpec> {
+        let hidden = actor_hidden(task)?;
+        Ok(GraphSpec::ddpg_actor(n, task.obs_dim, task.act_dim, hidden))
+    }
+
+    /// Artifact name under manifest conventions: the batch-suffixed
+    /// update names (`critic_update[_per]_b{B}`) and the flush-sized
+    /// infer name (`actor_infer_n{N}`). Built artifacts always carry
+    /// their size suffix — unlike `Manifest::batch_artifact`, there is
+    /// no bare default name to collide with.
+    pub fn artifact_name(&self) -> String {
+        match self.kind {
+            GraphKind::CriticUpdate { per } => {
+                format!("critic_update{}_b{}", if per { "_per" } else { "" }, self.batch)
+            }
+            GraphKind::ActorInfer => format!("actor_infer_n{}", self.batch),
+        }
+    }
+
+    /// `HloModule` name (`pql_` + [`GraphSpec::artifact_name`]).
+    pub fn module_name(&self) -> String {
+        format!("pql_{}", self.artifact_name())
+    }
+
+    /// Flat parameter sizes `(critic, actor)` implied by the dimensions.
+    pub fn param_sizes(&self) -> (usize, usize) {
+        let (_, pc) = build::critic_layout(self.obs_dim, self.act_dim, &self.hidden);
+        let (_, pa) = build::actor_layout(self.obs_dim, self.act_dim, &self.hidden);
+        (pc, pa)
+    }
+
+    /// Construct the raw (unfolded) graph.
+    pub fn build(&self) -> Graph {
+        match self.kind {
+            GraphKind::CriticUpdate { .. } => build::build_critic_update(self),
+            GraphKind::ActorInfer => build::build_actor_infer(self),
+        }
+    }
+
+    /// Build, fold, and lower to HLO text. Deterministic: the same spec
+    /// always yields byte-identical text.
+    pub fn build_text(&self) -> String {
+        lower::lower(&consteval::fold(&self.build()))
+    }
+
+    /// The manifest-convention I/O signature of the built graph,
+    /// pointing at `file`. Names match what `aot.py` records, so the
+    /// feed plan and resident-state planes consume built artifacts
+    /// unchanged.
+    pub fn artifact_info(&self, file: PathBuf) -> ArtifactInfo {
+        let (pc, pa) = self.param_sizes();
+        let (b, od, ad) = (self.batch, self.obs_dim, self.act_dim);
+        let (inputs, outputs) = match self.kind {
+            GraphKind::CriticUpdate { per } => {
+                let mut ins = vec![
+                    ("theta_c".to_string(), vec![pc]),
+                    ("m".to_string(), vec![pc]),
+                    ("v".to_string(), vec![pc]),
+                    ("t".to_string(), vec![1]),
+                    ("theta_ct".to_string(), vec![pc]),
+                    ("theta_a".to_string(), vec![pa]),
+                    ("s".to_string(), vec![b, od]),
+                    ("a".to_string(), vec![b, ad]),
+                    ("rn".to_string(), vec![b]),
+                    ("s2".to_string(), vec![b, od]),
+                    ("gmask".to_string(), vec![b]),
+                ];
+                if per {
+                    ins.push(("isw".to_string(), vec![b]));
+                }
+                ins.push(("mu".to_string(), vec![od]));
+                ins.push(("var".to_string(), vec![od]));
+                ins.push(("lr".to_string(), vec![1]));
+                let mut outs = vec![
+                    ("theta_c".to_string(), vec![pc]),
+                    ("m".to_string(), vec![pc]),
+                    ("v".to_string(), vec![pc]),
+                    ("theta_ct".to_string(), vec![pc]),
+                    ("loss".to_string(), vec![1]),
+                    ("qmean".to_string(), vec![1]),
+                ];
+                if per {
+                    outs.push(("td".to_string(), vec![b]));
+                }
+                (ins, outs)
+            }
+            GraphKind::ActorInfer => (
+                vec![
+                    ("theta_a".to_string(), vec![pa]),
+                    ("obs".to_string(), vec![b, od]),
+                    ("mu".to_string(), vec![od]),
+                    ("var".to_string(), vec![od]),
+                ],
+                vec![("act".to_string(), vec![b, ad])],
+            ),
+        };
+        ArtifactInfo { file, inputs, outputs, sha256: None }
+    }
+}
+
+/// Hidden widths derived from the manifest `actor` layout, validated
+/// to be a plain MLP `[obs, hidden.., act]` with contiguous
+/// weight-then-bias entries.
+fn actor_hidden(task: &TaskInfo) -> Result<Vec<usize>> {
+    let lay = task.layouts.get("actor").context("task has no `actor` layout")?;
+    let dims = mlp_dims(lay).context("actor layout")?;
+    if dims.first() != Some(&task.obs_dim) || dims.last() != Some(&task.act_dim) {
+        bail!(
+            "actor layout dims {:?} do not run obs_dim {} -> act_dim {}",
+            dims,
+            task.obs_dim,
+            task.act_dim
+        );
+    }
+    if dims.len() < 3 {
+        bail!("actor layout has no hidden layers");
+    }
+    Ok(dims[1..dims.len() - 1].to_vec())
+}
+
+/// Layer-dimension chain `[d0, d1, ..]` of a flat MLP layout, checking
+/// the alternating weight/bias structure and contiguous offsets.
+fn mlp_dims(lay: &Layout) -> Result<Vec<usize>> {
+    if lay.entries.len() < 2 || lay.entries.len() % 2 != 0 {
+        bail!("expected weight/bias entry pairs, got {} entries", lay.entries.len());
+    }
+    let mut dims: Vec<usize> = Vec::new();
+    let mut off = 0;
+    for pair in lay.entries.chunks(2) {
+        let (w, b) = (&pair[0], &pair[1]);
+        if w.shape.len() != 2 || b.shape.len() != 1 || b.shape[0] != w.shape[1] {
+            bail!("entry pair ({}, {}) is not a dense layer", w.name, b.name);
+        }
+        if w.offset != off {
+            bail!("non-contiguous weight offset for {}", w.name);
+        }
+        off += w.shape.iter().product::<usize>();
+        if b.offset != off {
+            bail!("non-contiguous bias offset for {}", b.name);
+        }
+        off += b.shape[0];
+        match dims.last() {
+            None => dims.extend_from_slice(&w.shape),
+            Some(&d) if d == w.shape[0] => dims.push(w.shape[1]),
+            Some(&d) => bail!("layer input {} does not chain from {}", w.shape[0], d),
+        }
+    }
+    if off != lay.size {
+        bail!("layout size {} != summed entries {}", lay.size, off);
+    }
+    Ok(dims)
+}
+
+/// Lower `spec` and persist it under `<root>/built/<task>/`, returning
+/// the artifact signature and the lowered text (the cache keys built
+/// executables by text content, not file bytes).
+///
+/// The write is skipped when the on-disk text already matches, so
+/// repeated builds don't churn mtimes; the PJRT path needs a real file
+/// because `xla` only parses HLO text from disk.
+pub fn write_artifact(root: &Path, task: &str, spec: &GraphSpec) -> Result<(ArtifactInfo, String)> {
+    let text = spec.build_text();
+    let dir = root.join("built").join(task);
+    std::fs::create_dir_all(&dir).with_context(|| format!("creating {dir:?}"))?;
+    let file = dir.join(format!("{}.hlo.txt", spec.artifact_name()));
+    if std::fs::read_to_string(&file).map(|t| t != text).unwrap_or(true) {
+        std::fs::write(&file, &text).with_context(|| format!("writing {file:?}"))?;
+    }
+    Ok((spec.artifact_info(file), text))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::LayoutEntry;
+    use std::collections::BTreeMap;
+
+    fn layer(name: &str, off: usize, shape: Vec<usize>) -> LayoutEntry {
+        LayoutEntry { name: name.to_string(), offset: off, shape, fan_in: 1, scale: 1.0 }
+    }
+
+    fn mlp_layout(dims: &[usize]) -> Layout {
+        let mut entries = Vec::new();
+        let mut off = 0;
+        for i in 0..dims.len() - 1 {
+            entries.push(layer(&format!("w{i}"), off, vec![dims[i], dims[i + 1]]));
+            off += dims[i] * dims[i + 1];
+            entries.push(layer(&format!("b{i}"), off, vec![dims[i + 1]]));
+            off += dims[i + 1];
+        }
+        Layout { size: off, entries }
+    }
+
+    fn double_mlp_layout(dims: &[usize]) -> Layout {
+        let one = mlp_layout(dims);
+        let mut entries = one.entries.clone();
+        for e in &one.entries {
+            let mut e2 = e.clone();
+            e2.offset += one.size;
+            e2.name = format!("q2_{}", e.name);
+            entries.push(e2);
+        }
+        Layout { size: one.size * 2, entries }
+    }
+
+    fn task(obs: usize, act: usize, hidden: &[usize]) -> TaskInfo {
+        let mut adims = vec![obs];
+        adims.extend_from_slice(hidden);
+        adims.push(act);
+        let mut cdims = vec![obs + act];
+        cdims.extend_from_slice(hidden);
+        cdims.push(1);
+        let mut layouts = BTreeMap::new();
+        layouts.insert("actor".to_string(), mlp_layout(&adims));
+        layouts.insert("critic".to_string(), double_mlp_layout(&cdims));
+        TaskInfo {
+            obs_dim: obs,
+            act_dim: act,
+            critic_obs_dim: obs,
+            reward_scale: 1.0,
+            sim_cost: 0.0,
+            layouts,
+            artifacts: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn spec_derives_hidden_from_the_manifest_layouts() {
+        let t = task(12, 4, &[128, 128]);
+        let spec = GraphSpec::critic_update(&t, 0.05, 512, false).unwrap();
+        assert_eq!(spec.hidden, vec![128, 128]);
+        let (pc, pa) = spec.param_sizes();
+        assert_eq!(pc, 37634);
+        assert_eq!(pa, 18692);
+        assert_eq!(spec.artifact_name(), "critic_update_b512");
+        let per = GraphSpec::critic_update(&t, 0.05, 64, true).unwrap();
+        assert_eq!(per.artifact_name(), "critic_update_per_b64");
+        let inf = GraphSpec::actor_infer(&t, 256).unwrap();
+        assert_eq!(inf.artifact_name(), "actor_infer_n256");
+    }
+
+    #[test]
+    fn spec_rejects_vision_and_malformed_layouts() {
+        let mut vision = task(12, 4, &[64]);
+        vision.critic_obs_dim = 9900;
+        let err = GraphSpec::critic_update(&vision, 0.05, 64, false).unwrap_err();
+        assert!(format!("{err:#}").contains("symmetric"), "{err:#}");
+
+        // A critic layout that is not the canonical double MLP.
+        let mut odd = task(12, 4, &[64]);
+        let half = mlp_layout(&[16, 64, 1]);
+        odd.layouts.insert("critic".to_string(), half);
+        let err = GraphSpec::critic_update(&odd, 0.05, 64, false).unwrap_err();
+        assert!(format!("{err:#}").contains("double-MLP"), "{err:#}");
+
+        // Actor layout with a broken chain.
+        let mut broken = task(12, 4, &[64]);
+        broken.layouts.get_mut("actor").unwrap().entries[2].shape = vec![63, 4];
+        assert!(GraphSpec::critic_update(&broken, 0.05, 64, false).is_err());
+    }
+
+    #[test]
+    fn artifact_info_signature_matches_manifest_conventions() {
+        let spec = GraphSpec::ddpg_critic(64, 12, 4, vec![128, 128], 0.05, true);
+        let info = spec.artifact_info(PathBuf::from("x.hlo.txt"));
+        let in_names: Vec<&str> = info.inputs.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(
+            in_names,
+            [
+                "theta_c", "m", "v", "t", "theta_ct", "theta_a", "s", "a", "rn", "s2",
+                "gmask", "isw", "mu", "var", "lr"
+            ]
+        );
+        let out_names: Vec<&str> = info.outputs.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(out_names, ["theta_c", "m", "v", "theta_ct", "loss", "qmean", "td"]);
+        assert_eq!(info.inputs[6].1, vec![64, 12]);
+        assert!(info.sha256.is_none());
+
+        let inf = GraphSpec::ddpg_actor(33, 12, 4, vec![128, 128]);
+        let info = inf.artifact_info(PathBuf::from("y.hlo.txt"));
+        assert_eq!(info.inputs.len(), 4);
+        assert_eq!(info.outputs[0].0, "act");
+        assert_eq!(info.outputs[0].1, vec![33, 4]);
+    }
+
+    #[test]
+    fn built_text_is_deterministic_and_size_specific() {
+        let spec = GraphSpec::ddpg_critic(8, 3, 2, vec![16], 0.05, false);
+        let a = spec.build_text();
+        let b = spec.build_text();
+        assert_eq!(a, b, "same spec must lower to byte-identical text");
+        let other = GraphSpec::ddpg_critic(9, 3, 2, vec![16], 0.05, false);
+        assert_ne!(a, other.build_text());
+        // The graph's entry signature mirrors the artifact signature.
+        let info = spec.artifact_info(PathBuf::from("x"));
+        for (name, shape) in &info.inputs {
+            let _ = name;
+            let dims: Vec<String> = shape.iter().map(|d| d.to_string()).collect();
+            assert!(
+                a.contains(&format!("f32[{}]", dims.join(","))),
+                "input {name} {shape:?} missing from text"
+            );
+        }
+    }
+
+    #[test]
+    fn write_artifact_is_idempotent() {
+        let dir = std::env::temp_dir().join("pql_graph_write_artifact");
+        std::fs::remove_dir_all(&dir).ok();
+        let spec = GraphSpec::ddpg_actor(7, 3, 2, vec![8]);
+        let (info, text) = write_artifact(&dir, "toy", &spec).unwrap();
+        assert!(info.file.ends_with("built/toy/actor_infer_n7.hlo.txt"));
+        assert_eq!(std::fs::read_to_string(&info.file).unwrap(), text);
+        let m1 = std::fs::metadata(&info.file).unwrap().modified().unwrap();
+        let (info2, text2) = write_artifact(&dir, "toy", &spec).unwrap();
+        assert_eq!(info2.file, info.file);
+        assert_eq!(text2, text);
+        let m2 = std::fs::metadata(&info.file).unwrap().modified().unwrap();
+        assert_eq!(m1, m2, "unchanged text must not rewrite the file");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,388 @@
+//! The typed op set and the node arena.
+//!
+//! A [`Graph`] is an append-only arena of [`Node`]s with structural
+//! sharing: [`Graph::add`] hash-conses every non-parameter node on
+//! `(kind, shape, operands, payload)`, so building the same
+//! subexpression twice yields the same [`NodeId`] — the backward pass
+//! reuses the forward pass's ReLU masks for free, and constant literals
+//! dedup across the whole module. Node IDs are arena indices, assigned
+//! in construction order, which is what makes lowering deterministic:
+//! the same build sequence always produces byte-identical HLO text.
+
+use std::collections::HashMap;
+
+/// Index of a node in its graph's arena.
+pub type NodeId = usize;
+
+/// Operation kind — the closed op set the lowerer knows how to emit.
+///
+/// This is intentionally the *minimal* vocabulary the update/infer
+/// family needs (see the module docs in [`super`]): elementwise
+/// arithmetic, `dot`, shape plumbing, masked selects for the ReLU VJP,
+/// `reduce`/`pad` for gradient assembly, and the entry tuple.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Entry parameter (payload carries the parameter index).
+    Parameter,
+    /// Scalar f32 constant (payload carries the value).
+    Constant,
+    /// Broadcast to a larger shape (payload carries the mapped dims).
+    Broadcast,
+    /// Elementwise addition.
+    Add,
+    /// Elementwise subtraction.
+    Subtract,
+    /// Elementwise multiplication.
+    Multiply,
+    /// Elementwise division.
+    Divide,
+    /// Elementwise minimum.
+    Minimum,
+    /// Elementwise maximum.
+    Maximum,
+    /// Elementwise power.
+    Power,
+    /// Elementwise reciprocal square root.
+    Rsqrt,
+    /// Elementwise square root.
+    Sqrt,
+    /// Elementwise hyperbolic tangent.
+    Tanh,
+    /// Elementwise absolute value.
+    Abs,
+    /// Elementwise equality compare (emits a `pred` tensor).
+    CompareEq,
+    /// Predicated elementwise select.
+    Select,
+    /// Bitcast-free reshape.
+    Reshape,
+    /// Contiguous 1-D slice (payload carries `[lo:hi]`).
+    Slice,
+    /// Two-operand concatenation (payload carries the dimension).
+    Concatenate,
+    /// General dot (payload carries the contracting dims).
+    Dot,
+    /// 2-D transpose (`{1,0}` permutation, `{0,1}` result layout).
+    Transpose,
+    /// Sum-reduction via the shared `add_f32` reducer.
+    Reduce,
+    /// 1-D zero pad (payload carries the low/high edge counts).
+    Pad,
+    /// The entry tuple (root).
+    Tuple,
+}
+
+impl OpKind {
+    /// The HLO instruction mnemonic.
+    pub fn hlo(self) -> &'static str {
+        match self {
+            OpKind::Parameter => "parameter",
+            OpKind::Constant => "constant",
+            OpKind::Broadcast => "broadcast",
+            OpKind::Add => "add",
+            OpKind::Subtract => "subtract",
+            OpKind::Multiply => "multiply",
+            OpKind::Divide => "divide",
+            OpKind::Minimum => "minimum",
+            OpKind::Maximum => "maximum",
+            OpKind::Power => "power",
+            OpKind::Rsqrt => "rsqrt",
+            OpKind::Sqrt => "sqrt",
+            OpKind::Tanh => "tanh",
+            OpKind::Abs => "abs",
+            OpKind::CompareEq => "compare",
+            OpKind::Select => "select",
+            OpKind::Reshape => "reshape",
+            OpKind::Slice => "slice",
+            OpKind::Concatenate => "concatenate",
+            OpKind::Dot => "dot",
+            OpKind::Transpose => "transpose",
+            OpKind::Reduce => "reduce",
+            OpKind::Pad => "pad",
+            OpKind::Tuple => "tuple",
+        }
+    }
+}
+
+/// Per-op attribute payload — the part of a node's identity that isn't
+/// its operands or shape.
+///
+/// Constants store the value as **f64 bits**: derived coefficients
+/// (`1 − τ`, the Adam `1 − β` terms, `1/B`) are folded in f64 and cast
+/// to f32 only at emission, exactly like the python compile layer's
+/// float arithmetic — folding in f32 would flip the last mantissa bit
+/// of `1 − 0.9` and break bit-parity with the AOT artifacts.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Payload {
+    /// No attributes.
+    None,
+    /// Parameter index in the entry signature.
+    Param(usize),
+    /// Constant value, stored as `f64::to_bits`.
+    Const(u64),
+    /// Dimension list: broadcast mapped dims, concatenate dim, reduce
+    /// dims.
+    Dims(Vec<usize>),
+    /// Dot contracting dimensions `(lhs, rhs)`.
+    Dot(usize, usize),
+    /// Slice bounds `[lo, hi)` on a 1-D operand.
+    Slice(usize, usize),
+    /// Pad edge counts `(low, high)` on a 1-D operand.
+    Pad(usize, usize),
+}
+
+/// One graph node: kind + result shape + operand IDs + payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    /// What the node computes.
+    pub kind: OpKind,
+    /// Result shape (`[]` for scalars; ignored for [`OpKind::Tuple`]).
+    pub shape: Vec<usize>,
+    /// Arena IDs of the operands, in HLO operand order.
+    pub operands: Vec<NodeId>,
+    /// Kind-specific attributes.
+    pub payload: Payload,
+}
+
+/// Append-only node arena with hash-consing. See the module docs.
+pub struct Graph {
+    /// `HloModule` name.
+    pub name: String,
+    /// The arena, indexed by [`NodeId`].
+    pub nodes: Vec<Node>,
+    /// Entry parameters as `(parameter index, node)` in creation order.
+    pub params: Vec<(usize, NodeId)>,
+    /// The root tuple, set by [`Graph::tuple`].
+    pub root: Option<NodeId>,
+    cse: HashMap<(OpKind, Vec<usize>, Vec<NodeId>, Payload), NodeId>,
+}
+
+impl Graph {
+    /// An empty graph lowering to `HloModule <name>`.
+    pub fn new(name: impl Into<String>) -> Graph {
+        Graph {
+            name: name.into(),
+            nodes: Vec::new(),
+            params: Vec::new(),
+            root: None,
+            cse: HashMap::new(),
+        }
+    }
+
+    /// Append a node, reusing an existing structurally-identical one
+    /// (parameters are never deduplicated).
+    pub fn add(
+        &mut self,
+        kind: OpKind,
+        shape: Vec<usize>,
+        operands: Vec<NodeId>,
+        payload: Payload,
+    ) -> NodeId {
+        let key = (kind, shape.clone(), operands.clone(), payload.clone());
+        if kind != OpKind::Parameter {
+            if let Some(&id) = self.cse.get(&key) {
+                return id;
+            }
+        }
+        let id = self.nodes.len();
+        self.nodes.push(Node { kind, shape, operands, payload });
+        self.cse.insert(key, id);
+        id
+    }
+
+    /// Result shape of `n`.
+    pub fn shape(&self, n: NodeId) -> &[usize] {
+        &self.nodes[n].shape
+    }
+
+    // ---- op constructors (the builder API) ------------------------------
+
+    /// Entry parameter `index` with `shape`.
+    pub fn parameter(&mut self, index: usize, shape: Vec<usize>) -> NodeId {
+        let n = self.add(OpKind::Parameter, shape, vec![], Payload::Param(index));
+        self.params.push((index, n));
+        n
+    }
+
+    /// Scalar constant (f64-precision; cast to f32 at emission).
+    pub fn constant(&mut self, v: f64) -> NodeId {
+        self.add(OpKind::Constant, vec![], vec![], Payload::Const(v.to_bits()))
+    }
+
+    /// Constant broadcast to `shape` (`broadcast(constant)` pair).
+    pub fn splat(&mut self, v: f64, shape: Vec<usize>) -> NodeId {
+        let c = self.constant(v);
+        self.broadcast_scalar(c, shape)
+    }
+
+    /// Broadcast a scalar to `shape` (`dimensions={}`).
+    pub fn broadcast_scalar(&mut self, x: NodeId, shape: Vec<usize>) -> NodeId {
+        self.add(OpKind::Broadcast, shape, vec![x], Payload::Dims(vec![]))
+    }
+
+    /// Broadcast a `[D]` row to `[B, D]` (`dimensions={1}`).
+    pub fn broadcast_row(&mut self, x: NodeId, shape: Vec<usize>) -> NodeId {
+        self.add(OpKind::Broadcast, shape, vec![x], Payload::Dims(vec![1]))
+    }
+
+    fn binary(&mut self, kind: OpKind, a: NodeId, b: NodeId) -> NodeId {
+        let shape = self.shape(a).to_vec();
+        self.add(kind, shape, vec![a, b], Payload::None)
+    }
+
+    /// Elementwise `a + b`.
+    pub fn add_(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.binary(OpKind::Add, a, b)
+    }
+
+    /// Elementwise `a - b`.
+    pub fn sub(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.binary(OpKind::Subtract, a, b)
+    }
+
+    /// Elementwise `a * b`.
+    pub fn mul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.binary(OpKind::Multiply, a, b)
+    }
+
+    /// Elementwise `a / b`.
+    pub fn div(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.binary(OpKind::Divide, a, b)
+    }
+
+    /// Elementwise `min(a, b)`.
+    pub fn min_(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.binary(OpKind::Minimum, a, b)
+    }
+
+    /// Elementwise `max(a, b)`.
+    pub fn max_(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.binary(OpKind::Maximum, a, b)
+    }
+
+    /// Elementwise `a ^ b`.
+    pub fn pow(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.binary(OpKind::Power, a, b)
+    }
+
+    /// Elementwise unary op (`Rsqrt`, `Sqrt`, `Tanh`, `Abs`).
+    pub fn unary(&mut self, kind: OpKind, a: NodeId) -> NodeId {
+        let shape = self.shape(a).to_vec();
+        self.add(kind, shape, vec![a], Payload::None)
+    }
+
+    /// Elementwise `a == b`, producing a `pred` tensor.
+    pub fn compare_eq(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let shape = self.shape(a).to_vec();
+        self.add(OpKind::CompareEq, shape, vec![a, b], Payload::None)
+    }
+
+    /// Elementwise `p ? a : b`.
+    pub fn select(&mut self, p: NodeId, a: NodeId, b: NodeId) -> NodeId {
+        let shape = self.shape(a).to_vec();
+        self.add(OpKind::Select, shape, vec![p, a, b], Payload::None)
+    }
+
+    /// Reshape to `shape` (element count must match).
+    pub fn reshape(&mut self, x: NodeId, shape: Vec<usize>) -> NodeId {
+        debug_assert_eq!(
+            self.shape(x).iter().product::<usize>(),
+            shape.iter().product::<usize>()
+        );
+        self.add(OpKind::Reshape, shape, vec![x], Payload::None)
+    }
+
+    /// 1-D slice `x[lo..hi]`.
+    pub fn slice1(&mut self, x: NodeId, lo: usize, hi: usize) -> NodeId {
+        self.add(OpKind::Slice, vec![hi - lo], vec![x], Payload::Slice(lo, hi))
+    }
+
+    /// Concatenate two tensors along `dim`.
+    pub fn concat(&mut self, a: NodeId, b: NodeId, dim: usize) -> NodeId {
+        let mut shape = self.shape(a).to_vec();
+        shape[dim] += self.shape(b)[dim];
+        self.add(OpKind::Concatenate, shape, vec![a, b], Payload::Dims(vec![dim]))
+    }
+
+    /// General dot contracting lhs dim `lc` against rhs dim `rc`.
+    pub fn dot(&mut self, a: NodeId, b: NodeId, lc: usize, rc: usize) -> NodeId {
+        let sa = self.shape(a).to_vec();
+        let sb = self.shape(b).to_vec();
+        let mut shape: Vec<usize> =
+            sa.iter().enumerate().filter(|(i, _)| *i != lc).map(|(_, d)| *d).collect();
+        shape.extend(sb.iter().enumerate().filter(|(i, _)| *i != rc).map(|(_, d)| *d));
+        self.add(OpKind::Dot, shape, vec![a, b], Payload::Dot(lc, rc))
+    }
+
+    /// 2-D transpose (the weight-gradient `{1,0}` permutation).
+    pub fn transpose10(&mut self, x: NodeId) -> NodeId {
+        let s = self.shape(x);
+        let shape = vec![s[1], s[0]];
+        self.add(OpKind::Transpose, shape, vec![x], Payload::None)
+    }
+
+    /// Sum-reduce `x` over `dims` into `out_shape` via `add_f32`.
+    pub fn reduce_add(&mut self, x: NodeId, dims: Vec<usize>, out_shape: Vec<usize>) -> NodeId {
+        let z = self.constant(0.0);
+        self.add(OpKind::Reduce, out_shape, vec![x, z], Payload::Dims(dims))
+    }
+
+    /// Zero-pad a 1-D tensor to length `total`, starting at `lo` — the
+    /// gradient-assembly scatter into the flat parameter layout.
+    pub fn pad1(&mut self, x: NodeId, lo: usize, total: usize) -> NodeId {
+        let hi = total - lo - self.shape(x)[0];
+        let z = self.constant(0.0);
+        self.add(OpKind::Pad, vec![total], vec![x, z], Payload::Pad(lo, hi))
+    }
+
+    /// Set the entry tuple over `xs` and mark it as the root.
+    pub fn tuple(&mut self, xs: Vec<NodeId>) -> NodeId {
+        let n = self.add(OpKind::Tuple, vec![], xs, Payload::None);
+        self.root = Some(n);
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cse_dedups_structural_twins_but_not_parameters() {
+        let mut g = Graph::new("t");
+        let p0 = g.parameter(0, vec![4]);
+        let p1 = g.parameter(1, vec![4]);
+        let a = g.add_(p0, p1);
+        let b = g.add_(p0, p1);
+        assert_eq!(a, b, "identical subexpressions share one node");
+        let c = g.add_(p1, p0);
+        assert_ne!(a, c, "operand order is part of the identity");
+        assert_eq!(g.constant(1.5), g.constant(1.5));
+        assert_ne!(g.constant(1.5), g.constant(2.5));
+        // Two parameters never collapse even with equal shape.
+        assert_ne!(p0, p1);
+    }
+
+    #[test]
+    fn shapes_follow_the_op_semantics() {
+        let mut g = Graph::new("t");
+        let x = g.parameter(0, vec![8, 5]);
+        let w = g.parameter(1, vec![5, 3]);
+        let d = g.dot(x, w, 1, 0);
+        assert_eq!(g.shape(d), &[8, 3]);
+        let t = g.transpose10(d);
+        assert_eq!(g.shape(t), &[3, 8]);
+        let flat = g.parameter(2, vec![40]);
+        let s = g.slice1(flat, 10, 25);
+        assert_eq!(g.shape(s), &[15]);
+        let r = g.reshape(s, vec![5, 3]);
+        assert_eq!(g.shape(r), &[5, 3]);
+        let cat = g.concat(x, x, 1);
+        assert_eq!(g.shape(cat), &[8, 10]);
+        let red = g.reduce_add(d, vec![0], vec![3]);
+        assert_eq!(g.shape(red), &[3]);
+        let pad = g.pad1(s, 4, 40);
+        assert_eq!(g.shape(pad), &[40]);
+        assert_eq!(g.nodes[pad].payload, Payload::Pad(4, 21));
+    }
+}

@@ -1,13 +1,15 @@
 //! Runtime layer: artifact manifest, device-selected PJRT engine with a
 //! process-wide executable cache, the zero-copy feed plane, the
-//! device-resident update plane ([`resident`]), and typed helpers for the
-//! recurring call patterns (chunked policy inference, Adam-carrying
-//! learner states).
+//! device-resident update plane ([`resident`]), the native HLO graph
+//! builder ([`graph`]) for runtime-specialized executables, and typed
+//! helpers for the recurring call patterns (chunked policy inference,
+//! Adam-carrying learner states).
 
 pub mod device;
 pub mod engine;
 pub mod exec_cache;
 pub mod feed;
+pub mod graph;
 pub mod manifest;
 pub mod resident;
 pub mod topology;
@@ -19,6 +21,7 @@ pub use engine::{
 };
 pub use exec_cache::{artifact_file_hash, CacheKey, CompileTiming, ExecutableCache};
 pub use feed::{FeedDims, FeedFrame, FeedPlan, Variant};
+pub use graph::{GraphKind, GraphSpec};
 pub use manifest::{Layout, Manifest, TaskInfo};
 pub use resident::{ResidentSpec, ResidentUpdate};
 pub use topology::{Placement, Role, RoleOverrides};

@@ -85,6 +85,57 @@ impl ResidentSpec {
 /// state + the Adam step counter (the one feedback-shaped input with no
 /// matching output — a single f32 restaged per step, tracked separately
 /// from the zero-parameter-bytes invariant).
+///
+/// # Example
+///
+/// The V-learner shape: seed once from a fully-bound frame, then per
+/// step restage only the minibatch and step (needs a compiled artifact,
+/// so not run here):
+///
+/// ```no_run
+/// use pql::runtime::{Engine, FeedDims, FeedPlan, OptState, ResidentUpdate, Variant};
+/// use std::sync::Arc;
+///
+/// # fn main() -> anyhow::Result<()> {
+/// let mut eng = Engine::new("rust/artifacts".as_ref())?;
+/// let exe = eng.load("ant", "critic_update")?;
+/// let t = eng.manifest.task("ant")?.clone();
+/// let dims = FeedDims {
+///     batch: 512, obs_dim: t.obs_dim, act_dim: t.act_dim,
+///     critic_obs_dim: t.critic_obs_dim,
+///     actor_params: t.layouts["actor"].size,
+///     critic_params: t.layouts["critic"].size,
+/// };
+/// let critic = OptState::new(vec![0.0; dims.critic_params]);
+/// # let (theta_a, s, a, rn, s2, gm, mu, var) =
+/// #     (vec![0.0; 1], vec![0.0; 1], vec![0.0; 1], vec![0.0; 1],
+/// #      vec![0.0; 1], vec![0.0; 1], vec![0.0; 1], vec![0.0; 1]);
+/// let mut res = ResidentUpdate::new(
+///     Arc::clone(&exe),
+///     FeedPlan::critic_update(Variant::Ddpg, &dims, 5e-4),
+///     critic.t,
+///     |f| {
+///         f.bind_adam(&critic)?;
+///         f.bind("target", &critic.theta)?;
+///         f.bind("theta_a", &theta_a)?;
+///         f.bind("s", &s)?; f.bind("a", &a)?; f.bind("rn", &rn)?;
+///         f.bind("s2", &s2)?; f.bind("gmask", &gm)?;
+///         f.bind("mu", &mu)?; f.bind("var", &var)?;
+///         Ok(())
+///     },
+/// )?;
+/// loop {
+///     // θ/m/v/target loop back on device — stage the batch only.
+///     res.restage("s", &s)?;
+///     res.restage("a", &a)?; res.restage("rn", &rn)?;
+///     res.restage("s2", &s2)?; res.restage("gmask", &gm)?;
+///     let diagnostics = res.step()?; // fetches loss/qmean scalars only
+///     # let _ = diagnostics; break;
+/// }
+/// let theta_now = res.to_host("theta")?; // materialize at publish points
+/// # let _ = theta_now; Ok(())
+/// # }
+/// ```
 pub struct ResidentUpdate {
     exe: Arc<Executable>,
     plan: FeedPlan,

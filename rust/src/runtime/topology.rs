@@ -107,6 +107,26 @@ impl RoleOverrides {
 }
 
 /// The resolved per-role device topology for one run.
+///
+/// # Example
+///
+/// Resolve a topology from the two override layers (CLI wins over the
+/// config file; unmentioned roles inherit the `--device` default):
+///
+/// ```
+/// use pql::runtime::{DeviceSpec, Placement, Role, RoleOverrides};
+///
+/// let mut cli = RoleOverrides::default();
+/// cli.set(Role::VLearner, "cpu");
+/// let mut file = RoleOverrides::default();
+/// file.set(Role::VLearner, "auto"); // shadowed by the CLI layer
+///
+/// let p = Placement::resolve(DeviceSpec::Cpu, &cli, &file).unwrap();
+/// assert_eq!(p.spec(Role::VLearner), DeviceSpec::Cpu);
+/// assert_eq!(p.spec(Role::PLearner), DeviceSpec::Cpu); // inherited default
+/// // Every role on one device → the single-runtime fast path.
+/// assert!(p.is_uniform());
+/// ```
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Placement {
     /// The all-roles default (the bare `--device` resolution).

@@ -1,0 +1,336 @@
+//! Differential tests for the native graph builder (`runtime::graph`).
+//!
+//! The builder's claim is not "approximately the same math" — it is
+//! **bit-identity** with the AOT artifacts: the built critic update and
+//! actor infer graphs, compiled through the same PJRT path, produce
+//! byte-identical outputs to the `aot.py`-lowered executables over long
+//! update sequences. These tests drive both executables through the
+//! same `FeedPlan` staging over 100+ steps and compare every output.
+//!
+//! Also covered: the builder-fallback path (a manifest whose AOT critic
+//! file is deleted still trains via `Engine::build_critic_update`, and
+//! still matches the AOT executable bitwise), determinism of the
+//! lowered text (the property the content-hash cache keys rely on), and
+//! compile-once semantics through the content-keyed cache path.
+//!
+//! Tests needing compiled artifacts skip (not fail) when
+//! `make artifacts` hasn't run — same convention as tests/resident.rs.
+
+use pql::runtime::graph::{self, GraphSpec};
+use pql::runtime::{
+    DeviceSpec, Engine, FeedDims, FeedPlan, HostTensor, OptState, Runtime, Variant,
+};
+use pql::util::Rng;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn art() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pql_graph_test_{name}"));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+struct Batch {
+    s: Vec<f32>,
+    a: Vec<f32>,
+    rn: Vec<f32>,
+    s2: Vec<f32>,
+    gm: Vec<f32>,
+    isw: Vec<f32>,
+}
+
+fn make_batches(rng: &mut Rng, steps: usize, b: usize, od: usize, ad: usize) -> Vec<Batch> {
+    (0..steps)
+        .map(|_| {
+            let mut bt = Batch {
+                s: vec![0.0; b * od],
+                a: vec![0.0; b * ad],
+                rn: vec![0.0; b],
+                s2: vec![0.0; b * od],
+                gm: vec![0.97; b],
+                isw: vec![0.0; b],
+            };
+            rng.fill_normal(&mut bt.s);
+            rng.fill_normal(&mut bt.a);
+            rng.fill_normal(&mut bt.rn);
+            rng.fill_normal(&mut bt.s2);
+            for (i, w) in bt.isw.iter_mut().enumerate() {
+                *w = 1.0 / (1.0 + (i % 5) as f32);
+            }
+            bt
+        })
+        .collect()
+}
+
+fn dims_for(t: &pql::runtime::TaskInfo, b: usize) -> FeedDims {
+    FeedDims {
+        batch: b,
+        obs_dim: t.obs_dim,
+        act_dim: t.act_dim,
+        critic_obs_dim: t.critic_obs_dim,
+        actor_params: t.layouts["actor"].size,
+        critic_params: t.layouts["critic"].size,
+    }
+}
+
+/// Drive `aot` and `built` through identical staged feeds for `steps`
+/// critic updates, asserting every output bitwise-equal at every step.
+fn assert_critic_parity(
+    aot: &Arc<pql::runtime::Executable>,
+    built: &Arc<pql::runtime::Executable>,
+    t: &pql::runtime::TaskInfo,
+    b: usize,
+    per: bool,
+    steps: usize,
+    seed: u64,
+) {
+    let dims = dims_for(t, b);
+    let make_plan = || {
+        if per {
+            FeedPlan::critic_update_per(Variant::Ddpg, &dims, 5e-4)
+        } else {
+            FeedPlan::critic_update(Variant::Ddpg, &dims, 5e-4)
+        }
+    };
+    let plan = make_plan();
+    plan.validate(&aot.info).unwrap();
+    // The built signature passes the same validation the learner applies.
+    plan.validate(&built.info).unwrap();
+
+    let mut rng = Rng::new(seed);
+    let critic_init = t.layouts["critic"].init(&mut rng);
+    let theta_a = t.layouts["actor"].init(&mut rng);
+    let mu = vec![0.0f32; t.obs_dim];
+    let var = vec![1.0f32; t.obs_dim];
+    let batches = make_batches(&mut rng, steps, b, t.obs_dim, t.act_dim);
+
+    let mut st_a = OptState::new(critic_init.clone());
+    let mut tg_a = critic_init.clone();
+    let mut st_b = OptState::new(critic_init.clone());
+    let mut tg_b = critic_init;
+    for (k, bt) in batches.iter().enumerate() {
+        let mut outs = Vec::new();
+        for (exe, st, tg) in [(aot, &mut st_a, &mut tg_a), (built, &mut st_b, &mut tg_b)] {
+            let mut f = plan.frame();
+            f.bind_adam(st).unwrap();
+            f.bind("target", tg).unwrap();
+            f.bind("theta_a", &theta_a).unwrap();
+            f.bind("s", &bt.s).unwrap();
+            f.bind("a", &bt.a).unwrap();
+            f.bind("rn", &bt.rn).unwrap();
+            f.bind("s2", &bt.s2).unwrap();
+            f.bind("gmask", &bt.gm).unwrap();
+            if per {
+                f.bind("isw", &bt.isw).unwrap();
+            }
+            f.bind("mu", &mu).unwrap();
+            f.bind("var", &var).unwrap();
+            let o = f.run(exe).unwrap();
+            let mut it = o.into_iter();
+            let th = it.next().unwrap();
+            let mm = it.next().unwrap();
+            let vv = it.next().unwrap();
+            *tg = it.next().unwrap();
+            let rest: Vec<Vec<f32>> = it.collect();
+            st.absorb(th, mm, vv);
+            outs.push(rest);
+        }
+        assert_eq!(outs[0], outs[1], "diagnostics diverged at step {k}");
+        // Full state parity every step — bit-for-bit, not approximately.
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&st_a.theta), bits(&st_b.theta), "theta diverged at step {k}");
+        assert_eq!(bits(&st_a.m), bits(&st_b.m), "m diverged at step {k}");
+        assert_eq!(bits(&st_a.v), bits(&st_b.v), "v diverged at step {k}");
+        assert_eq!(bits(&tg_a), bits(&tg_b), "target diverged at step {k}");
+    }
+}
+
+/// Built critic update ≡ AOT critic update, bitwise, over 110 steps.
+#[test]
+fn built_critic_update_matches_aot_bitwise() {
+    let Some(art) = art() else { return };
+    let mut eng = Engine::new(&art).unwrap();
+    let m = Arc::clone(&eng.manifest);
+    let t = m.task("ant").unwrap().clone();
+    let b = m.batch_default;
+    let aot = eng.load("ant", "critic_update").unwrap();
+
+    let spec = GraphSpec::critic_update(&t, m.tau, b, false).unwrap();
+    let out = tmpdir("critic_parity");
+    let (info, text) = graph::write_artifact(&out, "ant", &spec).unwrap();
+    let built = eng
+        .runtime()
+        .load_built("ant", &spec.artifact_name(), &info, &text)
+        .unwrap();
+    assert_critic_parity(&aot, &built, &t, b, false, 110, 42);
+    std::fs::remove_dir_all(&out).ok();
+}
+
+/// PER variant: same parity, including the per-sample |td| output.
+#[test]
+fn built_per_critic_update_matches_aot_bitwise() {
+    let Some(art) = art() else { return };
+    let mut eng = Engine::new(&art).unwrap();
+    let m = Arc::clone(&eng.manifest);
+    let t = m.task("ant").unwrap().clone();
+    let b = m.batch_default;
+    // PER graphs may be absent from minimal artifact sets — skip.
+    let Ok(aot) = eng.load("ant", "critic_update_per") else { return };
+
+    let spec = GraphSpec::critic_update(&t, m.tau, b, true).unwrap();
+    let out = tmpdir("per_parity");
+    let (info, text) = graph::write_artifact(&out, "ant", &spec).unwrap();
+    let built = eng
+        .runtime()
+        .load_built("ant", &spec.artifact_name(), &info, &text)
+        .unwrap();
+    assert_critic_parity(&aot, &built, &t, b, true, 40, 11);
+    std::fs::remove_dir_all(&out).ok();
+}
+
+/// Built actor infer ≡ AOT actor infer at the AOT chunk size, bitwise,
+/// over 30 calls.
+#[test]
+fn built_actor_infer_matches_aot_bitwise() {
+    let Some(art) = art() else { return };
+    let mut eng = Engine::new(&art).unwrap();
+    let m = Arc::clone(&eng.manifest);
+    let t = m.task("ant").unwrap().clone();
+    let n = m.chunk;
+    let aot = eng.load("ant", "actor_infer").unwrap();
+
+    let spec = GraphSpec::actor_infer(&t, n).unwrap();
+    let out = tmpdir("infer_parity");
+    let (info, text) = graph::write_artifact(&out, "ant", &spec).unwrap();
+    let built = eng
+        .runtime()
+        .load_built("ant", &spec.artifact_name(), &info, &text)
+        .unwrap();
+
+    let mut rng = Rng::new(3);
+    let theta = t.layouts["actor"].init(&mut rng);
+    let mu = vec![0.0f32; t.obs_dim];
+    let var = vec![1.0f32; t.obs_dim];
+    for call in 0..30 {
+        let mut obs = vec![0.0f32; n * t.obs_dim];
+        rng.fill_normal(&mut obs);
+        let ins = [
+            HostTensor::vec(theta.clone()),
+            HostTensor::new(&[n, t.obs_dim], obs),
+            HostTensor::vec(mu.clone()),
+            HostTensor::vec(var.clone()),
+        ];
+        let oa = aot.run(&ins).unwrap();
+        let ob = built.run(&ins).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&oa[0]), bits(&ob[0]), "actions diverged at call {call}");
+    }
+    std::fs::remove_dir_all(&out).ok();
+}
+
+/// The serve-plane shape: a flush size the AOT set does not carry
+/// compiles natively and yields sane, deterministic tanh actions.
+#[test]
+fn built_actor_infer_at_non_aot_batch_size() {
+    let Some(art) = art() else { return };
+    let mut eng = Engine::new(&art).unwrap();
+    let m = Arc::clone(&eng.manifest);
+    let t = m.task("ant").unwrap().clone();
+    let n = 33; // not the chunk, not a multiple of it
+    assert_ne!(n, m.chunk);
+    let exe = eng.build_actor_infer("ant", n).unwrap();
+    assert_eq!(exe.info.inputs[1].1, vec![n, t.obs_dim]);
+
+    let mut rng = Rng::new(5);
+    let theta = t.layouts["actor"].init(&mut rng);
+    let mut obs = vec![0.0f32; n * t.obs_dim];
+    rng.fill_normal(&mut obs);
+    let ins = [
+        HostTensor::vec(theta),
+        HostTensor::new(&[n, t.obs_dim], obs),
+        HostTensor::vec(vec![0.0; t.obs_dim]),
+        HostTensor::vec(vec![1.0; t.obs_dim]),
+    ];
+    let o1 = exe.run(&ins).unwrap();
+    assert_eq!(o1[0].len(), n * t.act_dim);
+    assert!(o1[0].iter().all(|a| a.is_finite() && a.abs() <= 1.0), "tanh range");
+    assert!(o1[0].iter().any(|a| a.abs() > 1e-6), "non-degenerate actions");
+    let o2 = exe.run(&ins).unwrap();
+    assert_eq!(o1[0], o2[0], "deterministic across calls");
+    // Engine memoizes built executables: same spec, same Arc.
+    let again = eng.build_actor_infer("ant", n).unwrap();
+    assert!(Arc::ptr_eq(&exe, &again));
+}
+
+/// A manifest whose AOT critic file is gone still trains: `Engine::load`
+/// fails, the builder fallback compiles the same update natively, and
+/// the result matches the real AOT executable bitwise.
+#[test]
+fn builder_fallback_without_aot_critic_matches_aot() {
+    let Some(art) = art() else { return };
+    // A copy of the manifest alone: every artifact *file* is absent, as
+    // if the critic graphs were deleted from a --quick artifact set.
+    let out = tmpdir("fallback");
+    std::fs::copy(art.join("manifest.json"), out.join("manifest.json")).unwrap();
+
+    // Isolated runtime: the process-wide cache may already hold this
+    // artifact's content key from other tests; the fallback must be
+    // provoked by the missing file, not masked by a shared cache.
+    let rt = Runtime::isolated(DeviceSpec::Cpu).unwrap();
+    let manifest = Arc::new(pql::runtime::Manifest::load(&out).unwrap());
+    let b = manifest.batch_default;
+    let mut eng = Engine::with_runtime(Arc::clone(&rt), Arc::clone(&manifest));
+    assert!(
+        eng.load("ant", "critic_update").is_err(),
+        "deleted AOT file must fail the load path"
+    );
+    let built = eng.build_critic_update("ant", b, false).unwrap();
+    assert_eq!(rt.cache().compiles(), 1);
+
+    let mut real = Engine::new(&art).unwrap();
+    let t = real.manifest.task("ant").unwrap().clone();
+    let aot = real.load("ant", "critic_update").unwrap();
+    assert_critic_parity(&aot, &built, &t, b, false, 25, 77);
+    std::fs::remove_dir_all(&out).ok();
+}
+
+/// Determinism property: the same spec lowers to byte-identical text
+/// (and therefore the same content cache key) across repeated builds;
+/// the compile happens once per content key.
+#[test]
+fn built_artifacts_are_deterministic_and_compile_once() {
+    // Host-only part: no artifacts or PJRT needed.
+    for spec in [
+        GraphSpec::ddpg_critic(512, 12, 4, vec![128, 128], 0.05, false),
+        GraphSpec::ddpg_critic(8, 3, 2, vec![16], 0.05, true),
+        GraphSpec::ddpg_actor(33, 12, 4, vec![128, 128]),
+    ] {
+        let a = spec.build_text();
+        let b = spec.build_text();
+        assert_eq!(a, b, "{}: lowering must be deterministic", spec.artifact_name());
+        let ka = pql::runtime::CacheKey::for_text("cpu", &a);
+        let kb = pql::runtime::CacheKey::for_text("cpu", &b);
+        assert_eq!(ka, kb);
+    }
+
+    // Compile-once part (needs a PJRT client; gate like the rest).
+    let Some(_) = art() else { return };
+    let rt = Runtime::isolated(DeviceSpec::Cpu).unwrap();
+    let out = tmpdir("compile_once");
+    let spec = GraphSpec::ddpg_critic(8, 3, 2, vec![16], 0.05, false);
+    let (info, text) = graph::write_artifact(&out, "toy", &spec).unwrap();
+    let e1 = rt.load_built("toy", &spec.artifact_name(), &info, &text).unwrap();
+    // Rebuild from scratch — same spec, so same text, so same key.
+    let (info2, text2) = graph::write_artifact(&out, "toy", &spec).unwrap();
+    let e2 = rt.load_built("toy", &spec.artifact_name(), &info2, &text2).unwrap();
+    assert!(Arc::ptr_eq(&e1, &e2), "content-keyed cache must share the compile");
+    assert_eq!(rt.cache().compiles(), 1);
+    assert_eq!(rt.cache().hits(), 1);
+    std::fs::remove_dir_all(&out).ok();
+}
